@@ -1,0 +1,134 @@
+"""Shared benchmark harness for the paper-reproduction suite.
+
+Scaled-down methodology (paper §8.1 at 1/100 scale, same ratios): bulk-load
+``N_KEYS`` records, warm up with ``N_WARM`` ops, measure ``N_OPS`` ops.
+Cache sizes are expressed as a fraction of the dataset's node count, exactly
+mirroring the paper's cache-bytes / dataset-bytes ratios (256MB of 3.2GB =
+8%).  Throughput comes from the calibrated cost model (core/cost_model.py);
+verb counts come from the mechanistic simulator (core/sim.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.cost_model import HardwareModel, ThroughputReport, analyze
+from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.data import ycsb
+
+N_KEYS = 200_000          # paper: 200M (1/1000 scale)
+N_WARM = 60_000
+N_OPS = 40_000
+DEFAULT_CACHE_RATIO = 0.08  # paper: 256MB / 3.2GB
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    workload: str
+    threads: int
+    report: ThroughputReport
+    per_op: Dict[str, float]
+
+    def row(self) -> str:
+        po = self.per_op
+        return (
+            f"{self.name},{self.workload},{self.threads},"
+            f"{self.report.mops():.3f},{self.report.bottleneck},"
+            f"{po['reads']:.3f},{po['writes']:.3f},{po['atomics']:.3f},"
+            f"{po['two_sided']:.4f},{po['traffic_bytes']:.1f}"
+        )
+
+
+HEADER = (
+    "index,workload,threads,mops,bottleneck,reads_per_op,writes_per_op,"
+    "atomics_per_op,two_sided_per_op,traffic_bytes_per_op"
+)
+
+
+def run_one(
+    system: str,
+    workload: str,
+    *,
+    n_keys: int = N_KEYS,
+    n_ops: int = N_OPS,
+    n_warm: int = N_WARM,
+    cache_ratio: float = DEFAULT_CACHE_RATIO,
+    theta: float = 0.99,
+    threads: int = 144,
+    seed: int = 7,
+    cfg_overrides: Optional[dict] = None,
+    hw: Optional[HardwareModel] = None,
+    hot_leaf_fraction: Optional[float] = None,
+) -> BenchResult:
+    dataset = ycsb.make_dataset(n_keys, seed=0)
+    tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
+    cache_nodes = max(64, int(cache_ratio * tree.num_nodes))
+    overrides = dict(cache_bytes=cache_nodes * 1024)
+    overrides.update(cfg_overrides or {})
+    cfg = baselines.ALL[system](**overrides)
+    sim = Simulator(tree, cfg, seed=seed)
+    warm = ycsb.generate(workload, dataset, n_warm, theta=theta, seed=seed + 1)
+    sim.run(warm.ops, warm.keys)
+    sim.reset_counters()
+    wl = ycsb.generate(workload, dataset, n_ops, theta=theta, seed=seed + 2)
+    sim.run(wl.ops, wl.keys)
+    if hot_leaf_fraction is None:
+        writes = ycsb.WORKLOADS[workload]
+        write_frac = writes[0] + writes[2]
+        if theta > 0 and write_frac > 0:
+            z = ycsb.ZipfianGenerator(n_keys, theta=theta, seed=3)
+            hot_leaf_fraction = z.hottest_fraction() * write_frac
+        else:
+            hot_leaf_fraction = 0.0
+    rep = analyze(
+        sim, threads_total=threads, hw=hw,
+        hot_leaf_write_fraction=hot_leaf_fraction,
+    )
+    return BenchResult(
+        name=cfg.name, workload=workload, threads=threads,
+        report=rep, per_op=sim.totals().per_op(),
+    )
+
+
+def sweep_threads(system: str, workload: str, thread_counts, **kw):
+    """Scalability curve (§8.2): the verb mix per op is thread-independent,
+    so simulate once and re-analyze the caps at each thread count."""
+    from repro.core.cost_model import analyze as _an
+
+    dataset = ycsb.make_dataset(kw.get("n_keys", N_KEYS), seed=0)
+    tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
+    cache_nodes = max(64, int(kw.get("cache_ratio", DEFAULT_CACHE_RATIO) * tree.num_nodes))
+    overrides = dict(cache_bytes=cache_nodes * 1024)
+    overrides.update(kw.get("cfg_overrides") or {})
+    cfg = baselines.ALL[system](**overrides)
+    sim = Simulator(tree, cfg, seed=kw.get("seed", 7))
+    theta = kw.get("theta", 0.99)
+    warm = ycsb.generate(workload, dataset, kw.get("n_warm", N_WARM),
+                         theta=theta, seed=11)
+    sim.run(warm.ops, warm.keys)
+    sim.reset_counters()
+    wl = ycsb.generate(workload, dataset, kw.get("n_ops", N_OPS),
+                       theta=theta, seed=12)
+    sim.run(wl.ops, wl.keys)
+    mix = ycsb.WORKLOADS[workload]
+    write_frac = mix[0] + mix[2]
+    hot = 0.0
+    if theta > 0 and write_frac > 0:
+        hot = ycsb.ZipfianGenerator(
+            kw.get("n_keys", N_KEYS), theta=theta, seed=3
+        ).hottest_fraction() * write_frac
+    out = []
+    for t in thread_counts:
+        rep = _an(sim, threads_total=t, hw=kw.get("hw"),
+                  hot_leaf_write_fraction=hot)
+        out.append(BenchResult(
+            name=cfg.name, workload=workload, threads=t,
+            report=rep, per_op=sim.totals().per_op(),
+        ))
+    return out

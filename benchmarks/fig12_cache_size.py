@@ -1,0 +1,48 @@
+"""Fig. 12: cache-size sensitivity.
+
+Paper claims: (a) read-intensive — DEX improves steeply with cache ratio
+while Sherman/SMART flatline (they never cache leaves); (b) write-intensive
+— DEX improves up to ~8%, then *degrades* at large caches under skew because
+hot-leaf optimistic-lock contention (NUMA) becomes the bottleneck; 18
+threads on one socket do not collapse."""
+
+from benchmarks.common import HEADER, run_one
+
+RATIOS = [0.01, 0.02, 0.04, 0.08, 0.16, 0.32]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    ratios = RATIOS[::2] if quick else RATIOS
+    curve = {}
+    for ratio in ratios:
+        for system in ["dex", "sherman", "smart"]:
+            r = run_one(system, "read-intensive", cache_ratio=ratio)
+            rows.append(f"{system}@{ratio:.0%}," + r.row().split(",", 1)[1])
+            curve.setdefault(system, []).append(r.report.mops())
+    summary["dex_gain_small_to_big"] = curve["dex"][-1] / max(curve["dex"][0], 1e-9)
+    summary["sherman_gain_small_to_big"] = (
+        curve["sherman"][-1] / max(curve["sherman"][0], 1e-9)
+    )
+    # write-intensive collapse at large cache under skew (hot-leaf locks)
+    for ratio in ([0.08] if quick else [0.08, 0.32]):
+        for threads, label in [(144, "144thr"), (18, "18thr-1socket")]:
+            r = run_one("dex", "write-intensive", cache_ratio=ratio,
+                        threads=threads)
+            rows.append(
+                f"dex-wi@{ratio:.0%}-{label}," + r.row().split(",", 1)[1]
+            )
+            summary[f"wi@{ratio:.0%}-{label}"] = r.report.mops()
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k}: {v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig. 15 / Table 3 (extended version): read-intensive-2 (95% lookup / 5%
+insert) skewed+uniform, and insert-only (uniform), plus the scan-intensive
+mix from Table 1.
+
+Paper claims: DEX 4x/10x/2.4x/6.1x over Sherman/SMART/P-Sherman/P-SMART on
+skewed read-intensive-2; 2.8x/56.3x/1.6x/48.4x on scan-intensive (SMART's
+one-record-per-leaf trie explodes on scans)."""
+
+from benchmarks.common import HEADER, run_one
+
+SYSTEMS = ["dex", "sherman", "p-sherman", "smart", "p-smart"]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    cases = [("read-intensive-2", 0.99), ("scan-intensive", 0.99)]
+    if not quick:
+        cases += [("read-intensive-2", 0.0), ("insert-only", 0.0)]
+    for wl, theta in cases:
+        at = {}
+        for system in SYSTEMS:
+            r = run_one(system, wl, theta=theta, n_ops=20_000)
+            rows.append(r.row())
+            at[system] = r.report.mops()
+        tag = f"{wl}@{'skew' if theta else 'unif'}"
+        for s in SYSTEMS[1:]:
+            summary[f"{tag}:dex/{s}"] = at["dex"] / max(at[s], 1e-9)
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fig. 16: key-size sensitivity (8B -> 64B keys in fixed 1KB nodes).
+
+Larger keys shrink effective fanout, deepening the tree and stressing the
+fixed-size cache; the paper shows both DEX and SMART degrade but DEX keeps
+its advantage.  We model key size by reducing per-node fanout (64 keys at
+8B -> 8 keys at 64B) through a smaller bulk-load fill."""
+
+from benchmarks.common import HEADER, N_KEYS, N_OPS, N_WARM
+from repro.core import baselines
+from repro.core.cost_model import analyze
+from repro.core.sim import HostBTree, Simulator
+from repro.data import ycsb
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    key_sizes = [8, 16] if quick else [8, 16, 32, 64]
+    for ks in key_sizes:
+        fill = 0.7 * 8 / ks          # effective entries per 1KB node
+        for system in ["dex", "smart"]:
+            dataset = ycsb.make_dataset(N_KEYS, seed=0)
+            tree = HostBTree(dataset, fill=max(fill, 0.06), level_m=3,
+                             n_mem_servers=4)
+            cfg = baselines.ALL[system](
+                cache_bytes=max(64, int(0.08 * tree.num_nodes)) * 1024
+            )
+            sim = Simulator(tree, cfg, seed=9)
+            warm = ycsb.generate("read-intensive", dataset, N_WARM, seed=10)
+            sim.run(warm.ops, warm.keys)
+            sim.reset_counters()
+            wl = ycsb.generate("read-intensive", dataset, N_OPS, seed=11)
+            sim.run(wl.ops, wl.keys)
+            rep = analyze(sim, threads_total=144)
+            rows.append(
+                f"{system}-{ks}B,read-intensive,144,{rep.mops():.3f},"
+                f"{rep.bottleneck},,,,,"
+            )
+            summary[f"{system}@{ks}B"] = rep.mops()
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k}: {v:.2f} Mops")
+
+
+if __name__ == "__main__":
+    main()

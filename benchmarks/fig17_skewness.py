@@ -1,0 +1,35 @@
+"""Fig. 17: workload-skew sensitivity (zipf theta sweep).
+
+Paper claims: DEX improves with skew (hot paths cache better); Sherman's
+write-intensive throughput collapses at theta=0.99 (RDMA lock retries on hot
+leaves), DEX does not (local locks only)."""
+
+from benchmarks.common import HEADER, run_one
+
+THETAS = [0.0, 0.5, 0.8, 0.99]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    thetas = THETAS[::3] if quick else THETAS
+    for theta in thetas:
+        for system in ["dex", "sherman"]:
+            for wl in ["read-intensive", "write-intensive"]:
+                r = run_one(system, wl, theta=theta, n_ops=20_000)
+                rows.append(
+                    f"{system}@t{theta}," + r.row().split(",", 1)[1]
+                )
+                summary[f"{system}:{wl}@theta={theta}"] = r.report.mops()
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k}: {v:.2f} Mops")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig. 18: leaf admission probability (P_A) sweep across cache sizes.
+
+Paper claims: at 64-128MB caches, P_A=1% beats always-admit by up to +34%;
+at 1GB lazy admission can cost ~7% — the optimum shifts with cache size."""
+
+from benchmarks.common import HEADER, run_one
+
+P_AS = [0.01, 0.05, 0.10, 0.20, 1.00]
+RATIOS = [0.02, 0.08, 0.32]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    ratios = RATIOS[:1] if quick else RATIOS
+    pas = [0.01, 0.10, 1.00] if quick else P_AS
+    for ratio in ratios:
+        base = None
+        for pa in pas:
+            r = run_one(
+                "dex", "read-intensive", cache_ratio=ratio,
+                cfg_overrides=dict(p_admit_leaf=pa, offloading=False),
+            )
+            rows.append(f"dex-pa{pa:.2f}@{ratio:.0%}," + r.row().split(",", 1)[1])
+            if pa == 1.00:
+                base = r.report.mops()
+            summary[f"pa={pa:.2f}@{ratio:.0%}"] = r.report.mops()
+        if base:
+            for pa in pas:
+                summary[f"rel_pa={pa:.2f}@{ratio:.0%}"] = (
+                    summary[f"pa={pa:.2f}@{ratio:.0%}"] / base
+                )
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        if k.startswith("rel_"):
+            print(f"# {k}: {v:.2f}x vs always-admit")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig. 7: throughput under uniform workloads (worst case for caching).
+
+Paper claims: DEX still beats Sherman/SMART/P-SMART; the gap narrows; DEX is
+close to P-Sherman because uniform traffic defeats leaf caching."""
+
+from benchmarks.common import HEADER, sweep_threads
+
+SYSTEMS = ["dex", "sherman", "p-sherman", "smart", "p-smart"]
+WORKLOADS = ["read-only", "read-intensive", "write-intensive"]
+THREADS = [18, 72, 144]
+
+
+def run(quick: bool = False):
+    workloads = WORKLOADS[:1] if quick else WORKLOADS
+    rows = [HEADER]
+    summary = {}
+    for wl in workloads:
+        at_max = {}
+        for system in SYSTEMS:
+            for r in sweep_threads(system, wl, THREADS, theta=0.0):
+                rows.append(r.row())
+                if r.threads == THREADS[-1]:
+                    at_max[system] = r.report.mops()
+        for s in SYSTEMS[1:]:
+            summary[f"uniform-{wl}:dex/{s}"] = at_max["dex"] / max(at_max[s], 1e-9)
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

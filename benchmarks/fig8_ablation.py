@@ -1,0 +1,44 @@
+"""Fig. 8: ablation — baseline RDMA tree -> +logical partitioning ->
++caching -> +opportunistic offloading, write-intensive, 1% cache (31MB).
+
+Paper claims: partitioning 2.4x at 2 threads; +caching 21.2x (skew) / 6.9x
+(uniform); +offloading +55% (skew) / +34% (uniform)."""
+
+from benchmarks.common import HEADER, run_one
+
+STAGES = [
+    ("naive", "baseline"),
+    ("dex-partition", "+partitioning"),
+    ("dex-cache", "+caching"),
+    ("dex", "+offloading"),
+]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    summary = {}
+    for theta, label in ([(0.99, "skewed")] if quick else
+                         [(0.99, "skewed"), (0.0, "uniform")]):
+        prev = None
+        for system, stage in STAGES:
+            r = run_one(
+                system, "write-intensive", cache_ratio=0.01, theta=theta,
+                threads=144,
+            )
+            rows.append(r.row())
+            x = r.report.mops()
+            if prev is not None:
+                summary[f"{label}:{stage}"] = x / max(prev, 1e-9)
+            prev = x
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k}: {v:.2f}x over previous stage")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Wall-clock microbenchmarks of the device index ops (CPU backend):
+bulk lookup / insert / scan / update on the flat tree, plus the Pallas
+kernels in interpret mode.  Emits ``name,us_per_call,derived`` rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import btree
+from repro.data import ycsb
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, warmup=2, iters=5, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def run(quick: bool = False):
+    n = 100_000 if quick else 400_000
+    b = 4096
+    dataset = ycsb.make_dataset(n, seed=0)
+    tree, meta = btree.bulk_build(dataset, dataset * 2)
+    rng = np.random.default_rng(1)
+    q = rng.choice(dataset, size=b).astype(np.int64)
+
+    rows = ["name,us_per_call,derived"]
+
+    us, _ = _time(
+        lambda: btree.bulk_lookup(tree, q, height=meta.height)
+    )
+    rows.append(f"bulk_lookup_b{b},{us:.1f},{b/us:.2f}Mops")
+
+    us, _ = _time(
+        lambda: btree.bulk_update(tree, q, q, height=meta.height)
+    )
+    rows.append(f"bulk_update_b{b},{us:.1f},{b/us:.2f}Mops")
+
+    starts = q[:256]
+    us, _ = _time(
+        lambda: btree.bulk_scan(tree, starts, height=meta.height, count=100)
+    )
+    rows.append(f"bulk_scan100_b256,{us:.1f},{256*100/us:.2f}Mrec/s")
+
+    rows_k = np.asarray(tree.keys)[:b]
+    vals_k = np.asarray(tree.values)[:b]
+    us, _ = _time(lambda: kops.node_search(rows_k, q, vals_k))
+    rows.append(f"kernel_node_search_b{b},{us:.1f},{b/us:.2f}Mops")
+    return rows, {}
+
+
+def main():
+    rows, _ = run()
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""LM-framework roofline table: reads the dry-run JSON cells
+(``dryrun_results/``) and prints the §Roofline table — three terms,
+dominant bottleneck, useful-FLOPs ratio, roofline fraction per
+(arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = (
+    "arch,shape,mesh,chips,compute_s,memory_s,collective_s,dominant,"
+    "useful_flops_ratio,roofline_fraction,mem_per_chip_GiB"
+)
+
+
+def load_cells(out_dir: str = "dryrun_results"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows_from_cells(cells):
+    rows = [HEADER]
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append(
+                f"{c['arch']},{c['shape']},{c['mesh']},,,,,SKIP,,,"
+            )
+            continue
+        if c.get("status") != "ok":
+            rows.append(
+                f"{c['arch']},{c['shape']},{c['mesh']},,,,,FAILED,,,"
+            )
+            continue
+        rows.append(
+            f"{c['arch']},{c['shape']},{c['mesh']},{c['chips']},"
+            f"{c['compute_term_s']:.4e},{c['memory_term_s']:.4e},"
+            f"{c['collective_term_s']:.4e},{c['dominant']},"
+            f"{c['useful_flops_ratio']:.3f},{c['roofline_fraction']:.3f},"
+            f"{c['per_device_memory_bytes']/2**30:.2f}"
+        )
+    return rows
+
+
+def run(quick: bool = False, out_dir: str = "dryrun_results"):
+    cells = load_cells(out_dir)
+    rows = rows_from_cells(cells)
+    ok = [c for c in cells if c.get("status") == "ok"]
+    summary = {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(1 for c in cells if c.get("status") == "skipped"),
+        "cells_failed": sum(1 for c in cells if c.get("status") == "FAILED"),
+    }
+    if ok:
+        worst = min(ok, key=lambda c: c.get("roofline_fraction", 1e9))
+        coll = max(ok, key=lambda c: c.get("collective_term_s", 0))
+        summary["worst_roofline"] = (
+            f"{worst['arch']}x{worst['shape']}x{worst['mesh']}"
+            f"={worst['roofline_fraction']:.3f}"
+        )
+        summary["most_collective_bound"] = (
+            f"{coll['arch']}x{coll['shape']}x{coll['mesh']}"
+            f"={coll['collective_term_s']:.3e}s"
+        )
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark driver: one module per paper table/figure + the LM roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed subset
+    PYTHONPATH=src python -m benchmarks.run --only fig6,tab2
+
+Each module prints CSV rows plus ``# claim`` comment lines comparing against
+the paper's published numbers; EXPERIMENTS.md snapshots these outputs."""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig6", "benchmarks.fig6_skewed"),
+    ("fig7", "benchmarks.fig7_uniform"),
+    ("tab2", "benchmarks.tab2_rdma_stats"),
+    ("fig8", "benchmarks.fig8_ablation"),
+    ("fig9", "benchmarks.fig9_cache_design"),
+    ("fig10", "benchmarks.fig10_repartition"),
+    ("fig12", "benchmarks.fig12_cache_size"),
+    ("fig13", "benchmarks.fig13_offload_threads"),
+    ("fig15", "benchmarks.fig15_extra_workloads"),
+    ("fig16", "benchmarks.fig16_key_size"),
+    ("fig17", "benchmarks.fig17_skewness"),
+    ("fig18", "benchmarks.fig18_admission"),
+    ("micro", "benchmarks.index_microbench"),
+    ("roofline", "benchmarks.lm_roofline"),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        print(f"\n===== {key} ({modname}) =====")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows, summary = mod.run(quick=args.quick)
+            print("\n".join(rows))
+            for k, v in summary.items():
+                print(f"# {k}: {v}")
+        except Exception as e:
+            failures.append((key, e))
+            traceback.print_exc()
+        print(f"# [{key}] took {time.time() - t0:.1f}s")
+    if failures:
+        print(f"\n{len(failures)} benchmark module(s) failed: "
+              f"{[k for k, _ in failures]}")
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

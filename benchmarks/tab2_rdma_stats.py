@@ -1,0 +1,42 @@
+"""Table 2: RDMA statistics per index operation (144 threads, zipf 0.99).
+
+Paper values for reference (reads/writes/atomics/two-sided/traffic-B):
+    DEX (RO)       0.33 / 0    / 0    / 0.0002 / 333.9
+    Sherman (RO)   3.02 / 0    / 0    / 0      / 1064.7
+    SMART (RO)     1.44 / 0    / 0    / 0      / 997.0
+    P-Sherman (RO) 1.00 / 0    / 0    / 0      / 1025.0
+    P-SMART (RO)   1.15 / 0    / 0    / 0      / 397.4
+    DEX (WI)       0.33 / 0.19 / 0    / 0.0001 / 524.1
+    Sherman (WI)   2.71 / 0.99 / 0.59 / 0      / 1079.0
+    SMART (WI)     1.45 / 0.11 / 0.11 / 0      / 1002.9
+    P-Sherman (WI) 1.02 / 0.50 / 0    / 0      / 1054.4
+    P-SMART (WI)   1.16 / 0.13 / 0    / 0      / 404.2
+"""
+
+from benchmarks.common import HEADER, run_one
+
+SYSTEMS = ["dex", "sherman", "smart", "p-sherman", "p-smart"]
+
+
+def run(quick: bool = False):
+    rows = [HEADER]
+    stats = {}
+    for wl, tag in [("read-only", "RO"), ("write-intensive", "WI")]:
+        for system in SYSTEMS:
+            r = run_one(system, wl, n_warm=120_000)
+            rows.append(r.row())
+            stats[f"{system}({tag})"] = r.per_op
+    return rows, stats
+
+
+def main():
+    rows, stats = run()
+    print("\n".join(rows))
+    d, s = stats["dex(RO)"], stats["sherman(RO)"]
+    print(f"# DEX(RO) reads/op = {d['reads']:.2f} (paper: 0.33)")
+    print(f"# rdma-op reduction vs Sherman: "
+          f"{1 - d['reads'] / max(s['reads'], 1e-9):.0%} (paper: 89%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end training driver example: train a ~100M-parameter dense LM for
+a few hundred steps on CPU with checkpointing + fault injection + resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import build_run, train
+from repro.train.fault import FailureInjector, TransientError
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--hundred-m", action="store_true",
+                    help="~100M-param config (hours on CPU; the default "
+                         "reduced config keeps this example CI-sized — on "
+                         "real devices use launch/train.py with full archs)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.hundred_m:
+        overrides = dict(n_layers=8, d_model=640, n_heads=8, n_kv_heads=8,
+                         d_ff=2560, vocab=32000, head_dim=80)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        run = build_run(
+            args.arch, reduce=True, batch=8, seq=128, steps=args.steps,
+            ckpt_dir=ckpt_dir,
+        )
+        if overrides:
+            import dataclasses
+            from repro.models import model as M
+            import jax as _jax
+            run.cfg = run.cfg.reduced(**overrides)
+            run.params = M.init_params(run.cfg, _jax.random.PRNGKey(0))
+            from repro.train.optimizer import init_opt_state
+            run.opt_state = init_opt_state(run.params, run.opt_cfg)
+        n_params = sum(p.size for p in __import__("jax").tree.leaves(run.params))
+        print(f"[example] {args.arch} (reduced): {n_params/1e6:.1f}M params")
+
+        # inject a transient failure mid-run to show retry/restore working
+        injector = FailureInjector({args.steps // 2: TransientError})
+        losses, watchdog = train(
+            run, args.steps, ckpt_every=50, injector=injector, log_every=25,
+        )
+        assert losses[-1] < losses[0], "loss did not improve"
+        print(
+            f"[example] done: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+            f"{watchdog.steps} steps, survived 1 injected failure"
+        )
+
+
+if __name__ == "__main__":
+    main()

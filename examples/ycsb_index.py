@@ -1,0 +1,50 @@
+"""YCSB-style comparison: DEX vs the paper's competitors on one workload.
+
+Prints a Fig-6-style mini-table (verb counts + modeled throughput) for a
+chosen workload/skew.
+
+Run:  PYTHONPATH=src python examples/ycsb_index.py --workload write-intensive
+"""
+
+import argparse
+
+from repro.core import baselines
+from repro.core.cost_model import analyze
+from repro.core.sim import HostBTree, Simulator
+from repro.data import ycsb
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="read-intensive",
+                    choices=sorted(ycsb.WORKLOADS))
+    ap.add_argument("--theta", type=float, default=0.99)
+    ap.add_argument("--keys", type=int, default=100_000)
+    ap.add_argument("--ops", type=int, default=20_000)
+    args = ap.parse_args()
+
+    dataset = ycsb.make_dataset(args.keys, seed=0)
+    print(f"{'system':<12} {'Mops':>7} {'reads/op':>9} {'writes/op':>10} "
+          f"{'2sided':>8} {'B/op':>7}  bottleneck")
+    for system in ["dex", "sherman", "p-sherman", "smart", "p-smart"]:
+        tree = HostBTree(dataset, level_m=3, n_mem_servers=4)
+        cfg = baselines.ALL[system](
+            cache_bytes=max(64, int(0.08 * tree.num_nodes)) * 1024
+        )
+        sim = Simulator(tree, cfg, seed=1)
+        warm = ycsb.generate(args.workload, dataset, args.ops, theta=args.theta,
+                             seed=2)
+        sim.run(warm.ops, warm.keys)
+        sim.reset_counters()
+        wl = ycsb.generate(args.workload, dataset, args.ops, theta=args.theta,
+                           seed=3)
+        sim.run(wl.ops, wl.keys)
+        s = sim.totals().per_op()
+        rep = analyze(sim)
+        print(f"{system:<12} {rep.mops():>7.2f} {s['reads']:>9.2f} "
+              f"{s['writes']:>10.2f} {s['two_sided']:>8.4f} "
+              f"{s['traffic_bytes']:>7.0f}  {rep.bottleneck}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: DEX (VLDB'24) — scalable range indexing on disaggregated memory,
+re-built as a TPU-native JAX framework.
+
+The index plane uses 64-bit keys (paper: 8-byte keys), so x64 must be on
+before any tracing happens.  Model code uses explicit bf16/f32 dtypes and is
+unaffected by this flag.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

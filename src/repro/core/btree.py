@@ -1,0 +1,581 @@
+"""Array-based B+-tree: bulk build (host) + batched device ops (jit).
+
+This is the flat, single-address-space representation used by unit tests and
+by the event-level simulator (Plane A in DESIGN.md §2).  The mesh-sharded,
+subtree-blocked representation lives in ``core/pool.py`` / ``core/dex.py``.
+
+Design notes
+------------
+* Traversal is *level-synchronous*: a batch of queries advances one tree
+  level per step, so each level is a single gather over the node arrays —
+  the TPU-native equivalent of the paper's per-node RDMA READ loop.
+* Mutations follow a fast-path / SMO-fallback split that mirrors the paper's
+  offload fallback (§6: "DEX will fall back to the normal path when an
+  offloading attempt ... would trigger a structural modification operation"):
+  batched inserts that fit in leaf slack are applied fully vectorized on
+  device; overflowing leaves are handled on the host (the "memory server").
+* Scatter safety: every vectorized mutation routes inactive batch lanes to
+  the *scratch row* ``capacity - 1`` (guaranteed free by construction) so
+  duplicate scatter indices never race with real writes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nodes import (
+    DEFAULT_FILL,
+    FANOUT,
+    KEY_MAX,
+    KEY_MIN,
+    NULL,
+    TreeArrays,
+    TreeMeta,
+)
+
+# ---------------------------------------------------------------------------
+# Bulk build (host side, numpy)
+# ---------------------------------------------------------------------------
+
+
+def bulk_build(
+    keys: np.ndarray,
+    values: Optional[np.ndarray] = None,
+    *,
+    fill: float = DEFAULT_FILL,
+    capacity_slack: float = 1.5,
+) -> Tuple[TreeArrays, TreeMeta]:
+    """Build a B+-tree from sorted unique ``keys`` (int64, strictly inside
+    (KEY_MIN, KEY_MAX)).
+
+    ``fill`` is the bulk-load fill factor (nodes are loaded with slack so
+    inserts do not immediately split).  Returns device arrays plus a static
+    :class:`TreeMeta` used to fix trip counts at trace time.
+    """
+    keys = np.asarray(keys, dtype=np.int64)
+    if keys.ndim != 1:
+        raise ValueError("keys must be 1-D")
+    if keys.size == 0:
+        raise ValueError("cannot bulk build an empty tree")
+    if np.any(keys[1:] <= keys[:-1]):
+        raise ValueError("keys must be sorted and unique")
+    if keys[0] <= KEY_MIN or keys[-1] >= KEY_MAX:
+        raise ValueError("keys must be strictly inside (KEY_MIN, KEY_MAX)")
+    if values is None:
+        values = keys.copy()
+    values = np.asarray(values, dtype=np.int64)
+    if values.shape != keys.shape:
+        raise ValueError("values must match keys")
+
+    per_leaf = max(2, int(FANOUT * fill))
+    n = keys.size
+    n_leaves = -(-n // per_leaf)
+
+    # ---- plan levels bottom-up -------------------------------------------
+    level_sizes = [n_leaves]
+    while level_sizes[-1] > 1:
+        level_sizes.append(-(-level_sizes[-1] // per_leaf))
+    height = len(level_sizes)
+    num_nodes = int(sum(level_sizes))
+    capacity = max(num_nodes + 8, int(num_nodes * capacity_slack))
+
+    K = np.full((capacity, FANOUT), KEY_MAX, dtype=np.int64)
+    C = np.full((capacity, FANOUT), NULL, dtype=np.int32)
+    V = np.zeros((capacity, FANOUT), dtype=np.int64)
+    NK = np.zeros((capacity,), dtype=np.int32)
+    LV = np.full((capacity,), -1, dtype=np.int32)
+    FLO = np.full((capacity,), KEY_MIN, dtype=np.int64)
+    FHI = np.full((capacity,), KEY_MAX, dtype=np.int64)
+
+    # ---- leaves -----------------------------------------------------------
+    pad = (-n) % per_leaf
+    kp = np.concatenate([keys, np.full((pad,), KEY_MAX, np.int64)]).reshape(
+        n_leaves, per_leaf
+    )
+    vp = np.concatenate([values, np.zeros((pad,), np.int64)]).reshape(
+        n_leaves, per_leaf
+    )
+    K[:n_leaves, :per_leaf] = kp
+    V[:n_leaves, :per_leaf] = vp
+    NK[:n_leaves] = np.minimum(per_leaf, n - per_leaf * np.arange(n_leaves))
+    LV[:n_leaves] = 0
+    mins = kp[:, 0].copy()
+    mins[0] = KEY_MIN
+    FLO[:n_leaves] = mins
+    FHI[: n_leaves - 1] = mins[1:]
+    FHI[n_leaves - 1] = KEY_MAX
+
+    # ---- inner levels ------------------------------------------------------
+    next_id = n_leaves
+    child_ids = np.arange(n_leaves, dtype=np.int32)
+    child_mins = mins
+    for lvl in range(1, height):
+        n_nodes = level_sizes[lvl]
+        ids = np.arange(next_id, next_id + n_nodes, dtype=np.int32)
+        next_id += n_nodes
+        new_mins = np.empty((n_nodes,), dtype=np.int64)
+        for i in range(n_nodes):
+            ch = child_ids[i * per_leaf : (i + 1) * per_leaf]
+            cm = child_mins[i * per_leaf : (i + 1) * per_leaf]
+            nid = ids[i]
+            K[nid, : cm.size] = cm
+            C[nid, : ch.size] = ch
+            NK[nid] = ch.size
+            LV[nid] = lvl
+            new_mins[i] = cm[0]
+        FLO[ids] = new_mins
+        FHI[ids[:-1]] = new_mins[1:]
+        FHI[ids[-1]] = KEY_MAX
+        child_ids, child_mins = ids, new_mins
+
+    root = int(child_ids[0])
+    tree = TreeArrays(
+        keys=jnp.asarray(K),
+        children=jnp.asarray(C),
+        values=jnp.asarray(V),
+        num_keys=jnp.asarray(NK),
+        level=jnp.asarray(LV),
+        fence_lo=jnp.asarray(FLO),
+        fence_hi=jnp.asarray(FHI),
+        version=jnp.zeros((capacity,), dtype=jnp.int32),
+        root=jnp.asarray(root, dtype=jnp.int32),
+        height=jnp.asarray(height, dtype=jnp.int32),
+        num_nodes=jnp.asarray(num_nodes, dtype=jnp.int32),
+    )
+    meta = TreeMeta(
+        height=height,
+        num_nodes=num_nodes,
+        num_leaves=n_leaves,
+        capacity=capacity,
+        keys_per_leaf=per_leaf,
+    )
+    return tree, meta
+
+
+# ---------------------------------------------------------------------------
+# Batched point lookups
+# ---------------------------------------------------------------------------
+
+
+def _search_slot(node_keys: jax.Array, q: jax.Array) -> jax.Array:
+    """Branchless in-node lower-bound: index of rightmost separator <= q.
+
+    Empty slots hold KEY_MAX (> q); the leftmost separator of a leftmost node
+    is KEY_MIN (<= q), so the count is always >= 1 for routed queries.
+    """
+    cnt = jnp.sum(node_keys <= q[..., None], axis=-1)
+    return jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("height", "with_path"))
+def bulk_lookup(
+    tree: TreeArrays,
+    queries: jax.Array,
+    *,
+    height: int,
+    with_path: bool = False,
+):
+    """Look up a batch of keys.  Returns ``(found, values)`` or, when
+    ``with_path``, ``(found, values, path)`` with ``path[b, l]`` = node id at
+    depth ``l`` (root first)."""
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    nodes = jnp.broadcast_to(tree.root, (b,)).astype(jnp.int32)
+    path = [nodes] if with_path else None
+    for _ in range(height - 1):
+        node_keys = tree.keys[nodes]                      # [B, F] gather
+        slot = _search_slot(node_keys, queries)           # [B]
+        nodes = tree.children[nodes, slot]
+        if with_path:
+            path.append(nodes)
+    leaf_keys = tree.keys[nodes]
+    eq = leaf_keys == queries[..., None]
+    found = jnp.any(eq, axis=-1)
+    vals = jnp.sum(jnp.where(eq, tree.values[nodes], 0), axis=-1)
+    if with_path:
+        return found, vals, jnp.stack(path, axis=1)
+    return found, vals
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def bulk_find_leaf(tree: TreeArrays, queries: jax.Array, *, height: int):
+    """Route each query to its leaf id (no value fetch)."""
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    nodes = jnp.broadcast_to(tree.root, (b,)).astype(jnp.int32)
+    for _ in range(height - 1):
+        slot = _search_slot(tree.keys[nodes], queries)
+        nodes = tree.children[nodes, slot]
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Batched updates (write to existing keys)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def bulk_update(
+    tree: TreeArrays, queries: jax.Array, new_values: jax.Array, *, height: int
+) -> Tuple[TreeArrays, jax.Array]:
+    """Set ``value`` for every existing key in ``queries``; returns
+    ``(tree', updated_mask)``.  Duplicate batch keys: one of them wins."""
+    queries = queries.astype(jnp.int64)
+    scratch = tree.capacity - 1
+    leaves = bulk_find_leaf(tree, queries, height=height)
+    leaf_keys = tree.keys[leaves]                         # [B, F]
+    eq = leaf_keys == queries[..., None]
+    slot = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    found = jnp.any(eq, axis=-1)
+    safe_leaf = jnp.where(found, leaves, scratch)
+    safe_slot = jnp.where(found, slot, 0)
+    vals = jnp.where(found, new_values.astype(jnp.int64), tree.values[scratch, 0])
+    new_vals = tree.values.at[safe_leaf, safe_slot].set(vals)
+    new_version = tree.version.at[safe_leaf].add(
+        jnp.where(found, 2, 0).astype(jnp.int32)
+    )
+    return tree._replace(values=new_vals, version=new_version), found
+
+
+# ---------------------------------------------------------------------------
+# Segment machinery shared by vectorized mutations
+# ---------------------------------------------------------------------------
+
+
+def _leaf_segments(leaves: jax.Array, active: jax.Array, order_key: jax.Array):
+    """Group batch lanes by target leaf.
+
+    Returns ``(sort_idx, seg_id, pos_in_seg, seg_leaf, seg_active)`` where
+    lanes are sorted by (active-leaf, order_key); each distinct active leaf
+    becomes one segment; inactive lanes collect in a trailing dead segment.
+    """
+    b = leaves.shape[0]
+    inactive_key = jnp.int64(1) << 40
+    route = jnp.where(active, leaves.astype(jnp.int64), inactive_key)
+    sort_idx = jnp.lexsort((order_key, route))
+    sorted_route = route[sort_idx]
+    new_seg = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_route[1:] != sorted_route[:-1]]
+    )
+    seg_id = jnp.cumsum(new_seg) - 1                      # [B]
+    seg_start = jax.lax.cummax(jnp.where(new_seg, jnp.arange(b), 0), axis=0)
+    pos_in_seg = jnp.arange(b) - seg_start
+    seg_leaf = (
+        jnp.zeros((b,), jnp.int32)
+        .at[seg_id]
+        .max(jnp.where(active[sort_idx], leaves[sort_idx], 0).astype(jnp.int32))
+    )
+    seg_active = jnp.zeros((b,), bool).at[seg_id].max(active[sort_idx])
+    return sort_idx, seg_id, pos_in_seg, seg_leaf, seg_active
+
+
+# ---------------------------------------------------------------------------
+# Batched inserts: device fast path + host SMO fallback
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def _insert_fast_path(tree: TreeArrays, keys: jax.Array, values: jax.Array, *, height: int):
+    """Vectorized insert of a batch into leaf slack space.
+
+    Returns ``(tree', handled_mask, overflow_mask)``.  ``handled`` covers new
+    inserts applied on device plus duplicates (which become value updates).
+    Keys routed to leaves that would exceed FANOUT are reported in
+    ``overflow_mask`` for the host SMO path.
+    """
+    b = keys.shape[0]
+    scratch = tree.capacity - 1
+    keys = keys.astype(jnp.int64)
+    values = values.astype(jnp.int64)
+    leaves = bulk_find_leaf(tree, keys, height=height)
+
+    # Existing keys -> value updates, not inserts.
+    leaf_keys = tree.keys[leaves]                          # [B, F]
+    is_dup = jnp.any(leaf_keys == keys[..., None], axis=-1)
+
+    # Deduplicate within the batch (first occurrence wins).
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    is_first = jnp.zeros((b,), bool).at[order].set(first)
+
+    eligible = (~is_dup) & is_first
+
+    # Per-leaf incoming counts decide overflow.
+    incoming = (
+        jnp.zeros((tree.capacity,), jnp.int32)
+        .at[leaves]
+        .add(jnp.where(eligible, 1, 0).astype(jnp.int32))
+    )
+    leaf_overflow = (tree.num_keys + incoming) > FANOUT
+    overflow = eligible & leaf_overflow[leaves]
+    do_insert = eligible & ~leaf_overflow[leaves]
+
+    sort_idx, seg_id, pos_in_seg, seg_leaf, seg_active = _leaf_segments(
+        leaves, do_insert, keys
+    )
+
+    # Merge rows: [B, 2F] = existing leaf row ++ this segment's batch keys.
+    tgt = jnp.where(seg_active, seg_leaf, scratch)
+    merge_keys = jnp.full((b, 2 * FANOUT), KEY_MAX, dtype=jnp.int64)
+    merge_vals = jnp.zeros((b, 2 * FANOUT), dtype=jnp.int64)
+    merge_keys = merge_keys.at[:, :FANOUT].set(tree.keys[tgt])
+    merge_vals = merge_vals.at[:, :FANOUT].set(tree.values[tgt])
+    put = do_insert[sort_idx]
+    col = FANOUT + jnp.minimum(pos_in_seg, FANOUT - 1)
+    merge_keys = merge_keys.at[seg_id, col].set(
+        jnp.where(put, keys[sort_idx], KEY_MAX)
+    )
+    merge_vals = merge_vals.at[seg_id, col].set(jnp.where(put, values[sort_idx], 0))
+
+    sidx = jnp.argsort(merge_keys, axis=-1)
+    merged_k = jnp.take_along_axis(merge_keys, sidx, axis=-1)[:, :FANOUT]
+    merged_v = jnp.take_along_axis(merge_vals, sidx, axis=-1)[:, :FANOUT]
+
+    # Scatter back; inactive rows rewrite the scratch row with its own
+    # contents (identical writers -> deterministic no-op).
+    out_k = jnp.where(seg_active[:, None], merged_k, tree.keys[tgt])
+    out_v = jnp.where(seg_active[:, None], merged_v, tree.values[tgt])
+    new_keys = tree.keys.at[tgt].set(out_k)
+    new_values = tree.values.at[tgt].set(out_v)
+    cnt = jnp.sum(out_k != KEY_MAX, axis=-1).astype(jnp.int32)
+    new_num = tree.num_keys.at[tgt].set(
+        jnp.where(seg_active, cnt, tree.num_keys[tgt])
+    )
+    new_version = tree.version.at[tgt].add(
+        jnp.where(seg_active, 2, 0).astype(jnp.int32)
+    )
+
+    # Duplicates update values in place (scratch-routed when not dup).
+    # Slots must be located in the *post-merge* key rows: the merge above may
+    # have shifted keys within the leaf.
+    dleaf = jnp.where(is_dup, leaves, scratch)
+    dslot = jnp.where(
+        is_dup,
+        jnp.argmax(new_keys[dleaf] == keys[..., None], axis=-1),
+        0,
+    ).astype(jnp.int32)
+    dval = jnp.where(is_dup, values, new_values[scratch, 0])
+    new_values = new_values.at[dleaf, dslot].set(dval)
+
+    tree = tree._replace(
+        keys=new_keys, values=new_values, num_keys=new_num, version=new_version
+    )
+    return tree, do_insert | is_dup, overflow
+
+
+def batch_insert(
+    tree: TreeArrays,
+    meta: TreeMeta,
+    keys,
+    values,
+) -> Tuple[TreeArrays, TreeMeta, np.ndarray]:
+    """Insert a batch.  Device fast path first; overflowing keys go through
+    the host SMO path (splits via rebuild, possibly growing the tree).
+    Returns ``(tree', meta', handled_mask)``."""
+    keys = jnp.asarray(keys, dtype=jnp.int64)
+    values = jnp.asarray(values, dtype=jnp.int64)
+    tree, ok, overflow = _insert_fast_path(tree, keys, values, height=meta.height)
+    overflow = np.asarray(overflow)
+    ok = np.asarray(ok)
+    if overflow.any():
+        tree, meta = _host_insert_with_splits(
+            tree, np.asarray(keys)[overflow], np.asarray(values)[overflow]
+        )
+        ok = ok | overflow
+    return tree, meta, ok
+
+
+def _host_insert_with_splits(
+    tree: TreeArrays, keys: np.ndarray, values: np.ndarray
+) -> Tuple[TreeArrays, TreeMeta]:
+    """Host-side SMO path: rebuild the tree with the extra keys merged in.
+
+    A rebuild keeps the bulk-load invariants (contiguous ids per level,
+    uniform fill) that the sharded pool layout relies on; the simulator
+    (Plane A) implements true in-place eager splits per the paper.
+    """
+    all_keys, all_vals = tree_items(tree)
+    merged_keys = np.concatenate([all_keys, keys])
+    merged_vals = np.concatenate([all_vals, values])
+    order = np.argsort(merged_keys, kind="stable")
+    merged_keys, merged_vals = merged_keys[order], merged_vals[order]
+    # Later write wins for duplicates (new keys appended after existing).
+    keep = np.concatenate([merged_keys[1:] != merged_keys[:-1], [True]])
+    return bulk_build(merged_keys[keep], merged_vals[keep])
+
+
+# ---------------------------------------------------------------------------
+# Batched deletes (logical removal; structural merges live in the simulator)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def bulk_delete(
+    tree: TreeArrays, queries: jax.Array, *, height: int
+) -> Tuple[TreeArrays, jax.Array]:
+    """Remove keys, compacting each touched leaf row.  Returns
+    ``(tree', deleted_mask)``."""
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    scratch = tree.capacity - 1
+    leaves = bulk_find_leaf(tree, queries, height=height)
+    hit = tree.keys[leaves] == queries[..., None]          # [B, F]
+    found = jnp.any(hit, axis=-1)
+    slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+
+    # Scatter kill marks into a full-size mask (unique (leaf, slot) targets).
+    kleaf = jnp.where(found, leaves, scratch)
+    kslot = jnp.where(found, slot, 0)
+    kill = (
+        jnp.zeros((tree.capacity, FANOUT), bool)
+        .at[kleaf, kslot]
+        .set(found, mode="drop")
+    )
+    kill = kill.at[scratch].set(False)
+
+    # Compact only the touched leaves, one segment per distinct leaf.
+    _, seg_id, _, seg_leaf, seg_active = _leaf_segments(leaves, found, queries)
+    tgt = jnp.where(seg_active, seg_leaf, scratch)
+    rows_k = jnp.where(kill[tgt], KEY_MAX, tree.keys[tgt])
+    rows_v = jnp.where(kill[tgt], 0, tree.values[tgt])
+    sidx = jnp.argsort(rows_k, axis=-1)
+    rows_k = jnp.take_along_axis(rows_k, sidx, axis=-1)
+    rows_v = jnp.take_along_axis(rows_v, sidx, axis=-1)
+    out_k = jnp.where(seg_active[:, None], rows_k, tree.keys[tgt])
+    out_v = jnp.where(seg_active[:, None], rows_v, tree.values[tgt])
+    new_keys = tree.keys.at[tgt].set(out_k)
+    new_vals = tree.values.at[tgt].set(out_v)
+    cnt = jnp.sum(out_k != KEY_MAX, axis=-1).astype(jnp.int32)
+    new_num = tree.num_keys.at[tgt].set(
+        jnp.where(seg_active, cnt, tree.num_keys[tgt])
+    )
+    new_version = tree.version.at[tgt].add(
+        jnp.where(seg_active, 2, 0).astype(jnp.int32)
+    )
+    return (
+        tree._replace(
+            keys=new_keys, values=new_vals, num_keys=new_num, version=new_version
+        ),
+        found,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Range scans (paper §7: subdivided into repeated lookups via fence keys)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("height", "count", "max_hops"))
+def bulk_scan(
+    tree: TreeArrays,
+    start_keys: jax.Array,
+    *,
+    height: int,
+    count: int,
+    max_hops: Optional[int] = None,
+):
+    """Scan up to ``count`` records in ascending order from each start key.
+
+    Faithful to the paper: DEX keeps no leaf links, so a multi-leaf scan is
+    subdivided into repeated root-to-leaf lookups whose next start key is the
+    current leaf's *fence_hi*.  Returns ``(keys, values)``, each
+    ``[B, count]``, KEY_MAX-padded.
+    """
+    start_keys = start_keys.astype(jnp.int64)
+    b = start_keys.shape[0]
+    hops = max_hops if max_hops is not None else max(2, count // (FANOUT // 2) + 2)
+
+    out_k = jnp.full((b, hops * FANOUT), KEY_MAX, dtype=jnp.int64)
+    out_v = jnp.zeros((b, hops * FANOUT), dtype=jnp.int64)
+    cur = start_keys
+    done = jnp.zeros((b,), bool)
+    taken = jnp.zeros((b,), jnp.int32)
+    for h in range(hops):
+        leaves = bulk_find_leaf(tree, cur, height=height)   # fresh traversal
+        lk = tree.keys[leaves]                              # [B, F]
+        lv = tree.values[leaves]
+        pre = (lk >= cur[:, None]) & (lk != KEY_MAX) & (~done[:, None])
+        mask = pre & ((taken[:, None] + jnp.cumsum(pre, axis=-1)) <= count)
+        out_k = jax.lax.dynamic_update_slice(
+            out_k, jnp.where(mask, lk, KEY_MAX), (0, h * FANOUT)
+        )
+        out_v = jax.lax.dynamic_update_slice(
+            out_v, jnp.where(mask, lv, 0), (0, h * FANOUT)
+        )
+        taken = taken + jnp.sum(mask, axis=-1).astype(jnp.int32)
+        nxt = tree.fence_hi[leaves]
+        done = done | (taken >= count) | (nxt == KEY_MAX)
+        cur = jnp.where(done, cur, nxt)
+    sidx = jnp.argsort(out_k, axis=-1)
+    out_k = jnp.take_along_axis(out_k, sidx, axis=-1)[:, :count]
+    out_v = jnp.take_along_axis(out_v, sidx, axis=-1)[:, :count]
+    return out_k, out_v
+
+
+# ---------------------------------------------------------------------------
+# Validation + host helpers (used by property tests)
+# ---------------------------------------------------------------------------
+
+
+def validate(tree: TreeArrays, meta: TreeMeta) -> None:
+    """Check structural invariants; raises AssertionError on violation."""
+    K = np.asarray(tree.keys)
+    C = np.asarray(tree.children)
+    NK = np.asarray(tree.num_keys)
+    LV = np.asarray(tree.level)
+    FLO = np.asarray(tree.fence_lo)
+    FHI = np.asarray(tree.fence_hi)
+    root = int(tree.root)
+    assert LV[root] == meta.height - 1, "root level mismatch"
+
+    seen = set()
+
+    def rec(nid: int, lo: int, hi: int, lvl: int):
+        assert nid not in seen, "node visited twice"
+        seen.add(nid)
+        assert LV[nid] == lvl, f"level mismatch at {nid}"
+        nk = int(NK[nid])
+        assert 1 <= nk <= FANOUT
+        row = K[nid]
+        if lvl == 0:
+            valid = row[row != KEY_MAX]
+            assert valid.size == nk, f"leaf count mismatch at {nid}"
+            assert np.all(np.diff(valid.astype(object)) > 0), f"unsorted leaf {nid}"
+            assert np.all(
+                (valid >= max(lo, int(KEY_MIN) + 1)) & (valid < hi)
+            ), f"leaf keys outside fences at {nid}"
+        else:
+            srt = row[:nk]
+            assert np.all(np.diff(srt.astype(object)) > 0), f"unsorted inner {nid}"
+        assert FLO[nid] == lo and FHI[nid] == hi, f"fence mismatch at {nid}"
+        if lvl == 0:
+            return
+        for i in range(nk):
+            c = int(C[nid, i])
+            assert c != NULL
+            clo = int(row[i])
+            chi = int(row[i + 1]) if i + 1 < nk else hi
+            rec(c, clo, chi, lvl - 1)
+
+    rec(root, int(KEY_MIN), int(KEY_MAX), meta.height - 1)
+    assert len(seen) == int(tree.num_nodes), "reachable nodes != num_nodes"
+
+
+def tree_items(tree: TreeArrays) -> Tuple[np.ndarray, np.ndarray]:
+    """All (key, value) pairs in sorted order (host helper)."""
+    K = np.asarray(tree.keys)
+    V = np.asarray(tree.values)
+    LV = np.asarray(tree.level)
+    leaf = LV == 0
+    k = K[leaf].reshape(-1)
+    v = V[leaf].reshape(-1)
+    m = k != KEY_MAX
+    k, v = k[m], v[m]
+    order = np.argsort(k, kind="stable")
+    return k[order], v[order]

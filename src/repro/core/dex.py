@@ -1,0 +1,489 @@
+"""DEX on a TPU mesh (Plane B): logical partitioning, per-chip caching and
+opportunistic offloading expressed as SPMD collectives.
+
+Mapping (DESIGN.md §2):
+
+  compute server   -> a chip; key ranges are owned by rows of the
+                      ``route`` axes (logical partitioning)
+  memory server    -> a column of the ``memory`` axis; the subtree-blocked
+                      pool (core/pool.py) block-shards over it, so a whole
+                      level-M subtree lives on one column (paper §3)
+  RDMA READ        -> request/response ``all_to_all`` over the memory axis
+                      carrying 1KB node rows (one round per tree level)
+  offload RPC      -> one request/response ``all_to_all`` carrying keys in
+                      and values out; the owner walks its local block
+  compute-side     -> per-chip set-associative arrays; FIFO-within-set is
+  cache               the vectorized form of the paper's cooling map
+                      (bucket == set), lazy admission via key-hash bits
+
+The batch-level offload decision replaces the paper's per-op moving-average
+latency estimates (which require wall-clock self-measurement, impossible in
+an SPMD program) with running per-level miss-rate EMAs and a byte-cost
+comparison — the same ``l_p < (L+1) * (l_o + l_s) * c`` structure evaluated
+on predicted bytes instead of measured latencies (DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.nodes import FANOUT, KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool, top_walk
+
+NODE_ROW_BYTES = FANOUT * 8 * 3  # keys + children + values on the wire
+OFFLOAD_REQ_BYTES = 16
+OFFLOAD_RESP_BYTES = 16
+
+# stat counter indices
+STAT_OPS, STAT_HITS, STAT_FETCHES, STAT_OFFLOADS, STAT_DROPS, N_STATS = range(6)
+
+
+@dataclasses.dataclass(frozen=True)
+class DexMeshConfig:
+    """Static configuration for the mesh plane."""
+
+    route_axes: Tuple[str, ...] = ("data",)   # compute-partition axes
+    memory_axis: str = "model"                # pool-shard axis
+    n_route: int = 1                          # product of route axis sizes
+    n_memory: int = 1                         # memory axis size
+    cache_sets: int = 256
+    cache_ways: int = 4
+    p_admit_leaf_pct: int = 10                # paper §5.4: P_A = 0.1
+    route_capacity_factor: float = 2.0        # all_to_all bucket slack
+    policy: str = "auto"                      # fetch | offload | auto
+    offload_c: float = 1.3                    # cost coefficient (§6.1)
+    ema_decay: float = 0.98
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_route * self.n_memory
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return self.route_axes + (self.memory_axis,)
+
+
+class DexCache(NamedTuple):
+    """Per-chip set-associative node cache; axis 0 is the device axis."""
+
+    tags: jax.Array      # [Dev, sets, ways] int64, -1 empty
+    keys: jax.Array      # [Dev, sets, ways, FANOUT] int64
+    children: jax.Array  # [Dev, sets, ways, FANOUT] int32
+    values: jax.Array    # [Dev, sets, ways, FANOUT] int64
+    fifo: jax.Array      # [Dev, sets] int32 (FIFO-within-set pointer)
+
+
+class DexState(NamedTuple):
+    pool: SubtreePool
+    cache: DexCache
+    boundaries: jax.Array  # [n_route + 1] int64, replicated
+    miss_ema: jax.Array    # [Dev, levels] f32 per-level miss-rate EMA
+    stats: jax.Array       # [Dev, N_STATS] int64
+
+
+def init_cache(cfg: DexMeshConfig) -> DexCache:
+    d, s, w = cfg.n_devices, cfg.cache_sets, cfg.cache_ways
+    return DexCache(
+        tags=jnp.full((d, s, w), -1, jnp.int64),
+        keys=jnp.full((d, s, w, FANOUT), KEY_MAX, jnp.int64),
+        children=jnp.zeros((d, s, w, FANOUT), jnp.int32),
+        values=jnp.zeros((d, s, w, FANOUT), jnp.int64),
+        fifo=jnp.zeros((d, s), jnp.int32),
+    )
+
+
+def init_state(
+    pool: SubtreePool,
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    boundaries: np.ndarray,
+) -> DexState:
+    levels = meta.levels_in_subtree
+    return DexState(
+        pool=pool,
+        cache=init_cache(cfg),
+        boundaries=jnp.asarray(boundaries, jnp.int64),
+        miss_ema=jnp.ones((cfg.n_devices, levels), jnp.float32),
+        stats=jnp.zeros((cfg.n_devices, N_STATS), jnp.int64),
+    )
+
+
+def state_shardings(mesh, cfg: DexMeshConfig):
+    """NamedShardings for a DexState on ``mesh``."""
+    dev = P(cfg.all_axes)
+
+    def ns(spec):
+        return jax.sharding.NamedSharding(mesh, spec)
+
+    pool_spec = SubtreePool(
+        top_keys=ns(P()),
+        top_children=ns(P()),
+        pool_keys=ns(P(cfg.memory_axis)),
+        pool_children=ns(P(cfg.memory_axis)),
+        pool_values=ns(P(cfg.memory_axis)),
+    )
+    cache_spec = DexCache(
+        tags=ns(dev), keys=ns(dev), children=ns(dev), values=ns(dev), fifo=ns(dev)
+    )
+    return DexState(
+        pool=pool_spec,
+        cache=cache_spec,
+        boundaries=ns(P()),
+        miss_ema=ns(dev),
+        stats=ns(dev),
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers used inside shard_map
+# ---------------------------------------------------------------------------
+
+
+def _hash64(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xFF51AFD7ED558CCD)
+    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xC4CEB9FE1A85EC53)
+    return x ^ (x >> jnp.uint64(33))
+
+
+def _pack_by_dest(payload: jax.Array, dest: jax.Array, n_dest: int, cap: int):
+    """Bucket ``payload`` rows by destination with bounded capacity.
+
+    Returns ``(buf, lane_of_slot, dropped)``:
+      * ``buf``: [n_dest, cap, ...] payload (KEY_MAX padding)
+      * ``lane_of_slot``: [n_dest, cap] originating lane (B = OOB sentinel)
+      * ``dropped``: [B] lanes that exceeded a bucket's capacity (these are
+        load-shed, mirrored by a stats counter — the caller retries or
+        reports; logical repartitioning is the systemic fix, §4)
+    """
+    b = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sd = dest[order]
+    new = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    start = jax.lax.cummax(jnp.where(new, jnp.arange(b), 0), axis=0)
+    rank = jnp.arange(b) - start
+    ok = rank < cap
+    pad_shape = (n_dest, cap) + payload.shape[1:]
+    fill = KEY_MAX if payload.dtype == jnp.int64 else 0
+    buf = jnp.full(pad_shape, fill, payload.dtype)
+    buf = buf.at[sd, rank].set(payload[order], mode="drop")
+    lane = jnp.full((n_dest, cap), b, jnp.int32)
+    lane = lane.at[sd, rank].set(order.astype(jnp.int32), mode="drop")
+    dropped = jnp.zeros((b,), bool).at[order].set(~ok)
+    return buf, lane, dropped
+
+
+def _unpack_to_lanes(resp: jax.Array, lane_of_slot: jax.Array, b: int, fill):
+    """Scatter [n_dest, cap, ...] responses back to [B, ...] lanes."""
+    flat_lane = lane_of_slot.reshape(-1)
+    flat = resp.reshape((-1,) + resp.shape[2:])
+    out = jnp.full((b,) + resp.shape[2:], fill, resp.dtype)
+    return out.at[flat_lane].set(flat, mode="drop")
+
+
+def _a2a(x: jax.Array, axis: str) -> jax.Array:
+    """[n_axis, ...] per-destination buffers -> per-source buffers."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# the sharded lookup
+# ---------------------------------------------------------------------------
+
+
+def _cache_probe(cache: DexCache, cfg: DexMeshConfig, gid: jax.Array):
+    """Probe the per-chip cache.  Returns (hit, keys_row, children_row,
+    values_row, set_idx)."""
+    set_idx = (_hash64(gid) % jnp.uint64(cfg.cache_sets)).astype(jnp.int32)
+    tags = cache.tags[0, set_idx]                        # [B, W]
+    eq = tags == gid[:, None]
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    k = cache.keys[0, set_idx, way]
+    c = cache.children[0, set_idx, way]
+    v = cache.values[0, set_idx, way]
+    return hit, k, c, v, set_idx
+
+
+def _cache_admit(
+    cache: DexCache,
+    cfg: DexMeshConfig,
+    gid: jax.Array,
+    set_idx: jax.Array,
+    admit: jax.Array,
+    rows_k: jax.Array,
+    rows_c: jax.Array,
+    rows_v: jax.Array,
+) -> DexCache:
+    """FIFO-within-set insertion of fetched rows (cooling-map analogue)."""
+    way = (cache.fifo[0, set_idx] % cfg.cache_ways).astype(jnp.int32)
+    # non-admitting lanes scatter out of bounds (dropped)
+    sidx = jnp.where(admit, set_idx, cfg.cache_sets)
+    tags = cache.tags.at[0, sidx, way].set(gid, mode="drop")
+    keys = cache.keys.at[0, sidx, way].set(rows_k, mode="drop")
+    children = cache.children.at[0, sidx, way].set(rows_c, mode="drop")
+    values = cache.values.at[0, sidx, way].set(rows_v, mode="drop")
+    fifo = cache.fifo.at[0, sidx].add(1, mode="drop")
+    return DexCache(tags=tags, keys=keys, children=children, values=values, fifo=fifo)
+
+
+def _fetch_rows(
+    pool: SubtreePool,
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    gid: jax.Array,
+    want: jax.Array,
+):
+    """Remote-read node rows (the RDMA READ analogue): request/response
+    all_to_all over the memory axis.  Lanes with ``want == False`` send a
+    padded no-op request."""
+    b = gid.shape[0]
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    subtree = (gid // meta.subtree_cap).astype(jnp.int32)
+    owner = jnp.where(want, subtree // s_per, cfg.n_memory)  # OOB when unused
+    cap = int(np.ceil(b / cfg.n_memory * cfg.route_capacity_factor))
+    buf, lane, dropped = _pack_by_dest(gid, owner.astype(jnp.int32), cfg.n_memory, cap)
+    req = _a2a(buf, cfg.memory_axis)                       # [n_mem, cap]
+    # serve locally: decode gid -> (local subtree, local node)
+    st = (req // meta.subtree_cap).astype(jnp.int32) % s_per
+    lo = (req % meta.subtree_cap).astype(jnp.int32)
+    valid = req != KEY_MAX
+    st = jnp.where(valid, st, 0)
+    lo = jnp.where(valid, lo, 0)
+    rk = pool.pool_keys[st, lo]                            # [n_mem, cap, F]
+    rc = pool.pool_children[st, lo]
+    rv = pool.pool_values[st, lo]
+    rk = jnp.where(valid[..., None], rk, KEY_MAX)
+    rc = jnp.where(valid[..., None], rc, 0)
+    rv = jnp.where(valid[..., None], rv, 0)
+    rk = _a2a(rk, cfg.memory_axis)
+    rc = _a2a(rc, cfg.memory_axis)
+    rv = _a2a(rv, cfg.memory_axis)
+    out_k = _unpack_to_lanes(rk, lane, b, KEY_MAX)
+    out_c = _unpack_to_lanes(rc, lane, b, 0)
+    out_v = _unpack_to_lanes(rv, lane, b, 0)
+    return out_k, out_c, out_v, dropped
+
+
+def _offload_walk(
+    pool: SubtreePool,
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    queries: jax.Array,
+    subtree: jax.Array,
+    want: jax.Array,
+):
+    """Offload the remaining traversal to the owning memory column (§6):
+    one request/response all_to_all; the owner walks its local block."""
+    b = queries.shape[0]
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    owner = jnp.where(want, subtree // s_per, cfg.n_memory)
+    cap = int(np.ceil(b / cfg.n_memory * cfg.route_capacity_factor))
+    payload = jnp.stack([queries, subtree.astype(jnp.int64)], axis=-1)  # [B, 2]
+    buf, lane, dropped = _pack_by_dest(payload, owner.astype(jnp.int32), cfg.n_memory, cap)
+    req = _a2a(buf, cfg.memory_axis)                       # [n_mem, cap, 2]
+    q = req[..., 0]
+    st_global = req[..., 1]
+    valid = q != KEY_MAX
+    st = jnp.where(valid, st_global.astype(jnp.int32) % s_per, 0)
+    # local walk, levels_in_subtree levels, entirely in the owner's block
+    local = jnp.zeros(st.shape, jnp.int32)
+    for _ in range(meta.levels_in_subtree - 1):
+        rows = pool.pool_keys[st, local]                   # [n_mem, cap, F]
+        cnt = jnp.sum(rows <= q[..., None], axis=-1)
+        slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+        local = jnp.take_along_axis(
+            pool.pool_children[st, local], slot[..., None], axis=-1
+        )[..., 0]
+    rows = pool.pool_keys[st, local]
+    eq = rows == q[..., None]
+    found = jnp.any(eq, axis=-1) & valid
+    vals = jnp.sum(jnp.where(eq, pool.pool_values[st, local], 0), axis=-1)
+    resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
+    resp = _a2a(resp, cfg.memory_axis)
+    out = _unpack_to_lanes(resp, lane, b, 0)
+    return out[..., 0] != 0, out[..., 1], dropped
+
+
+def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
+    """Build the sharded lookup: ``(state, keys) -> (state, found, values)``.
+
+    ``keys`` is globally sharded over all mesh axes; results come back in the
+    caller's lane order.  Wrap with ``jax.jit`` (see serve/ and launch/).
+    """
+    levels = meta.levels_in_subtree
+
+    def local_fn(pool, cache, boundaries, miss_ema, stats, keys):
+        b = keys.shape[0]
+        n_route = cfg.n_route
+
+        # --- 1. route to the owning partition (logical partitioning, §4) ---
+        owner = (
+            jnp.searchsorted(boundaries, keys, side="right") - 1
+        ).astype(jnp.int32)
+        owner = jnp.clip(owner, 0, n_route - 1)
+        cap = int(np.ceil(b / n_route * cfg.route_capacity_factor))
+        buf, lane, dropped_r = _pack_by_dest(keys, owner, n_route, cap)
+        if len(cfg.route_axes) == 1:
+            routed = _a2a(buf, cfg.route_axes[0])
+        else:
+            # flatten multi-axis routing: split over the first axis, then the
+            # second — two all_to_alls compose to a full permutation
+            a0, a1 = cfg.route_axes
+            s1 = mesh.shape[a1]
+            r = buf.reshape((buf.shape[0] // s1, s1) + buf.shape[1:])
+            r = jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
+            r = jnp.swapaxes(r, 0, 1)
+            r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
+            r = jnp.swapaxes(r, 0, 1)
+            routed = r.reshape(buf.shape)
+        q = routed.reshape(-1)                              # [n_route*cap]
+        live = q != KEY_MAX
+
+        # --- 2. replicated top-tree walk (always-cached upper levels) ------
+        subtree = top_walk(pool, meta, q)
+        subtree = jnp.where(live, subtree, 0)
+
+        # --- 3. offload decision (batch-level cost model, §6.1) ------------
+        # predicted one-sided cost: sum over levels of miss-EMA * node bytes
+        fetch_bytes = jnp.sum(miss_ema[0]) * NODE_ROW_BYTES * cfg.offload_c
+        offload_bytes = jnp.float32(OFFLOAD_REQ_BYTES + OFFLOAD_RESP_BYTES)
+        want_offload = fetch_bytes > offload_bytes
+        if cfg.policy == "fetch":
+            want_offload = jnp.asarray(False)
+        elif cfg.policy == "offload":
+            want_offload = jnp.asarray(True)
+        # uniform across devices: EMA is psum-synchronized below, and the
+        # predicate depends only on replicated state
+        want_offload = jnp.all(want_offload)
+
+        # --- 4a. cached walk with per-level remote fetch (one-sided path) --
+        def fetch_branch(cache):
+            local = jnp.zeros(q.shape, jnp.int32)
+            found = jnp.zeros(q.shape, bool)
+            vals = jnp.zeros(q.shape, jnp.int64)
+            new_cache = cache
+            miss_counts = []
+            n_fetch = jnp.int64(0)
+            for lvl in range(levels):
+                gid = meta.node_gid(subtree, local)
+                hit, ck, cc, cv, set_idx = _cache_probe(new_cache, cfg, gid)
+                need = live
+                miss = need & ~hit
+                miss_counts.append(jnp.sum(miss))
+                fk, fc, fv, _drop = _fetch_rows(pool, meta, cfg, gid, miss)
+                rows_k = jnp.where(hit[:, None], ck, fk)
+                rows_c = jnp.where(hit[:, None], cc, fc)
+                rows_v = jnp.where(hit[:, None], cv, fv)
+                n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+                # lazy admission: inner always, leaves with P_A (§5.4)
+                is_leaf = lvl == levels - 1
+                if is_leaf:
+                    luck = (_hash64(gid ^ jnp.int64(0x9E3779B9)) % jnp.uint64(100)
+                            ).astype(jnp.int32)
+                    p_ok = luck < cfg.p_admit_leaf_pct
+                else:
+                    p_ok = jnp.ones(q.shape, bool)
+                new_cache = _cache_admit(
+                    new_cache, cfg, gid, set_idx, miss & p_ok, rows_k, rows_c, rows_v
+                )
+                if lvl < levels - 1:
+                    cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
+                    slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+                    local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
+                else:
+                    eq = rows_k == q[:, None]
+                    found = jnp.any(eq, axis=-1) & live
+                    vals = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
+            total = jnp.maximum(jnp.sum(live), 1)
+            rates = jnp.stack(
+                [m.astype(jnp.float32) / total.astype(jnp.float32)
+                 for m in miss_counts]
+            )
+            hits = levels * jnp.sum(live).astype(jnp.int64) - n_fetch
+            return found, vals, new_cache, rates, n_fetch, hits, jnp.int64(0)
+
+        # --- 4b. offload the whole sub-path (two-sided path) ---------------
+        def offload_branch(cache):
+            found, vals, _drop = _offload_walk(pool, meta, cfg, q, subtree, live)
+            rates = miss_ema[0]  # unchanged estimate
+            n_off = jnp.sum(live).astype(jnp.int64)
+            return found, vals, cache, rates, jnp.int64(0), jnp.int64(0), n_off
+
+        found, vals, new_cache, rates, n_fetch, n_hit, n_off = jax.lax.cond(
+            want_offload, offload_branch, fetch_branch, cache
+        )
+
+        # --- 5. EMA + stats -------------------------------------------------
+        # synchronize the miss EMA across the full mesh so future decisions
+        # are uniform
+        g_rates = jax.lax.pmean(rates, cfg.all_axes)
+        new_ema = cfg.ema_decay * miss_ema + (1 - cfg.ema_decay) * g_rates[None, :]
+        ops = jnp.sum(live).astype(jnp.int64)
+        upd = jnp.zeros((1, N_STATS), jnp.int64)
+        upd = upd.at[0, STAT_OPS].set(ops)
+        upd = upd.at[0, STAT_HITS].set(n_hit)
+        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
+        upd = upd.at[0, STAT_OFFLOADS].set(n_off)
+        upd = upd.at[0, STAT_DROPS].set(jnp.sum(dropped_r).astype(jnp.int64))
+        new_stats = stats + upd
+
+        # --- 6. results back to the requesting lanes ------------------------
+        resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
+        resp = resp.reshape(n_route, cap, 2)
+        if len(cfg.route_axes) == 1:
+            back = _a2a(resp, cfg.route_axes[0])
+        else:
+            a0, a1 = cfg.route_axes
+            s1 = mesh.shape[a1]
+            r = resp.reshape((resp.shape[0] // s1, s1) + resp.shape[1:])
+            r = jnp.swapaxes(r, 0, 1)
+            r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
+            r = jnp.swapaxes(r, 0, 1)
+            r = jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
+            back = r.reshape(resp.shape)
+        out = _unpack_to_lanes(back, lane, b, 0)
+        out_found = (out[..., 0] != 0) & ~dropped_r
+        out_vals = out[..., 1]
+        return new_cache, new_ema, new_stats, out_found, out_vals
+
+    dev = P(cfg.all_axes)
+    pool_specs = SubtreePool(
+        top_keys=P(),
+        top_children=P(),
+        pool_keys=P(cfg.memory_axis),
+        pool_children=P(cfg.memory_axis),
+        pool_values=P(cfg.memory_axis),
+    )
+    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev, fifo=dev)
+
+    sharded = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, P(cfg.all_axes)),
+        out_specs=(cache_specs, dev, dev, P(cfg.all_axes), P(cfg.all_axes)),
+        check_vma=False,
+    )
+
+    def lookup(state: DexState, keys: jax.Array):
+        new_cache, new_ema, new_stats, found, vals = sharded(
+            state.pool, state.cache, state.boundaries, state.miss_ema,
+            state.stats, keys,
+        )
+        new_state = DexState(
+            pool=state.pool,
+            cache=new_cache,
+            boundaries=state.boundaries,
+            miss_ema=new_ema,
+            stats=new_stats,
+        )
+        return new_state, found, vals
+
+    return lookup

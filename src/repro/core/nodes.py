@@ -1,0 +1,139 @@
+"""Node layout, tagged pointers, and tree-array containers for DEX.
+
+The paper (§3 "Node Layout and Addressing") lays each B+-tree node out as a
+header (lock/version, fence keys, level) followed by a key array and a child
+pointer array (inner) or value array (leaf), with 1KB nodes.  Remote nodes are
+addressed by 64-bit tagged pointers ``[swizzled(1) | memory-server-id(15) |
+address(48)]``.
+
+On TPU we keep the same logical layout but in structure-of-arrays form so a
+whole level of a batched traversal is one gather.  ``FANOUT = 64`` keys of 8
+bytes + 64 children of 8 bytes ≈ 1KB, matching the paper's node size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+
+#: Keys per node.  64 × 8B keys + 64 × 8B pointers ≈ the paper's 1KB nodes.
+FANOUT = 64
+
+#: Sentinel for "minus infinity" (leftmost fence / leftmost separator).
+KEY_MIN = np.int64(np.iinfo(np.int64).min)
+
+#: Sentinel for "plus infinity" (empty key slots, rightmost fence).
+KEY_MAX = np.int64(np.iinfo(np.int64).max)
+
+#: Null node id.
+NULL = np.int32(-1)
+
+#: Default leaf fill factor for bulk loading (slack for future inserts).
+DEFAULT_FILL = 0.7
+
+# Tagged-pointer layout: [swizzled(1) | server-id(15) | address(48)].
+_ADDR_BITS = 48
+_SERVER_BITS = 15
+_ADDR_MASK = (1 << _ADDR_BITS) - 1
+_SERVER_MASK = (1 << _SERVER_BITS) - 1
+SWIZZLED_BIT = 1 << 63
+
+
+def tag_pointer(server_id, address, swizzled=False):
+    """Pack a (server, address) pair into the paper's 64-bit tagged pointer."""
+    ptr = (np.uint64(server_id & _SERVER_MASK) << np.uint64(_ADDR_BITS)) | np.uint64(
+        address & _ADDR_MASK
+    )
+    if swizzled:
+        ptr |= np.uint64(SWIZZLED_BIT)
+    return ptr
+
+
+def untag_pointer(ptr):
+    """Unpack a tagged pointer -> (swizzled, server_id, address)."""
+    ptr = np.uint64(ptr)
+    swizzled = bool(ptr >> np.uint64(63))
+    server = int((ptr >> np.uint64(_ADDR_BITS)) & np.uint64(_SERVER_MASK))
+    address = int(ptr & np.uint64(_ADDR_MASK))
+    return swizzled, server, address
+
+
+# ---------------------------------------------------------------------------
+# Tree arrays (device-friendly structure-of-arrays)
+# ---------------------------------------------------------------------------
+
+
+class TreeArrays(NamedTuple):
+    """A B+-tree as a pytree of flat arrays.
+
+    Semantics:
+      * ``keys[n, i]`` is the smallest key reachable through slot ``i``
+        ("separator = subtree min" convention); empty slots hold KEY_MAX and
+        the leftmost slot of the leftmost node per level holds KEY_MIN.
+      * Inner nodes: ``children[n, i]`` is a node id.  Leaves: ``values[n, i]``
+        is the payload for ``keys[n, i]`` (exact-match semantics).
+      * Headers mirror the paper: version (optimistic lock word), fence keys
+        (``fence_lo <= k < fence_hi``) and level (0 = leaf).
+    """
+
+    keys: jax.Array       # [cap, FANOUT] int64
+    children: jax.Array   # [cap, FANOUT] int32 (inner only)
+    values: jax.Array     # [cap, FANOUT] int64 (leaf only)
+    num_keys: jax.Array   # [cap] int32
+    level: jax.Array      # [cap] int32, 0 = leaf, -1 = free
+    fence_lo: jax.Array   # [cap] int64
+    fence_hi: jax.Array   # [cap] int64
+    version: jax.Array    # [cap] int32 (even = unlocked; odd = "locked")
+    root: jax.Array       # [] int32
+    height: jax.Array     # [] int32 (number of levels, >= 1)
+    num_nodes: jax.Array  # [] int32 (allocated prefix; free list beyond)
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def empty_tree(capacity: int) -> TreeArrays:
+    """An empty tree with room for ``capacity`` nodes."""
+    return TreeArrays(
+        keys=jnp.full((capacity, FANOUT), KEY_MAX, dtype=jnp.int64),
+        children=jnp.full((capacity, FANOUT), NULL, dtype=jnp.int32),
+        values=jnp.zeros((capacity, FANOUT), dtype=jnp.int64),
+        num_keys=jnp.zeros((capacity,), dtype=jnp.int32),
+        level=jnp.full((capacity,), -1, dtype=jnp.int32),
+        fence_lo=jnp.full((capacity,), KEY_MIN, dtype=jnp.int64),
+        fence_hi=jnp.full((capacity,), KEY_MAX, dtype=jnp.int64),
+        version=jnp.zeros((capacity,), dtype=jnp.int32),
+        root=jnp.asarray(NULL, dtype=jnp.int32),
+        height=jnp.asarray(0, dtype=jnp.int32),
+        num_nodes=jnp.asarray(0, dtype=jnp.int32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeMeta:
+    """Static (trace-time) facts about a tree build."""
+
+    height: int
+    num_nodes: int
+    num_leaves: int
+    capacity: int
+    keys_per_leaf: int
+
+    @property
+    def levels(self) -> int:
+        return self.height
+
+
+def node_nbytes() -> int:
+    """Approximate on-wire size of one node (the paper's 1KB unit)."""
+    # keys + children/values + header (lock word, fences, level, count).
+    return FANOUT * 8 + FANOUT * 8 + 8 + 16 + 4 + 4

@@ -1,0 +1,156 @@
+"""Compute-side logical partitioning (paper §4).
+
+Each compute server logically owns a disjoint key range while memory servers
+present a globally addressable space.  Partitioning is *logical*: a routing
+table of boundaries, not data placement, so repartitioning/elasticity is a
+metadata update plus a dirty-cache flush (paper Fig. 10: < 2 s).
+
+Used by:
+  * Plane A (event simulator): key -> owning compute server, shared-node
+    detection (a node whose fence range crosses a boundary needs RDMA-style
+    synchronization).
+  * Plane B (mesh): key -> owning (pod, data) shard for all_to_all routing;
+    elastic scale-in/out of the serving launcher reuses ``split``/``merge``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nodes import KEY_MAX, KEY_MIN
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPartitions:
+    """Key-range ownership table.
+
+    ``boundaries`` has ``num_partitions + 1`` entries; partition ``p`` owns
+    keys in ``[boundaries[p], boundaries[p+1])``.  ``boundaries[0] == KEY_MIN``
+    and ``boundaries[-1] == KEY_MAX``.
+    """
+
+    boundaries: np.ndarray  # [P+1] int64
+
+    def __post_init__(self):
+        b = np.asarray(self.boundaries, dtype=np.int64)
+        assert b.ndim == 1 and b.size >= 2
+        assert b[0] == KEY_MIN and b[-1] == KEY_MAX
+        assert np.all(np.diff(b.astype(object)) > 0), "boundaries must increase"
+        object.__setattr__(self, "boundaries", b)
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def equal_width(num_partitions: int, lo: int, hi: int) -> "LogicalPartitions":
+        """Equal key-range widths over [lo, hi) (paper's default setup)."""
+        inner = np.linspace(lo, hi, num_partitions + 1).astype(np.int64)[1:-1]
+        inner = np.unique(inner)
+        b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
+        return LogicalPartitions(b)
+
+    @staticmethod
+    def from_samples(keys: np.ndarray, num_partitions: int) -> "LogicalPartitions":
+        """Workload-aware: equal-*frequency* boundaries from sampled keys
+        (the paper notes DEX works with any range scheme; boundaries should
+        be picked from lowest-inner-node fence keys, which sampled leaf keys
+        approximate)."""
+        keys = np.sort(np.asarray(keys, dtype=np.int64))
+        qs = np.quantile(keys, np.linspace(0, 1, num_partitions + 1)[1:-1])
+        inner = np.unique(qs.astype(np.int64))
+        b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
+        return LogicalPartitions(b)
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def num_partitions(self) -> int:
+        return self.boundaries.size - 1
+
+    def owner_of(self, keys) -> np.ndarray:
+        """Owning partition id for each key (vectorized)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        return (np.searchsorted(self.boundaries, keys, side="right") - 1).astype(
+            np.int32
+        )
+
+    def owner_of_device(self, keys: jnp.ndarray) -> jnp.ndarray:
+        """jnp version for use inside jit (Plane B routing)."""
+        b = jnp.asarray(self.boundaries)
+        return (jnp.searchsorted(b, keys, side="right") - 1).astype(jnp.int32)
+
+    def is_shared_range(self, lo, hi) -> np.ndarray:
+        """True when a [lo, hi) fence range crosses a partition boundary —
+        such nodes (e.g. the root) are accessible by multiple compute servers
+        and need RDMA-style synchronization (paper §4)."""
+        lo = np.asarray(lo, dtype=np.int64)
+        hi = np.asarray(hi, dtype=np.int64)
+        po = self.owner_of(lo)
+        # hi is exclusive: probe the last key strictly inside the range.
+        ph = (
+            np.searchsorted(self.boundaries, hi.astype(object) - 1, side="right") - 1
+        ).astype(np.int32)
+        return po != ph
+
+    # -- elasticity / rebalancing (paper §4, Fig. 10) ------------------------
+
+    def split_partition(self, p: int, at_key: int) -> "LogicalPartitions":
+        """Scale-out: split partition ``p`` at ``at_key`` (adds a server)."""
+        lo, hi = self.boundaries[p], self.boundaries[p + 1]
+        if not (lo < at_key < hi):
+            raise ValueError("split key outside partition range")
+        b = np.insert(self.boundaries, p + 1, at_key)
+        return LogicalPartitions(b)
+
+    def merge_partitions(self, p: int) -> "LogicalPartitions":
+        """Scale-in: merge partition ``p`` with ``p+1`` (removes a server)."""
+        if not (0 <= p < self.num_partitions - 1):
+            raise ValueError("no right neighbour to merge with")
+        b = np.delete(self.boundaries, p + 1)
+        return LogicalPartitions(b)
+
+    def rebalance(self, loads: Sequence[float]) -> "LogicalPartitions":
+        """Move boundaries toward equal load, assuming load uniform within
+        each partition (lightweight logical repartitioning; no data moves)."""
+        loads = np.asarray(loads, dtype=np.float64)
+        assert loads.size == self.num_partitions
+        widths = np.diff(self.boundaries.astype(np.float64))
+        density = loads / np.maximum(widths, 1.0)
+        total = loads.sum()
+        target = total / self.num_partitions
+        # walk the key space accumulating load until each target is met
+        new_inner = []
+        acc = 0.0
+        need = target
+        for p in range(self.num_partitions):
+            seg_lo = float(self.boundaries[p])
+            seg_hi = float(self.boundaries[p + 1])
+            seg_load = loads[p]
+            seg_w = seg_hi - seg_lo
+            pos = seg_lo
+            while acc + (seg_hi - pos) * density[p] >= need and len(new_inner) < (
+                self.num_partitions - 1
+            ):
+                if density[p] <= 0:
+                    break
+                step = (need - acc) / density[p]
+                pos = pos + step
+                new_inner.append(int(pos))
+                acc = 0.0
+            acc += (seg_hi - pos) * density[p]
+        inner = np.unique(np.asarray(new_inner, dtype=np.int64))
+        b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
+        return LogicalPartitions(b)
+
+    def assignment_diff(self, other: "LogicalPartitions") -> float:
+        """Fraction of (a large sample of) the key space whose owner changes —
+        proxy for cache re-warm volume after repartitioning."""
+        lo = max(int(self.boundaries[1]) - 1, -(2**62))
+        hi = min(int(self.boundaries[-2]) + 1, 2**62)
+        if hi <= lo:
+            lo, hi = -(2**32), 2**32
+        sample = np.linspace(lo, hi, 4097).astype(np.int64)
+        return float(np.mean(self.owner_of(sample) != other.owner_of(sample)))

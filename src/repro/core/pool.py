@@ -1,0 +1,257 @@
+"""Subtree-blocked memory pool (Plane B): the paper's level-M placement.
+
+The paper stores every subtree rooted at level M on a single memory server
+(§3 Index Placement) so offloaded traversals never chase pointers across
+servers.  On a TPU mesh the equivalent is a *blocked* layout:
+
+    pool_keys    : [n_subtrees, subtree_cap, FANOUT]   -- axis 0 sharded over
+    pool_children: [n_subtrees, subtree_cap, FANOUT]      the `model` axis
+    pool_values  : [n_subtrees, subtree_cap, FANOUT]
+
+with all levels above M ("top tree") replicated on every chip — these are
+the paper's root-side nodes that are effectively always cached.  Local node
+ids inside a subtree are level-ordered (root = 0) so the offload executor
+(and the Pallas ``subtree_walk`` kernel) can traverse entirely within one
+VMEM-resident block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, NULL
+
+
+class SubtreePool(NamedTuple):
+    """Pool arrays.  ``top_*`` are replicated; ``pool_*`` shard on axis 0."""
+
+    # top tree (levels > M), flat ids in build order, root last
+    top_keys: jax.Array       # [T, FANOUT] int64
+    top_children: jax.Array   # [T, FANOUT] int32; at level M+1 the entries
+                              # are *subtree ids* (pool axis-0 indices)
+    # subtree blocks (levels M..0)
+    pool_keys: jax.Array      # [S, C, FANOUT] int64
+    pool_children: jax.Array  # [S, C, FANOUT] int32 (subtree-local ids)
+    pool_values: jax.Array    # [S, C, FANOUT] int64 (leaf payloads)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolMeta:
+    level_m: int              # subtree root level (0 = leaves only)
+    per_node: int             # fill-factor entries per node at build
+    subtree_cap: int          # nodes per subtree block
+    n_subtrees: int           # real subtrees (<= padded S)
+    n_subtrees_padded: int
+    top_height: int           # levels above M (0 => single-subtree tree)
+    n_keys: int
+    leaf_start: int           # local id of first leaf within a block
+
+    @property
+    def levels_in_subtree(self) -> int:
+        return self.level_m + 1
+
+    def node_gid(self, subtree: jax.Array, local: jax.Array) -> jax.Array:
+        """Global node id used as the cache tag."""
+        return subtree.astype(jnp.int64) * self.subtree_cap + local
+
+
+def _level_offsets(per_node: int, level_m: int) -> np.ndarray:
+    """Local-id offset of each subtree level: level M at 0, leaves last."""
+    sizes = [per_node**i for i in range(level_m + 1)]  # level M..0 counts
+    return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+
+def build_pool(
+    keys: np.ndarray,
+    values: Optional[np.ndarray] = None,
+    *,
+    level_m: int = 1,
+    fill: float = 0.7,
+    n_shards: int = 1,
+) -> Tuple[SubtreePool, PoolMeta]:
+    """Bulk-build the blocked pool from sorted unique keys.
+
+    ``n_shards``: pad the subtree axis to a multiple of this (the `model`
+    mesh axis size) so the arrays block-shard evenly.
+    """
+    keys = np.asarray(keys, dtype=np.int64)
+    if np.any(keys[1:] <= keys[:-1]):
+        raise ValueError("keys must be sorted and unique")
+    if values is None:
+        values = keys.copy()
+    values = np.asarray(values, dtype=np.int64)
+
+    per_node = max(2, int(FANOUT * fill))
+    n = keys.size
+    n_leaves = -(-n // per_node)
+    leaves_per_subtree = per_node**level_m
+    n_subtrees = -(-n_leaves // leaves_per_subtree)
+    S = -(-n_subtrees // n_shards) * n_shards
+    offs = _level_offsets(per_node, level_m)
+    cap = int(offs[-1])
+    leaf_start = int(offs[-2])
+
+    PK = np.full((S, cap, FANOUT), KEY_MAX, dtype=np.int64)
+    PC = np.full((S, cap, FANOUT), NULL, dtype=np.int32)
+    PV = np.zeros((S, cap, FANOUT), dtype=np.int64)
+
+    # pad keys to full leaves for reshaping
+    pad = (-n) % per_node
+    kp = np.concatenate([keys, np.full((pad,), KEY_MAX, np.int64)])
+    vp = np.concatenate([values, np.zeros((pad,), np.int64)])
+    leaf_k = kp.reshape(n_leaves, per_node)
+    leaf_v = vp.reshape(n_leaves, per_node)
+
+    subtree_mins = np.full((S,), KEY_MAX, dtype=np.int64)
+
+    for s in range(n_subtrees):
+        lk = leaf_k[s * leaves_per_subtree : (s + 1) * leaves_per_subtree]
+        lv = leaf_v[s * leaves_per_subtree : (s + 1) * leaves_per_subtree]
+        nl = lk.shape[0]
+        # place leaves
+        PK[s, leaf_start : leaf_start + nl, :per_node] = lk
+        PV[s, leaf_start : leaf_start + nl, :per_node] = lv
+        # routing minima for this subtree's leaves
+        mins = lk[:, 0].copy()
+        child_ids = np.arange(leaf_start, leaf_start + nl, dtype=np.int32)
+        # build levels 1..M bottom-up
+        for lvl in range(1, level_m + 1):
+            lvl_off = int(offs[level_m - lvl])
+            n_nodes = -(-child_ids.size // per_node)
+            new_mins = np.empty((n_nodes,), np.int64)
+            for i in range(n_nodes):
+                cm = mins[i * per_node : (i + 1) * per_node]
+                ch = child_ids[i * per_node : (i + 1) * per_node]
+                nid = lvl_off + i
+                PK[s, nid, : cm.size] = cm
+                PC[s, nid, : ch.size] = ch
+                new_mins[i] = cm[0]
+            mins = new_mins
+            child_ids = np.arange(lvl_off, lvl_off + n_nodes, dtype=np.int32)
+        # note: no -inf sentinel is needed inside blocks — the in-node search
+        # clamps slot 0, so queries below a block's min route leftmost anyway
+        subtree_mins[s] = lk[0, 0] if s > 0 else KEY_MIN
+
+    # ---- top tree over subtree minima --------------------------------------
+    top_k_rows = []
+    top_c_rows = []
+    child_refs = np.arange(n_subtrees, dtype=np.int32)  # subtree ids
+    mins = subtree_mins[:n_subtrees].copy()
+    top_height = 0
+    while child_refs.size > 1 or top_height == 0:
+        n_nodes = -(-child_refs.size // per_node)
+        if child_refs.size == 1 and top_height > 0:
+            break
+        new_refs = np.empty((n_nodes,), np.int32)
+        new_mins = np.empty((n_nodes,), np.int64)
+        for i in range(n_nodes):
+            cm = mins[i * per_node : (i + 1) * per_node]
+            ch = child_refs[i * per_node : (i + 1) * per_node]
+            row_k = np.full((FANOUT,), KEY_MAX, np.int64)
+            row_c = np.full((FANOUT,), NULL, np.int32)
+            row_k[: cm.size] = cm
+            row_c[: ch.size] = ch
+            top_k_rows.append(row_k)
+            top_c_rows.append(row_c)
+            new_refs[i] = len(top_k_rows) - 1
+            new_mins[i] = cm[0]
+        child_refs, mins = new_refs, new_mins
+        top_height += 1
+        if n_nodes == 1:
+            break
+
+    TK = np.stack(top_k_rows) if top_k_rows else np.full((1, FANOUT), KEY_MAX, np.int64)
+    TC = np.stack(top_c_rows) if top_c_rows else np.full((1, FANOUT), NULL, np.int32)
+
+    pool = SubtreePool(
+        top_keys=jnp.asarray(TK),
+        top_children=jnp.asarray(TC),
+        pool_keys=jnp.asarray(PK),
+        pool_children=jnp.asarray(PC),
+        pool_values=jnp.asarray(PV),
+    )
+    meta = PoolMeta(
+        level_m=level_m,
+        per_node=per_node,
+        subtree_cap=cap,
+        n_subtrees=n_subtrees,
+        n_subtrees_padded=S,
+        top_height=top_height,
+        n_keys=n,
+        leaf_start=leaf_start,
+    )
+    return pool, meta
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp traversal pieces (shared by Plane B and by kernel oracles)
+# ---------------------------------------------------------------------------
+
+
+def _slot(node_keys: jax.Array, q: jax.Array) -> jax.Array:
+    cnt = jnp.sum(node_keys <= q[..., None], axis=-1)
+    return jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+
+
+def top_walk(pool: SubtreePool, meta: PoolMeta, queries: jax.Array) -> jax.Array:
+    """Walk the replicated top tree; returns the subtree id per query."""
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    if meta.top_height == 0:
+        return jnp.zeros((b,), jnp.int32)
+    root = pool.top_keys.shape[0] - 1
+    nodes = jnp.full((b,), root, jnp.int32)
+    for _ in range(meta.top_height - 1):
+        s = _slot(pool.top_keys[nodes], queries)
+        nodes = pool.top_children[nodes, s]
+    s = _slot(pool.top_keys[nodes], queries)
+    return pool.top_children[nodes, s]  # subtree ids
+
+
+def subtree_walk_ref(
+    block_keys: jax.Array,      # [C, FANOUT] one subtree's nodes
+    block_children: jax.Array,  # [C, FANOUT]
+    block_values: jax.Array,    # [C, FANOUT]
+    queries: jax.Array,         # [B]
+    *,
+    levels: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Walk one subtree block from its root (local id 0) to the leaves.
+    Pure-jnp oracle for the Pallas ``subtree_walk`` kernel; also the
+    offload executor's reference implementation.  Returns (found, values).
+    """
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    local = jnp.zeros((b,), jnp.int32)
+    for _ in range(levels - 1):
+        s = _slot(block_keys[local], queries)
+        local = block_children[local, s]
+    leaf_keys = block_keys[local]
+    eq = leaf_keys == queries[..., None]
+    found = jnp.any(eq, axis=-1)
+    vals = jnp.sum(jnp.where(eq, block_values[local], 0), axis=-1)
+    return found, vals
+
+
+def pool_lookup_ref(
+    pool: SubtreePool, meta: PoolMeta, queries: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-device reference lookup over the blocked layout (no mesh)."""
+    st = top_walk(pool, meta, queries)
+    queries = queries.astype(jnp.int64)
+    b = queries.shape[0]
+    local = jnp.zeros((b,), jnp.int32)
+    for _ in range(meta.levels_in_subtree - 1):
+        rows = pool.pool_keys[st, local]
+        s = _slot(rows, queries)
+        local = pool.pool_children[st, local, s]
+    leaf_keys = pool.pool_keys[st, local]
+    eq = leaf_keys == queries[..., None]
+    found = jnp.any(eq, axis=-1)
+    vals = jnp.sum(jnp.where(eq, pool.pool_values[st, local], 0), axis=-1)
+    return found, vals

@@ -1,0 +1,818 @@
+"""Event-level simulator of DEX and its competitors (Plane A).
+
+Executes the paper's protocols *per operation* against a host-resident
+B+-tree, counting every remote verb (RDMA READ / small READ / WRITE / CAS /
+two-sided RPC) and every cache event, exactly as the paper's Table 2 reports
+them.  Latency/contention conversion to throughput lives in
+``core/cost_model.py``; this module is purely mechanistic.
+
+Fidelity notes (mapped to the paper):
+  * Algorithm 1 traversal with cache lookup / remote_read / offload decision.
+  * Shared nodes (fence range crossing a partition boundary) pay RDMA-based
+    optimistic synchronization: version read + node read + version re-read
+    (§4, lines 3–6); non-shared nodes are one READ (line 8).
+  * Offloading only for non-shared subtrees rooted at level <= M, gated by
+    the cost model `l_p < (L+1)(l_o+l_s)c` with moving averages and an
+    ε-exploration of the contrary action (§6.1).
+  * Offloaded writes that would split fall back to the normal path (§6).
+  * Eager splits on the way down; splits of shared parents take the global
+    lock, re-validate freshness, else refresh-from-root (§7 Insert).
+  * Updates to cached non-shared leaves only dirty the cache; write-back
+    happens at cooling/eviction (§4) — this is why DEX's WI write count is
+    ~0.19 instead of ~1.
+
+The simulator is single-threaded; thread-level contention (FIFO-queue locks,
+memory-side CPU saturation) is modeled analytically downstream from the
+counters collected here (DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import btree as btree_mod
+from repro.core.cache import ComputeCache, DEFAULT_P_ADMIT_LEAF
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, NULL, node_nbytes
+from repro.core.partition import LogicalPartitions
+
+NODE_BYTES = 1024          # paper: 1KB nodes
+SMALL_READ_BYTES = 8       # version word
+RPC_BYTES = 64             # offload request/response payload
+
+
+# ---------------------------------------------------------------------------
+# Host B+-tree with true eager-split SMOs
+# ---------------------------------------------------------------------------
+
+
+class HostBTree:
+    """Mutable numpy B+-tree used as 'the memory pool'.
+
+    Same layout/semantics as core/btree.py plus parent pointers, in-place
+    eager splits, and node->memory-server placement with level-M subtree
+    grouping (paper §3 Index Placement).
+    """
+
+    def __init__(self, keys: np.ndarray, values: Optional[np.ndarray] = None,
+                 *, fill: float = 0.7, level_m: int = 1, n_mem_servers: int = 1):
+        tree, meta = btree_mod.bulk_build(keys, values, fill=fill)
+        self.K = np.asarray(tree.keys).copy()
+        self.C = np.asarray(tree.children).copy()
+        self.V = np.asarray(tree.values).copy()
+        self.NK = np.asarray(tree.num_keys).copy()
+        self.LV = np.asarray(tree.level).copy()
+        self.FLO = np.asarray(tree.fence_lo).copy()
+        self.FHI = np.asarray(tree.fence_hi).copy()
+        self.root = int(tree.root)
+        self.height = meta.height
+        self.num_nodes = meta.num_nodes
+        self.level_m = level_m
+        self.n_mem_servers = n_mem_servers
+        self._next_free = meta.num_nodes
+        self.parent = np.full((self.K.shape[0],), -1, dtype=np.int32)
+        self._rebuild_parents()
+        self.server = np.full((self.K.shape[0],), -1, dtype=np.int32)
+        self._assign_placement()
+        self.splits = 0
+        self.merges = 0
+
+    # -- storage management ---------------------------------------------------
+
+    def _grow(self) -> None:
+        cap = self.K.shape[0]
+        new = cap * 2
+        def g(a, fillv):
+            out = np.full((new,) + a.shape[1:], fillv, dtype=a.dtype)
+            out[:cap] = a
+            return out
+        self.K = g(self.K, KEY_MAX)
+        self.C = g(self.C, NULL)
+        self.V = g(self.V, 0)
+        self.NK = g(self.NK, 0)
+        self.LV = g(self.LV, -1)
+        self.FLO = g(self.FLO, KEY_MIN)
+        self.FHI = g(self.FHI, KEY_MAX)
+        self.parent = g(self.parent, -1)
+        self.server = g(self.server, -1)
+
+    def _alloc(self) -> int:
+        if self._next_free >= self.K.shape[0] - 1:
+            self._grow()
+        nid = self._next_free
+        self._next_free += 1
+        self.num_nodes += 1
+        return nid
+
+    def _rebuild_parents(self) -> None:
+        self.parent[:] = -1
+        inner = np.where(self.LV > 0)[0]
+        for nid in inner:
+            for i in range(int(self.NK[nid])):
+                self.parent[self.C[nid, i]] = nid
+
+    def _assign_placement(self) -> None:
+        """Subtrees rooted at level M live wholly on one memory server."""
+        m = self.level_m
+        order = 0
+        def assign(nid: int, server: int):
+            self.server[nid] = server
+            if self.LV[nid] > 0:
+                for i in range(int(self.NK[nid])):
+                    assign(int(self.C[nid, i]), server)
+        def walk(nid: int):
+            nonlocal order
+            lvl = int(self.LV[nid])
+            if lvl <= m:
+                assign(nid, order % self.n_mem_servers)
+                order += 1
+                return
+            self.server[nid] = int(nid) % self.n_mem_servers
+            for i in range(int(self.NK[nid])):
+                walk(int(self.C[nid, i]))
+        walk(self.root)
+
+    def subtree_root_of(self, nid: int) -> int:
+        """Ancestor at level M (or self when the tree is shorter)."""
+        cur = nid
+        while self.LV[cur] < self.level_m and self.parent[cur] >= 0:
+            cur = int(self.parent[cur])
+        return cur
+
+    # -- queries ---------------------------------------------------------------
+
+    def search_path(self, key: int) -> List[int]:
+        """Root-to-leaf node ids for ``key``."""
+        path = [self.root]
+        nid = self.root
+        while self.LV[nid] > 0:
+            nk = int(self.NK[nid])
+            row = self.K[nid, :nk]
+            slot = int(np.searchsorted(row, key, side="right")) - 1
+            slot = max(slot, 0)
+            nid = int(self.C[nid, slot])
+            path.append(nid)
+        return path
+
+    def get(self, key: int) -> Optional[int]:
+        leaf = self.search_path(key)[-1]
+        nk = int(self.NK[leaf])
+        row = self.K[leaf, :nk]
+        i = int(np.searchsorted(row, key))
+        if i < nk and row[i] == key:
+            return int(self.V[leaf, i])
+        return None
+
+    def fence_valid(self, nid: int, key: int) -> bool:
+        return self.FLO[nid] <= key < self.FHI[nid]
+
+    # -- mutations ---------------------------------------------------------------
+
+    def update(self, key: int, value: int) -> bool:
+        leaf = self.search_path(key)[-1]
+        nk = int(self.NK[leaf])
+        row = self.K[leaf, :nk]
+        i = int(np.searchsorted(row, key))
+        if i < nk and row[i] == key:
+            self.V[leaf, i] = value
+            return True
+        return False
+
+    def would_split(self, key: int) -> bool:
+        """True if inserting ``key`` hits any full node on its path (the
+        memory-side SMO check that triggers offload fallback)."""
+        return any(int(self.NK[n]) >= FANOUT for n in self.search_path(key))
+
+    def insert(self, key: int, value: int) -> Tuple[bool, List[int]]:
+        """Eager-split insert.  Returns (is_new_key, split_node_ids)."""
+        splits: List[int] = []
+        nid = self.root
+        if int(self.NK[nid]) >= FANOUT:
+            nid = self._split_root()
+            splits.append(nid)
+        while self.LV[nid] > 0:
+            nk = int(self.NK[nid])
+            slot = max(int(np.searchsorted(self.K[nid, :nk], key, side="right")) - 1, 0)
+            child = int(self.C[nid, slot])
+            if int(self.NK[child]) >= FANOUT:
+                self._split_child(nid, slot)
+                splits.append(child)
+                nk = int(self.NK[nid])
+                slot = max(
+                    int(np.searchsorted(self.K[nid, :nk], key, side="right")) - 1, 0
+                )
+                child = int(self.C[nid, slot])
+            nid = child
+        # leaf insert
+        nk = int(self.NK[nid])
+        row = self.K[nid, :nk]
+        i = int(np.searchsorted(row, key))
+        if i < nk and row[i] == key:
+            self.V[nid, i] = value
+            return False, splits
+        assert nk < FANOUT, "leaf full despite eager splits"
+        self.K[nid, i + 1 : nk + 1] = self.K[nid, i:nk]
+        self.V[nid, i + 1 : nk + 1] = self.V[nid, i:nk]
+        self.K[nid, i] = key
+        self.V[nid, i] = value
+        self.NK[nid] = nk + 1
+        return True, splits
+
+    def _split_root(self) -> int:
+        old = self.root
+        new_root = self._alloc()
+        self.LV[new_root] = int(self.LV[old]) + 1
+        self.K[new_root, 0] = KEY_MIN
+        self.C[new_root, 0] = old
+        self.NK[new_root] = 1
+        self.FLO[new_root] = KEY_MIN
+        self.FHI[new_root] = KEY_MAX
+        self.parent[old] = new_root
+        self.server[new_root] = new_root % self.n_mem_servers
+        self.root = new_root
+        self.height += 1
+        self._split_child(new_root, 0)
+        return new_root
+
+    def _split_child(self, pnode: int, slot: int) -> int:
+        """Split C[pnode, slot]; parent must have room (eager policy)."""
+        child = int(self.C[pnode, slot])
+        nk = int(self.NK[child])
+        half = nk // 2
+        sib = self._alloc()
+        self.LV[sib] = self.LV[child]
+        # sibling gets the upper half
+        self.K[sib, : nk - half] = self.K[child, half:nk]
+        self.V[sib, : nk - half] = self.V[child, half:nk]
+        self.C[sib, : nk - half] = self.C[child, half:nk]
+        self.NK[sib] = nk - half
+        sep = int(self.K[child, half])
+        self.K[child, half:nk] = KEY_MAX
+        self.V[child, half:nk] = 0
+        self.C[child, half:nk] = NULL
+        self.NK[child] = half
+        # fences
+        self.FLO[sib] = sep
+        self.FHI[sib] = self.FHI[child]
+        self.FHI[child] = sep
+        # parent pointers of moved children
+        if self.LV[sib] > 0:
+            for i in range(int(self.NK[sib])):
+                self.parent[self.C[sib, i]] = sib
+        # placement: sibling stays on the same memory server (subtree intact)
+        self.server[sib] = self.server[child]
+        # insert separator into parent
+        pk = int(self.NK[pnode])
+        assert pk < FANOUT, "parent full in eager split"
+        self.K[pnode, slot + 2 : pk + 1] = self.K[pnode, slot + 1 : pk]
+        self.C[pnode, slot + 2 : pk + 1] = self.C[pnode, slot + 1 : pk]
+        self.K[pnode, slot + 1] = sep
+        self.C[pnode, slot + 1] = sib
+        self.NK[pnode] = pk + 1
+        self.parent[sib] = pnode
+        self.splits += 1
+        return sib
+
+    def delete(self, key: int) -> bool:
+        """Logical delete with lazy structural merge (empty leaves are merged
+        into the parent; full rebalance is out of scope for the simulator —
+        the paper's merges propagate the same counters we track)."""
+        path = self.search_path(key)
+        leaf = path[-1]
+        nk = int(self.NK[leaf])
+        row = self.K[leaf, :nk]
+        i = int(np.searchsorted(row, key))
+        if not (i < nk and row[i] == key):
+            return False
+        self.K[leaf, i : nk - 1] = self.K[leaf, i + 1 : nk]
+        self.V[leaf, i : nk - 1] = self.V[leaf, i + 1 : nk]
+        self.K[leaf, nk - 1] = KEY_MAX
+        self.V[leaf, nk - 1] = 0
+        self.NK[leaf] = nk - 1
+        if self.NK[leaf] == 0 and len(path) >= 2:
+            self._remove_empty_child(path[-2], leaf)
+        return True
+
+    def _remove_empty_child(self, pnode: int, child: int) -> None:
+        pk = int(self.NK[pnode])
+        if pk <= 1:
+            return  # keep degenerate chain; rare in workloads
+        slot = None
+        for i in range(pk):
+            if int(self.C[pnode, i]) == child:
+                slot = i
+                break
+        if slot is None:
+            return
+        # absorb fence into left neighbour when possible
+        self.K[pnode, slot : pk - 1] = self.K[pnode, slot + 1 : pk]
+        self.C[pnode, slot : pk - 1] = self.C[pnode, slot + 1 : pk]
+        if slot == 0:
+            self.K[pnode, 0] = self.FLO[pnode]
+        self.K[pnode, pk - 1] = KEY_MAX
+        self.C[pnode, pk - 1] = NULL
+        self.NK[pnode] = pk - 1
+        self.merges += 1
+
+    def scan(self, key: int, count: int) -> List[Tuple[int, List[int]]]:
+        """Fence-key subdivided scan: list of (leaf, collected_keys) hops."""
+        hops = []
+        cur = key
+        got = 0
+        while got < count:
+            leaf = self.search_path(cur)[-1]
+            nk = int(self.NK[leaf])
+            row = self.K[leaf, :nk]
+            take = row[row >= cur][: count - got]
+            hops.append((leaf, [int(x) for x in take]))
+            got += take.size
+            nxt = int(self.FHI[leaf])
+            if nxt == int(KEY_MAX):
+                break
+            cur = nxt
+        return hops
+
+
+# ---------------------------------------------------------------------------
+# Remote-verb counters (Table 2 columns)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Counters:
+    ops: int = 0
+    rdma_read: float = 0.0        # node-sized READs
+    rdma_small_read: float = 0.0  # 8B version READs
+    rdma_write: float = 0.0
+    rdma_cas: float = 0.0         # atomics
+    two_sided: float = 0.0        # offload RPCs
+    bytes: float = 0.0
+    local_accesses: float = 0.0   # cached-node searches
+    offload_fallbacks: int = 0
+    coherence_invalidations: int = 0
+    refresh_from_root: int = 0
+
+    def add_read(self, nbytes: int = NODE_BYTES) -> None:
+        self.rdma_read += 1
+        self.bytes += nbytes
+
+    def add_small_read(self) -> None:
+        self.rdma_small_read += 1
+        self.bytes += SMALL_READ_BYTES
+
+    def add_write(self, nbytes: int = NODE_BYTES) -> None:
+        self.rdma_write += 1
+        self.bytes += nbytes
+
+    def add_cas(self) -> None:
+        self.rdma_cas += 1
+        self.bytes += 8
+
+    def add_rpc(self) -> None:
+        self.two_sided += 1
+        self.bytes += RPC_BYTES
+
+    def per_op(self) -> Dict[str, float]:
+        n = max(self.ops, 1)
+        return {
+            "reads": (self.rdma_read + self.rdma_small_read) / n,
+            "node_reads": self.rdma_read / n,
+            "writes": self.rdma_write / n,
+            "atomics": self.rdma_cas / n,
+            "two_sided": self.two_sided / n,
+            "traffic_bytes": self.bytes / n,
+            "local_accesses": self.local_accesses / n,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Simulator configuration (DEX + all baselines via knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Protocol knobs.  Presets for the paper's competitors live in
+    core/baselines.py."""
+
+    name: str = "dex"
+    n_compute: int = 4
+    n_mem_servers: int = 4
+    threads_per_compute: int = 36
+    mem_threads_per_server: int = 4
+    cache_bytes: int = 256 << 20           # per compute server (paper default)
+    level_m: int = 3                        # subtree grouping level (paper: M=3)
+
+    # --- technique toggles (Fig. 8 ablation) ---
+    logical_partitioning: bool = True
+    caching: bool = True
+    offloading: bool = True
+
+    # --- cache behaviour (Fig. 9) ---
+    cache_leaves: bool = True               # False for Sherman/SMART-like
+    cache_top_inner_only: bool = False      # Sherman: lowest inner + above
+    p_admit_leaf: float = DEFAULT_P_ADMIT_LEAF
+    eager_admission: bool = False
+    centralized_fifo: bool = False          # single-bucket cooling map baseline
+    cooling_slots: int = 6
+
+    # --- synchronization style ---
+    rdma_optimistic_reads: bool = False     # version+node+version for ALL reads
+                                            # (shared-everything baselines)
+    immediate_leaf_writeback: bool = True   # overridden by partitioning
+    single_record_leaves: bool = False      # SMART-like trie: 1 record/leaf
+    write_combining: bool = False           # SMART: consolidate concurrent
+                                            # writes (Table 2: ~8x fewer)
+    write_combine_factor: float = 0.11
+    cache_above_m_only: bool = False        # Offload-only variant (Fig. 5)
+
+    # --- offload policy ---
+    offload_always: bool = False            # Offload-only variant (Fig. 5)
+    offload_epsilon: float = 0.01           # contrary-action probability (§6.1)
+    offload_window: int = 50                # moving-average window (§6.1)
+    offload_c: float = 1.3                  # cache-op coefficient c (>1, §6.1)
+
+    # --- latency constants (paper §2.3 / §6.1), seconds ---
+    t_cached_access: float = 400e-9         # T_c: 1KB cached page access
+    t_rdma_read: float = 2e-6               # l_o
+    t_rdma_small: float = 1.5e-6
+    t_rdma_write: float = 2e-6
+    t_rdma_cas: float = 2e-6
+    t_rpc_base: float = 4e-6                # l_p floor (two-sided round trip)
+    t_mem_search: float = 600e-9            # per-node search on memory-side CPU
+    t_local_search: float = 150e-9          # l_s
+
+
+@dataclasses.dataclass
+class OffloadEstimator:
+    """Moving-average latency estimates for l_p and l_o (§6.1)."""
+
+    window: int
+    l_o: float
+    l_p: float
+
+    def observe_read(self, v: float) -> None:
+        self.l_o += (v - self.l_o) / self.window
+
+    def observe_rpc(self, v: float) -> None:
+        self.l_p += (v - self.l_p) / self.window
+
+
+class Simulator:
+    """Runs a workload against one protocol configuration."""
+
+    def __init__(self, tree: HostBTree, cfg: SimConfig, *, seed: int = 0):
+        self.tree = tree
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        n_parts = cfg.n_compute if cfg.logical_partitioning else 1
+        lo = int(np.min(tree.K[tree.LV == 0][tree.K[tree.LV == 0] != KEY_MAX]))
+        hi = int(
+            np.max(
+                np.where(
+                    tree.K[tree.LV == 0] == KEY_MAX, KEY_MIN, tree.K[tree.LV == 0]
+                )
+            )
+        )
+        parts = LogicalPartitions.equal_width(n_parts, lo, hi + 1)
+        self.partitions = self._snap_to_leaf_fences(parts)
+        cap_nodes = max(8, cfg.cache_bytes // NODE_BYTES)
+        self.caches = [
+            ComputeCache(
+                cap_nodes,
+                parent_of=lambda n: int(tree.parent[n]),
+                is_leaf=lambda n: int(tree.LV[n]) == 0,
+                p_admit_leaf=cfg.p_admit_leaf,
+                eager_admission=cfg.eager_admission,
+                n_cooling_buckets=(1 if cfg.centralized_fifo else None),
+                cooling_slots=(
+                    10**9 if cfg.centralized_fifo else cfg.cooling_slots
+                ),
+                rng=np.random.default_rng(seed + 17 * i + 1),
+            )
+            for i in range(cfg.n_compute)
+        ]
+        self.counters = [Counters() for _ in range(cfg.n_compute)]
+        self.mem_busy = np.zeros((cfg.n_mem_servers,), dtype=np.float64)
+        self.mem_reqs = np.zeros((cfg.n_mem_servers,), dtype=np.int64)
+        self.estimators = [
+            OffloadEstimator(cfg.offload_window, cfg.t_rdma_read, cfg.t_rpc_base)
+            for _ in range(cfg.n_compute)
+        ]
+        self.op_clock = np.zeros((cfg.n_compute,), dtype=np.float64)  # cpu-side work time
+        self._rr = 0
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _snap_to_leaf_fences(self, parts: LogicalPartitions) -> LogicalPartitions:
+        """Snap partition boundaries to leaf fence keys so every leaf is
+        exclusively owned by one partition (paper §4: boundaries are picked
+        from lowest-inner-node keys, i.e. leaf fence keys)."""
+        b = parts.boundaries.copy()
+        for i in range(1, b.size - 1):
+            leaf = self.tree.search_path(int(b[i]))[-1]
+            b[i] = int(self.tree.FLO[leaf])
+        b = np.unique(b)
+        if b.size < 2 or b[0] != KEY_MIN or b[-1] != KEY_MAX:
+            b = np.concatenate([[KEY_MIN], b[(b > KEY_MIN) & (b < KEY_MAX)], [KEY_MAX]])
+        return LogicalPartitions(np.asarray(b, dtype=np.int64))
+
+    def reset_counters(self) -> None:
+        """Zero all accounting after a warmup phase (paper §8.1: 10M warmup
+        ops precede measurement)."""
+        self.counters = [Counters() for _ in range(self.cfg.n_compute)]
+        self.mem_busy[:] = 0.0
+        self.mem_reqs[:] = 0
+        self.op_clock[:] = 0.0
+        for cache in self.caches:
+            cache.stats.reset()
+            cache.cooling.lock_acquires[:] = 0
+
+    def _owner(self, key: int) -> int:
+        if self.cfg.logical_partitioning:
+            p = int(self.partitions.owner_of(np.asarray([key]))[0])
+            return p % self.cfg.n_compute
+        self._rr = (self._rr + 1) % self.cfg.n_compute
+        return self._rr
+
+    def _is_shared(self, nid: int) -> bool:
+        if not self.cfg.logical_partitioning:
+            return True  # shared-everything: every node is shared
+        return bool(
+            self.partitions.is_shared_range(
+                np.asarray([self.tree.FLO[nid]]), np.asarray([self.tree.FHI[nid]])
+            )[0]
+        )
+
+    def _cacheable(self, nid: int) -> bool:
+        cfg = self.cfg
+        if not cfg.caching:
+            return False
+        lvl = int(self.tree.LV[nid])
+        if cfg.cache_above_m_only:
+            return lvl > cfg.level_m
+        if lvl == 0:
+            return cfg.cache_leaves
+        return True
+
+    def _shared_write(self, server: int) -> None:
+        """Leaf write in shared-everything mode: RDMA CAS lock + write-back
+        (optionally write-combined, SMART-style)."""
+        cfg = self.cfg
+        c = self.counters[server]
+        f = cfg.write_combine_factor if cfg.write_combining else 1.0
+        c.rdma_cas += f
+        c.bytes += 8 * f
+        c.rdma_write += f
+        c.bytes += NODE_BYTES * f
+        # lock release is an RDMA WRITE of the lock word (Ziegler et al. [49])
+        c.rdma_write += f
+        c.bytes += SMALL_READ_BYTES * f
+        self.op_clock[server] += f * (
+            cfg.t_rdma_cas + cfg.t_rdma_write + cfg.t_rdma_small
+        )
+
+    def _remote_read(self, server: int, nid: int, shared: bool) -> float:
+        """One cache::remote_read (Algorithm 1, lines 1–10).  Returns latency."""
+        c = self.counters[server]
+        cfg = self.cfg
+        lat = 0.0
+        if shared or cfg.rdma_optimistic_reads:
+            c.add_small_read()
+            c.add_read()
+            c.add_small_read()
+            lat = cfg.t_rdma_read + 2 * cfg.t_rdma_small
+        else:
+            c.add_read()
+            lat = cfg.t_rdma_read
+        self.estimators[server].observe_read(cfg.t_rdma_read)
+        return lat
+
+    def _deserve_offload(self, server: int, levels_left: int) -> bool:
+        cfg = self.cfg
+        if cfg.offload_always:
+            return True
+        est = self.estimators[server]
+        rdma_cost = levels_left * (est.l_o + cfg.t_local_search) * cfg.offload_c
+        decision = est.l_p < rdma_cost
+        if self.rng.random() < cfg.offload_epsilon:
+            decision = not decision
+        return decision
+
+    def _offload(self, server: int, nid: int, levels_left: int) -> None:
+        """Push the remaining traversal to the memory server (§6.2)."""
+        cfg = self.cfg
+        c = self.counters[server]
+        c.add_rpc()
+        ms = int(self.tree.server[nid])
+        service = levels_left * cfg.t_mem_search
+        self.mem_busy[ms] += service
+        self.mem_reqs[ms] += 1
+        self.estimators[server].observe_rpc(cfg.t_rpc_base + service)
+
+    # -- operations --------------------------------------------------------------
+
+    def run(self, ops: np.ndarray, keys: np.ndarray, scan_len: int = 100) -> None:
+        """Execute a workload.  ``ops``: array of {0:lookup, 1:update,
+        2:insert, 3:scan, 4:delete}; ``keys``: target keys."""
+        for op, key in zip(ops, keys):
+            key = int(key)
+            server = self._owner(key)
+            self.counters[server].ops += 1
+            if op == 0:
+                self._op_lookup(server, key)
+            elif op == 1:
+                self._op_update(server, key)
+            elif op == 2:
+                self._op_insert(server, key)
+            elif op == 3:
+                self._op_scan(server, key, scan_len)
+            elif op == 4:
+                self._op_delete(server, key)
+            else:
+                raise ValueError(f"bad op {op}")
+
+    # Traversal core: walk the ground-truth path, consulting the cache and
+    # issuing remote verbs per the configured protocol.  Returns the list of
+    # (node, was_cached) and whether the op was completed via offload.
+    def _traverse(self, server: int, key: int, *, for_write: bool) -> Tuple[List[Tuple[int, bool]], bool]:
+        cfg = self.cfg
+        cache = self.caches[server]
+        c = self.counters[server]
+        path = self.tree.search_path(key)
+        height = len(path)
+        visited: List[Tuple[int, bool]] = []
+        for depth, nid in enumerate(path):
+            lvl = int(self.tree.LV[nid])
+            if cfg.caching and self._cacheable(nid):
+                r = cache.lookup(nid)
+                if r == "hit":
+                    c.local_accesses += 1
+                    self.op_clock[server] += cfg.t_cached_access
+                    visited.append((nid, True))
+                    continue
+            shared = self._is_shared(nid)
+            levels_left = lvl + 1  # nodes from here to leaf inclusive
+            if (
+                cfg.offloading
+                and not shared
+                and lvl <= cfg.level_m
+                and self._deserve_offload(server, levels_left)
+            ):
+                # SMO fallback: a write that would split cannot be offloaded
+                if for_write and self.tree.would_split(key):
+                    c.offload_fallbacks += 1
+                else:
+                    self._offload(server, nid, levels_left)
+                    return visited, True
+            lat = self._remote_read(server, nid, shared)
+            self.op_clock[server] += lat
+            if self._cacheable(nid):
+                cache.admit(nid)
+            visited.append((nid, False))
+        return visited, False
+
+    def _op_lookup(self, server: int, key: int) -> Optional[int]:
+        visited, offloaded = self._traverse(server, key, for_write=False)
+        if offloaded:
+            return self.tree.get(key)
+        self.op_clock[server] += self.cfg.t_local_search
+        return self.tree.get(key)
+
+    def _op_update(self, server: int, key: int) -> bool:
+        cfg = self.cfg
+        cache = self.caches[server]
+        c = self.counters[server]
+        visited, offloaded = self._traverse(server, key, for_write=True)
+        ok = self.tree.update(key, key ^ 0x5A5A)
+        if offloaded:
+            # memory-side update; invalidate any cached copies (rare: path-
+            # aware caching means the subpath is usually uncached, §6.2)
+            leaf = self.tree.search_path(key)[-1]
+            if cache.invalidate(leaf):
+                c.coherence_invalidations += 1
+            return ok
+        leaf, was_cached = visited[-1]
+        shared = self._is_shared(leaf)
+        if cfg.logical_partitioning and not shared:
+            if was_cached or (self.cfg.caching and leaf in cache):
+                cache.mark_dirty(leaf)       # deferred write-back
+            else:
+                c.add_write()                # not cached: write home now
+                self.op_clock[server] += cfg.t_rdma_write
+        else:
+            # shared-everything: RDMA lock + write back + unlock
+            self._shared_write(server)
+        return ok
+
+    def _op_insert(self, server: int, key: int) -> None:
+        cfg = self.cfg
+        cache = self.caches[server]
+        c = self.counters[server]
+        visited, offloaded = self._traverse(server, key, for_write=True)
+        _, split_nodes = self.tree.insert(key, key)
+        if offloaded:
+            leaf = self.tree.search_path(key)[-1]
+            if cache.invalidate(leaf):
+                c.coherence_invalidations += 1
+            return
+        # split handling (§7 Insert)
+        for snode in split_nodes:
+            shared = self._is_shared(snode)
+            if shared:
+                # global lock + freshness check on the shared parent
+                c.add_cas()
+                c.add_read()
+                c.add_write()
+                self.op_clock[server] += (
+                    cfg.t_rdma_cas + cfg.t_rdma_read + cfg.t_rdma_write
+                )
+            else:
+                if cfg.caching and snode in cache:
+                    cache.mark_dirty(snode)
+                else:
+                    c.add_write()
+                    self.op_clock[server] += cfg.t_rdma_write
+        # leaf write itself
+        leaf = self.tree.search_path(key)[-1]
+        shared = self._is_shared(leaf)
+        if cfg.logical_partitioning and not shared:
+            if cfg.caching and leaf in cache:
+                cache.mark_dirty(leaf)
+            else:
+                c.add_write()
+                self.op_clock[server] += cfg.t_rdma_write
+        else:
+            self._shared_write(server)
+
+    def _op_delete(self, server: int, key: int) -> None:
+        self._op_update(server, key)  # same remote-verb profile as update
+        self.tree.delete(key)
+
+    def _op_scan(self, server: int, key: int, count: int) -> None:
+        """Fence-key-subdivided scan (§7 Range Query): repeated lookups, no
+        offloading."""
+        cfg = self.cfg
+        cache = self.caches[server]
+        c = self.counters[server]
+        hops = self.tree.scan(key, count)
+        if cfg.single_record_leaves:
+            # SMART-like: every record is its own leaf -> one remote read per
+            # record (minus cache hits on the radix path, approximated by the
+            # inner-node hit rate)
+            total = sum(len(ks) for _, ks in hops)
+            for _ in range(total):
+                c.add_read()
+                self.op_clock[server] += cfg.t_rdma_read
+            return
+        first = True
+        for leaf, _ks in hops:
+            # each hop is a fresh root-to-leaf traversal; offloading disabled
+            save = self.cfg.offloading
+            self.cfg.offloading = False
+            self._traverse(server, int(self.tree.K[leaf, 0]) if not first else key,
+                           for_write=False)
+            self.cfg.offloading = save
+            first = False
+            self.op_clock[server] += cfg.t_local_search
+
+    # -- reporting ---------------------------------------------------------------
+
+    def totals(self) -> Counters:
+        out = Counters()
+        for c in self.counters:
+            out.ops += c.ops
+            out.rdma_read += c.rdma_read
+            out.rdma_small_read += c.rdma_small_read
+            out.rdma_write += c.rdma_write
+            out.rdma_cas += c.rdma_cas
+            out.two_sided += c.two_sided
+            out.bytes += c.bytes
+            out.local_accesses += c.local_accesses
+            out.offload_fallbacks += c.offload_fallbacks
+            out.coherence_invalidations += c.coherence_invalidations
+        return out
+
+    def cache_stats(self):
+        return [c.stats for c in self.caches]
+
+    def repartition(self, new_parts: LogicalPartitions) -> Dict[str, float]:
+        """Logical repartitioning (§4, Fig. 10): flush dirty pages, adjust
+        boundaries, drop caches of moved ranges.  Returns cost summary."""
+        new_parts = self._snap_to_leaf_fences(new_parts)
+        flushed = 0
+        for cache in self.caches:
+            flushed += cache.flush_dirty()
+        moved = self.partitions.assignment_diff(new_parts)
+        self.partitions = new_parts
+        # moved ranges must re-warm: invalidate everything for simplicity
+        for cache in self.caches:
+            cache.drop_all()
+        flush_time = flushed * (NODE_BYTES / 12.5e9 + 2e-6)  # 100Gbps + per-op
+        return {
+            "dirty_pages_flushed": float(flushed),
+            "flush_seconds_single_thread": float(flush_time),
+            "fraction_keyspace_moved": float(moved),
+        }

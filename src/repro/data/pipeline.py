@@ -1,0 +1,99 @@
+"""Deterministic, shardable, checkpointable synthetic token pipeline.
+
+Production shape without production data: an infinite stream of pseudo-
+random "documents" generated from a counter-based RNG, so (a) every batch is
+a pure function of (seed, step) — restart-safe with no state files; (b) each
+data shard draws a disjoint counter range — shardable across hosts; (c) the
+pipeline state is just an integer, carried inside the checkpoint ``extra``.
+The same partition tables as the DEX index route shard -> host (DESIGN.md
+§4: one partition mechanism for data, cache and serving)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+    def to_json(self) -> dict:
+        return {"step": self.step}
+
+    @staticmethod
+    def from_json(d: dict) -> "PipelineState":
+        return PipelineState(step=int(d.get("step", 0)))
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    cfg: ArchConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+    state: PipelineState = dataclasses.field(default_factory=PipelineState)
+
+    def __post_init__(self):
+        assert self.global_batch % self.n_shards == 0
+        self.local_batch = self.global_batch // self.n_shards
+
+    def _batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Pure function of (seed, step, shard)."""
+        # counter-based: one Philox stream keyed by (seed, step, shard)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard])
+        )
+        b, s = self.local_batch, self.seq_len
+        # synthetic "documents": zipf-ish token frequencies + markov-ish runs
+        base = rng.zipf(1.3, size=(b, s)).astype(np.int64)
+        tokens = (base % (self.cfg.vocab - 2)) + 1
+        runs = rng.integers(0, 4, size=(b, s)) == 0
+        tokens = np.where(runs, np.roll(tokens, 1, axis=1), tokens)
+        tokens = tokens.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = -100
+        out = {"tokens": tokens, "labels": labels}
+        if self.cfg.encdec:
+            out["enc_emb"] = rng.standard_normal(
+                (b, self.cfg.max_source_positions, self.cfg.d_model)
+            ).astype(np.float32) * 0.02
+        return out
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        batch = self._batch_at(self.state.step)
+        self.state.step += 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    # -- fault tolerance --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return self.state.to_json()
+
+    def restore(self, snap: dict) -> None:
+        self.state = PipelineState.from_json(snap)
+
+    def reshard(self, n_shards: int, shard: int) -> "TokenPipeline":
+        """Elastic re-shard: same global stream, new shard geometry (the
+        counter key includes the shard id, so the stream stays deterministic
+        per shard; global coverage is preserved because batches are pure
+        functions of step)."""
+        return TokenPipeline(
+            cfg=self.cfg,
+            global_batch=self.global_batch,
+            seq_len=self.seq_len,
+            seed=self.seed,
+            n_shards=n_shards,
+            shard=shard,
+            state=PipelineState(step=self.state.step),
+        )

@@ -1,0 +1,147 @@
+"""YCSB-style workload generation (paper §8.1, Table 1 / Table 3).
+
+Zipfian request distribution (theta=0.99 default, matching YCSB) with the
+standard scrambled mapping so hot keys are spread over the key space, plus
+the paper's five workload mixes and the two extended-version mixes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+OP_LOOKUP, OP_UPDATE, OP_INSERT, OP_SCAN, OP_DELETE = 0, 1, 2, 3, 4
+
+#: Table 1 + Table 3 mixes: (insert, lookup, update, scan)
+WORKLOADS: Dict[str, Tuple[float, float, float, float]] = {
+    "read-only": (0.0, 1.0, 0.0, 0.0),
+    "read-intensive": (0.0, 0.95, 0.05, 0.0),
+    "write-intensive": (0.0, 0.50, 0.50, 0.0),
+    "insert-intensive": (0.50, 0.50, 0.0, 0.0),
+    "scan-intensive": (0.05, 0.0, 0.0, 0.95),
+    "read-intensive-2": (0.05, 0.95, 0.0, 0.0),
+    "insert-only": (1.0, 0.0, 0.0, 0.0),
+}
+
+
+@dataclasses.dataclass
+class ZipfianGenerator:
+    """YCSB's scrambled-Zipfian over ``n`` items (Gray et al. rejection-free
+    formulation, vectorized)."""
+
+    n: int
+    theta: float = 0.99
+    seed: int = 0
+
+    def __post_init__(self):
+        n, theta = self.n, self.theta
+        self._rng = np.random.default_rng(self.seed)
+        if theta <= 0:
+            self._uniform = True
+            return
+        self._uniform = False
+        self.zetan = self._zeta(n, theta)
+        self.zeta2 = self._zeta(2, theta)
+        self.alpha = 1.0 / (1.0 - theta)
+        self.eta = (1 - (2.0 / n) ** (1 - theta)) / (1 - self.zeta2 / self.zetan)
+
+    @staticmethod
+    def _zeta(n: int, theta: float) -> float:
+        # exact for small n; Euler–Maclaurin tail for large n
+        if n <= 10_000_000:
+            i = np.arange(1, n + 1, dtype=np.float64)
+            return float(np.sum(i ** (-theta)))
+        i = np.arange(1, 10_000_001, dtype=np.float64)
+        head = float(np.sum(i ** (-theta)))
+        # integral tail approximation
+        tail = (n ** (1 - theta) - 10_000_000 ** (1 - theta)) / (1 - theta)
+        return head + tail
+
+    def draw_ranks(self, size: int) -> np.ndarray:
+        """Zipfian *ranks* in [0, n): rank 0 is the hottest item."""
+        if self._uniform:
+            return self._rng.integers(0, self.n, size=size)
+        u = self._rng.random(size)
+        uz = u * self.zetan
+        ranks = (self.n * (self.eta * u - self.eta + 1) ** self.alpha).astype(np.int64)
+        ranks = np.where(uz < 1.0, 0, ranks)
+        ranks = np.where((uz >= 1.0) & (uz < 1.0 + 0.5**self.theta), 1, ranks)
+        return np.clip(ranks, 0, self.n - 1)
+
+    def hottest_fraction(self, size: int = 200_000) -> float:
+        """Empirical access share of the single hottest item (drives the
+        hot-leaf contention model, Fig. 12b/17)."""
+        r = self.draw_ranks(size)
+        return float(np.mean(r == 0))
+
+
+def scramble(ranks: np.ndarray, n: int) -> np.ndarray:
+    """FNV-style hash spreading ranks over [0, n) (YCSB ScrambledZipfian)."""
+    h = ranks.astype(np.uint64)
+    h = (h * np.uint64(0xC6A4A7935BD1E995)) ^ (h >> np.uint64(29))
+    h = (h * np.uint64(0xFF51AFD7ED558CCD)) ^ (h >> np.uint64(33))
+    return (h % np.uint64(n)).astype(np.int64)
+
+
+@dataclasses.dataclass
+class Workload:
+    ops: np.ndarray      # op codes
+    keys: np.ndarray     # target keys
+    scan_len: int = 100
+
+
+def make_dataset(n_keys: int, *, key_space: int = None, seed: int = 0,
+                 key_size_bytes: int = 8) -> np.ndarray:
+    """Sorted unique int64 keys to bulk-load (paper: 200M records; benches
+    scale down).  ``key_size_bytes`` > 8 models longer string keys by
+    reducing effective fanout upstream (Fig. 16)."""
+    key_space = key_space or max(4 * n_keys, 1 << 20)
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(key_space, size=n_keys, replace=False).astype(np.int64) + 1
+    return np.sort(keys)
+
+
+def generate(
+    name: str,
+    dataset: np.ndarray,
+    n_ops: int,
+    *,
+    theta: float = 0.99,
+    seed: int = 1,
+    scan_len: int = 100,
+) -> Workload:
+    """Generate ``n_ops`` operations of the named mix over ``dataset``.
+
+    Lookups/updates/scans target existing keys via scrambled-Zipfian ranks;
+    inserts draw fresh keys adjacent to existing ones (keeping the key space
+    dense, as YCSB's insert order does).
+    """
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; options: {list(WORKLOADS)}")
+    p_ins, p_look, p_upd, p_scan = WORKLOADS[name]
+    rng = np.random.default_rng(seed)
+    n = dataset.size
+    zipf = ZipfianGenerator(n, theta=theta, seed=seed + 7)
+
+    ops = rng.choice(
+        np.array([OP_INSERT, OP_LOOKUP, OP_UPDATE, OP_SCAN]),
+        size=n_ops,
+        p=[p_ins, p_look, p_upd, p_scan],
+    )
+    ranks = zipf.draw_ranks(n_ops)
+    idx = scramble(ranks, n)
+    keys = dataset[idx]
+
+    is_ins = ops == OP_INSERT
+    n_ins = int(is_ins.sum())
+    if n_ins:
+        # fresh keys: odd offsets above existing even-spaced keys are unlikely
+        # to collide; fall back to random 63-bit keys for any residual dupes
+        base = dataset[idx[is_ins]]
+        fresh = base + rng.integers(1, 3, size=n_ins)
+        keys = keys.copy()
+        keys[is_ins] = fresh
+    return Workload(ops=ops.astype(np.int32), keys=keys.astype(np.int64),
+                    scan_len=scan_len)

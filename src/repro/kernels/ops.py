@@ -1,0 +1,31 @@
+"""Public jit'd entry points for every Pallas kernel.
+
+``interpret`` defaults to True so the whole framework runs on CPU; the
+launcher flips it to False on real TPU backends (see launch/train.py).
+Oracles live in kernels/ref.py with identical signatures.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.node_search import node_search
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.subtree_walk import subtree_walk
+
+__all__ = [
+    "flash_attention",
+    "mamba_scan",
+    "node_search",
+    "paged_attention",
+    "subtree_walk",
+    "use_interpret",
+]
+
+
+def use_interpret() -> bool:
+    """Kernels execute their Python bodies (interpret mode) unless a real
+    TPU backend is present."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function mirrors its kernel's signature exactly; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle (interpret=True)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nodes import FANOUT
+from repro.core.pool import subtree_walk_ref  # noqa: F401  (re-export)
+
+
+def node_search_ref(node_keys, queries, node_values):
+    """Oracle for kernels/node_search.py."""
+    queries = queries.astype(jnp.int64)
+    leq = node_keys <= queries[:, None]
+    cnt = jnp.sum(leq, axis=-1)
+    slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+    eq = node_keys == queries[:, None]
+    found = jnp.any(eq, axis=-1)
+    value = jnp.sum(jnp.where(eq, node_values, 0), axis=-1)
+    return slot, found, value
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Oracle for kernels/flash_attention.py.
+
+    q: [B, H, Sq, D]; k, v: [B, HKV, Sk, D] with H % HKV == 0 (GQA).
+    Computation in f32; returns q.dtype.
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Oracle for kernels/paged_attention.py (decode: one query token).
+
+    q: [B, H, D]; k_pages/v_pages: [P, page, HKV, D];
+    page_table: [B, pages_per_req] int32; seq_lens: [B] int32.
+    """
+    b, h, d = q.shape
+    hkv = k_pages.shape[2]
+    group = h // hkv
+    page = k_pages.shape[1]
+    ppr = page_table.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    k = k_pages[page_table]            # [B, ppr, page, HKV, D]
+    v = v_pages[page_table]
+    k = k.reshape(b, ppr * page, hkv, d)
+    v = v.reshape(b, ppr * page, hkv, d)
+    pos = jnp.arange(ppr * page)[None, :]
+    valid = pos < seq_lens[:, None]    # [B, S]
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, d) * scale
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bngd,bsnd->bngs", qf, kf)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnd->bngd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def mamba_scan_ref(delta, A, Bmat, C, x):
+    """Oracle for kernels/mamba_scan.py (selective scan, diagonal A).
+
+    delta: [B, L, D] (post-softplus); A: [D, N] (negative);
+    Bmat, C: [B, L, N]; x: [B, L, D].  Returns y: [B, L, D] (f32).
+    """
+    delta = delta.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bmat = Bmat.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    dA = jnp.exp(delta[..., None] * A[None, None])          # [B, L, D, N]
+    dBx = delta[..., None] * Bmat[:, :, None, :] * x[..., None]
+
+    def step(h, inp):
+        da, dbx = inp
+        h = da * h + dbx
+        return h, h
+
+    def scan_one(da_seq, dbx_seq):
+        h0 = jnp.zeros(da_seq.shape[1:], jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (da_seq, dbx_seq))
+        return hs
+
+    hs = jax.vmap(scan_one)(dA, dBx)                        # [B, L, D, N]
+    y = jnp.einsum("bldn,bln->bld", hs, C)
+    return y

@@ -1,0 +1,83 @@
+"""Elastic scaling: checkpoint-mediated mesh resizing + logical repartition.
+
+Two elasticity mechanisms, mirroring the paper's claim that logical
+repartitioning makes scale-in/out cheap (§4, Fig. 10):
+
+  * **Training**: a checkpoint taken on mesh A restores onto mesh B —
+    ``CheckpointManager.restore(shardings=...)`` re-places every leaf.  The
+    data pipeline reshards deterministically (counter-based streams).
+    ``reshard_run`` below packages that.
+  * **Serving**: request key-ranges move between replicas by adjusting
+    ``LogicalPartitions`` boundaries; no page movement (the DEX index keeps
+    addressing the same pool), only cache re-warming — exactly the paper's
+    repartition cost profile.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.partition import LogicalPartitions
+from repro.train import sharding as SH
+from repro.train.checkpoint import CheckpointManager
+
+
+def reshard_checkpoint(
+    ckpt: CheckpointManager,
+    template,
+    new_mesh,
+    cfg,
+    *,
+    step: Optional[int] = None,
+):
+    """Restore (params, opt_state) onto a different mesh geometry."""
+    params_t, opt_t = template
+    p_sh = SH.param_shardings(params_t, new_mesh, cfg)
+    o_sh = type(opt_t)(
+        mu=SH.param_shardings(opt_t.mu, new_mesh, cfg),
+        nu=SH.param_shardings(opt_t.nu, new_mesh, cfg),
+        step=jax.NamedSharding(new_mesh, jax.sharding.PartitionSpec()),
+    )
+    state, got_step, extra = ckpt.restore(
+        (params_t, opt_t), step=step, shardings=(p_sh, o_sh)
+    )
+    return state, got_step, extra
+
+
+def scale_serving_partitions(
+    parts: LogicalPartitions, *, target_replicas: int, loads=None
+) -> Tuple[LogicalPartitions, float]:
+    """Grow/shrink the serving replica set by logical repartitioning.
+
+    Returns (new_partitions, fraction_of_keyspace_moved) — the moved
+    fraction is the cache re-warm cost, the only data cost of the operation.
+    """
+    cur = parts.num_partitions
+    new = parts
+    while new.num_partitions < target_replicas:
+        # split the widest (or most loaded) partition at its midpoint
+        widths = [
+            int(new.boundaries[i + 1]) - int(new.boundaries[i])
+            for i in range(new.num_partitions)
+        ]
+        if loads is not None and len(loads) == new.num_partitions:
+            p = max(range(new.num_partitions), key=lambda i: loads[i])
+            loads = list(loads[:p]) + [loads[p] / 2, loads[p] / 2] + list(loads[p + 1:])
+        else:
+            p = max(range(new.num_partitions), key=lambda i: widths[i])
+        lo, hi = int(new.boundaries[p]), int(new.boundaries[p + 1])
+        mid = lo + (hi - lo) // 2
+        new = new.split_partition(p, mid)
+    while new.num_partitions > target_replicas:
+        p = 0
+        if loads is not None and len(loads) == new.num_partitions:
+            p = min(
+                range(new.num_partitions - 1),
+                key=lambda i: loads[i] + loads[i + 1],
+            )
+            loads = list(loads[:p]) + [loads[p] + loads[p + 1]] + list(loads[p + 2:])
+        new = new.merge_partitions(p)
+    moved = parts.assignment_diff(new)
+    return new, moved

@@ -1,0 +1,651 @@
+"""Model building blocks: norms, RoPE, GQA/MLA attention, SwiGLU/GELU MLPs,
+capacity-based MoE, and Mamba selective-scan blocks.
+
+All functions are pure (params in, activations out).  Shardings are applied
+at the jit boundary (train/sharding.py); layer code is sharding-agnostic.
+Matmuls accumulate in f32 (``preferred_element_type``); params/activations
+default to bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+
+#: Optional tensor-parallel constraint context, set by launchers before
+#: tracing (``set_tp_context``).  When set, layer intermediates (q/k/v heads,
+#: MLP hidden) are pinned to model-axis shardings — left to itself GSPMD
+#: replicates them (measured: +13 GiB of temps per chip in a 405B MLP).
+_TP_CTX = None
+
+#: roofline-probe hook: disable MoE token chunking so the dispatch loop is
+#: counted exactly once with the full token count (compile-only probes).
+MOE_FULL_CHUNK = False
+
+
+def set_tp_context(mesh, data_axes):
+    """Enable model-axis constraints on layer intermediates.  Pass
+    ``mesh=None`` to disable (single-chip tests)."""
+    global _TP_CTX
+    _TP_CTX = None if mesh is None else (mesh, tuple(data_axes))
+
+
+def _tp(x, *tail):
+    """Constrain x to P(data_axes, *tail) under the TP context."""
+    if _TP_CTX is None:
+        return x
+    mesh, data = _TP_CTX
+    import jax.sharding as _s
+    sizes = dict(mesh.shape)
+    spec = []
+    for dim, ax in enumerate([data, *tail]):
+        if ax is None:
+            spec.append(None)
+            continue
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= sizes[a]
+        spec.append(ax if x.shape[dim] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, _s.NamedSharding(mesh, _s.PartitionSpec(*spec))
+    )
+
+
+def _dot(x, w):
+    return jnp.dot(x, w, preferred_element_type=F32).astype(x.dtype)
+
+
+def _dus(buf, update, at, axis: int):
+    """dynamic_update_slice along one axis with int32 indices (x64-safe)."""
+    idx = [jnp.int32(0)] * buf.ndim
+    idx[axis] = jnp.asarray(at, jnp.int32)
+    return jax.lax.dynamic_update_slice(buf, update.astype(buf.dtype), tuple(idx))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm(x, scale, bias, eps):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(cfg: ArchConfig, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ArchConfig, dim: int):
+    p = {"scale": jnp.ones((dim,), _dtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), _dtype(cfg))
+    return p
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2) / dim))
+    ang = positions[..., None].astype(F32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, Dh]; cos/sin broadcastable against [..., S, H, Dh/2]
+    (callers pass ``cos[:, None, :]`` == [S, 1, Dh/2])."""
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def _fit_chunk(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def sdpa(q, k, v, *, causal: bool, q_offset: int = 0, scale=None,
+         block_q: int = 1024, block_k: int = 1024):
+    """Flash-style attention in pure XLA: double scan (q chunks x kv chunks)
+    with online softmax, so no [Sq, Sk] score tensor is ever materialized —
+    XLA does not fuse naive softmax-attention, and at 32k context the naive
+    scores are hundreds of GB/chip.  The Pallas kernel
+    (kernels/flash_attention.py) is the TPU-native fused form; this is the
+    portable implementation with the same memory behaviour.
+
+    q: [B, Sq, H, Dq]; k: [B, Sk, HKV, Dq]; v: [B, Sk, HKV, Dv].
+    """
+    b, sq, h, dq = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = float(scale) if scale is not None else 1.0 / float(np.sqrt(dq))
+    bq = _fit_chunk(sq, block_q)
+    bk = _fit_chunk(sk, block_k)
+    nq, nk = sq // bq, sk // bk
+
+    # keep operands in their input dtype; f32 appears only in chunk-local
+    # score/accumulator tensors (full-tensor f32 copies of q/k/v were ~10 GB
+    # of temps per chip at 32k prefill)
+    qg = jnp.moveaxis(q.reshape(b, nq, bq, hkv, group, dq), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nk, bk, hkv, dq), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, bk, hkv, dv), 1, 0)
+
+    def q_block(_, qi_and_q):
+        qi, qb = qi_and_q                              # [], [B, bq, n, g, dq]
+
+        def kv_block(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kb, vb = ki_and_kv
+            s = jnp.einsum(
+                "bqngd,bknd->bnqgk", qb, kb,
+                preferred_element_type=F32,
+            ) * scale                                       # [B,n,bq,g,bk]
+            if causal:
+                qpos = qi * bq + jnp.arange(bq) + q_offset
+                kpos = ki * bk + jnp.arange(bk)
+                msk = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(msk[None, None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bnqgk,bknd->bnqgd", p.astype(qb.dtype), vb,
+                preferred_element_type=F32,
+            )
+            return (m_new, l, acc), ()
+
+        m0 = jnp.full((b, hkv, bq, group), NEG_INF, F32)
+        l0 = jnp.zeros((b, hkv, bq, group), F32)
+        a0 = jnp.zeros((b, hkv, bq, group, dv), F32)
+        body = jax.checkpoint(kv_block)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # [B,n,bq,g,dv]
+        out = jnp.moveaxis(out, 2, 1)                      # [B,bq,n,g,dv]
+        return (), out.reshape(b, bq, hkv * group, dv)
+
+    _, o = jax.lax.scan(q_block, (), (jnp.arange(nq), qg))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, sq, h, dv)
+    return o.astype(q.dtype)
+
+
+def init_gqa(cfg: ArchConfig, rng) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d)
+    dt = _dtype(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * s / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def gqa_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,                     # [B, S, D]
+    positions: jax.Array,             # [S] absolute positions
+    *,
+    causal: bool = True,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # ([B,Smax,HKV,Dh] k, v)
+    cache_len: Optional[jax.Array] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """Returns (out [B,S,D], new_kv_cache or None)."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # head-parallel projections; single-token decode skips the constraint —
+    # resharding a [B, 1, ...] tensor against a differently-sharded cache
+    # costs a full-cache reshard
+    tp = (lambda t: _tp(t, None, "model")) if s > 1 else (lambda t: t)
+    q = tp(_dot(x, p["wq"]))
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, h, hd)
+    if cross_kv is None:
+        k = tp(_dot(x, p["wk"]))
+        v = tp(_dot(x, p["wv"]))
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cross_kv is None and cfg.attention != "none":
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = _dus(ck, k, cache_len, axis=1)
+        cv = _dus(cv, v, cache_len, axis=1)
+        new_cache = (ck, cv)
+        smax = ck.shape[1]
+        kpos = jnp.arange(smax)
+        keep = kpos < (cache_len + s)
+        qf = q.reshape(b, s, hkv, h // hkv, hd).astype(F32) / float(np.sqrt(hd))
+        sc = jnp.einsum("bqngd,bknd->bnqgk", qf, ck.astype(F32))
+        sc = jnp.where(keep[None, None, None, None, :], sc, -jnp.inf)
+        qpos = positions
+        mask = qpos[:, None] >= kpos[None, :]
+        sc = jnp.where(mask[None, None, :, None, :], sc, -jnp.inf)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bnqgk,bknd->bqngd", pr, cv.astype(F32))
+        o = o.reshape(b, s, h, hd).astype(x.dtype)
+    else:
+        o = sdpa(q, k, v, causal=causal and cross_kv is None,
+                 q_offset=int(0))
+    out = _dot(o.reshape(b, s, h * hd), p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, rng) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, ropeD, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(d)
+    dt = _dtype(cfg)
+    return {
+        "wq_a": (jax.random.normal(ks[0], (d, qlr)) * s).astype(dt),
+        "q_norm": jnp.ones((qlr,), dt),
+        "wq_b": (jax.random.normal(ks[1], (qlr, h * (nope + ropeD))) / np.sqrt(qlr)).astype(dt),
+        "wkv_a": (jax.random.normal(ks[2], (d, kvlr + ropeD)) * s).astype(dt),
+        "kv_norm": jnp.ones((kvlr,), dt),
+        "wkv_b": (jax.random.normal(ks[3], (kvlr, h * (nope + vd))) / np.sqrt(kvlr)).astype(dt),
+        "wo": (jax.random.normal(ks[4], (h * vd, d)) * s / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def mla_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (c_kv [B,S,kvlr], k_rope [B,S,ropeD])
+    cache_len: Optional[jax.Array] = None,
+):
+    """MLA with the *compressed* KV cache (the technique's whole point: cache
+    [kv_lora_rank + rope_dim] per token instead of 2*H*Dh)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, ropeD, vd, kvlr = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q = _dot(rmsnorm(_dot(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, s, h, nope + ropeD)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = _dot(x, p["wkv_a"])                      # [B,S,kvlr+ropeD]
+    c_kv, k_rope = kv_a[..., :kvlr], kv_a[..., kvlr:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+
+    cos, sin = rope_freqs(ropeD, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos[:, None, :], sin[:, None, :])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, None, :], sin[:, None, :])[:, :, 0]
+
+    new_cache = None
+    if kv_cache is not None:
+        cc, cr = kv_cache
+        cc = _dus(cc, c_kv, cache_len, axis=1)
+        cr = _dus(cr, k_rope, cache_len, axis=1)
+        new_cache = (cc, cr)
+        c_all, r_all = cc, cr
+        smax = cc.shape[1]
+    else:
+        c_all, r_all = c_kv, k_rope
+        smax = s
+
+    kv = _dot(c_all, p["wkv_b"]).reshape(b, smax, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    scale = 1.0 / float(np.sqrt(nope + ropeD))
+    if kv_cache is None:
+        # prefill/train: fold (nope | rope) into one head dim and use the
+        # flash path — naive scores at 32k are hundreds of GB
+        qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kh = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_all[:, :, None, :], (b, smax, h, ropeD))],
+            axis=-1,
+        )
+        o = sdpa(qh, kh, v, causal=causal, scale=scale)
+        o = o.astype(F32)
+    else:
+        # decode: linear-size scores over the compressed cache
+        sc = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(F32), k_nope.astype(F32))
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(F32), r_all.astype(F32))
+        ) * scale
+        kpos = jnp.arange(smax)
+        mask = positions[:, None] >= kpos[None, :]
+        mask = mask & (kpos[None, :] < cache_len + s)
+        sc = jnp.where(mask[None, None], sc, -jnp.inf)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(F32))
+    out = _dot(o.reshape(b, s, h * vd).astype(x.dtype), p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, rng, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2 = jax.random.split(rng)
+    s = 1.0 / np.sqrt(d)
+    dt = _dtype(cfg)
+    width = 2 * ff if cfg.act == "swiglu" else ff
+    return {
+        "wi": (jax.random.normal(k1, (d, width)) * s).astype(dt),
+        "wo": (jax.random.normal(k2, (ff, d)) / np.sqrt(ff) / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def mlp(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = _dot(x, p["wi"])
+    if x.shape[1] > 1:
+        h = _tp(h, None, "model")                # col-parallel hidden
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    return _dot(h, p["wo"])                      # row-parallel (psum by GSPMD)
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based top-k dispatch; EP shards the expert axis)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ArchConfig, rng) -> dict:
+    d, e, ffe = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = _dtype(cfg)
+    s = 1.0 / np.sqrt(d)
+    width = 2 * ffe if cfg.act == "swiglu" else ffe
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s).astype(jnp.float32),
+        "wi": (jax.random.normal(k2, (e, d, width)) * s).astype(dt),
+        "wo": (jax.random.normal(k3, (e, ffe, d)) / np.sqrt(ffe) / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def moe_block(cfg: ArchConfig, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss).  *Sort-based* capacity dispatch: (token,
+    choice) pairs are bucketed per expert via argsort + rank-in-segment, so
+    the working set is O(E * cap * D) gathers/scatters — never a
+    [T, E, cap] one-hot (which is quadratic in tokens and measured in TBs at
+    32k x 32-way prefill).  Expert-sharded weights turn the gather/scatter
+    into all_to_alls under GSPMD (EP)."""
+    b, s, d = x.shape
+    t_full = b * s
+    e, k = cfg.n_experts, cfg.top_k
+
+    # token-chunked dispatch: bounds the sort/gather working set (and the
+    # all_to_all payloads under EP) regardless of sequence length
+    chunk = t_full if MOE_FULL_CHUNK else min(t_full, 8192)
+    while t_full % chunk:
+        chunk -= 1
+    if chunk < t_full:
+        xc = x.reshape(t_full // chunk, chunk, d)
+
+        def one(carry, xi):
+            o, a = moe_block(cfg, p, xi[None])
+            return carry + a, o[0]
+
+        body = jax.checkpoint(one)
+        aux_sum, outs = jax.lax.scan(body, jnp.zeros((), F32), xc)
+        return outs.reshape(b, s, d), aux_sum / (t_full // chunk)
+
+    t = t_full
+    xt = x.reshape(t, d)
+    logits = jnp.dot(xt.astype(F32), p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)               # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    cap = max(1, int(t * k / e * cfg.moe_capacity_factor))
+    n = t * k
+    dest = idx.reshape(n)                                  # expert per entry
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    gate = gate_vals.reshape(n).astype(F32)
+
+    # rank of each entry within its expert's queue (stable by token order)
+    order = jnp.argsort(dest, stable=True)
+    sd = dest[order]
+    new_seg = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(new_seg, jnp.arange(n), 0), axis=0)
+    rank = jnp.arange(n) - seg_start                       # position in expert
+    keep = rank < cap                                      # capacity drop
+    # slot of every kept entry in the [E, cap] buffers
+    slot_e = jnp.where(keep, sd, e)                        # e = OOB row
+    slot_c = jnp.where(keep, rank, 0)
+
+    tok_buf = jnp.full((e, cap), t, jnp.int32)             # t = OOB token
+    tok_buf = tok_buf.at[slot_e, slot_c].set(tok[order], mode="drop")
+    gate_buf = jnp.zeros((e, cap), F32)
+    gate_buf = gate_buf.at[slot_e, slot_c].set(gate[order], mode="drop")
+
+    # gather token activations per expert slot ([E, cap, D]; OOB -> 0)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    expert_in = xt_pad[tok_buf]                            # [E, cap, D]
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"], preferred_element_type=F32)
+    if cfg.act == "swiglu":
+        gatep, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gatep) * up
+    else:
+        h = jax.nn.gelu(h)
+    h = h.astype(x.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"], preferred_element_type=F32)
+
+    # combine: scatter-add gated expert outputs back to tokens
+    weighted = out_e * gate_buf[..., None]                 # [E, cap, D]
+    out = jnp.zeros((t + 1, d), F32)
+    out = out.at[tok_buf.reshape(-1)].add(
+        weighted.reshape(-1, d), mode="drop"
+    )[:t]
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=F32), axis=0)
+    aux = jnp.sum(me * ce) * e
+    return out.astype(x.dtype).reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective scan, diagonal A; v2 = larger state + per-head A, see
+# DESIGN.md for the SSD simplification note)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(cfg: ArchConfig, rng) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(rng, 6)
+    dt = _dtype(cfg)
+    s = 1.0 / np.sqrt(d)
+    a_init = -(1.0 + jnp.arange(n, dtype=F32))[None, :] * jnp.ones((di, 1), F32) / n
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dt),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(dt),
+        "conv_bias": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * n)) / np.sqrt(di)).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di)) / np.sqrt(dt_rank)).astype(dt),
+        "dt_bias": jnp.full((di,), -4.0, F32),  # softplus ~= 0.018
+        "A_log": jnp.log(-a_init),              # store log(-A) for stability
+        "D_skip": jnp.ones((di,), F32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) / np.sqrt(di) / np.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def _ssm_chunked_scan(delta, A, bmat, cmat, xs, chunk: int):
+    """Chunked selective scan producing y directly.
+
+    ``h_t = exp(delta_t A) h_{t-1} + delta_t B_t x_t``; ``y_t = <h_t, C_t>``.
+    Sequential over chunks (lax.scan carry = state), parallel cumsum/cumprod
+    within a chunk.  Everything [B, L, Di, N]-sized lives only at chunk
+    granularity — the full-sequence state tensor would be hundreds of GB at
+    production shapes.
+
+    delta: [B, L, Di] f32; A: [Di, N]; bmat/cmat: [B, L, N]; xs: [B, L, Di].
+    Returns (y [B, L, Di] f32, final_state [B, Di, N]).
+    """
+    b, l, di = delta.shape
+    n = A.shape[1]
+    nc = l // chunk
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    d_c, b_c, c_c, x_c = split(delta), split(bmat.astype(F32)), split(
+        cmat.astype(F32)
+    ), split(xs.astype(F32))
+
+    def one_chunk(h0, inp):
+        d, bm, cm, xx = inp                          # [B, chunk, ...]
+        dA = jnp.exp(d[..., None] * A[None, None])   # [B, chunk, Di, N]
+        dBx = d[..., None] * bm[:, :, None, :] * xx[..., None]
+        cum = jnp.cumprod(dA, axis=1)
+        safe = jnp.maximum(cum, 1e-30)
+        hs = cum * (h0[:, None] + jnp.cumsum(dBx / safe, axis=1))
+        y = jnp.einsum("bldn,bln->bld", hs, cm)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), F32)
+    body = jax.checkpoint(one_chunk)
+    h_last, y = jax.lax.scan(body, h0, (d_c, b_c, c_c, x_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, l, di)
+    return y, h_last
+
+
+def mamba_block(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,                   # [B, S, D]
+    *,
+    ssm_state: Optional[jax.Array] = None,   # [B, Di, N] decode carry
+    conv_state: Optional[jax.Array] = None,  # [B, conv-1, Di]
+    chunk: int = 64,
+):
+    """Returns (out, new_ssm_state, new_conv_state)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+
+    xz = _dot(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)               # [B, S, Di]
+
+    # depthwise causal conv over time
+    w = p["conv"]                                   # [K, Di]
+    kk = w.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+    else:
+        ctx = jnp.pad(xs, ((0, 0), (kk - 1, 0), (0, 0)))
+    new_conv_state = ctx[:, -(kk - 1):, :].astype(F32) if kk > 1 else None
+    conv_out = sum(
+        ctx[:, i : i + s, :].astype(F32) * w[i].astype(F32) for i in range(kk)
+    ) + p["conv_bias"].astype(F32)
+    xs = jax.nn.silu(conv_out).astype(x.dtype)
+
+    x_dbl = _dot(xs, p["x_proj"])
+    dt, bmat, cmat = jnp.split(
+        x_dbl, [dt_rank, dt_rank + n], axis=-1
+    )
+    delta = jax.nn.softplus(
+        jnp.dot(dt.astype(F32), p["dt_proj"].astype(F32)) + p["dt_bias"]
+    )                                                # [B, S, Di] f32
+    A = -jnp.exp(p["A_log"])                         # [Di, N]
+
+    if s == 1 and ssm_state is not None:
+        dA = jnp.exp(delta[:, 0, :, None] * A[None])          # [B, Di, N]
+        dBx = (
+            delta[:, 0, :, None]
+            * bmat[:, 0, None, :].astype(F32)
+            * xs[:, 0, :, None].astype(F32)
+        )
+        h = dA * ssm_state + dBx
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(F32))[:, None]
+        new_state = h
+    else:
+        c = min(chunk, s)
+        while s % c:
+            c -= 1
+        y, new_state = _ssm_chunked_scan(delta, A, bmat, cmat, xs, c)
+
+    y = y + p["D_skip"] * xs.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    out = _dot(y.astype(x.dtype), p["out_proj"])
+    return out, new_state, new_conv_state

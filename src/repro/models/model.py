@@ -1,0 +1,510 @@
+"""Unified model: one init/forward/decode covering every assigned family.
+
+Layer stacking uses ``jax.vmap`` over per-layer RNGs at init (stacked [L, ...]
+leaves) and ``jax.lax.scan`` + ``jax.checkpoint`` at apply time, keeping the
+HLO size O(1) in depth — essential for compiling 126-layer configs against
+512 partitions quickly.
+
+Families:
+  dense / vlm      : pre-norm GQA (+ optional QKV bias / qk-norm) + SwiGLU
+  mla              : MiniCPM3-style multi-head latent attention, compressed
+                     KV cache (kv_lora_rank + rope_dim per token)
+  moe              : GQA + capacity-based top-k expert MLPs
+  ssm              : Mamba selective-scan blocks (attention-free)
+  hybrid           : Mamba stack with one *shared* attention block applied
+                     every k layers (Zamba2's weight-shared global block)
+  audio (enc-dec)  : Whisper backbone; conv frontend is a stub — the batch
+                     supplies precomputed frame embeddings (per the brief)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+#: roofline-probe hook: when set (int), the layer scans unroll by this
+#: factor so XLA's cost_analysis counts every layer (loop bodies are counted
+#: once otherwise).  Never set in production — compile-time only probes.
+SCAN_UNROLL = None
+
+
+def _unroll():
+    return SCAN_UNROLL if SCAN_UNROLL else 1
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, rng) -> Dict[str, Any]:
+    """One decoder block (unstacked); vmapped for the full stack."""
+    ks = jax.random.split(rng, 8)
+    p: Dict[str, Any] = {}
+    if cfg.ssm:
+        p["ln1"] = L.init_norm(cfg, cfg.d_model)
+        p["ssm"] = L.init_mamba(cfg, ks[0])
+        return p
+    p["ln1"] = L.init_norm(cfg, cfg.d_model)
+    if cfg.attention == "mla":
+        p["attn"] = L.init_mla(cfg, ks[0])
+    else:
+        p["attn"] = L.init_gqa(cfg, ks[0])
+    p["ln2"] = L.init_norm(cfg, cfg.d_model)
+    if cfg.moe:
+        p["moe"] = L.init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[1])
+    if cfg.encdec:
+        p["lnx"] = L.init_norm(cfg, cfg.d_model)
+        p["xattn"] = L.init_gqa(cfg, ks[2])
+    return p
+
+
+def init_params(cfg: ArchConfig, rng) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[1], (cfg.d_model, cfg.vocab)) * 0.02
+        ).astype(dt)
+
+    if cfg.hybrid_attn_every:
+        # mamba stack + one weight-shared attention block (zamba2)
+        ssm_cfg = cfg
+        block_keys = jax.random.split(ks[2], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_block(ssm_cfg, k))(block_keys)
+        shared_cfg = cfg
+        params["shared_attn"] = {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_gqa(shared_cfg, ks[3]),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, ks[4]),
+        }
+    else:
+        block_keys = jax.random.split(ks[2], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(block_keys)
+
+    if cfg.encdec:
+        enc_keys = jax.random.split(ks[5], cfg.enc_layers)
+        enc_cfg = cfg
+        def _enc_block(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": L.init_norm(enc_cfg, enc_cfg.d_model),
+                "attn": L.init_gqa(enc_cfg, k1),
+                "ln2": L.init_norm(enc_cfg, enc_cfg.d_model),
+                "mlp": L.init_mlp(enc_cfg, k2),
+            }
+        params["encoder"] = {
+            "pos": (jax.random.normal(ks[6], (cfg.max_source_positions, cfg.d_model))
+                    * 0.02).astype(dt),
+            "blocks": jax.vmap(_enc_block)(enc_keys),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (apply)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ArchConfig, p, x, positions, enc_x=None):
+    """One decoder block, training/prefill path.  Returns (x, aux)."""
+    aux = jnp.zeros((), F32)
+    if cfg.ssm:
+        h, _, _ = L.mamba_block(cfg, p["ssm"], L.apply_norm(cfg, x, p["ln1"]))
+        return x + h, aux
+    if cfg.attention == "mla":
+        h, _ = L.mla_attention(cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions)
+    else:
+        h, _ = L.gqa_attention(cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions)
+    x = x + h
+    if cfg.encdec and enc_x is not None:
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        bx = enc_x.shape[0]
+        kx = L._dot(enc_x, p["xattn"]["wk"]).reshape(bx, -1, hkv, hd)
+        vx = L._dot(enc_x, p["xattn"]["wv"]).reshape(bx, -1, hkv, hd)
+        h, _ = L.gqa_attention(
+            cfg, p["xattn"], L.apply_norm(cfg, x, p["lnx"]), positions,
+            causal=False, cross_kv=(kx, vx),
+        )
+        x = x + h
+    if cfg.moe:
+        h, aux = L.moe_block(cfg, p["moe"], L.apply_norm(cfg, x, p["ln2"]))
+    else:
+        h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+    return x + h, aux
+
+
+def _shared_attn_block(cfg: ArchConfig, p, x, positions):
+    h, _ = L.gqa_attention(cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions)
+    x = x + h
+    h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+    return x + h
+
+
+def _encode(cfg: ArchConfig, params, enc_emb):
+    """Whisper encoder over stub frame embeddings [B, T, D]."""
+    t = enc_emb.shape[1]
+    x = enc_emb + params["encoder"]["pos"][:t][None]
+    positions = jnp.arange(t)
+
+    def enc_block(x, p):
+        h, _ = L.gqa_attention(
+            cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions, causal=False
+        )
+        x = x + h
+        h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+        return x + h, ()
+
+    blk = enc_block
+    if cfg.remat:
+        blk = jax.checkpoint(enc_block)
+    x, _ = jax.lax.scan(blk, x, params["encoder"]["blocks"], unroll=_unroll())
+    return L.apply_norm(cfg, x, params["encoder"]["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _embed(cfg: ArchConfig, params, tokens, act_spec):
+    """Token embedding lookup.
+
+    With a mesh-aware ``act_spec`` (NamedSharding) the gather runs inside
+    shard_map against the d_model-sharded table, so each chip gathers only
+    its embedding slice — a naive gather makes GSPMD all-gather the whole
+    table per chip (measured 4.25 GiB of temps at 128k x 16k), and its
+    backward scatter trips the SPMD partitioner entirely."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    table = params["embed"]
+    if not isinstance(act_spec, NamedSharding):
+        return table[tokens].astype(jnp.dtype(cfg.dtype))
+    mesh = act_spec.mesh
+    data_sp = act_spec.spec[0]
+    d_sharded = cfg.d_model % mesh.shape["model"] == 0
+    tspec = P(None, "model") if d_sharded else P(None, None)
+    ospec = P(data_sp, None, "model" if d_sharded else None)
+
+    def local(tab, tok):
+        return tab[tok]
+
+    out = jax.shard_map(
+        local, mesh=mesh, in_specs=(tspec, P(data_sp, None)),
+        out_specs=ospec, check_vma=False,
+    )(table, tokens)
+    return out.astype(jnp.dtype(cfg.dtype))
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,                       # [B, S] int32
+    *,
+    enc_emb: Optional[jax.Array] = None,     # [B, T, D] (audio stub)
+    positions: Optional[jax.Array] = None,
+    return_hidden: bool = False,
+    act_spec=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B, S, V] f32, moe_aux scalar) — or the final hidden
+    states when ``return_hidden`` (callers then apply the head in chunks:
+    materializing [B, S, V] f32 at production shapes is hundreds of GB).
+
+    ``act_spec``: optional PartitionSpec pinned onto the residual stream
+    between blocks (sequence parallelism for attention stacks, channel
+    sharding for SSM stacks) — this bounds the scan-saved activations, the
+    dominant training-memory term at 100+ layers."""
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, act_spec)
+    x = _constrain(x, act_spec)
+    positions = positions if positions is not None else jnp.arange(s)
+    enc_x = _encode(cfg, params, enc_emb) if cfg.encdec else None
+
+    def block(carry, p):
+        x, aux = carry
+        x, a = _apply_block(cfg, p, x, positions, enc_x)
+        return (_constrain(x, act_spec), aux + a), ()
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+
+    if cfg.hybrid_attn_every:
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        aux = jnp.zeros((), F32)
+        blocks = params["blocks"]
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda a: a[g * every : (g + 1) * every], blocks)
+            (x, aux), _ = jax.lax.scan(blk, (x, aux), grp, unroll=_unroll())
+            x = _shared_attn_block(cfg, params["shared_attn"], x, positions)
+        rem = cfg.n_layers - n_groups * every
+        if rem:
+            grp = jax.tree.map(lambda a: a[-rem:], blocks)
+            (x, aux), _ = jax.lax.scan(blk, (x, aux), grp, unroll=_unroll())
+    else:
+        (x, aux), _ = jax.lax.scan(blk, (x, jnp.zeros((), F32)), params["blocks"], unroll=_unroll())
+
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    if return_hidden:
+        return x, aux
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x, head, preferred_element_type=F32)
+    return logits, aux
+
+
+def _head_of(cfg: ArchConfig, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_ce(cfg: ArchConfig, params, hidden, labels, *, chunk: int = 512):
+    """Cross entropy without materializing [B, S, V] f32: scan over sequence
+    chunks, recomputing each chunk's logits (they are rematerialized in the
+    backward pass too — the standard memory/compute trade at 100k+ vocabs).
+    Returns (sum_nll, count)."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    head = _head_of(cfg, params)
+    hc = hidden.reshape(b, nc, c, d).swapaxes(0, 1)      # [nc, B, c, D]
+    lc = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    def one(carry, inp):
+        nll_sum, cnt = carry
+        h, lab = inp
+        logits = jnp.dot(h, head, preferred_element_type=F32)   # [B, c, V]
+        valid = lab != -100
+        safe = jnp.where(valid, lab, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum((logz - gold) * valid)
+        cnt = cnt + jnp.sum(valid).astype(jnp.int32)
+        return (nll_sum, cnt), ()
+
+    one = jax.checkpoint(one)
+    (nll_sum, cnt), _ = jax.lax.scan(
+        one, (jnp.zeros((), F32), jnp.zeros((), jnp.int32)), (hc, lc)
+    )
+    return nll_sum, cnt
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, ce_chunk: int = 512,
+            act_spec=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux).  ``batch``: dict with
+    ``tokens`` [B,S], ``labels`` [B,S] (-100 = ignore), optional ``enc_emb``."""
+    hidden, aux = forward(
+        cfg, params, batch["tokens"], enc_emb=batch.get("enc_emb"),
+        return_hidden=True, act_spec=act_spec,
+    )
+    nll_sum, cnt = chunked_ce(cfg, params, hidden, batch["labels"], chunk=ce_chunk)
+    denom = jnp.maximum(cnt, 1)
+    ce = nll_sum / denom
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "moe_aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int = 0) -> Dict[str, Any]:
+    """Dense (contiguous) decode cache; the DEX-paged variant lives in
+    serve/kv_cache.py and replaces the ``kv`` entry with a page pool."""
+    dt = jnp.dtype(cfg.dtype)
+    cache: Dict[str, Any] = {}
+    nl = cfg.n_layers
+    if cfg.ssm or cfg.hybrid_attn_every:
+        di = cfg.ssm_expand * cfg.d_model
+        cache["ssm"] = jnp.zeros((nl, batch, di, cfg.ssm_state), F32)
+        cache["conv"] = jnp.zeros((nl, batch, cfg.ssm_conv - 1, di), F32)
+        if cfg.hybrid_attn_every:
+            # the shared block shares WEIGHTS across its applications, but
+            # every application sees different activations -> per-group caches
+            n_groups = cfg.n_layers // cfg.hybrid_attn_every
+            cache["shared_k"] = jnp.zeros(
+                (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+            )
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+        return cache
+    if cfg.attention == "mla":
+        cache["c_kv"] = jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank), dt)
+        cache["k_rope"] = jnp.zeros((nl, batch, max_len, cfg.qk_rope_dim), dt)
+        return cache
+    cache["k"] = jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+    cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.encdec:
+        cache["xk"] = jnp.zeros((nl, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def prefill_cross_kv(cfg: ArchConfig, params, enc_emb, cache):
+    """Whisper: run the encoder once, fill per-layer cross KV."""
+    enc_x = _encode(cfg, params, enc_emb)
+    b, t, _ = enc_x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def per_layer(p):
+        kx = L._dot(enc_x, p["xattn"]["wk"]).reshape(b, t, hkv, hd)
+        vx = L._dot(enc_x, p["xattn"]["wv"]).reshape(b, t, hkv, hd)
+        return kx, vx
+
+    kx, vx = jax.vmap(per_layer)(params["blocks"])
+    return dict(cache, xk=kx, xv=vx)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,          # [B, 1]
+    cache: Dict[str, Any],
+    pos: jax.Array,             # scalar int32: current length
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence.  Returns (logits [B, V], cache')."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))   # [B, 1, D]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    # NOTE on cache plumbing: caches travel in the scan CARRY (indexed with
+    # dynamic_update_index_in_dim) rather than as scanned xs/ys — XLA aliases
+    # loop carries in place, while stacked scan outputs double-buffer the
+    # whole multi-GB cache (measured ~17 GiB of temps at decode_32k x 405B).
+    if cfg.ssm or cfg.hybrid_attn_every:
+        def blockfn(carry, inp):
+            x, ssm_all, conv_all = carry
+            p, idx = inp
+            ssm_st = jax.lax.dynamic_index_in_dim(ssm_all, idx, 0, keepdims=False)
+            conv_st = jax.lax.dynamic_index_in_dim(conv_all, idx, 0, keepdims=False)
+            h, new_ssm, new_conv = L.mamba_block(
+                cfg, p["ssm"], L.apply_norm(cfg, x, p["ln1"]),
+                ssm_state=ssm_st, conv_state=conv_st,
+            )
+            ssm_all = jax.lax.dynamic_update_index_in_dim(ssm_all, new_ssm, idx, 0)
+            conv_all = jax.lax.dynamic_update_index_in_dim(
+                conv_all, new_conv.astype(conv_all.dtype), idx, 0
+            )
+            return (x + h, ssm_all, conv_all), ()
+
+        if cfg.hybrid_attn_every:
+            every = cfg.hybrid_attn_every
+            n_groups = cfg.n_layers // every
+            ssm_all, conv_all = cache["ssm"], cache["conv"]
+            sk_all, sv_all = cache["shared_k"], cache["shared_v"]
+            for g in range(n_groups):
+                sl = slice(g * every, (g + 1) * every)
+                grp = jax.tree.map(lambda a: a[sl], params["blocks"])
+                idxs = jnp.arange(g * every, (g + 1) * every, dtype=jnp.int32)
+                (x, ssm_all, conv_all), _ = jax.lax.scan(
+                    blockfn, (x, ssm_all, conv_all), (grp, idxs), unroll=_unroll()
+                )
+                h, kv = L.gqa_attention(
+                    cfg, params["shared_attn"]["attn"],
+                    L.apply_norm(cfg, x, params["shared_attn"]["ln1"]),
+                    positions,
+                    kv_cache=(sk_all[g], sv_all[g]),
+                    cache_len=pos,
+                )
+                sk_all = jax.lax.dynamic_update_index_in_dim(sk_all, kv[0], g, 0)
+                sv_all = jax.lax.dynamic_update_index_in_dim(sv_all, kv[1], g, 0)
+                x = x + h
+                h = L.mlp(cfg, params["shared_attn"]["mlp"],
+                          L.apply_norm(cfg, x, params["shared_attn"]["ln2"]))
+                x = x + h
+            cache = dict(cache, ssm=ssm_all, conv=conv_all,
+                         shared_k=sk_all, shared_v=sv_all)
+        else:
+            idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+            (x, ssm_all, conv_all), _ = jax.lax.scan(
+                blockfn, (x, cache["ssm"], cache["conv"]),
+                (params["blocks"], idxs), unroll=_unroll(),
+            )
+            cache = dict(cache, ssm=ssm_all, conv=conv_all)
+    elif cfg.attention == "mla":
+        def blockfn(carry, inp):
+            x, cc_all, cr_all = carry
+            p, idx = inp
+            cc = jax.lax.dynamic_index_in_dim(cc_all, idx, 0, keepdims=False)
+            cr = jax.lax.dynamic_index_in_dim(cr_all, idx, 0, keepdims=False)
+            h, kv = L.mla_attention(
+                cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions,
+                kv_cache=(cc, cr), cache_len=pos,
+            )
+            cc_all = jax.lax.dynamic_update_index_in_dim(cc_all, kv[0], idx, 0)
+            cr_all = jax.lax.dynamic_update_index_in_dim(cr_all, kv[1], idx, 0)
+            x = x + h
+            h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+            return (x + h, cc_all, cr_all), ()
+
+        idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, ncc, ncr), _ = jax.lax.scan(
+            blockfn, (x, cache["c_kv"], cache["k_rope"]), (params["blocks"], idxs),
+            unroll=_unroll(),
+        )
+        cache = dict(cache, c_kv=ncc, k_rope=ncr)
+    else:
+        def blockfn(carry, inp):
+            x, k_all, v_all = carry
+            p, idx = inp
+            ck = jax.lax.dynamic_index_in_dim(k_all, idx, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(v_all, idx, 0, keepdims=False)
+            h, kv = L.gqa_attention(
+                cfg, p["attn"], L.apply_norm(cfg, x, p["ln1"]), positions,
+                kv_cache=(ck, cv), cache_len=pos,
+            )
+            k_all = jax.lax.dynamic_update_index_in_dim(k_all, kv[0], idx, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(v_all, kv[1], idx, 0)
+            x = x + h
+            if cfg.encdec:
+                xk = jax.lax.dynamic_index_in_dim(
+                    cache["xk"], idx, 0, keepdims=False
+                )
+                xv = jax.lax.dynamic_index_in_dim(
+                    cache["xv"], idx, 0, keepdims=False
+                )
+                h, _ = L.gqa_attention(
+                    cfg, p["xattn"], L.apply_norm(cfg, x, p["lnx"]), positions,
+                    causal=False, cross_kv=(xk, xv),
+                )
+                x = x + h
+            if cfg.moe:
+                h, _ = L.moe_block(cfg, p["moe"], L.apply_norm(cfg, x, p["ln2"]))
+            else:
+                h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+            return (x + h, k_all, v_all), ()
+
+        idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, nk, nv), _ = jax.lax.scan(
+            blockfn, (x, cache["k"], cache["v"]), (params["blocks"], idxs),
+            unroll=_unroll(),
+        )
+        cache = dict(cache, k=nk, v=nv)
+
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x[:, 0], head, preferred_element_type=F32)
+    return logits, cache

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell we derive (EXPERIMENTS.md §Roofline):
+
+    compute term    = HLO_FLOPs_total / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes_total / (chips * HBM_BW)
+    collective term = collective_bytes_per_chip / LINK_BW
+
+Sources: ``compiled.cost_analysis()`` for flops/bytes (XLA reports the
+*per-partition* program under SPMD — one partition's flops; we multiply by
+chip count for cluster totals and divide back for per-chip terms), and the
+post-partitioning HLO text for collective operand bytes (cost_analysis does
+not attribute collectives).
+
+Hardware constants (v5e, per the brief): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per chip, one direction)
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(tok_dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO.
+
+    These are per-partition programs, so the result is bytes moved per chip
+    per step (the roofline denominator is per-chip link bandwidth)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        m = re.search(r"=\s*(.+?)\s+([a-z0-9\-]+)\(", stripped)
+        if not m:
+            continue
+        opcode = m.group(2)
+        if opcode.endswith("-start"):
+            opcode = opcode[: -len("-start")]
+        if opcode not in out:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        out[opcode] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float                 # 6*N*D (or 6*N_active*D for MoE)
+    per_device_memory_bytes: float
+
+    @property
+    def compute_term(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_term(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_term(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_term,
+            "memory": self.memory_term,
+            "collective": self.collective_term,
+        }
+        return max(terms, key=lambda k: terms[k])
+
+    @property
+    def step_time_bound(self) -> float:
+        """Lower bound on step time = max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_term, self.memory_term, self.collective_term)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / cluster HLO FLOPs: how much compiled compute is
+        'useful' (catches remat/redundancy waste).  > 1 would mean XLA
+        counts fewer flops than the analytic minimum (fused/elided ops)."""
+        total = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the step-time bound:
+        useful model FLOPs / (chips * peak * bound)."""
+        bound = self.step_time_bound
+        if bound <= 0:
+            return float("nan")
+        return self.model_flops / (self.chips * PEAK_FLOPS * bound)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "per_device_memory_bytes": self.per_device_memory_bytes,
+            "compute_term_s": self.compute_term,
+            "memory_term_s": self.memory_term,
+            "collective_term_s": self.collective_term,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape_cell) -> float:
+    """Analytic MODEL_FLOPS for the step: 6*N*D training, 2*N*D inference
+    (forward only), with N_active for MoE."""
+    n_active = cfg.active_param_count()
+    tokens = shape_cell.global_batch * (
+        shape_cell.seq_len if shape_cell.kind in ("train", "prefill") else 1
+    )
+    mult = 6.0 if shape_cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_terms(
+    *, arch, shape_cell, mesh_name, chips, cost, mem_stats, hlo_text, cfg
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    byts = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    coll = collective_bytes(hlo_text)
+    per_dev_mem = (
+        mem_stats.argument_size_in_bytes
+        + mem_stats.output_size_in_bytes
+        + mem_stats.temp_size_in_bytes
+    )
+    return RooflineTerms(
+        arch=arch,
+        shape=shape_cell.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=byts,
+        collective_bytes_per_chip=float(sum(coll.values())),
+        collective_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape_cell),
+        per_device_memory_bytes=float(per_dev_mem),
+    )

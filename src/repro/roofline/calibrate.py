@@ -1,0 +1,95 @@
+"""Loop-aware roofline calibration.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE (verified
+empirically — a scan of 8 matmuls reports 1), so the scan-over-layers
+programs under-report FLOPs/bytes/collective bytes by ~n_layers x.  The
+calibration probe recompiles the cell with:
+
+  * the layer scans fully UNROLLED (``model.SCAN_UNROLL``) — every layer's
+    matmuls and collectives appear in the HLO and are counted exactly;
+  * microbatches=1 — same arithmetic, no grad-accumulation loop;
+  * MoE token chunking disabled (``layers.MOE_FULL_CHUNK``) — the dispatch
+    appears once with the full token count.
+
+What remains inside loops after this is the collective-free inner compute of
+the flash-attention kv-block scan, the SSM chunk scan and the chunked-CE
+scan; those FLOPs are added analytically:
+
+    attention: 4 * B * Sq * Sk * H * dh * (0.5 if causal square) per layer
+    ssm:       ~9 * B * S * Di * N per layer
+    CE head:   2 * B * S * D * V            (x3 for train fwd+bwd)
+
+The probe is compile-only (nothing executes), so the unrolled HLO's memory
+plan is irrelevant — only its op counts are read.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.models.config import ArchConfig, ShapeCell
+from repro.roofline.analysis import collective_bytes
+
+
+def _extract(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective": float(sum(coll.values())),
+    }
+
+
+def analytic_inner_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """Cluster-wide FLOPs hidden inside (collective-free) chunk loops."""
+    b = cell.global_batch
+    s = cell.seq_len if cell.kind in ("train", "prefill") else 1
+    bwd = 3.0 if cell.kind == "train" else 1.0   # fwd + 2x bwd
+    total = 0.0
+    if cfg.attention != "none":
+        h = cfg.n_heads
+        dh = (cfg.qk_nope_dim + cfg.qk_rope_dim) if cfg.attention == "mla" \
+            else cfg.head_dim
+        sk = cell.seq_len if cell.kind == "decode" else s
+        per_layer = 4.0 * b * s * sk * h * dh * (0.5 if s == sk else 1.0)
+        n_attn = (
+            cfg.n_layers // cfg.hybrid_attn_every
+            if cfg.hybrid_attn_every
+            else cfg.n_layers
+        )
+        total += per_layer * n_attn * bwd
+        if cfg.encdec:
+            t = cfg.max_source_positions
+            total += 4.0 * b * t * t * h * dh * cfg.enc_layers * bwd
+            total += 4.0 * b * s * t * h * dh * cfg.n_layers * bwd
+    if cfg.ssm:
+        di = cfg.ssm_expand * cfg.d_model
+        total += 9.0 * b * s * di * cfg.ssm_state * cfg.n_layers * bwd
+    if cell.kind == "train":
+        total += 2.0 * b * s * cfg.d_model * cfg.vocab * bwd
+    return total
+
+
+def calibrated_terms(cfg: ArchConfig, cell: ShapeCell, mesh, mesh_name: str,
+                     lower_fn) -> Dict[str, float]:
+    """Unrolled probe -> per-chip step totals.
+
+    ``lower_fn(cfg, cell, mesh, mesh_name)`` must return a compiled cell
+    (launch/dryrun.lower_cell with microbatches=1)."""
+    from repro.models import layers as LY
+    from repro.models import model as M
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    M.SCAN_UNROLL = max(cfg.n_layers, cfg.enc_layers or 1, 2)
+    LY.MOE_FULL_CHUNK = True
+    try:
+        c = _extract(lower_fn(cfg, cell, mesh, mesh_name))
+    finally:
+        M.SCAN_UNROLL = None
+        LY.MOE_FULL_CHUNK = False
+    out = dict(c)
+    out["flops"] += analytic_inner_flops(cfg, cell) / chips
+    return out

@@ -1,0 +1,153 @@
+"""DEX-paged KV cache: the paper's index as a first-class serving feature.
+
+The KV pool is "disaggregated memory": a flat page pool (sharded over the
+mesh in production) whose ownership map — ``(request, page_index) -> page`` —
+is a DEX B+-tree.  The serving control plane (host) allocates/frees pages by
+inserting/deleting keys; the data plane resolves page tables with batched
+device lookups (``core.btree.bulk_lookup`` single-chip, ``core.dex`` on a
+mesh) and attends with kernels/paged_attention.
+
+Why an ordered index rather than a dense table (vLLM-style)?  Ranges:
+  * freeing a request = one range delete (its whole key range);
+  * prefix sharing / forking = range scan + copy-on-write bump;
+  * elastic rebalancing of requests across serving replicas = DEX logical
+    repartitioning of the request-id space (§4) — no page movement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import btree
+from repro.core.nodes import KEY_MAX
+from repro.models.config import ArchConfig
+
+#: key layout: (request id << PAGE_BITS) | page index
+PAGE_BITS = 24
+
+
+def page_key(req_id, page_idx):
+    return (np.int64(req_id) << PAGE_BITS) | np.int64(page_idx)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Host-controlled paged pool with a DEX page-table index."""
+
+    cfg: ArchConfig
+    n_pages: int
+    page_size: int
+    max_batch: int
+
+    def __post_init__(self):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        nl = c.n_layers
+        self.k_pages = jnp.zeros(
+            (nl, self.n_pages, self.page_size, c.n_kv_heads, c.head_dim), dt
+        )
+        self.v_pages = jnp.zeros_like(self.k_pages)
+        self.free: List[int] = list(range(self.n_pages))[::-1]
+        self.seq_lens: Dict[int, int] = {}
+        self.allocated: Dict[int, int] = {}
+        # the DEX page-table index, bootstrapped with a sentinel key
+        keys = np.array([KEY_MAX - 1], dtype=np.int64)
+        self.tree, self.meta = btree.bulk_build(keys, np.zeros(1, np.int64))
+        self.lookups = 0
+
+    # -- control plane (host): allocation via index inserts -------------------
+
+    def pages_per_req(self, seq_len: int) -> int:
+        return -(-seq_len // self.page_size)
+
+    def admit_request(self, req_id: int, prompt_len: int) -> List[int]:
+        n = self.pages_per_req(max(prompt_len, 1))
+        if len(self.free) < n:
+            raise MemoryError("page pool exhausted")
+        pages = [self.free.pop() for _ in range(n)]
+        keys = np.array([page_key(req_id, i) for i in range(n)], dtype=np.int64)
+        vals = np.array(pages, dtype=np.int64)
+        self.tree, self.meta, ok = btree.batch_insert(self.tree, self.meta, keys, vals)
+        assert bool(np.all(ok))
+        self.seq_lens[req_id] = prompt_len
+        self.allocated[req_id] = n
+        return pages
+
+    def extend_request(self, req_id: int) -> Optional[int]:
+        """Grow the request by one token; allocates (and index-inserts) a new
+        page iff the new length spills past the allocated pages."""
+        cur = self.seq_lens[req_id]
+        self.seq_lens[req_id] = cur + 1
+        needed = self.pages_per_req(cur + 1)
+        if needed <= self.allocated[req_id]:
+            return None
+        if not self.free:
+            raise MemoryError("page pool exhausted")
+        page = self.free.pop()
+        idx = needed - 1
+        self.tree, self.meta, ok = btree.batch_insert(
+            self.tree, self.meta,
+            np.array([page_key(req_id, idx)], np.int64),
+            np.array([page], np.int64),
+        )
+        assert bool(np.all(ok))
+        self.allocated[req_id] = needed
+        return page
+
+    def release_request(self, req_id: int) -> int:
+        """Range-delete the request's keys; returns pages reclaimed."""
+        self.seq_lens.pop(req_id)
+        n = self.allocated.pop(req_id)
+        keys = np.array([page_key(req_id, i) for i in range(n)], dtype=np.int64)
+        found, vals = btree.bulk_lookup(self.tree, jnp.asarray(keys),
+                                        height=self.meta.height)
+        pages = np.asarray(vals)[np.asarray(found)]
+        self.tree, _ = btree.bulk_delete(self.tree, jnp.asarray(keys),
+                                         height=self.meta.height)
+        self.free.extend(int(p) for p in pages)
+        return len(pages)
+
+    # -- data plane (device): batched page-table resolution --------------------
+
+    def resolve_tables(self, req_ids: np.ndarray, pages_per_req: int) -> jax.Array:
+        """[B, ppr] page table via one batched DEX lookup."""
+        b = len(req_ids)
+        keys = (
+            (req_ids.astype(np.int64)[:, None] << PAGE_BITS)
+            | np.arange(pages_per_req, dtype=np.int64)[None, :]
+        ).reshape(-1)
+        found, vals = btree.bulk_lookup(
+            self.tree, jnp.asarray(keys), height=self.meta.height
+        )
+        self.lookups += keys.size
+        table = jnp.where(found, vals, 0).reshape(b, pages_per_req)
+        return table.astype(jnp.int32)
+
+    def batch_seq_lens(self, req_ids: np.ndarray) -> jax.Array:
+        return jnp.asarray([self.seq_lens[int(r)] for r in req_ids], jnp.int32)
+
+    # -- writes (append one token's KV for every layer) ------------------------
+
+    def append_tokens(self, req_ids: np.ndarray, k_new: jax.Array, v_new: jax.Array):
+        """k_new/v_new: [L, B, HKV, Dh] for the token at position seq_len-1
+        (callers bump seq_lens via extend_request first)."""
+        pos = np.array([self.seq_lens[int(r)] - 1 for r in req_ids])
+        page_idx = pos // self.page_size
+        offset = pos % self.page_size
+        keys = (
+            (req_ids.astype(np.int64) << PAGE_BITS) | page_idx.astype(np.int64)
+        )
+        found, vals = btree.bulk_lookup(
+            self.tree, jnp.asarray(keys), height=self.meta.height
+        )
+        assert bool(np.all(np.asarray(found))), "page table hole"
+        pages = np.asarray(vals).astype(np.int32)
+        # advanced-index scatter: [L, B, HKV, Dh] -> (layer, page_b, offset_b)
+        self.k_pages = self.k_pages.at[:, pages, offset].set(k_new)
+        self.v_pages = self.v_pages.at[:, pages, offset].set(v_new)
+        return pages

@@ -1,0 +1,124 @@
+"""Serving steps: dense prefill + paged decode (GQA families).
+
+``paged_decode_step`` is the data-plane consumer of the DEX page table: one
+new token per request, attention over the paged pool.  The attention math
+runs through kernels/paged_attention (interpret on CPU, native on TPU) or
+its jnp oracle; both read the page table resolved by the DEX index.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, *, enc_emb=None):
+    """Teacher-forced prefill that fills a dense cache token-free via the
+    training forward; used by examples to warm caches before decode."""
+    logits, _ = M.forward(cfg, params, tokens, enc_emb=enc_emb)
+    return logits
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def paged_decode_step(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jax.Array,       # [B, 1] current tokens
+    k_pages: jax.Array,      # [L, P, page, HKV, Dh]
+    v_pages: jax.Array,
+    page_table: jax.Array,   # [B, ppr] int32 (resolved by the DEX index)
+    seq_lens: jax.Array,     # [B] int32 (lengths INCLUDING current token)
+    *,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for GQA archs over the paged pool.
+
+    Returns (logits [B, V], k_new [L, B, HKV, Dh], v_new [L, B, HKV, Dh]);
+    the host control plane scatters k_new/v_new into the pool via
+    ``PagedKVCache.append_tokens`` (the token attends to itself here, so the
+    scatter may land after the step)."""
+    b = tokens.shape[0]
+    hkv, hd, h = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))   # [B, 1, D]
+    positions = seq_lens - 1                                   # [B]
+
+    def block(carry, inp):
+        x = carry
+        p, kp, vp = inp
+        xin = L.apply_norm(cfg, x, p["ln1"])
+        ap = p["attn"]
+        q = L._dot(xin, ap["wq"])
+        k = L._dot(xin, ap["wk"])
+        v = L._dot(xin, ap["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+        q = q.reshape(b, 1, h, hd)
+        k = k.reshape(b, 1, hkv, hd)
+        v = v.reshape(b, 1, hkv, hd)
+        if cfg.qk_norm:
+            q = L.rmsnorm(q, ap["q_norm"], cfg.norm_eps)
+            k = L.rmsnorm(k, ap["k_norm"], cfg.norm_eps)
+        cos, sin = L.rope_freqs(hd, cfg.rope_theta, positions[:, None])  # [B,1,hd/2]
+        q = L.apply_rope(q, cos[..., None, :], sin[..., None, :])
+        k = L.apply_rope(k, cos[..., None, :], sin[..., None, :])
+
+        # attend over pool pages + the fresh token (self-attention term)
+        if use_kernel:
+            o_hist = kops.paged_attention(
+                q[:, 0], kp, vp, page_table, positions
+            )
+        else:
+            o_hist = kref.paged_attention_ref(
+                q[:, 0], kp, vp, page_table, positions
+            )
+        # combine history softmax with the current token analytically:
+        # treat the fresh (k, v) as one extra key with its own logit.
+        scale = 1.0 / float(np.sqrt(hd))
+        qg = q[:, 0].reshape(b, hkv, h // hkv, hd).astype(F32) * scale
+        s_self = jnp.einsum("bngd,bnd->bng", qg, k[:, 0].astype(F32))
+        # history logsumexp is folded inside o_hist; recompute weights:
+        # w_hist = L_hist / (L_hist + exp(s_self)), with L_hist implied.
+        # For numerical simplicity recompute history logits' logsumexp:
+        ppr, page = page_table.shape[1], kp.shape[1]
+        kh = kp[page_table].reshape(b, ppr * page, hkv, hd)
+        sh = jnp.einsum("bngd,bsnd->bngs", qg, kh.astype(F32))
+        pos_ids = jnp.arange(ppr * page)[None]
+        sh = jnp.where((pos_ids < positions[:, None])[:, None, None, :], sh, -jnp.inf)
+        lse_hist = jax.nn.logsumexp(sh, axis=-1)                  # [B,n,g]
+        denom = jnp.exp(lse_hist) + jnp.exp(s_self)
+        w_hist = jnp.where(positions[:, None, None] > 0,
+                           jnp.exp(lse_hist) / denom, 0.0)
+        w_self = jnp.where(positions[:, None, None] > 0,
+                           jnp.exp(s_self) / denom, 1.0)
+        # positions == 0 means empty history: the softmax over -inf logits is
+        # NaN there; it gets weight 0, so sanitize before the blend
+        o_hist_g = jnp.nan_to_num(
+            o_hist.reshape(b, hkv, h // hkv, hd).astype(F32)
+        )
+        v_self = v[:, 0].astype(F32)[:, :, None, :]               # [B,n,1,d]
+        o = o_hist_g * w_hist[..., None] + v_self * w_self[..., None]
+        o = o.reshape(b, 1, h * hd).astype(x.dtype)
+        x = x + L._dot(o, ap["wo"])
+        if cfg.moe:
+            hmlp, _ = L.moe_block(cfg, p["moe"], L.apply_norm(cfg, x, p["ln2"]))
+        else:
+            hmlp = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, x, p["ln2"]))
+        return x + hmlp, (k[:, 0], v[:, 0])
+
+    x, (k_new, v_new) = jax.lax.scan(block, x, (params["blocks"], k_pages, v_pages))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x[:, 0], head, preferred_element_type=F32)
+    return logits, k_new, v_new

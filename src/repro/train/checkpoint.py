@@ -1,0 +1,168 @@
+"""Fault-tolerant checkpointing: atomic, keep-K, shard-aware, elastic.
+
+Layout (one directory per step)::
+
+    <root>/step_000123/
+        manifest.json        # tree structure, dtypes, shapes, data-state
+        arrays/<leaf-id>.npy # one file per pytree leaf
+
+Writes go to ``step_XXX.tmp`` and are atomically renamed, so a killed writer
+never leaves a half checkpoint (restore scans only committed directories).
+``restore(..., mesh=...)`` re-places every leaf with the target mesh's
+shardings — this is the *elastic reshard* path: a checkpoint taken on N
+chips restores onto any other mesh (launch/elastic.py), the same way DEX's
+logical repartitioning moves ownership without moving the index (§4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten_with_paths(tree[k], f"{prefix}/{k}"))
+        return out
+    if isinstance(tree, (tuple, list)) and not hasattr(tree, "_fields"):
+        out = []
+        for i, v in enumerate(tree):
+            out.extend(_flatten_with_paths(v, f"{prefix}/{i}"))
+        return out
+    if hasattr(tree, "_fields"):  # NamedTuple
+        out = []
+        for name in tree._fields:
+            out.extend(_flatten_with_paths(getattr(tree, name), f"{prefix}/{name}"))
+        return out
+    return [(prefix, tree)]
+
+
+def _unflatten_like(template: Any, values: Dict[str, Any], prefix: str = ""):
+    if isinstance(template, dict):
+        return {
+            k: _unflatten_like(v, values, f"{prefix}/{k}")
+            for k, v in template.items()
+        }
+    if hasattr(template, "_fields"):
+        return type(template)(
+            *[
+                _unflatten_like(getattr(template, n), values, f"{prefix}/{n}")
+                for n in template._fields
+            ]
+        )
+    if isinstance(template, (tuple, list)):
+        vals = [
+            _unflatten_like(v, values, f"{prefix}/{i}")
+            for i, v in enumerate(template)
+        ]
+        return type(template)(vals) if isinstance(template, list) else tuple(vals)
+    return values[prefix]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- write -----------------------------------------------------------------
+
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None) -> str:
+        """Atomic save.  ``state`` is any pytree of arrays; ``extra`` is a
+        JSON-serializable dict (e.g. data-pipeline position)."""
+        final = os.path.join(self.root, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(os.path.join(tmp, "arrays"))
+        leaves = _flatten_with_paths(state)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fname = f"{i:06d}.npy"
+            true_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or true_dtype == "bfloat16":
+                # numpy can't serialize ml_dtypes (bf16 etc.) natively:
+                # store the raw bits, record the logical dtype
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+            np.save(os.path.join(tmp, "arrays", fname), arr, allow_pickle=False)
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "dtype": true_dtype,
+                 "shape": list(arr.shape)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):  # re-save of the same step (e.g. final save
+            shutil.rmtree(final)  # landing on a ckpt_every boundary)
+        os.replace(tmp, final)  # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ------------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: Any,
+        *,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> Tuple[Any, int, Dict]:
+        """Restore into ``template``'s structure.  When ``shardings`` is
+        given (pytree of NamedShardings matching template), every leaf is
+        device_put with the *target* sharding — elastic reshard onto any
+        mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        values = {}
+        for leaf in manifest["leaves"]:
+            arr = np.load(
+                os.path.join(d, "arrays", leaf["file"]), allow_pickle=False
+            )
+            want = leaf["dtype"]
+            if str(arr.dtype) != want:
+                import ml_dtypes  # jax dependency; provides bf16 et al.
+
+                arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+            values[leaf["path"]] = arr
+        state = _unflatten_like(template, values)
+        if shardings is not None:
+            sh_leaves = dict(_flatten_with_paths(shardings))
+            state = _unflatten_like(
+                template,
+                {
+                    p: jax.device_put(v, sh_leaves[p])
+                    for p, v in _flatten_with_paths(state)
+                },
+            )
+        return state, step, manifest["extra"]

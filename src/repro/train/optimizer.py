@@ -1,0 +1,139 @@
+"""AdamW with sharded state, global-norm clipping, cosine schedule, and an
+int8 error-feedback gradient compressor for cross-pod reductions.
+
+State dtype is configurable: bf16 moments make llama3-405b fit 512 chips
+(DESIGN.md §5) at a documented optimizer-quality cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "bfloat16"   # bf16 moments: ZeRO-3 fit for 405B
+
+
+class OptState(NamedTuple):
+    mu: Any        # first moment (pytree, moment_dtype)
+    nu: Any        # second moment (pytree, moment_dtype)
+    step: jax.Array
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(F32) / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step.astype(F32) - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(np.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    cfg: OptConfig, params: Any, grads: Any, state: OptState
+) -> Tuple[Any, OptState, dict]:
+    """One AdamW step.  Returns (params', state', metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd_one(p, g, m, v):
+        g = g.astype(F32) * scale
+        m_new = b1 * m.astype(F32) + (1 - b1) * g
+        v_new = b2 * v.astype(F32) + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        p_new = p.astype(F32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+    def upd(p, g, m, v):
+        # stacked [L, ...] leaves update one layer-slice at a time: the f32
+        # staging tensors of a monolithic update were ~2 GB per leaf per chip
+        # at 405B scale
+        if p.ndim >= 3 and p.shape[0] > 1:
+            return jax.lax.map(lambda a: upd_one(*a), (p, g, m, v))
+        return upd_one(p, g, m, v)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        OptState(mu=new_mu, nu=new_nu, step=step),
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod all-reduce trick)
+# ---------------------------------------------------------------------------
+
+
+def compress_int8(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize g+err to int8 with a per-tensor scale.  Returns
+    (q int8, scale f32, new_err).  The residual (error feedback) is carried
+    so quantization noise cancels over steps instead of biasing training."""
+    gf = g.astype(F32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(F32) * scale
+    return q, scale, gf - deq
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """Error-feedback int8 all-reduce over ``axis_name`` (use inside
+    shard_map for the cross-pod gradient reduction; 4x fewer bytes on the
+    slowest links).  Returns (g_reduced f32, new_err)."""
+    q, scale, new_err = compress_int8(g, err)
+    # sum int8 payloads in int32 to avoid overflow across the axis
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    # scales differ per participant: reduce them too (max keeps dequant safe)
+    scale_sum = jax.lax.pmax(scale, axis_name)
+    return summed.astype(F32) * scale_sum, new_err

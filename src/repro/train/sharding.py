@@ -1,0 +1,176 @@
+"""Parameter/activation sharding rules (GSPMD specs).
+
+Strategy (DESIGN.md §5):
+  * TP over the ``model`` axis: attention heads / ffn width / experts /
+    vocab dims.
+  * ZeRO-3/FSDP over the ``data`` axes (and ``pod`` when present): the other
+    large dim of every stacked weight.  With scan-over-layers, GSPMD
+    all-gathers one layer's weights per scan step — exactly FSDP semantics.
+  * Norm scales and other small vectors are replicated.
+
+Rules are generic (shape-driven) with name overrides for orientation, so new
+architectures inherit sensible shardings without per-arch tables.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for_param(
+    path: str, shape: Tuple[int, ...], mesh: Mesh, cfg: ArchConfig
+) -> P:
+    """Sharding spec for one parameter leaf."""
+    data = _data_axes(mesh)
+    n_data = _axis_size(mesh, data)
+    n_model = mesh.shape["model"]
+
+    is_stacked = len(shape) >= 2 and shape[0] in (cfg.n_layers, cfg.enc_layers)
+    dims = list(shape)
+    start = 1 if is_stacked else 0
+    spec = [None] * len(shape)
+
+    # name-specific orientation: "row parallel" weights put model on dim -2
+    row_parallel = any(s in path for s in ("wo", "out_proj", "dt_proj"))
+    # embedding: shard d_model (a vocab-sharded table makes every token
+    # gather an all-gather of the whole table under GSPMD — measured 4GB+
+    # of temps per chip at 128k vocab).  head: vocab col-parallel.
+    if path.endswith("embed"):
+        return P(None, "model") if shape[1] % n_model == 0 else P(None, None)
+    if path.endswith("lm_head"):
+        return P(None, "model") if shape[1] % n_model == 0 else P(None, None)
+    if "router" in path:
+        return P(None, *([None] * (len(shape) - 1)))
+    if "moe" in path and len(shape) == 4:
+        # [L, E, d_in, d_out].  Many experts: shard the expert axis (EP).
+        # Few wide experts (E < model axis, e.g. grok's 8x32768): TP inside
+        # the expert FFN instead — col-parallel wi, row-parallel wo —
+        # otherwise every chip all-gathers multi-GB expert weights per layer.
+        s = [None, None, None, None]
+        if shape[1] % n_model == 0:
+            s[1] = "model"
+            if n_data > 1 and shape[2] % n_data == 0:
+                s[2] = data
+        elif row_parallel:  # wo: [L, E, ffe, d]
+            if shape[2] % n_model == 0:
+                s[2] = "model"
+            if n_data > 1 and shape[3] % n_data == 0:
+                s[3] = data
+        else:               # wi: [L, E, d, ffx]
+            if shape[3] % n_model == 0:
+                s[3] = "model"
+            if n_data > 1 and shape[2] % n_data == 0:
+                s[2] = data
+        return P(*s)
+
+    big = [i for i in range(start, len(shape)) if dims[i] > 1]
+    if len(big) >= 2:
+        a, b = big[-2], big[-1]
+        if row_parallel:
+            model_dim, data_dim = a, b
+        else:
+            model_dim, data_dim = b, a
+        if dims[model_dim] % n_model == 0:
+            spec[model_dim] = "model"
+        if n_data > 1 and dims[data_dim] % n_data == 0:
+            spec[data_dim] = data
+        return P(*spec)
+    if len(big) == 1 and dims[big[0]] % n_model == 0 and dims[big[0]] >= 1024:
+        spec[big[0]] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, cfg: ArchConfig):
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs)."""
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        spec = spec_for_param(prefix, tuple(tree.shape), mesh, cfg)
+        return NamedSharding(mesh, spec)
+
+    return walk(params_shape, "")
+
+
+def batch_shardings(mesh: Mesh, *, encdec: bool = False):
+    data = _data_axes(mesh)
+    b = {
+        "tokens": NamedSharding(mesh, P(data, None)),
+        "labels": NamedSharding(mesh, P(data, None)),
+    }
+    if encdec:
+        b["enc_emb"] = NamedSharding(mesh, P(data, None, "model"))
+    return b
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, *, batch: Optional[int] = None):
+    """Decode-cache specs: batch over data; heads (or state) over model;
+    S always unsharded (see the in-place append note below).  ``batch=1``
+    (long-context single-request decode) drops the data axis from the batch
+    dim — the sequence dim takes it instead where one exists."""
+    data = _data_axes(mesh)
+    n_model = mesh.shape["model"]
+    n_data = _axis_size(mesh, data)
+    if batch is not None and batch % n_data != 0:
+        data = None
+    out: Dict[str, NamedSharding] = {}
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    if cfg.ssm or cfg.hybrid_attn_every:
+        out["ssm"] = ns(P(None, data, "model", None))
+        out["conv"] = ns(P(None, data, None, "model"))
+        if cfg.hybrid_attn_every:
+            # [G, B, S, HKV, Dh]
+            if cfg.n_kv_heads % n_model == 0:
+                out["shared_k"] = ns(P(None, data, None, "model", None))
+            else:
+                out["shared_k"] = ns(P(None, data, "model", None, None))
+            out["shared_v"] = out["shared_k"]
+        return out
+    if cfg.attention == "mla":
+        # [L, B, S, kvlr] / [L, B, S, ropeD]: decode appends along S with a
+        # dynamic slice, so S must stay unsharded — shard the feature dim.
+        out["c_kv"] = ns(
+            P(None, data, None, "model" if cfg.kv_lora_rank % n_model == 0 else None)
+        )
+        out["k_rope"] = ns(
+            P(None, data, None, "model" if cfg.qk_rope_dim % n_model == 0 else None)
+        )
+        return out
+    # [L, B, S, HKV, Dh]: NEVER shard S (decode's dynamic_update_slice at a
+    # runtime position would force a per-step all-gather of the cache);
+    # shard kv heads when divisible, else head_dim.
+    if cfg.n_kv_heads % n_model == 0:
+        kv = ns(P(None, data, None, "model", None))
+    elif cfg.head_dim % n_model == 0:
+        kv = ns(P(None, data, None, None, "model"))
+    else:
+        kv = ns(P(None, data, None, None, None))
+    out["k"] = kv
+    out["v"] = kv
+    if cfg.encdec:
+        out["xk"] = kv
+        out["xv"] = kv
+    return out

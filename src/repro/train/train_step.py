@@ -1,0 +1,100 @@
+"""Training step: loss + grad (+ microbatch accumulation) + AdamW, built for
+pjit/GSPMD execution on the production mesh.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches so activation
+memory is one microbatch deep while arithmetic matches the global batch.
+Buffers are donated (params/opt state update in place).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.train.optimizer import OptConfig, OptState, adamw_update
+
+F32 = jnp.float32
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    act_spec=None,
+):
+    """Returns ``train_step(params, opt_state, batch) ->
+    (params', opt_state', metrics)`` ready for jax.jit with shardings."""
+
+    def grads_of(params, batch):
+        def loss(p):
+            total, metrics = M.loss_fn(cfg, p, batch, act_spec=act_spec)
+            return total, metrics
+
+        (val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        return val, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            val, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                val, _, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(F32), g_acc, grads)
+                return (g_acc, l_acc + val), ()
+
+            (g_acc, l_sum), _ = jax.lax.scan(acc_fn, (zero, jnp.zeros((), F32)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, g_acc)
+            val = l_sum / microbatches
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        out_metrics = {"loss": val, **opt_metrics}
+        if metrics:
+            out_metrics.update({k: v for k, v in metrics.items() if v.ndim == 0})
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def jit_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    mesh,
+    params_shapes,
+    *,
+    microbatches: int = 1,
+):
+    """jit the step with explicit in/out shardings for the mesh."""
+    from repro.train.sharding import batch_shardings, param_shardings
+
+    p_sh = param_shardings(params_shapes, mesh, cfg)
+    o_sh = OptState(
+        mu=p_sh, nu=p_sh,
+        step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    )
+    b_sh = batch_shardings(mesh, encdec=cfg.encdec)
+    step = make_train_step(cfg, opt_cfg, microbatches=microbatches)
+    metric_sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )

@@ -1,0 +1,73 @@
+"""Multi-device exercise of the Plane-B mesh DEX.  Run as a subprocess by
+tests/test_dex_mesh.py so the main pytest session keeps a single device."""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+
+
+def main() -> None:
+    mesh = jax.make_mesh(
+        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    rng = np.random.default_rng(0)
+    keys = np.sort(
+        rng.choice(1_000_000, size=20_000, replace=False).astype(np.int64) + 1
+    )
+    vals = keys * 7
+    pool, meta = pool_mod.build_pool(keys, vals, level_m=1, fill=0.7, n_shards=4)
+
+    bounds = np.array([KEY_MIN, 500_000, KEY_MAX], dtype=np.int64)
+    B = 512
+    qk = rng.choice(keys, size=B).astype(np.int64)
+    qk[::13] = qk[::13] + 1  # inject misses
+    expect = np.isin(qk, keys)
+
+    for policy in ("fetch", "offload", "auto"):
+        cfg = dex_mod.DexMeshConfig(
+            route_axes=("data",),
+            memory_axis="model",
+            n_route=2,
+            n_memory=4,
+            cache_sets=64,
+            cache_ways=4,
+            policy=policy,
+            route_capacity_factor=4.0,
+        )
+        state = dex_mod.init_state(pool, meta, cfg, bounds)
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, dex_mod.state_shardings(mesh, cfg)
+        )
+        qk_dev = jax.device_put(
+            jnp.asarray(qk), NamedSharding(mesh, P(("data", "model")))
+        )
+        lk = jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh))
+        s2, found, values = lk(state, qk_dev)
+        found, values = np.asarray(found), np.asarray(values)
+        assert (found == expect).all(), f"{policy}: found mismatch"
+        assert (values[expect] == qk[expect] * 7).all(), f"{policy}: value mismatch"
+        assert int(np.asarray(s2.stats)[:, dex_mod.STAT_DROPS].sum()) == 0
+        if policy == "fetch":
+            # second batch must produce cache hits
+            s3, f3, _ = lk(s2, qk_dev)
+            hits = int(np.asarray(s3.stats)[:, dex_mod.STAT_HITS].sum())
+            assert hits > 0, "no cache hits on repeat batch"
+            assert (np.asarray(f3) == expect).all()
+        if policy == "offload":
+            offs = int(np.asarray(s2.stats)[:, dex_mod.STAT_OFFLOADS].sum())
+            assert offs == B, f"expected {B} offloads, got {offs}"
+    print("MESH_CHECK_OK")
+
+
+if __name__ == "__main__":
+    main()

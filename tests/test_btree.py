@@ -1,0 +1,283 @@
+"""Unit + property tests for the flat array B+-tree (core/btree.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import btree
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, TreeMeta
+
+
+def make_keys(n, seed=0, lo=0, hi=None):
+    rng = np.random.default_rng(seed)
+    hi = hi if hi is not None else max(4 * n, 1024)
+    keys = rng.choice(np.arange(lo + 1, lo + hi, dtype=np.int64), size=n, replace=False)
+    return np.sort(keys)
+
+
+class TestBulkBuild:
+    def test_single_leaf(self):
+        keys = np.arange(1, 10, dtype=np.int64)
+        tree, meta = btree.bulk_build(keys)
+        assert meta.height == 1
+        btree.validate(tree, meta)
+        k, v = btree.tree_items(tree)
+        np.testing.assert_array_equal(k, keys)
+        np.testing.assert_array_equal(v, keys)
+
+    @pytest.mark.parametrize("n", [1, 7, 44, 45, 1000, 20_000])
+    def test_sizes(self, n):
+        keys = make_keys(n, seed=n)
+        tree, meta = btree.bulk_build(keys, values=keys * 3)
+        btree.validate(tree, meta)
+        k, v = btree.tree_items(tree)
+        np.testing.assert_array_equal(k, keys)
+        np.testing.assert_array_equal(v, keys * 3)
+
+    def test_rejects_unsorted(self):
+        with pytest.raises(ValueError):
+            btree.bulk_build(np.array([3, 1, 2], dtype=np.int64))
+
+    def test_rejects_dupes(self):
+        with pytest.raises(ValueError):
+            btree.bulk_build(np.array([1, 1, 2], dtype=np.int64))
+
+    @pytest.mark.parametrize("fill", [0.5, 0.7, 1.0])
+    def test_fill_factors(self, fill):
+        keys = make_keys(500, seed=2)
+        tree, meta = btree.bulk_build(keys, fill=fill)
+        btree.validate(tree, meta)
+        assert meta.keys_per_leaf == max(2, int(FANOUT * fill))
+
+
+class TestLookup:
+    def test_hits_and_misses(self):
+        keys = make_keys(5000, seed=1)
+        tree, meta = btree.bulk_build(keys, values=keys + 7)
+        probe_hit = keys[::17]
+        found, vals = btree.bulk_lookup(tree, probe_hit, height=meta.height)
+        assert bool(np.all(found))
+        np.testing.assert_array_equal(np.asarray(vals), probe_hit + 7)
+
+        all_set = set(keys.tolist())
+        miss = np.array(
+            [k for k in range(1, 40000, 997) if k not in all_set], dtype=np.int64
+        )
+        found, _ = btree.bulk_lookup(tree, miss, height=meta.height)
+        assert not bool(np.any(found))
+
+    def test_path_shape(self):
+        keys = make_keys(5000, seed=3)
+        tree, meta = btree.bulk_build(keys)
+        q = keys[:32]
+        found, vals, path = btree.bulk_lookup(
+            tree, q, height=meta.height, with_path=True
+        )
+        assert path.shape == (32, meta.height)
+        # first column is the root for every query
+        assert bool(np.all(np.asarray(path[:, 0]) == int(tree.root)))
+        # last column is a leaf
+        lv = np.asarray(tree.level)
+        assert bool(np.all(lv[np.asarray(path[:, -1])] == 0))
+
+
+class TestUpdate:
+    def test_update_existing(self):
+        keys = make_keys(3000, seed=4)
+        tree, meta = btree.bulk_build(keys, values=keys)
+        q = keys[100:200]
+        tree, ok = btree.bulk_update(tree, q, q * 10, height=meta.height)
+        assert bool(np.all(ok))
+        _, vals = btree.bulk_lookup(tree, q, height=meta.height)
+        np.testing.assert_array_equal(np.asarray(vals), q * 10)
+        # untouched keys unchanged
+        other = keys[500:550]
+        _, vals = btree.bulk_lookup(tree, other, height=meta.height)
+        np.testing.assert_array_equal(np.asarray(vals), other)
+
+    def test_update_missing_is_noop(self):
+        keys = make_keys(100, seed=5, hi=10_000)
+        tree, meta = btree.bulk_build(keys, values=keys)
+        missing = np.setdiff1d(
+            np.arange(1, 200, dtype=np.int64), keys
+        )[:16]
+        tree, ok = btree.bulk_update(tree, missing, missing * 2, height=meta.height)
+        assert not bool(np.any(ok))
+        k, v = btree.tree_items(tree)
+        np.testing.assert_array_equal(k, keys)
+        np.testing.assert_array_equal(v, keys)
+
+
+class TestInsert:
+    def test_fast_path_no_overflow(self):
+        keys = make_keys(2000, seed=6, hi=100_000)
+        tree, meta = btree.bulk_build(keys)
+        new = np.setdiff1d(make_keys(300, seed=7, hi=100_000), keys)
+        tree, meta, ok = btree.batch_insert(tree, meta, new, new * 2)
+        assert bool(np.all(ok))
+        found, vals = btree.bulk_lookup(tree, new, height=meta.height)
+        assert bool(np.all(found))
+        np.testing.assert_array_equal(np.asarray(vals), new * 2)
+        # old keys intact
+        found, _ = btree.bulk_lookup(tree, keys, height=meta.height)
+        assert bool(np.all(found))
+
+    def test_insert_triggers_split(self):
+        # full-fill build so any insert overflows a leaf
+        keys = np.arange(1, 2001, dtype=np.int64) * 10
+        tree, meta = btree.bulk_build(keys, fill=1.0)
+        new = keys[:256] + 1  # interleave
+        tree, meta, ok = btree.batch_insert(tree, meta, new, new)
+        assert bool(np.all(ok))
+        btree.validate(tree, meta)
+        found, _ = btree.bulk_lookup(tree, np.concatenate([keys, new]), height=meta.height)
+        assert bool(np.all(found))
+
+    def test_insert_duplicate_updates_value(self):
+        keys = make_keys(500, seed=8)
+        tree, meta = btree.bulk_build(keys, values=keys)
+        dup = keys[10:20]
+        tree, meta, ok = btree.batch_insert(tree, meta, dup, dup * 5)
+        assert bool(np.all(ok))
+        _, vals = btree.bulk_lookup(tree, dup, height=meta.height)
+        np.testing.assert_array_equal(np.asarray(vals), dup * 5)
+        k, _ = btree.tree_items(tree)
+        assert k.size == keys.size  # no new keys
+
+
+class TestDelete:
+    def test_delete_some(self):
+        keys = make_keys(3000, seed=9)
+        tree, meta = btree.bulk_build(keys, values=keys)
+        gone = keys[::13]
+        tree, ok = btree.bulk_delete(tree, gone, height=meta.height)
+        assert bool(np.all(ok))
+        found, _ = btree.bulk_lookup(tree, gone, height=meta.height)
+        assert not bool(np.any(found))
+        remain = np.setdiff1d(keys, gone)
+        found, vals = btree.bulk_lookup(tree, remain, height=meta.height)
+        assert bool(np.all(found))
+        np.testing.assert_array_equal(np.asarray(vals), remain)
+
+    def test_delete_missing(self):
+        keys = make_keys(200, seed=10, hi=5000)
+        tree, meta = btree.bulk_build(keys)
+        missing = np.setdiff1d(np.arange(1, 400, dtype=np.int64), keys)[:8]
+        tree, ok = btree.bulk_delete(tree, missing, height=meta.height)
+        assert not bool(np.any(ok))
+        k, _ = btree.tree_items(tree)
+        np.testing.assert_array_equal(k, keys)
+
+    def test_delete_same_leaf_multiple(self):
+        keys = np.arange(1, 100, dtype=np.int64)
+        tree, meta = btree.bulk_build(keys)
+        gone = np.array([5, 6, 7, 8, 9], dtype=np.int64)  # same leaf
+        tree, ok = btree.bulk_delete(tree, gone, height=meta.height)
+        assert bool(np.all(ok))
+        k, _ = btree.tree_items(tree)
+        np.testing.assert_array_equal(k, np.setdiff1d(keys, gone))
+
+
+class TestScan:
+    def test_scan_100(self):
+        keys = make_keys(5000, seed=11)
+        tree, meta = btree.bulk_build(keys, values=keys * 2)
+        starts = keys[[0, 100, 2345, 4990]]
+        out_k, out_v = btree.bulk_scan(tree, starts, height=meta.height, count=100)
+        for i, s in enumerate(starts):
+            expect = keys[keys >= s][:100]
+            got = np.asarray(out_k[i])
+            got = got[got != KEY_MAX]
+            np.testing.assert_array_equal(got, expect)
+            gv = np.asarray(out_v[i])[: got.size]
+            np.testing.assert_array_equal(gv, expect * 2)
+
+    def test_scan_from_nonexistent_start(self):
+        keys = (np.arange(1, 1001, dtype=np.int64)) * 10
+        tree, meta = btree.bulk_build(keys)
+        starts = np.array([15, 995], dtype=np.int64)  # between keys
+        out_k, _ = btree.bulk_scan(tree, starts, height=meta.height, count=10)
+        got = np.asarray(out_k[0])
+        np.testing.assert_array_equal(got[got != KEY_MAX], keys[keys >= 15][:10])
+
+    def test_scan_past_end(self):
+        keys = make_keys(100, seed=12)
+        tree, meta = btree.bulk_build(keys)
+        starts = keys[-3:]
+        out_k, _ = btree.bulk_scan(tree, starts, height=meta.height, count=50)
+        got = np.asarray(out_k[-1])
+        np.testing.assert_array_equal(got[got != KEY_MAX], keys[keys >= starts[-1]])
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests
+# ---------------------------------------------------------------------------
+
+key_sets = st.sets(
+    st.integers(min_value=1, max_value=2**40), min_size=2, max_size=400
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ks=key_sets)
+def test_prop_build_lookup_roundtrip(ks):
+    keys = np.array(sorted(ks), dtype=np.int64)
+    tree, meta = btree.bulk_build(keys, values=keys ^ 0xABCD)
+    btree.validate(tree, meta)
+    found, vals = btree.bulk_lookup(tree, keys, height=meta.height)
+    assert bool(np.all(found))
+    np.testing.assert_array_equal(np.asarray(vals), keys ^ 0xABCD)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ks=key_sets,
+    ins=st.sets(st.integers(min_value=1, max_value=2**40), min_size=1, max_size=100),
+)
+def test_prop_insert_then_all_present(ks, ins):
+    keys = np.array(sorted(ks), dtype=np.int64)
+    tree, meta = btree.bulk_build(keys, values=keys)
+    new = np.array(sorted(ins), dtype=np.int64)
+    tree, meta, _ = btree.batch_insert(tree, meta, new, new + 1)
+    union = np.union1d(keys, new)
+    found, _ = btree.bulk_lookup(tree, union, height=meta.height)
+    assert bool(np.all(found))
+    # model check: values match a dict model
+    model = {int(k): int(k) for k in keys}
+    model.update({int(k): int(k) + 1 for k in new})
+    k, v = btree.tree_items(tree)
+    assert {int(a): int(b) for a, b in zip(k, v)} == model
+
+
+@settings(max_examples=25, deadline=None)
+@given(ks=key_sets, data=st.data())
+def test_prop_delete_subset(ks, data):
+    keys = np.array(sorted(ks), dtype=np.int64)
+    tree, meta = btree.bulk_build(keys, values=keys)
+    n_del = data.draw(st.integers(min_value=1, max_value=len(keys)))
+    idx = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=len(keys) - 1),
+            min_size=n_del,
+            max_size=n_del,
+            unique=True,
+        )
+    )
+    gone = keys[np.array(idx)]
+    tree, ok = btree.bulk_delete(tree, gone, height=meta.height)
+    assert bool(np.all(ok))
+    k, _ = btree.tree_items(tree)
+    np.testing.assert_array_equal(k, np.setdiff1d(keys, gone))
+
+
+@settings(max_examples=20, deadline=None)
+@given(ks=key_sets, start=st.integers(min_value=0, max_value=2**40), n=st.integers(1, 64))
+def test_prop_scan_matches_sorted_slice(ks, start, n):
+    keys = np.array(sorted(ks), dtype=np.int64)
+    tree, meta = btree.bulk_build(keys, values=keys)
+    out_k, _ = btree.bulk_scan(
+        tree, np.array([start], dtype=np.int64), height=meta.height, count=n
+    )
+    got = np.asarray(out_k[0])
+    got = got[got != KEY_MAX]
+    np.testing.assert_array_equal(got, keys[keys >= start][:n])

@@ -1,0 +1,198 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py
+oracles (kernels run in interpret mode on CPU)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool as pool_mod
+from repro.core.nodes import FANOUT, KEY_MAX
+from repro.kernels import ops, ref
+
+
+def _keys(n, seed=0, hi=None):
+    rng = np.random.default_rng(seed)
+    hi = hi or 8 * n
+    return np.sort(rng.choice(hi, size=n, replace=False).astype(np.int64) + 1)
+
+
+# ---------------------------------------------------------------------------
+# node_search
+# ---------------------------------------------------------------------------
+
+
+class TestNodeSearch:
+    @pytest.mark.parametrize("b", [1, 17, 256, 300])
+    def test_matches_ref(self, b):
+        rng = np.random.default_rng(b)
+        rows = np.sort(
+            rng.integers(1, 2**62, size=(b, FANOUT), dtype=np.int64), axis=1
+        )
+        vals = rng.integers(0, 2**62, size=(b, FANOUT), dtype=np.int64)
+        # half the queries hit exactly, half fall between keys
+        q = rows[np.arange(b), rng.integers(0, FANOUT, size=b)].copy()
+        q[::2] = q[::2] + 1
+        slot, found, value = ops.node_search(rows, q, vals)
+        rslot, rfound, rvalue = ref.node_search_ref(rows, q, vals)
+        np.testing.assert_array_equal(np.asarray(slot), np.asarray(rslot))
+        np.testing.assert_array_equal(np.asarray(found), np.asarray(rfound))
+        np.testing.assert_array_equal(np.asarray(value), np.asarray(rvalue))
+
+    def test_extreme_keys(self):
+        # keys spanning the full signed 64-bit range, incl. negatives
+        rows = np.sort(
+            np.array([[-(2**62), -5, 0, 3, 2**62] + [2**63 - 2] * (FANOUT - 5)]),
+            axis=1,
+        ).astype(np.int64)
+        vals = np.arange(FANOUT, dtype=np.int64)[None] * 7
+        for q in [-(2**62), -5, -4, 0, 3, 2**62, 2**62 + 9]:
+            qa = np.array([q], dtype=np.int64)
+            s, f, v = ops.node_search(rows, qa, vals)
+            rs, rf, rv = ref.node_search_ref(rows, qa, vals)
+            assert int(s[0]) == int(rs[0]), q
+            assert bool(f[0]) == bool(rf[0]), q
+            assert int(v[0]) == int(rv[0]), q
+
+
+# ---------------------------------------------------------------------------
+# subtree_walk
+# ---------------------------------------------------------------------------
+
+
+class TestSubtreeWalk:
+    @pytest.mark.parametrize("level_m,n", [(1, 2000), (2, 20_000)])
+    def test_matches_ref_per_subtree(self, level_m, n):
+        keys = _keys(n, seed=level_m)
+        pool, meta = pool_mod.build_pool(keys, keys * 5, level_m=level_m)
+        rng = np.random.default_rng(3)
+        q = rng.choice(keys, size=256).astype(np.int64)
+        q[::3] += 1  # misses
+        st = np.asarray(pool_mod.top_walk(pool, meta, jnp.asarray(q)))
+        s0 = int(st[0])
+        qs = q[st == s0]
+        f_k, v_k = ops.subtree_walk(
+            pool.pool_keys[s0],
+            pool.pool_children[s0],
+            pool.pool_values[s0],
+            qs,
+            levels=meta.levels_in_subtree,
+        )
+        f_r, v_r = ref.subtree_walk_ref(
+            pool.pool_keys[s0],
+            pool.pool_children[s0],
+            pool.pool_values[s0],
+            qs,
+            levels=meta.levels_in_subtree,
+        )
+        np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+        np.testing.assert_array_equal(
+            np.asarray(v_k)[np.asarray(f_r)], np.asarray(v_r)[np.asarray(f_r)]
+        )
+
+    def test_small_batch_padding(self):
+        keys = _keys(500, seed=9)
+        pool, meta = pool_mod.build_pool(keys, keys, level_m=1)
+        q = keys[:5]
+        f, v = ops.subtree_walk(
+            pool.pool_keys[0], pool.pool_children[0], pool.pool_values[0],
+            q, levels=meta.levels_in_subtree,
+        )
+        st = np.asarray(pool_mod.top_walk(pool, meta, jnp.asarray(q)))
+        mask = st == 0
+        assert bool(np.all(np.asarray(f)[mask]))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,h,hkv,s,d",
+        [(1, 4, 4, 128, 64), (2, 8, 2, 256, 64), (1, 4, 1, 128, 128)],
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, b, h, hkv, s, d, dtype):
+        rng = np.random.default_rng(42)
+        q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+        k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+        v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+        out = ops.flash_attention(q, k, v, causal=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+    def test_non_causal(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=False)
+        expect = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5
+        )
+
+    def test_cross_lengths_causal_offset(self):
+        """Decode-style: Sq < Sk with causal alignment at the end."""
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 2, 384, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 2, 384, 64)), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("b,h,hkv,d,page,ppr", [(2, 8, 2, 64, 16, 4),
+                                                    (1, 4, 4, 128, 32, 2)])
+    def test_matches_ref(self, b, h, hkv, d, page, ppr):
+        rng = np.random.default_rng(5)
+        n_pages = b * ppr + 3
+        q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((n_pages, page, hkv, d)), jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((n_pages, page, hkv, d)), jnp.float32)
+        table = rng.permutation(n_pages)[: b * ppr].reshape(b, ppr).astype(np.int32)
+        seq_lens = rng.integers(1, ppr * page + 1, size=b).astype(np.int32)
+        out = ops.paged_attention(q, kp, vp, jnp.asarray(table), jnp.asarray(seq_lens))
+        expect = ref.paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                                         jnp.asarray(seq_lens))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=3e-5, rtol=3e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan
+# ---------------------------------------------------------------------------
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("b,l,d,n", [(1, 32, 128, 16), (2, 64, 256, 16)])
+    def test_matches_ref(self, b, l, d, n):
+        rng = np.random.default_rng(11)
+        delta = jnp.asarray(np.abs(rng.standard_normal((b, l, d))) * 0.1 + 0.01,
+                            jnp.float32)
+        A = jnp.asarray(-np.abs(rng.standard_normal((d, n))) - 0.1, jnp.float32)
+        Bm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((b, l, d)), jnp.float32)
+        out = ops.mamba_scan(delta, A, Bm, C, x)
+        expect = ref.mamba_scan_ref(delta, A, Bm, C, x)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4
+        )

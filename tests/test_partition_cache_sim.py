@@ -1,0 +1,326 @@
+"""Tests for logical partitioning, the compute-side cache, and the
+event-level simulator (Plane A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines
+from repro.core.cache import BUCKET_SLOTS, ComputeCache, CoolingMap
+from repro.core.cost_model import analyze
+from repro.core.nodes import KEY_MAX, KEY_MIN
+from repro.core.partition import LogicalPartitions
+from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.data import ycsb
+
+
+# ---------------------------------------------------------------------------
+# LogicalPartitions
+# ---------------------------------------------------------------------------
+
+
+class TestPartitions:
+    def test_equal_width_owners(self):
+        p = LogicalPartitions.equal_width(4, 0, 1000)
+        assert p.num_partitions == 4
+        owners = p.owner_of(np.array([1, 260, 510, 760, 999]))
+        assert owners.tolist() == [0, 1, 2, 3, 3]
+
+    def test_shared_range_detection(self):
+        p = LogicalPartitions.equal_width(4, 0, 1000)
+        # a root-like node spanning everything is shared
+        assert bool(p.is_shared_range([KEY_MIN], [KEY_MAX])[0])
+        # a narrow range inside one partition is not
+        assert not bool(p.is_shared_range([10], [20])[0])
+        # crossing the first boundary is shared
+        b = int(p.boundaries[1])
+        assert bool(p.is_shared_range([b - 5], [b + 5])[0])
+
+    def test_split_and_merge(self):
+        p = LogicalPartitions.equal_width(2, 0, 100)
+        p2 = p.split_partition(0, 10)
+        assert p2.num_partitions == 3
+        p3 = p2.merge_partitions(0)
+        assert p3.num_partitions == 2
+
+    def test_from_samples_balances_skew(self):
+        rng = np.random.default_rng(0)
+        keys = (rng.pareto(2.0, size=20_000) * 1000).astype(np.int64) + 1
+        p = LogicalPartitions.from_samples(keys, 4)
+        owners = p.owner_of(keys)
+        counts = np.bincount(owners, minlength=4)
+        assert counts.min() > 0.15 * keys.size  # roughly balanced
+
+    def test_rebalance_moves_boundaries(self):
+        p = LogicalPartitions.equal_width(2, 0, 1000)
+        p2 = p.rebalance([9.0, 1.0])  # partition 0 overloaded
+        # new boundary should move left of the old midpoint
+        assert int(p2.boundaries[1]) < int(p.boundaries[1])
+        assert p.assignment_diff(p2) > 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 16), st.data())
+    def test_prop_owner_in_range(self, nparts, data):
+        p = LogicalPartitions.equal_width(nparts, 0, 10_000)
+        keys = data.draw(
+            st.lists(st.integers(-(2**50), 2**50), min_size=1, max_size=50)
+        )
+        owners = p.owner_of(np.array(keys, dtype=np.int64))
+        assert ((owners >= 0) & (owners < p.num_partitions)).all()
+
+
+# ---------------------------------------------------------------------------
+# CoolingMap + ComputeCache
+# ---------------------------------------------------------------------------
+
+
+class TestCoolingMap:
+    def test_fifo_eviction_within_bucket(self):
+        cm = CoolingMap(1, slots=3)
+        assert cm.insert(1) is None
+        assert cm.insert(2) is None
+        assert cm.insert(3) is None
+        assert cm.insert(4) == 1  # oldest evicted
+
+    def test_remove_second_chance(self):
+        cm = CoolingMap(4, slots=2)
+        cm.insert(10)
+        assert cm.remove(10)
+        assert not cm.remove(10)
+
+    def test_pop_any(self):
+        cm = CoolingMap(8, slots=2)
+        for i in range(10):
+            cm.insert(i)
+        rng = np.random.default_rng(0)
+        seen = set()
+        while True:
+            n = cm.pop_any(rng)
+            if n is None:
+                break
+            seen.add(n)
+        assert len(cm) == 0 and len(seen) > 0
+
+    def test_lock_accounting_spreads(self):
+        """The point of the cooling map: bucket locks spread the load."""
+        central = CoolingMap(1, slots=10**9)
+        spread = CoolingMap(64, slots=6)
+        for i in range(3000):
+            central.insert(i)
+            spread.insert(i)
+        assert central.lock_acquires.max() == 3000
+        assert spread.lock_acquires.max() < 3000 * 0.2
+
+
+def _mk_cache(capacity=32, **kw):
+    # a tiny synthetic 2-level tree: parent -1 for roots 0..3, children 100+
+    parents = {}
+    for r in range(4):
+        parents[r] = -1
+        for c in range(8):
+            parents[100 + r * 8 + c] = r
+    return ComputeCache(
+        capacity,
+        parent_of=lambda n: parents.get(n, -1),
+        is_leaf=lambda n: n >= 100,
+        rng=np.random.default_rng(0),
+        **kw,
+    )
+
+
+class TestComputeCache:
+    def test_admit_requires_parent(self):
+        c = _mk_cache(p_admit_leaf=1.0)
+        assert not c.admit(100)          # parent 0 not cached
+        assert c.admit(0)
+        assert c.admit(100)
+        assert c.lookup(100) == "hit"
+
+    def test_lazy_leaf_admission(self):
+        c = _mk_cache(p_admit_leaf=0.0)
+        c.admit(0)
+        assert not c.admit(100)          # P_A = 0 rejects leaves
+        assert c.admit(1)                # inner always admitted
+
+    def test_eviction_under_pressure(self):
+        c = _mk_cache(capacity=6, p_admit_leaf=1.0)
+        for r in range(4):
+            c.admit(r)
+        for leaf in range(100, 120):
+            c.admit(leaf)
+        assert c.num_cached() <= 6
+        assert c.stats.evictions > 0
+
+    def test_path_aware_delegation(self):
+        """Cooling a parent with HOT swizzled children must delegate downward
+        (§5.3): the parent stays HOT, a descendant transitions to COOLING.
+        (The invariant is soft overall — second-chance restores can re-heat a
+        child under a cooling parent, the paper's "in most cases".)"""
+        from repro.core.cache import COOLING, HOT
+
+        c = _mk_cache(capacity=40, p_admit_leaf=1.0)
+        c.admit(0)
+        for leaf in range(100, 108):
+            c.admit(leaf)
+        c._cool(0)  # sample lands on the parent
+        assert c.stats.delegations >= 1
+        assert c.state[0] == HOT, "parent must not cool while children are hot"
+        assert any(
+            c.state.get(leaf) == COOLING for leaf in range(100, 108)
+        ), "a swizzled child should have received the cooling command"
+
+    def test_dirty_flush(self):
+        c = _mk_cache(p_admit_leaf=1.0)
+        c.admit(0)
+        c.admit(100, dirty=True)
+        assert c.is_dirty(100)
+        n = c.flush_dirty()
+        assert n == 1 and not c.is_dirty(100)
+
+    def test_invalidate(self):
+        c = _mk_cache(p_admit_leaf=1.0)
+        c.admit(0)
+        c.admit(100)
+        assert c.invalidate(100)
+        assert c.lookup(100) == "miss"
+
+
+# ---------------------------------------------------------------------------
+# HostBTree + Simulator
+# ---------------------------------------------------------------------------
+
+
+def _tree(n=20_000, seed=0, **kw):
+    data = ycsb.make_dataset(n, seed=seed)
+    return data, HostBTree(data, **kw)
+
+
+class TestHostBTree:
+    def test_get_after_build(self):
+        data, t = _tree(5000)
+        for k in data[::97]:
+            assert t.get(int(k)) == int(k)
+        assert t.get(int(data.max()) + 12345) is None
+
+    def test_insert_with_splits(self):
+        data, t = _tree(2000, fill=1.0)
+        rng = np.random.default_rng(1)
+        fresh = []
+        for k in data[:300]:
+            nk = int(k) + 1
+            if t.get(nk) is None:
+                t.insert(nk, nk * 2)
+                fresh.append(nk)
+        assert t.splits > 0
+        for nk in fresh:
+            assert t.get(nk) == nk * 2
+        # originals intact
+        for k in data[::53]:
+            assert t.get(int(k)) == int(k)
+
+    def test_root_split_grows_height(self):
+        keys = np.arange(1, 64 * 64 + 1, dtype=np.int64)
+        t = HostBTree(keys, fill=1.0, level_m=1)
+        h0 = t.height
+        for k in range(10**6, 10**6 + 5000):
+            t.insert(k, k)
+        assert t.height >= h0
+        assert t.get(10**6 + 100) == 10**6 + 100
+
+    def test_delete(self):
+        data, t = _tree(3000)
+        for k in data[::17]:
+            assert t.delete(int(k))
+        for k in data[::17]:
+            assert t.get(int(k)) is None
+
+    def test_scan_hops(self):
+        data, t = _tree(4000)
+        start = int(data[100])
+        hops = t.scan(start, 100)
+        got = [k for _, ks in hops for k in ks]
+        expect = data[data >= start][:100].tolist()
+        assert got == expect
+
+    def test_subtree_placement(self):
+        data, t = _tree(30_000, level_m=2, n_mem_servers=4)
+        # every node at level <= M shares its subtree root's server
+        for nid in range(t.num_nodes):
+            if t.LV[nid] < 0 or t.LV[nid] > t.level_m:
+                continue
+            root = t.subtree_root_of(nid)
+            assert t.server[nid] == t.server[root]
+
+
+class TestSimulator:
+    def test_dex_beats_baselines_on_reads(self):
+        data, _ = _tree(50_000)
+        wl = ycsb.generate("read-only", data, 8000, seed=3)
+        results = {}
+        for name in ["dex", "sherman", "p-sherman", "naive"]:
+            tree = HostBTree(data, level_m=3, n_mem_servers=4)
+            cfg = baselines.ALL[name](cache_bytes=(tree.num_nodes // 3) * 1024)
+            sim = Simulator(tree, cfg, seed=7)
+            sim.run(wl.ops, wl.keys)
+            results[name] = sim.totals().per_op()
+        # DEX must do far fewer remote reads (the paper's core claim)
+        assert results["dex"]["reads"] < 0.6 * results["p-sherman"]["reads"]
+        assert results["p-sherman"]["reads"] < results["sherman"]["reads"]
+        assert results["sherman"]["reads"] < results["naive"]["reads"]
+
+    def test_partitioning_eliminates_atomics(self):
+        data, _ = _tree(30_000)
+        wl = ycsb.generate("write-intensive", data, 6000, seed=4)
+        tree = HostBTree(data, level_m=3, n_mem_servers=4)
+        sim = Simulator(tree, baselines.dex(), seed=1)
+        sim.run(wl.ops, wl.keys)
+        assert sim.totals().per_op()["atomics"] == 0.0
+        tree2 = HostBTree(data, level_m=3, n_mem_servers=4)
+        sim2 = Simulator(tree2, baselines.sherman_like(), seed=1)
+        sim2.run(wl.ops, wl.keys)
+        assert sim2.totals().per_op()["atomics"] > 0.2
+
+    def test_offload_engages_with_tiny_cache(self):
+        data, _ = _tree(50_000)
+        wl = ycsb.generate("read-only", data, 8000, seed=5)
+        tree = HostBTree(data, level_m=3, n_mem_servers=4)
+        cfg = baselines.dex(cache_bytes=64 * 1024)  # 64 frames: ~1% cache
+        sim = Simulator(tree, cfg, seed=2)
+        sim.run(wl.ops, wl.keys)
+        assert sim.totals().per_op()["two_sided"] > 0.01
+
+    def test_simulation_correctness_of_results(self):
+        """Protocol bookkeeping must not corrupt the index itself."""
+        data, _ = _tree(10_000)
+        wl = ycsb.generate("insert-intensive", data, 4000, seed=6)
+        tree = HostBTree(data, level_m=2, n_mem_servers=2)
+        sim = Simulator(tree, baselines.dex(), seed=3)
+        sim.run(wl.ops, wl.keys)
+        # every inserted key must be retrievable
+        ins = wl.keys[wl.ops == ycsb.OP_INSERT]
+        for k in ins[:200]:
+            assert tree.get(int(k)) is not None
+
+    def test_repartition_flushes_and_rebalances(self):
+        data, _ = _tree(20_000)
+        wl = ycsb.generate("write-intensive", data, 5000, seed=8)
+        tree = HostBTree(data, level_m=3, n_mem_servers=4)
+        sim = Simulator(tree, baselines.dex(), seed=4)
+        sim.run(wl.ops, wl.keys)
+        newp = LogicalPartitions.equal_width(
+            8, int(data.min()), int(data.max()) + 1
+        )
+        rep = sim.repartition(newp)
+        assert rep["dirty_pages_flushed"] >= 0
+        assert rep["fraction_keyspace_moved"] > 0
+        assert sim.partitions.num_partitions == 8
+
+    def test_cost_model_produces_finite_throughput(self):
+        data, _ = _tree(20_000)
+        wl = ycsb.generate("read-intensive", data, 5000, seed=9)
+        tree = HostBTree(data, level_m=3, n_mem_servers=4)
+        sim = Simulator(tree, baselines.dex(), seed=5)
+        sim.run(wl.ops, wl.keys)
+        rep = analyze(sim)
+        assert 0 < rep.ops_per_sec < 1e10
+        assert rep.bottleneck in rep.caps
