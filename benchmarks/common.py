@@ -65,6 +65,8 @@ def run_one(
     cfg_overrides: Optional[dict] = None,
     hw: Optional[HardwareModel] = None,
     hot_leaf_fraction: Optional[float] = None,
+    scan_len: int = 100,
+    scan_len_dist: str = "fixed",
 ) -> BenchResult:
     dataset = ycsb.make_dataset(n_keys, seed=0)
     tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
@@ -73,11 +75,13 @@ def run_one(
     overrides.update(cfg_overrides or {})
     cfg = baselines.ALL[system](**overrides)
     sim = Simulator(tree, cfg, seed=seed)
-    warm = ycsb.generate(workload, dataset, n_warm, theta=theta, seed=seed + 1)
-    sim.run(warm.ops, warm.keys)
+    warm = ycsb.generate(workload, dataset, n_warm, theta=theta, seed=seed + 1,
+                         scan_len=scan_len, scan_len_dist=scan_len_dist)
+    sim.run(warm.ops, warm.keys, scan_len=warm.scan_len, scan_lens=warm.scan_lens)
     sim.reset_counters()
-    wl = ycsb.generate(workload, dataset, n_ops, theta=theta, seed=seed + 2)
-    sim.run(wl.ops, wl.keys)
+    wl = ycsb.generate(workload, dataset, n_ops, theta=theta, seed=seed + 2,
+                       scan_len=scan_len, scan_len_dist=scan_len_dist)
+    sim.run(wl.ops, wl.keys, scan_len=wl.scan_len, scan_lens=wl.scan_lens)
     if hot_leaf_fraction is None:
         writes = ycsb.WORKLOADS[workload]
         write_frac = writes[0] + writes[2]
@@ -111,11 +115,11 @@ def sweep_threads(system: str, workload: str, thread_counts, **kw):
     theta = kw.get("theta", 0.99)
     warm = ycsb.generate(workload, dataset, kw.get("n_warm", N_WARM),
                          theta=theta, seed=11)
-    sim.run(warm.ops, warm.keys)
+    sim.run(warm.ops, warm.keys, scan_len=warm.scan_len, scan_lens=warm.scan_lens)
     sim.reset_counters()
     wl = ycsb.generate(workload, dataset, kw.get("n_ops", N_OPS),
                        theta=theta, seed=12)
-    sim.run(wl.ops, wl.keys)
+    sim.run(wl.ops, wl.keys, scan_len=wl.scan_len, scan_lens=wl.scan_lens)
     mix = ycsb.WORKLOADS[workload]
     write_frac = mix[0] + mix[2]
     hot = 0.0

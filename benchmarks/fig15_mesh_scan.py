@@ -1,0 +1,186 @@
+"""Fig. 15 companion: the scan-intensive mix (YCSB-E) end-to-end on the
+*mesh plane* (Plane B), next to the simulator's counter-based numbers.
+
+The event simulator (Plane A) prices every remote verb of a fence-key
+subdivided scan; this benchmark runs the same workload class through
+``core/scan.py`` — real collectives, real cache state, real Pallas leaf-scan
+compaction — and reports measured batch throughput plus the mesh plane's own
+remote-read counters, cross-validated against ``HostBTree.scan``.
+
+Run with ``PYTHONPATH=src python benchmarks/fig15_mesh_scan.py [--quick]``
+(the repo root is added to sys.path automatically) or via the suite:
+``PYTHONPATH=src python -m benchmarks.run --only fig15mesh``.  On hosts
+without accelerators it forces an 8-device CPU mesh (2 route x 4 memory),
+the same topology as tests/mesh_check.py.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+# direct-file execution puts benchmarks/ (not the repo root) on sys.path;
+# add the root so `from benchmarks.common import ...` resolves either way
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import scan as scan_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+from benchmarks.common import run_one  # noqa: E402
+
+MAX_SCAN = 100
+BATCH = 1024
+
+
+def run(quick: bool = False):
+    n_keys = 50_000 if quick else 200_000
+    n_batches = 4 if quick else 8
+    rng = np.random.default_rng(3)
+
+    dataset = ycsb.make_dataset(n_keys, seed=0)
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7, n_shards=4)
+    host = HostBTree(dataset, vals, fill=0.7)
+
+    # 2 compute partitions x 4 memory columns when 8 devices are available
+    # (standalone run / real mesh); single-device topology otherwise (e.g.
+    # invoked from benchmarks.run after jax already initialized)
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    # capacity factor sized for zipfian skew: cold-cache hop fetches
+    # concentrate on the hot subtree's memory column, so provision buckets
+    # for a full batch (factor >= n_memory); under-provisioned buckets
+    # load-shed lanes, reported honestly as taken == -1 in `dropped`
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=512, cache_ways=4,
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, dex_mod.state_shardings(mesh, cfg)
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    scan = jax.jit(scan_mod.make_dex_scan(meta, cfg, mesh, max_count=MAX_SCAN))
+
+    # YCSB-E traffic: zipfian start keys, uniform lengths in [1, MAX_SCAN]
+    wl = ycsb.generate(
+        "ycsb-e", dataset, n_batches * BATCH, theta=0.99, seed=11,
+        scan_len=MAX_SCAN, scan_len_dist="uniform",
+    )
+    is_scan = wl.ops == ycsb.OP_SCAN
+    starts = wl.keys[is_scan]
+    lens = wl.scan_lens[is_scan]
+    n_full = (starts.size // BATCH) * BATCH
+    starts, lens = starts[:n_full], lens[:n_full]
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    # warmup batch: compile + warm the per-chip caches (paper §8.1)
+    state, k0, _, t0 = scan(state, put(starts[:BATCH]), put(lens[:BATCH]))
+    jax.block_until_ready(k0)
+
+    # cross-validate a sample against the host ground truth
+    k0 = np.asarray(k0)
+    t0 = np.asarray(t0)
+    for i in rng.choice(BATCH, size=32, replace=False):
+        if t0[i] < 0:
+            continue  # load-shed lane: explicit failure, no data to compare
+        expect = [
+            k for _, ks in host.scan(int(starts[i]), int(lens[i])) for k in ks
+        ][: int(lens[i])]
+        got = k0[i][k0[i] != KEY_MAX].tolist()
+        assert got == expect, f"mesh scan diverges from HostBTree.scan at {i}"
+
+    stats_before = np.asarray(state.stats).sum(axis=0)
+    # stage inputs and keep results on device inside the timed loop — one
+    # sync at the end, so dt measures scan dispatch, not per-batch transfers
+    batches = [
+        (put(starts[b * BATCH : (b + 1) * BATCH]),
+         put(lens[b * BATCH : (b + 1) * BATCH]))
+        for b in range(n_full // BATCH)
+    ]
+    jax.block_until_ready(batches)
+    takens = []
+    t_start = time.perf_counter()
+    for bs, bl in batches:
+        state, kk, vv, tk = scan(state, bs, bl)
+        takens.append(tk)
+    jax.block_until_ready((state.stats, takens))
+    dt = time.perf_counter() - t_start
+    tk = np.concatenate([np.asarray(t) for t in takens])
+    total_records = int(np.maximum(tk, 0).sum())
+    completed = int((tk >= 0).sum())
+    shed_scans = int((tk < 0).sum())
+    stats = np.asarray(state.stats).sum(axis=0) - stats_before
+
+    scans_per_s = completed / dt
+    fetches_per_scan = stats[dex_mod.STAT_FETCHES] / max(stats[dex_mod.STAT_OPS], 1)
+    hit_rate = stats[dex_mod.STAT_HITS] / max(
+        stats[dex_mod.STAT_HITS] + stats[dex_mod.STAT_FETCHES], 1
+    )
+
+    # Plane A: the simulator's counter-based numbers for the *same* workload
+    # (YCSB-E with uniform scan lengths in [1, MAX_SCAN], not fixed-100)
+    sim_res = run_one(
+        "dex", "ycsb-e", n_keys=n_keys,
+        n_ops=4_000 if quick else 10_000,
+        n_warm=4_000 if quick else 10_000,
+        scan_len=MAX_SCAN, scan_len_dist="uniform",
+    )
+
+    rows = [
+        "plane,metric,value",
+        f"mesh,batch_scans_per_s,{scans_per_s:.1f}",
+        f"mesh,records_per_s,{total_records / dt:.1f}",
+        f"mesh,remote_fetches_per_scan,{fetches_per_scan:.3f}",
+        f"mesh,cache_hit_rate,{hit_rate:.3f}",
+        f"mesh,shed_scans,{shed_scans}",
+        f"mesh,dropped,{stats[dex_mod.STAT_DROPS]}",
+        f"sim,mops,{sim_res.report.mops():.3f}",
+        f"sim,node_reads_per_op,{sim_res.per_op['node_reads']:.3f}",
+        f"sim,local_accesses_per_op,{sim_res.per_op['local_accesses']:.3f}",
+    ]
+    summary = {
+        "mesh_scans_per_s": scans_per_s,
+        "mesh_fetches_per_scan": float(fetches_per_scan),
+        "sim_node_reads_per_op": sim_res.per_op["node_reads"],
+    }
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

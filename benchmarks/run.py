@@ -27,6 +27,7 @@ MODULES = [
     ("fig12", "benchmarks.fig12_cache_size"),
     ("fig13", "benchmarks.fig13_offload_threads"),
     ("fig15", "benchmarks.fig15_extra_workloads"),
+    ("fig15mesh", "benchmarks.fig15_mesh_scan"),
     ("fig16", "benchmarks.fig16_key_size"),
     ("fig17", "benchmarks.fig17_skewness"),
     ("fig18", "benchmarks.fig18_admission"),

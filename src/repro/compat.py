@@ -1,0 +1,54 @@
+"""jax version-compatibility shims shared by every plane (mesh serving in
+``core/``, training substrate in ``launch/``/``train/``, models).
+
+Kept dependency-free (imports only jax) so no plane picks up another
+plane's modules just to spell ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (older releases ship it under
+    ``jax.experimental.shard_map`` with ``check_rep`` instead of
+    ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def make_mesh_compat(axis_shapes, axis_names):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` where present,
+    plain ``jax.make_mesh`` without it, raw ``jax.sharding.Mesh`` on releases
+    predating ``jax.make_mesh`` entirely."""
+    if hasattr(jax, "make_mesh"):
+        try:
+            return jax.make_mesh(
+                axis_shapes,
+                axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+            )
+        except (AttributeError, TypeError):
+            return jax.make_mesh(axis_shapes, axis_names)
+    import math
+
+    n = math.prod(axis_shapes)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {tuple(axis_shapes)} needs {n} devices, "
+            f"have {len(devices)}"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(axis_shapes), axis_names
+    )

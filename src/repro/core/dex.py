@@ -34,8 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import routing
 from repro.core.nodes import FANOUT, KEY_MAX
 from repro.core.pool import PoolMeta, SubtreePool, top_walk
+from repro.core.routing import (
+    hash64 as _hash64,
+    pack_by_dest as _pack_by_dest,
+    unpack_to_lanes as _unpack_to_lanes,
+)
 
 NODE_ROW_BYTES = FANOUT * 8 * 3  # keys + children + values on the wire
 OFFLOAD_REQ_BYTES = 16
@@ -142,59 +148,8 @@ def state_shardings(mesh, cfg: DexMeshConfig):
 
 
 # ---------------------------------------------------------------------------
-# helpers used inside shard_map
-# ---------------------------------------------------------------------------
-
-
-def _hash64(x: jax.Array) -> jax.Array:
-    x = x.astype(jnp.uint64)
-    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xFF51AFD7ED558CCD)
-    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xC4CEB9FE1A85EC53)
-    return x ^ (x >> jnp.uint64(33))
-
-
-def _pack_by_dest(payload: jax.Array, dest: jax.Array, n_dest: int, cap: int):
-    """Bucket ``payload`` rows by destination with bounded capacity.
-
-    Returns ``(buf, lane_of_slot, dropped)``:
-      * ``buf``: [n_dest, cap, ...] payload (KEY_MAX padding)
-      * ``lane_of_slot``: [n_dest, cap] originating lane (B = OOB sentinel)
-      * ``dropped``: [B] lanes that exceeded a bucket's capacity (these are
-        load-shed, mirrored by a stats counter — the caller retries or
-        reports; logical repartitioning is the systemic fix, §4)
-    """
-    b = dest.shape[0]
-    order = jnp.argsort(dest, stable=True)
-    sd = dest[order]
-    new = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
-    start = jax.lax.cummax(jnp.where(new, jnp.arange(b), 0), axis=0)
-    rank = jnp.arange(b) - start
-    ok = rank < cap
-    pad_shape = (n_dest, cap) + payload.shape[1:]
-    fill = KEY_MAX if payload.dtype == jnp.int64 else 0
-    buf = jnp.full(pad_shape, fill, payload.dtype)
-    buf = buf.at[sd, rank].set(payload[order], mode="drop")
-    lane = jnp.full((n_dest, cap), b, jnp.int32)
-    lane = lane.at[sd, rank].set(order.astype(jnp.int32), mode="drop")
-    dropped = jnp.zeros((b,), bool).at[order].set(~ok)
-    return buf, lane, dropped
-
-
-def _unpack_to_lanes(resp: jax.Array, lane_of_slot: jax.Array, b: int, fill):
-    """Scatter [n_dest, cap, ...] responses back to [B, ...] lanes."""
-    flat_lane = lane_of_slot.reshape(-1)
-    flat = resp.reshape((-1,) + resp.shape[2:])
-    out = jnp.full((b,) + resp.shape[2:], fill, resp.dtype)
-    return out.at[flat_lane].set(flat, mode="drop")
-
-
-def _a2a(x: jax.Array, axis: str) -> jax.Array:
-    """[n_axis, ...] per-destination buffers -> per-source buffers."""
-    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
-
-
-# ---------------------------------------------------------------------------
-# the sharded lookup
+# the sharded lookup (routing helpers shared with core/scan.py live in
+# core/routing.py)
 # ---------------------------------------------------------------------------
 
 
@@ -234,42 +189,35 @@ def _cache_admit(
     return DexCache(tags=tags, keys=keys, children=children, values=values, fifo=fifo)
 
 
-def _fetch_rows(
+_fetch_rows = routing.fetch_rows  # re-export; shared with core/scan.py
+
+
+def cached_fetch_level(
     pool: SubtreePool,
     meta: PoolMeta,
     cfg: DexMeshConfig,
+    cache: DexCache,
     gid: jax.Array,
     want: jax.Array,
+    admit_ok: jax.Array,
 ):
-    """Remote-read node rows (the RDMA READ analogue): request/response
-    all_to_all over the memory axis.  Lanes with ``want == False`` send a
-    padded no-op request."""
-    b = gid.shape[0]
-    s_per = meta.n_subtrees_padded // cfg.n_memory
-    subtree = (gid // meta.subtree_cap).astype(jnp.int32)
-    owner = jnp.where(want, subtree // s_per, cfg.n_memory)  # OOB when unused
-    cap = int(np.ceil(b / cfg.n_memory * cfg.route_capacity_factor))
-    buf, lane, dropped = _pack_by_dest(gid, owner.astype(jnp.int32), cfg.n_memory, cap)
-    req = _a2a(buf, cfg.memory_axis)                       # [n_mem, cap]
-    # serve locally: decode gid -> (local subtree, local node)
-    st = (req // meta.subtree_cap).astype(jnp.int32) % s_per
-    lo = (req % meta.subtree_cap).astype(jnp.int32)
-    valid = req != KEY_MAX
-    st = jnp.where(valid, st, 0)
-    lo = jnp.where(valid, lo, 0)
-    rk = pool.pool_keys[st, lo]                            # [n_mem, cap, F]
-    rc = pool.pool_children[st, lo]
-    rv = pool.pool_values[st, lo]
-    rk = jnp.where(valid[..., None], rk, KEY_MAX)
-    rc = jnp.where(valid[..., None], rc, 0)
-    rv = jnp.where(valid[..., None], rv, 0)
-    rk = _a2a(rk, cfg.memory_axis)
-    rc = _a2a(rc, cfg.memory_axis)
-    rv = _a2a(rv, cfg.memory_axis)
-    out_k = _unpack_to_lanes(rk, lane, b, KEY_MAX)
-    out_c = _unpack_to_lanes(rc, lane, b, 0)
-    out_v = _unpack_to_lanes(rv, lane, b, 0)
-    return out_k, out_c, out_v, dropped
+    """One level of the cached traversal, shared by lookup and scan: probe
+    the per-chip cache for ``gid`` rows, remote-fetch the misses, and admit
+    fetched rows where ``admit_ok`` (a load-shed fetch's placeholder row is
+    never admitted).  Returns ``(rows_k, rows_c, rows_v, hit, miss, shed,
+    new_cache)`` with ``hit``/``miss`` already masked by ``want``."""
+    hit, ck, cc, cv, set_idx = _cache_probe(cache, cfg, gid)
+    hit = hit & want
+    miss = want & ~hit
+    fk, fc, fv, shed = _fetch_rows(pool, meta, cfg, gid, miss)
+    rows_k = jnp.where(hit[:, None], ck, fk)
+    rows_c = jnp.where(hit[:, None], cc, fc)
+    rows_v = jnp.where(hit[:, None], cv, fv)
+    new_cache = _cache_admit(
+        cache, cfg, gid, set_idx, miss & admit_ok & ~shed,
+        rows_k, rows_c, rows_v,
+    )
+    return rows_k, rows_c, rows_v, hit, miss, shed, new_cache
 
 
 def _offload_walk(
@@ -285,10 +233,10 @@ def _offload_walk(
     b = queries.shape[0]
     s_per = meta.n_subtrees_padded // cfg.n_memory
     owner = jnp.where(want, subtree // s_per, cfg.n_memory)
-    cap = int(np.ceil(b / cfg.n_memory * cfg.route_capacity_factor))
+    cap = routing.route_capacity(b, cfg.n_memory, cfg.route_capacity_factor)
     payload = jnp.stack([queries, subtree.astype(jnp.int64)], axis=-1)  # [B, 2]
     buf, lane, dropped = _pack_by_dest(payload, owner.astype(jnp.int32), cfg.n_memory, cap)
-    req = _a2a(buf, cfg.memory_axis)                       # [n_mem, cap, 2]
+    req = routing.a2a(buf, cfg.memory_axis)                # [n_mem, cap, 2]
     q = req[..., 0]
     st_global = req[..., 1]
     valid = q != KEY_MAX
@@ -307,9 +255,11 @@ def _offload_walk(
     found = jnp.any(eq, axis=-1) & valid
     vals = jnp.sum(jnp.where(eq, pool.pool_values[st, local], 0), axis=-1)
     resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
-    resp = _a2a(resp, cfg.memory_axis)
+    resp = routing.a2a(resp, cfg.memory_axis)
     out = _unpack_to_lanes(resp, lane, b, 0)
-    return out[..., 0] != 0, out[..., 1], dropped
+    # only lanes that sent a real request can be load-shed (OOB no-op lanes
+    # share a sentinel bucket whose overflow is meaningless)
+    return out[..., 0] != 0, out[..., 1], dropped & want
 
 
 def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
@@ -329,21 +279,9 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
             jnp.searchsorted(boundaries, keys, side="right") - 1
         ).astype(jnp.int32)
         owner = jnp.clip(owner, 0, n_route - 1)
-        cap = int(np.ceil(b / n_route * cfg.route_capacity_factor))
+        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
         buf, lane, dropped_r = _pack_by_dest(keys, owner, n_route, cap)
-        if len(cfg.route_axes) == 1:
-            routed = _a2a(buf, cfg.route_axes[0])
-        else:
-            # flatten multi-axis routing: split over the first axis, then the
-            # second — two all_to_alls compose to a full permutation
-            a0, a1 = cfg.route_axes
-            s1 = mesh.shape[a1]
-            r = buf.reshape((buf.shape[0] // s1, s1) + buf.shape[1:])
-            r = jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
-            r = jnp.swapaxes(r, 0, 1)
-            r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
-            r = jnp.swapaxes(r, 0, 1)
-            routed = r.reshape(buf.shape)
+        routed = routing.route_exchange(buf, cfg, mesh)
         q = routed.reshape(-1)                              # [n_route*cap]
         live = q != KEY_MAX
 
@@ -372,28 +310,22 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
             new_cache = cache
             miss_counts = []
             n_fetch = jnp.int64(0)
+            shed = jnp.zeros(q.shape, bool)  # lanes whose fetch was load-shed
             for lvl in range(levels):
                 gid = meta.node_gid(subtree, local)
-                hit, ck, cc, cv, set_idx = _cache_probe(new_cache, cfg, gid)
-                need = live
-                miss = need & ~hit
-                miss_counts.append(jnp.sum(miss))
-                fk, fc, fv, _drop = _fetch_rows(pool, meta, cfg, gid, miss)
-                rows_k = jnp.where(hit[:, None], ck, fk)
-                rows_c = jnp.where(hit[:, None], cc, fc)
-                rows_v = jnp.where(hit[:, None], cv, fv)
-                n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
                 # lazy admission: inner always, leaves with P_A (§5.4)
-                is_leaf = lvl == levels - 1
-                if is_leaf:
-                    luck = (_hash64(gid ^ jnp.int64(0x9E3779B9)) % jnp.uint64(100)
-                            ).astype(jnp.int32)
-                    p_ok = luck < cfg.p_admit_leaf_pct
+                if lvl == levels - 1:
+                    p_ok = routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct)
                 else:
                     p_ok = jnp.ones(q.shape, bool)
-                new_cache = _cache_admit(
-                    new_cache, cfg, gid, set_idx, miss & p_ok, rows_k, rows_c, rows_v
+                rows_k, rows_c, rows_v, hit, miss, f_drop, new_cache = (
+                    cached_fetch_level(
+                        pool, meta, cfg, new_cache, gid, live, p_ok
+                    )
                 )
+                shed = shed | f_drop
+                miss_counts.append(jnp.sum(miss))
+                n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
                 if lvl < levels - 1:
                     cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
                     slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
@@ -402,22 +334,30 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
                     eq = rows_k == q[:, None]
                     found = jnp.any(eq, axis=-1) & live
                     vals = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
+            # a shed lane walked on placeholder rows: its result is garbage,
+            # not a miss — report not-found and count it as load shed
+            found = found & ~shed
+            vals = jnp.where(shed, 0, vals)
             total = jnp.maximum(jnp.sum(live), 1)
             rates = jnp.stack(
                 [m.astype(jnp.float32) / total.astype(jnp.float32)
                  for m in miss_counts]
             )
             hits = levels * jnp.sum(live).astype(jnp.int64) - n_fetch
-            return found, vals, new_cache, rates, n_fetch, hits, jnp.int64(0)
+            return (found, vals, new_cache, rates, n_fetch, hits,
+                    jnp.int64(0), jnp.sum(shed).astype(jnp.int64))
 
         # --- 4b. offload the whole sub-path (two-sided path) ---------------
         def offload_branch(cache):
-            found, vals, _drop = _offload_walk(pool, meta, cfg, q, subtree, live)
+            found, vals, o_drop = _offload_walk(pool, meta, cfg, q, subtree, live)
+            found = found & ~o_drop
+            vals = jnp.where(o_drop, 0, vals)
             rates = miss_ema[0]  # unchanged estimate
             n_off = jnp.sum(live).astype(jnp.int64)
-            return found, vals, cache, rates, jnp.int64(0), jnp.int64(0), n_off
+            return (found, vals, cache, rates, jnp.int64(0), jnp.int64(0),
+                    n_off, jnp.sum(o_drop & live).astype(jnp.int64))
 
-        found, vals, new_cache, rates, n_fetch, n_hit, n_off = jax.lax.cond(
+        found, vals, new_cache, rates, n_fetch, n_hit, n_off, n_shed = jax.lax.cond(
             want_offload, offload_branch, fetch_branch, cache
         )
 
@@ -432,23 +372,15 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
         upd = upd.at[0, STAT_HITS].set(n_hit)
         upd = upd.at[0, STAT_FETCHES].set(n_fetch)
         upd = upd.at[0, STAT_OFFLOADS].set(n_off)
-        upd = upd.at[0, STAT_DROPS].set(jnp.sum(dropped_r).astype(jnp.int64))
+        upd = upd.at[0, STAT_DROPS].set(
+            jnp.sum(dropped_r).astype(jnp.int64) + n_shed
+        )
         new_stats = stats + upd
 
         # --- 6. results back to the requesting lanes ------------------------
         resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
         resp = resp.reshape(n_route, cap, 2)
-        if len(cfg.route_axes) == 1:
-            back = _a2a(resp, cfg.route_axes[0])
-        else:
-            a0, a1 = cfg.route_axes
-            s1 = mesh.shape[a1]
-            r = resp.reshape((resp.shape[0] // s1, s1) + resp.shape[1:])
-            r = jnp.swapaxes(r, 0, 1)
-            r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
-            r = jnp.swapaxes(r, 0, 1)
-            r = jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
-            back = r.reshape(resp.shape)
+        back = routing.route_exchange(resp, cfg, mesh, reverse=True)
         out = _unpack_to_lanes(back, lane, b, 0)
         out_found = (out[..., 0] != 0) & ~dropped_r
         out_vals = out[..., 1]
@@ -464,12 +396,11 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
     )
     cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev, fifo=dev)
 
-    sharded = jax.shard_map(
+    sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
         in_specs=(pool_specs, cache_specs, P(), dev, dev, P(cfg.all_axes)),
         out_specs=(cache_specs, dev, dev, P(cfg.all_axes), P(cfg.all_axes)),
-        check_vma=False,
     )
 
     def lookup(state: DexState, keys: jax.Array):

@@ -1,0 +1,160 @@
+"""Shared request-routing layer for the mesh plane (Plane B).
+
+Every sharded DEX operation — point lookup (core/dex.py) and range scan
+(core/scan.py) — moves work between chips the same way:
+
+  1. bucket a batch of requests by destination with bounded capacity
+     (:func:`pack_by_dest`), the SPMD analogue of per-server send queues;
+  2. exchange the buckets with ``all_to_all`` collectives, composing two
+     exchanges when the compute partitions span two mesh axes
+     (:func:`route_exchange`);
+  3. serve, then exchange back and scatter responses to the originating
+     lanes (:func:`unpack_to_lanes`).
+
+:func:`fetch_rows` layers the RDMA-READ analogue on top of (1)–(3): a
+request/response ``all_to_all`` over the memory axis carrying 1KB node rows,
+one round per tree level (DESIGN.md §2).
+
+All helpers are intended to run *inside* ``shard_map``; ``cfg`` is any object
+with the :class:`repro.core.dex.DexMeshConfig` routing attributes
+(``route_axes``, ``memory_axis``, ``n_memory``, ``route_capacity_factor``) —
+duck-typed to keep this module import-light.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map_compat
+from repro.core.nodes import KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool
+
+
+def hash64(x: jax.Array) -> jax.Array:
+    """SplitMix64 finalizer; used for cache set indexing and admission dice."""
+    x = x.astype(jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xFF51AFD7ED558CCD)
+    x = (x ^ (x >> jnp.uint64(33))) * jnp.uint64(0xC4CEB9FE1A85EC53)
+    return x ^ (x >> jnp.uint64(33))
+
+
+def leaf_admit_dice(gid: jax.Array, pct) -> jax.Array:
+    """Lazy leaf-admission coin flip (paper §5.4, P_A): deterministic per
+    node id so lookup and scan agree on which leaves are cacheable."""
+    luck = (hash64(gid ^ jnp.int64(0x9E3779B9)) % jnp.uint64(100)).astype(
+        jnp.int32
+    )
+    return luck < pct
+
+
+def route_capacity(b: int, n_dest: int, factor: float) -> int:
+    """Per-destination bucket capacity for a batch of ``b`` requests."""
+    return int(np.ceil(b / n_dest * factor))
+
+
+def pack_by_dest(payload: jax.Array, dest: jax.Array, n_dest: int, cap: int):
+    """Bucket ``payload`` rows by destination with bounded capacity.
+
+    Returns ``(buf, lane_of_slot, dropped)``:
+      * ``buf``: [n_dest, cap, ...] payload (KEY_MAX padding)
+      * ``lane_of_slot``: [n_dest, cap] originating lane (B = OOB sentinel)
+      * ``dropped``: [B] lanes that exceeded a bucket's capacity (these are
+        load-shed, mirrored by a stats counter — the caller retries or
+        reports; logical repartitioning is the systemic fix, §4)
+    """
+    b = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sd = dest[order]
+    new = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    start = jax.lax.cummax(jnp.where(new, jnp.arange(b), 0), axis=0)
+    rank = jnp.arange(b) - start
+    ok = rank < cap
+    pad_shape = (n_dest, cap) + payload.shape[1:]
+    fill = KEY_MAX if payload.dtype == jnp.int64 else 0
+    buf = jnp.full(pad_shape, fill, payload.dtype)
+    buf = buf.at[sd, rank].set(payload[order], mode="drop")
+    lane = jnp.full((n_dest, cap), b, jnp.int32)
+    lane = lane.at[sd, rank].set(order.astype(jnp.int32), mode="drop")
+    dropped = jnp.zeros((b,), bool).at[order].set(~ok)
+    return buf, lane, dropped
+
+
+def unpack_to_lanes(resp: jax.Array, lane_of_slot: jax.Array, b: int, fill):
+    """Scatter [n_dest, cap, ...] responses back to [B, ...] lanes."""
+    flat_lane = lane_of_slot.reshape(-1)
+    flat = resp.reshape((-1,) + resp.shape[2:])
+    out = jnp.full((b,) + resp.shape[2:], fill, resp.dtype)
+    return out.at[flat_lane].set(flat, mode="drop")
+
+
+def a2a(x: jax.Array, axis: str) -> jax.Array:
+    """[n_axis, ...] per-destination buffers -> per-source buffers."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+
+
+def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.Array:
+    """Exchange per-destination buckets across the compute-partition axes.
+
+    ``buf`` is [n_route, cap, ...].  With one route axis this is a single
+    ``all_to_all``; with two, the exchanges over each axis compose to the full
+    permutation (and must be applied in the opposite order on the way back,
+    ``reverse=True``).
+    """
+    if len(cfg.route_axes) == 1:
+        return a2a(buf, cfg.route_axes[0])
+    a0, a1 = cfg.route_axes
+    s1 = mesh.shape[a1]
+    r = buf.reshape((buf.shape[0] // s1, s1) + buf.shape[1:])
+
+    def x0(r):
+        return jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
+
+    def x1(r):
+        r = jnp.swapaxes(r, 0, 1)
+        r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
+        return jnp.swapaxes(r, 0, 1)
+
+    r = x0(x1(r)) if reverse else x1(x0(r))
+    return r.reshape(buf.shape)
+
+
+def fetch_rows(
+    pool: SubtreePool,
+    meta: PoolMeta,
+    cfg,
+    gid: jax.Array,
+    want: jax.Array,
+):
+    """Remote-read node rows (the RDMA READ analogue): request/response
+    all_to_all over the memory axis.  Lanes with ``want == False`` send a
+    padded no-op request."""
+    b = gid.shape[0]
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    subtree = (gid // meta.subtree_cap).astype(jnp.int32)
+    owner = jnp.where(want, subtree // s_per, cfg.n_memory)  # OOB when unused
+    cap = route_capacity(b, cfg.n_memory, cfg.route_capacity_factor)
+    buf, lane, dropped = pack_by_dest(gid, owner.astype(jnp.int32), cfg.n_memory, cap)
+    req = a2a(buf, cfg.memory_axis)                        # [n_mem, cap]
+    # serve locally: decode gid -> (local subtree, local node)
+    st = (req // meta.subtree_cap).astype(jnp.int32) % s_per
+    lo = (req % meta.subtree_cap).astype(jnp.int32)
+    valid = req != KEY_MAX
+    st = jnp.where(valid, st, 0)
+    lo = jnp.where(valid, lo, 0)
+    rk = pool.pool_keys[st, lo]                            # [n_mem, cap, F]
+    rc = pool.pool_children[st, lo]
+    rv = pool.pool_values[st, lo]
+    rk = jnp.where(valid[..., None], rk, KEY_MAX)
+    rc = jnp.where(valid[..., None], rc, 0)
+    rv = jnp.where(valid[..., None], rv, 0)
+    rk = a2a(rk, cfg.memory_axis)
+    rc = a2a(rc, cfg.memory_axis)
+    rv = a2a(rv, cfg.memory_axis)
+    out_k = unpack_to_lanes(rk, lane, b, KEY_MAX)
+    out_c = unpack_to_lanes(rc, lane, b, 0)
+    out_v = unpack_to_lanes(rv, lane, b, 0)
+    # only lanes that actually wanted a fetch can be load-shed: no-op lanes
+    # share the OOB sentinel bucket, whose overflow is meaningless
+    return out_k, out_c, out_v, dropped & want

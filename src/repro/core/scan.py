@@ -1,0 +1,254 @@
+"""Batched range scans on the TPU mesh (Plane B): the paper's §7 Range Query
+as SPMD collectives.
+
+DEX keeps no leaf links on the memory servers; a multi-leaf scan is
+*fence-key subdivided* — conceptually a sequence of root-to-leaf descents
+whose next start key is the current leaf's upper fence.  In the blocked pool
+layout (core/pool.py) leaves are consecutive in global leaf order
+(``global_leaf = subtree * leaves_per_subtree + (local - leaf_start)``), so
+"follow the fence key" degenerates to "read the next leaf id" — one remote
+leaf READ per hop, without re-walking the upper levels, which is exactly the
+traffic the paper counts for its scans (one node READ per additional leaf,
+§7).
+
+Dataflow per batch of ``(start_key, count)`` requests (DESIGN.md §3):
+
+  1. route requests to the compute partition owning ``start_key`` — shared
+     machinery with the point lookup (core/routing.py);
+  2. walk the replicated top tree to the owning subtree, then descend the
+     subtree's inner levels with per-chip cache probe/admit and remote
+     fetches of missing rows (same per-level all_to_all over the memory axis
+     as the lookup's one-sided path) to find the *start leaf*;
+  3. iterate ``hops`` sibling leaves: probe the cache for each consecutive
+     leaf, remote-read the misses, lazily admit with the leaf admission
+     probability P_A (§5.4), and append the rows to a per-lane window;
+  4. compact the window with the ``leaf_scan`` Pallas kernel (vectorized
+     in-leaf lower bound + masked rank gather, kernels/leaf_scan.py);
+  5. route results back to the requesting lanes.
+
+Scans are never offloaded (§7: memory-side CPUs would have to chase leaves
+too), so there is no offload branch and the miss EMA is left untouched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import routing
+from repro.core.dex import (
+    N_STATS,
+    STAT_DROPS,
+    STAT_FETCHES,
+    STAT_HITS,
+    STAT_OPS,
+    DexCache,
+    DexMeshConfig,
+    DexState,
+    cached_fetch_level,
+)
+from repro.core.nodes import KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool, top_walk
+from repro.kernels.leaf_scan import leaf_scan
+from repro.kernels.ops import use_interpret
+from repro.kernels.ref import leaf_scan_ref
+
+DEFAULT_MAX_COUNT = 128
+
+
+def scan_hops(meta: PoolMeta, max_count: int) -> int:
+    """Leaves that may contribute to a ``max_count``-record scan: the start
+    leaf (which can contribute as little as nothing when the start key lies
+    above its last record) plus enough full leaves for the rest."""
+    return 1 + -(-max_count // meta.per_node)
+
+
+def make_dex_scan(
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    mesh,
+    *,
+    max_count: int = DEFAULT_MAX_COUNT,
+    use_kernel: bool = True,
+    interpret: "bool | None" = None,
+):
+    """Build the sharded range scan:
+    ``(state, start_keys, counts) -> (state, keys, values, taken)``.
+
+    ``start_keys``/``counts`` are [B] globally sharded over all mesh axes;
+    results come back in the caller's lane order as ``keys``/``values``
+    [B, max_count] (KEY_MAX / 0 padded) and ``taken`` [B] int32.  Requests
+    with ``counts[b] > max_count`` are clipped; start keys need not exist in
+    the index (the scan begins at the smallest key >= start).  Wrap with
+    ``jax.jit``.
+
+    Load shedding: a lane whose request (or any of whose per-level remote
+    fetches) exceeded a routing bucket's capacity returns ``taken == -1``
+    with empty rows — never silently truncated data — and is counted in
+    ``STAT_DROPS``; the caller retries (logical repartitioning is the
+    systemic fix, §4).
+    """
+    levels = meta.levels_in_subtree
+    hops = scan_hops(meta, max_count)
+    leaves_per_subtree = meta.per_node ** meta.level_m
+    n_leaves = -(-meta.n_keys // meta.per_node)
+    mc = max_count
+    if interpret is None:
+        interpret = use_interpret()  # compiled kernel on real TPU backends
+
+    def local_fn(pool, cache, boundaries, stats, start_keys, counts):
+        b = start_keys.shape[0]
+        n_route = cfg.n_route
+
+        # --- 1. route to the partition owning the start key ----------------
+        owner = (
+            jnp.searchsorted(boundaries, start_keys, side="right") - 1
+        ).astype(jnp.int32)
+        owner = jnp.clip(owner, 0, n_route - 1)
+        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
+        payload = jnp.stack(
+            [start_keys, counts.astype(jnp.int64)], axis=-1
+        )                                                   # [B, 2]
+        buf, lane, dropped = routing.pack_by_dest(payload, owner, n_route, cap)
+        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 2]
+        q = routed[..., 0].reshape(-1)                      # [n_route*cap]
+        cnt = routed[..., 1].reshape(-1)
+        live = q != KEY_MAX
+        cnt = jnp.clip(jnp.where(live, cnt, 0), 0, mc).astype(jnp.int32)
+
+        # --- 2. top-tree walk + cached descent to the start leaf ------------
+        subtree = top_walk(pool, meta, q)
+        subtree = jnp.where(live, subtree, 0)
+        local = jnp.full(q.shape, 0, jnp.int32)             # subtree root
+        new_cache = cache
+        n_fetch = jnp.int64(0)
+        n_hit = jnp.int64(0)
+        shed = jnp.zeros(q.shape, bool)   # lanes whose fetches were load-shed
+        always = jnp.ones(q.shape, bool)  # inner nodes: admit unconditionally
+        for _ in range(levels - 1):
+            gid = meta.node_gid(subtree, local)
+            rows_k, rows_c, _rows_v, hit, miss, f_drop, new_cache = (
+                cached_fetch_level(pool, meta, cfg, new_cache, gid, live, always)
+            )
+            shed = shed | f_drop
+            n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+            slot = jnp.maximum(
+                jnp.sum(rows_k <= q[:, None], axis=-1) - 1, 0
+            ).astype(jnp.int32)
+            local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
+
+        # global leaf index of the start leaf
+        g0 = (
+            subtree.astype(jnp.int64) * leaves_per_subtree
+            + (local - meta.leaf_start).astype(jnp.int64)
+        )
+
+        # --- 3. iterated sibling-leaf reads (fence-key subdivision) ---------
+        window_k = []
+        window_v = []
+        for h in range(hops):
+            g = g0 + h
+            in_range = live & (g >= 0) & (g < n_leaves)
+            if h > 0:
+                # a lane only needs hop h if hops 1..h-1 (full leaves) cannot
+                # already cover its count — skip the remote read otherwise
+                in_range = in_range & (jnp.int32((h - 1) * meta.per_node) < cnt)
+            st_h = jnp.where(
+                in_range, (g // leaves_per_subtree).astype(jnp.int32), 0
+            )
+            lo_h = jnp.where(
+                in_range,
+                (meta.leaf_start + g % leaves_per_subtree).astype(jnp.int32),
+                0,
+            )
+            gid = meta.node_gid(st_h, lo_h)
+            # lazy leaf admission with P_A (§5.4)
+            p_ok = routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct)
+            rows_k, _rows_c, rows_v, hit, miss, f_drop, new_cache = (
+                cached_fetch_level(
+                    pool, meta, cfg, new_cache, gid, in_range, p_ok
+                )
+            )
+            shed = shed | f_drop
+            rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
+            rows_v = jnp.where(in_range[:, None], rows_v, 0)
+            n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+            window_k.append(rows_k)
+            window_v.append(rows_v)
+        wk = jnp.concatenate(window_k, axis=-1)             # [Q, hops*F]
+        wv = jnp.concatenate(window_v, axis=-1)
+
+        # --- 4. in-window lower bound + masked compaction (Pallas) ----------
+        if use_kernel:
+            out_k, out_v, taken = leaf_scan(
+                wk, wv, q, cnt, max_count=mc, interpret=interpret
+            )
+        else:
+            out_k, out_v, taken = leaf_scan_ref(wk, wv, q, cnt, max_count=mc)
+        # shed lanes return an explicit failure, never truncated data
+        shed = shed & live
+        ok_lane = live & ~shed
+        out_k = jnp.where(ok_lane[:, None], out_k, KEY_MAX)
+        out_v = jnp.where(ok_lane[:, None], out_v, 0)
+        taken = jnp.where(ok_lane, taken, jnp.where(shed, -1, 0))
+
+        # --- 5. stats + results back to the requesting lanes ----------------
+        upd = jnp.zeros((1, N_STATS), jnp.int64)
+        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
+        upd = upd.at[0, STAT_HITS].set(n_hit)
+        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
+        upd = upd.at[0, STAT_DROPS].set(
+            (jnp.sum(dropped) + jnp.sum(shed)).astype(jnp.int64)
+        )
+        new_stats = stats + upd
+
+        resp = jnp.concatenate(
+            [out_k, out_v, taken[:, None].astype(jnp.int64)], axis=-1
+        )                                                   # [Q, 2*mc+1]
+        resp = resp.reshape(n_route, cap, 2 * mc + 1)
+        back = routing.route_exchange(resp, cfg, mesh, reverse=True)
+        out = routing.unpack_to_lanes(back, lane, b, 0)     # [B, 2*mc+1]
+        res_k = jnp.where(dropped[:, None], KEY_MAX, out[..., :mc])
+        res_v = jnp.where(dropped[:, None], 0, out[..., mc : 2 * mc])
+        res_taken = jnp.where(dropped, -1, out[..., 2 * mc]).astype(jnp.int32)
+        return new_cache, new_stats, res_k, res_v, res_taken
+
+    dev = P(cfg.all_axes)
+    pool_specs = SubtreePool(
+        top_keys=P(),
+        top_children=P(),
+        pool_keys=P(cfg.memory_axis),
+        pool_children=P(cfg.memory_axis),
+        pool_values=P(cfg.memory_axis),
+    )
+    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev, fifo=dev)
+
+    sharded = routing.shard_map_compat(
+        local_fn,
+        mesh=mesh,
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev),
+        out_specs=(cache_specs, dev, dev, dev, dev),
+    )
+
+    def scan(state: DexState, start_keys: jax.Array, counts: jax.Array):
+        new_cache, new_stats, keys, values, taken = sharded(
+            state.pool,
+            state.cache,
+            state.boundaries,
+            state.stats,
+            start_keys.astype(jnp.int64),
+            counts.astype(jnp.int64),
+        )
+        new_state = DexState(
+            pool=state.pool,
+            cache=new_cache,
+            boundaries=state.boundaries,
+            miss_ema=state.miss_ema,
+            stats=new_stats,
+        )
+        return new_state, keys, values, taken
+
+    return scan

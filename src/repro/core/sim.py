@@ -614,10 +614,18 @@ class Simulator:
 
     # -- operations --------------------------------------------------------------
 
-    def run(self, ops: np.ndarray, keys: np.ndarray, scan_len: int = 100) -> None:
+    def run(
+        self,
+        ops: np.ndarray,
+        keys: np.ndarray,
+        scan_len: int = 100,
+        scan_lens: Optional[np.ndarray] = None,
+    ) -> None:
         """Execute a workload.  ``ops``: array of {0:lookup, 1:update,
-        2:insert, 3:scan, 4:delete}; ``keys``: target keys."""
-        for op, key in zip(ops, keys):
+        2:insert, 3:scan, 4:delete}; ``keys``: target keys.  ``scan_lens``
+        (per-op record counts, e.g. YCSB-E's uniform lengths) overrides the
+        fixed ``scan_len`` when given."""
+        for i, (op, key) in enumerate(zip(ops, keys)):
             key = int(key)
             server = self._owner(key)
             self.counters[server].ops += 1
@@ -628,7 +636,8 @@ class Simulator:
             elif op == 2:
                 self._op_insert(server, key)
             elif op == 3:
-                self._op_scan(server, key, scan_len)
+                n = int(scan_lens[i]) if scan_lens is not None else scan_len
+                self._op_scan(server, key, n)
             elif op == 4:
                 self._op_delete(server, key)
             else:

@@ -23,6 +23,9 @@ WORKLOADS: Dict[str, Tuple[float, float, float, float]] = {
     "scan-intensive": (0.05, 0.0, 0.0, 0.95),
     "read-intensive-2": (0.05, 0.95, 0.0, 0.0),
     "insert-only": (1.0, 0.0, 0.0, 0.0),
+    # standard YCSB-E: 95% short range scans / 5% inserts — identical mix to
+    # the paper's scan-intensive, kept as an alias for workload-suite users
+    "ycsb-e": (0.05, 0.0, 0.0, 0.95),
 }
 
 
@@ -90,6 +93,8 @@ class Workload:
     ops: np.ndarray      # op codes
     keys: np.ndarray     # target keys
     scan_len: int = 100
+    #: per-op scan lengths (YCSB-E draws uniform in [1, max]); None = fixed
+    scan_lens: "np.ndarray | None" = None
 
 
 def make_dataset(n_keys: int, *, key_space: int = None, seed: int = 0,
@@ -111,15 +116,22 @@ def generate(
     theta: float = 0.99,
     seed: int = 1,
     scan_len: int = 100,
+    scan_len_dist: str = "fixed",
 ) -> Workload:
     """Generate ``n_ops`` operations of the named mix over ``dataset``.
 
     Lookups/updates/scans target existing keys via scrambled-Zipfian ranks;
     inserts draw fresh keys adjacent to existing ones (keeping the key space
     dense, as YCSB's insert order does).
+
+    ``scan_len_dist``: ``"fixed"`` scans all take ``scan_len`` records (the
+    paper's Table 1 setup); ``"uniform"`` draws per-op lengths uniformly from
+    ``[1, scan_len]`` (standard YCSB workload E) into ``Workload.scan_lens``.
     """
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; options: {list(WORKLOADS)}")
+    if scan_len_dist not in ("fixed", "uniform"):
+        raise ValueError(f"unknown scan_len_dist {scan_len_dist!r}")
     p_ins, p_look, p_upd, p_scan = WORKLOADS[name]
     rng = np.random.default_rng(seed)
     n = dataset.size
@@ -143,5 +155,8 @@ def generate(
         fresh = base + rng.integers(1, 3, size=n_ins)
         keys = keys.copy()
         keys[is_ins] = fresh
+    scan_lens = None
+    if scan_len_dist == "uniform":
+        scan_lens = rng.integers(1, scan_len + 1, size=n_ops).astype(np.int32)
     return Workload(ops=ops.astype(np.int32), keys=keys.astype(np.int64),
-                    scan_len=scan_len)
+                    scan_len=scan_len, scan_lens=scan_lens)

@@ -1,0 +1,155 @@
+"""Pallas kernel: fence-key-subdivided multi-leaf range-scan compaction.
+
+The compute core of the mesh-plane range scan (paper §7 Range Query): after
+the traversal layer has assembled, per scan lane, a *window* of consecutive
+leaf rows (the start leaf plus its successors in global leaf order), this
+kernel performs
+
+  1. a vectorized in-leaf lower bound — mask out keys below the start key and
+     KEY_MAX padding (empty slots / out-of-range leaves);
+  2. a masked gather ("compaction") of up to ``count`` surviving rows into a
+     dense [B, max_count] result, preserving ascending key order.
+
+Because leaves are consecutive in key order, the surviving keys are already
+sorted in window-slot order, so the gather is rank-based: element with
+selection rank ``j`` lands in output column ``j``.  On TPU the rank is a
+lane-wise ``cumsum`` and the gather a one-hot compare+reduce over the window
+— branchless VPU work, no scatter (DESIGN.md §3).
+
+int64 keys/values travel as (hi, lo) int32 planes like kernels/node_search.py
+(the TPU VPU has no native 64-bit lanes).  The pure-jnp oracle is
+``kernels/ref.py::leaf_scan_ref``; ``interpret=True`` (the default off-TPU)
+runs the same body through the Pallas interpreter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.nodes import KEY_MAX
+
+BLOCK_B = 8
+
+# KEY_MAX = 0x7FFF_FFFF_FFFF_FFFF as (hi, lo-reinterpreted-signed) planes
+_KMAX_HI = np.int32(0x7FFFFFFF)
+_KMAX_LO = np.int32(-1)
+
+
+def _split_i64(x: jax.Array):
+    """int64 -> (hi int32, lo uint32-as-int32) planes."""
+    hi = (x >> 32).astype(jnp.int32)
+    lo = (x & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32).astype(jnp.int32)
+    return hi, lo
+
+
+def _join_i64(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return (hi.astype(jnp.int64) << 32) | lo.astype(jnp.uint32).astype(jnp.int64)
+
+
+def _geq_planes(khi, klo, qhi, qlo):
+    """(khi,klo) >= (qhi,qlo) treating lo as unsigned."""
+    flip = jnp.int32(-0x80000000)
+    return (khi > qhi) | ((khi == qhi) & ((klo ^ flip) >= (qlo ^ flip)))
+
+
+def _make_kernel(max_count: int):
+    def kernel(
+        khi_ref, klo_ref, vhi_ref, vlo_ref, shi_ref, slo_ref, cnt_ref,
+        okhi_ref, oklo_ref, ovhi_ref, ovlo_ref, taken_ref,
+    ):
+        khi = khi_ref[...]                     # [B, W] int32
+        klo = klo_ref[...]
+        shi = shi_ref[...]                     # [B] int32
+        slo = slo_ref[...]
+        cnt = cnt_ref[...]                     # [B] int32
+
+        # 1. in-leaf lower bound, vectorized over the whole window: drop
+        #    KEY_MAX padding and keys below the start key
+        valid = ~((khi == _KMAX_HI) & (klo == _KMAX_LO))
+        geq = _geq_planes(khi, klo, shi[:, None], slo[:, None])
+        mask = valid & geq
+        rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1,
+                          dtype=jnp.int32)                   # [B, W]
+        sel = mask & (rank <= cnt[:, None])
+        taken_ref[...] = jnp.sum(sel, axis=-1, dtype=jnp.int32)
+
+        # 2. rank-based masked gather: window element with selection rank
+        #    j+1 -> output column j (one-hot compare + reduce, no scatter)
+        srank = jnp.where(sel, rank, 0)                      # [B, W]
+        jcol = jax.lax.broadcasted_iota(
+            jnp.int32, (1, max_count, 1), 1
+        ) + 1                                                # [1, MC, 1]
+        pick = srank[:, None, :] == jcol                     # [B, MC, W]
+        hit = jnp.any(pick, axis=-1)                         # [B, MC]
+
+        def compact(plane, fill):
+            got = jnp.sum(
+                jnp.where(pick, plane[:, None, :], 0), axis=-1, dtype=jnp.int32
+            )
+            return jnp.where(hit, got, fill)
+
+        okhi_ref[...] = compact(khi, _KMAX_HI)
+        oklo_ref[...] = compact(klo, _KMAX_LO)
+        ovhi_ref[...] = compact(vhi_ref[...], 0)
+        ovlo_ref[...] = compact(vlo_ref[...], 0)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_count", "interpret", "block_b")
+)
+def leaf_scan(
+    window_keys: jax.Array,    # [B, W] int64, W = hops * FANOUT
+    window_values: jax.Array,  # [B, W] int64
+    start_keys: jax.Array,     # [B] int64
+    counts: jax.Array,         # [B] int32/int64
+    *,
+    max_count: int,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+):
+    """Compact up to ``counts[b]`` records with key >= ``start_keys[b]`` out
+    of each lane's leaf window.  Returns ``(keys [B, max_count] int64
+    KEY_MAX-padded, values [B, max_count] int64, taken [B] int32)``."""
+    b, w = window_keys.shape
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_count)
+    pad = (-b) % block_b
+    if pad:
+        window_keys = jnp.pad(window_keys, ((0, pad), (0, 0)),
+                              constant_values=KEY_MAX)
+        window_values = jnp.pad(window_values, ((0, pad), (0, 0)))
+        start_keys = jnp.pad(start_keys, (0, pad))
+        counts = jnp.pad(counts, (0, pad))
+    bp = window_keys.shape[0]
+
+    khi, klo = _split_i64(window_keys)
+    vhi, vlo = _split_i64(window_values)
+    shi, slo = _split_i64(start_keys.astype(jnp.int64))
+
+    grid = (bp // block_b,)
+    row = pl.BlockSpec((block_b, w), lambda i: (i, 0))
+    out_row = pl.BlockSpec((block_b, max_count), lambda i: (i, 0))
+    lane = pl.BlockSpec((block_b,), lambda i: (i,))
+    okhi, oklo, ovhi, ovlo, taken = pl.pallas_call(
+        _make_kernel(max_count),
+        grid=grid,
+        in_specs=[row, row, row, row, lane, lane, lane],
+        out_specs=[out_row, out_row, out_row, out_row, lane],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, max_count), jnp.int32),
+            jax.ShapeDtypeStruct((bp, max_count), jnp.int32),
+            jax.ShapeDtypeStruct((bp, max_count), jnp.int32),
+            jax.ShapeDtypeStruct((bp, max_count), jnp.int32),
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(khi, klo, vhi, vlo, shi, slo, counts)
+    out_k = _join_i64(okhi, oklo)
+    out_v = _join_i64(ovhi, ovlo)
+    return out_k[:b], out_v[:b], taken[:b]

@@ -50,12 +50,12 @@ def _node_search_kernel(
     qhi = q_hi_ref[...]               # [B] int32
     qlo = q_lo_ref[...]
     leq = _leq_planes(khi, klo, qhi[:, None], qlo[:, None])
-    cnt = jnp.sum(leq.astype(jnp.int32), axis=-1)
+    cnt = jnp.sum(leq, axis=-1, dtype=jnp.int32)
     slot_ref[...] = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
     eq = (khi == qhi[:, None]) & (klo == qlo[:, None])
     found_ref[...] = jnp.any(eq, axis=-1)
-    vhi = jnp.sum(jnp.where(eq, vals_ref[..., 0], 0), axis=-1)
-    vlo = jnp.sum(jnp.where(eq, vals_ref[..., 1], 0), axis=-1)
+    vhi = jnp.sum(jnp.where(eq, vals_ref[..., 0], 0), axis=-1, dtype=jnp.int32)
+    vlo = jnp.sum(jnp.where(eq, vals_ref[..., 1], 0), axis=-1, dtype=jnp.int32)
     out_val_ref[..., 0] = vhi
     out_val_ref[..., 1] = vlo
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.leaf_scan import leaf_scan
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.node_search import node_search
 from repro.kernels.paged_attention import paged_attention
@@ -17,6 +18,7 @@ from repro.kernels.subtree_walk import subtree_walk
 
 __all__ = [
     "flash_attention",
+    "leaf_scan",
     "mamba_scan",
     "node_search",
     "paged_attention",

@@ -9,8 +9,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nodes import FANOUT
+from repro.core.nodes import FANOUT, KEY_MAX
 from repro.core.pool import subtree_walk_ref  # noqa: F401  (re-export)
+
+
+def leaf_scan_ref(window_keys, window_values, start_keys, counts, *, max_count):
+    """Oracle for kernels/leaf_scan.py.
+
+    ``window_keys``/``window_values``: [B, W] consecutive leaf rows in global
+    leaf order (KEY_MAX padding).  Selects up to ``counts[b]`` keys >=
+    ``start_keys[b]`` per lane and compacts them into [B, max_count],
+    preserving window-slot order (the kernel's rank-based gather); for real
+    leaf windows slot order == ascending key order.
+    """
+    k = window_keys.astype(jnp.int64)
+    v = window_values.astype(jnp.int64)
+    start = start_keys.astype(jnp.int64)
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_count)
+    mask = (k != KEY_MAX) & (k >= start[:, None])
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1)
+    sel = mask & (rank <= counts[:, None])
+    taken = jnp.sum(sel.astype(jnp.int32), axis=-1)
+    w = k.shape[1]
+    # stable sort by selection rank compacts selected slots to the front in
+    # slot order; non-selected slots sink to the back
+    order = jnp.argsort(jnp.where(sel, rank, w + 1), axis=-1, stable=True)
+    out_k = jnp.take_along_axis(jnp.where(sel, k, KEY_MAX), order, axis=-1)
+    out_v = jnp.take_along_axis(jnp.where(sel, v, 0), order, axis=-1)
+    return out_k[:, :max_count], out_v[:, :max_count], taken
 
 
 def node_search_ref(node_keys, queries, node_values):

@@ -90,14 +90,15 @@ def _make_kernel(levels: int, c_nodes: int):
             )                                                       # [Bq, F]
             if lvl < levels - 1:
                 leq = _leq_hi_lo(khi, klo, qhi[:, None], qlo[:, None])
-                cnt = jnp.sum(leq.astype(jnp.int32), axis=-1)
+                cnt = jnp.sum(leq, axis=-1, dtype=jnp.int32)
                 slot = jnp.maximum(cnt - 1, 0)                      # [Bq]
                 child = (gather(c0, onehot).astype(jnp.int32) << 16) | gather(
                     c1, onehot
                 ).astype(jnp.int32)                                 # [Bq, F]
                 fcol = jax.lax.broadcasted_iota(jnp.int32, child.shape, 1)
                 pick = fcol == slot[:, None]
-                local = jnp.sum(jnp.where(pick, child, 0), axis=-1)
+                local = jnp.sum(jnp.where(pick, child, 0), axis=-1,
+                                dtype=jnp.int32)
             else:
                 eq = (khi == qhi[:, None]) & (klo == qlo[:, None])
                 found_ref[...] = jnp.any(eq, axis=-1)
@@ -105,8 +106,10 @@ def _make_kernel(levels: int, c_nodes: int):
                     gather(v0, onehot), gather(v1, onehot),
                     gather(v2, onehot), gather(v3, onehot),
                 )
-                val_hi_ref[...] = jnp.sum(jnp.where(eq, vhi, 0), axis=-1)
-                val_lo_ref[...] = jnp.sum(jnp.where(eq, vlo, 0), axis=-1)
+                val_hi_ref[...] = jnp.sum(jnp.where(eq, vhi, 0), axis=-1,
+                                          dtype=jnp.int32)
+                val_lo_ref[...] = jnp.sum(jnp.where(eq, vlo, 0), axis=-1,
+                                          dtype=jnp.int32)
 
     return kernel
 

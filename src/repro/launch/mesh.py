@@ -9,20 +9,16 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (256 chips, one v5e pod-slice) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for local multi-device testing (8 host devices)."""
-    return jax.make_mesh(
-        (n_data, n_model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((n_data, n_model), ("data", "model"))

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ARCHS, get_config
+from repro.compat import make_mesh_compat
 from repro.data.pipeline import TokenPipeline
 from repro.models import model as M
 from repro.train import sharding as SH
@@ -67,10 +68,7 @@ def build_run(
         n = len(jax.devices())
         nd = max(1, n // 2) if n > 1 else 1
         nm = max(1, n // nd)
-        mesh = jax.make_mesh(
-            (nd, nm), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = make_mesh_compat((nd, nm), ("data", "model"))
     opt_cfg = OptConfig(total_steps=steps, warmup_steps=max(1, steps // 20))
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = init_opt_state(params, opt_cfg)

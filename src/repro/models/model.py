@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map_compat
 from repro.models import layers as L
 from repro.models.config import ArchConfig
 
@@ -212,9 +213,8 @@ def _embed(cfg: ArchConfig, params, tokens, act_spec):
     def local(tab, tok):
         return tab[tok]
 
-    out = jax.shard_map(
-        local, mesh=mesh, in_specs=(tspec, P(data_sp, None)),
-        out_specs=ospec, check_vma=False,
+    out = shard_map_compat(
+        local, mesh=mesh, in_specs=(tspec, P(data_sp, None)), out_specs=ospec,
     )(table, tokens)
     return out.astype(jnp.dtype(cfg.dtype))
 

@@ -3,7 +3,9 @@ event-level simulator (Plane A)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import baselines
 from repro.core.cache import BUCKET_SLOTS, ComputeCache, CoolingMap

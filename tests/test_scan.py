@@ -1,0 +1,289 @@
+"""Range-scan subsystem tests: the leaf_scan Pallas kernel vs its oracle,
+and ``make_dex_scan`` (Plane B) vs ``HostBTree.scan`` / the event simulator
+(Plane A) on uniform and zipfian start keys, including scans that cross
+partition/subtree boundaries and empty-result scans.
+
+Multi-device routing parity (n_route=2 across a partition boundary at the
+mesh level) lives in tests/mesh_check.py, exercised via the ``slow``
+subprocess test in tests/test_dex_mesh.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dex as dex_mod
+from repro.core import pool as pool_mod
+from repro.core import scan as scan_mod
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN
+from repro.compat import make_mesh_compat
+from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.data import ycsb
+from repro.kernels import ops, ref
+
+
+def _dataset(n, seed=0, space=None):
+    rng = np.random.default_rng(seed)
+    space = space or 8 * n
+    return np.sort(rng.choice(space, size=n, replace=False).astype(np.int64) + 1)
+
+
+# ---------------------------------------------------------------------------
+# leaf_scan kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestLeafScanKernel:
+    def _window(self, b, hops, seed, per_leaf=44):
+        """Realistic leaf windows: sorted keys, KEY_MAX tails per leaf row."""
+        rng = np.random.default_rng(seed)
+        w = hops * FANOUT
+        k = np.full((b, w), KEY_MAX, np.int64)
+        v = np.zeros((b, w), np.int64)
+        for i in range(b):
+            base = rng.integers(1, 1 << 40)
+            keys = base + np.cumsum(rng.integers(1, 9, size=hops * per_leaf))
+            for h in range(hops):
+                seg = keys[h * per_leaf : (h + 1) * per_leaf]
+                k[i, h * FANOUT : h * FANOUT + per_leaf] = seg
+                v[i, h * FANOUT : h * FANOUT + per_leaf] = seg * 3
+        return k, v
+
+    @pytest.mark.parametrize("b", [1, 7, 64, 130])
+    def test_matches_ref(self, b):
+        rng = np.random.default_rng(b)
+        k, v = self._window(b, hops=3, seed=b)
+        valid = k != KEY_MAX
+        start = np.array(
+            [row[va][rng.integers(0, va.sum())] for row, va in zip(k, valid)],
+            np.int64,
+        )
+        start[::2] += 1  # fall between keys
+        cnt = rng.integers(0, 70, size=b).astype(np.int32)
+        got = ops.leaf_scan(jnp.asarray(k), jnp.asarray(v), jnp.asarray(start),
+                            jnp.asarray(cnt), max_count=48)
+        want = ref.leaf_scan_ref(jnp.asarray(k), jnp.asarray(v),
+                                 jnp.asarray(start), jnp.asarray(cnt),
+                                 max_count=48)
+        for g, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w_))
+
+    def test_edge_cases(self):
+        k = np.full((4, FANOUT), KEY_MAX, np.int64)
+        k[0, :5] = [-9, -3, 0, 4, 7]          # negative keys
+        k[1, :3] = [10, 20, 30]
+        v = np.arange(4 * FANOUT, dtype=np.int64).reshape(4, FANOUT)
+        start = np.array([-10, 25, 1, KEY_MAX - 1], np.int64)
+        cnt = np.array([3, 9, 5, 5], np.int32)  # [2]: empty window, [3]: above all
+        ok, ov, taken = ops.leaf_scan(
+            jnp.asarray(k), jnp.asarray(v), jnp.asarray(start),
+            jnp.asarray(cnt), max_count=8)
+        rk, rv, rt = ref.leaf_scan_ref(
+            jnp.asarray(k), jnp.asarray(v), jnp.asarray(start),
+            jnp.asarray(cnt), max_count=8)
+        np.testing.assert_array_equal(np.asarray(ok), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(taken), np.asarray(rt))
+        assert np.asarray(taken).tolist() == [3, 1, 0, 0]
+        assert np.asarray(ok)[0, :3].tolist() == [-9, -3, 0]
+
+    def test_count_clipped_to_max_count(self):
+        k, v = self._window(2, hops=2, seed=9)
+        start = k[:, 0].copy()
+        cnt = np.array([500, 500], np.int32)
+        ok, _, taken = ops.leaf_scan(
+            jnp.asarray(k), jnp.asarray(v), jnp.asarray(start),
+            jnp.asarray(cnt), max_count=16)
+        assert (np.asarray(taken) == 16).all()
+        assert (np.asarray(ok) != KEY_MAX).all()
+
+
+# ---------------------------------------------------------------------------
+# make_dex_scan vs HostBTree.scan vs Simulator (single-device mesh)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_scan_setup(keys, *, level_m=1, max_count=48, use_kernel=True):
+    vals = keys * 5
+    pool, meta = pool_mod.build_pool(keys, vals, level_m=level_m, fill=0.7,
+                                     n_shards=1)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(n_route=1, n_memory=1, cache_sets=128,
+                                cache_ways=4, route_capacity_factor=2.0)
+    state = dex_mod.init_state(
+        pool, meta, cfg, np.array([KEY_MIN, KEY_MAX], np.int64))
+    scan = jax.jit(scan_mod.make_dex_scan(
+        meta, cfg, mesh, max_count=max_count, use_kernel=use_kernel))
+    return state, scan
+
+
+def _expected(host, start, count):
+    if count <= 0:
+        return []
+    return [k for _, ks in host.scan(int(start), int(count)) for k in ks][:count]
+
+
+def _assert_scan_parity(keys, starts, counts, *, level_m=1, max_count=48,
+                        use_kernel=True):
+    host = HostBTree(keys, keys * 5, fill=0.7)
+    state, scan = _mesh_scan_setup(keys, level_m=level_m, max_count=max_count,
+                                   use_kernel=use_kernel)
+    state, ok, ov, taken = scan(state, jnp.asarray(starts), jnp.asarray(counts))
+    ok, ov, taken = np.asarray(ok), np.asarray(ov), np.asarray(taken)
+    for i in range(starts.size):
+        exp = _expected(host, starts[i], int(counts[i]))
+        got = ok[i][ok[i] != KEY_MAX].tolist()
+        assert got == exp, (i, int(starts[i]), int(counts[i]))
+        assert int(taken[i]) == len(exp)
+        np.testing.assert_array_equal(
+            ov[i][: len(exp)], np.asarray(exp, np.int64) * 5)
+        assert (ov[i][len(exp):] == 0).all()
+    return state
+
+
+class TestMeshScanParity:
+    @pytest.mark.parametrize("level_m", [0, 1, 2])
+    def test_uniform_starts(self, level_m):
+        keys = _dataset(4000, seed=level_m)
+        rng = np.random.default_rng(level_m + 10)
+        starts = rng.choice(keys, size=220).astype(np.int64)
+        starts[::4] += 1                       # between-key starts
+        counts = rng.integers(0, 49, size=220).astype(np.int64)
+        _assert_scan_parity(keys, starts, counts, level_m=level_m)
+
+    def test_zipfian_starts(self):
+        keys = _dataset(4000, seed=3)
+        z = ycsb.ZipfianGenerator(keys.size, theta=0.99, seed=5)
+        idx = ycsb.scramble(z.draw_ranks(220), keys.size)
+        starts = keys[idx]
+        counts = np.full(220, 37, np.int64)
+        _assert_scan_parity(keys, starts, counts)
+
+    def test_empty_and_boundary_scans(self):
+        keys = _dataset(2000, seed=4)
+        starts = np.array([
+            keys[-1],            # last key: partial result
+            keys[-1] + 1,        # past the end: empty
+            KEY_MAX - 1,         # far past the end: empty
+            1 if keys[0] > 1 else keys[0],  # at/below the min
+            keys[0] - 1 if keys[0] > 1 else keys[0],
+        ], np.int64)
+        counts = np.array([10, 10, 10, 10, 10], np.int64)
+        _assert_scan_parity(keys, starts, counts)
+
+    def test_subtree_crossing_long_scans(self):
+        # counts large enough that every scan spans multiple leaves and
+        # regularly crosses level-M subtree (memory-column) boundaries
+        keys = _dataset(3000, seed=6)
+        rng = np.random.default_rng(7)
+        starts = rng.choice(keys, size=120).astype(np.int64)
+        counts = np.full(120, 128, np.int64)
+        _assert_scan_parity(keys, starts, counts, max_count=128)
+
+    def test_ref_compaction_path(self):
+        keys = _dataset(1500, seed=8)
+        rng = np.random.default_rng(9)
+        starts = rng.choice(keys, size=64).astype(np.int64)
+        counts = rng.integers(1, 33, size=64).astype(np.int64)
+        _assert_scan_parity(keys, starts, counts, use_kernel=False)
+
+    def test_load_shedding_is_explicit_never_truncated(self):
+        """Lanes whose routing/fetch buckets overflow must report taken == -1
+        (and count in STAT_DROPS), not silently return partial results."""
+        keys = _dataset(3000, seed=20)
+        host = HostBTree(keys, keys * 5, fill=0.7)
+        vals = keys * 5
+        pool, meta = pool_mod.build_pool(keys, vals, level_m=1, fill=0.7,
+                                         n_shards=1)
+        mesh = make_mesh_compat((1, 1), ("data", "model"))
+        # capacity factor < 1 forces both route- and fetch-bucket overflow
+        cfg = dex_mod.DexMeshConfig(n_route=1, n_memory=1, cache_sets=128,
+                                    cache_ways=4, route_capacity_factor=0.5)
+        state = dex_mod.init_state(
+            pool, meta, cfg, np.array([KEY_MIN, KEY_MAX], np.int64))
+        scan = jax.jit(scan_mod.make_dex_scan(meta, cfg, mesh, max_count=32))
+        rng = np.random.default_rng(21)
+        starts = rng.choice(keys, size=128).astype(np.int64)
+        counts = np.full(128, 20, np.int64)
+        st2, ok, ov, taken = scan(state, jnp.asarray(starts), jnp.asarray(counts))
+        ok, taken = np.asarray(ok), np.asarray(taken)
+        shed = taken < 0
+        assert shed.any(), "capacity 0.5 must shed some lanes"
+        assert (~shed).any(), "some lanes must survive"
+        # shed lanes: empty rows, explicit failure marker
+        assert (ok[shed] == KEY_MAX).all()
+        assert (np.asarray(ov)[shed] == 0).all()
+        assert int(np.asarray(st2.stats)[:, dex_mod.STAT_DROPS].sum()) >= shed.sum()
+        # surviving lanes are exactly correct
+        for i in np.where(~shed)[0]:
+            exp = _expected(host, starts[i], int(counts[i]))
+            assert ok[i][ok[i] != KEY_MAX].tolist() == exp, i
+            assert int(taken[i]) == len(exp)
+
+    def test_repeat_batch_hits_cache_and_matches_simulator(self):
+        keys = _dataset(3000, seed=12)
+        rng = np.random.default_rng(13)
+        starts = rng.choice(keys, size=128).astype(np.int64)
+        counts = rng.integers(1, 40, size=128).astype(np.int64)
+        state = _assert_scan_parity(keys, starts, counts)
+        # warmed cache: a second pass must record hits and the same results
+        host = HostBTree(keys, keys * 5, fill=0.7)
+        _, scan = _mesh_scan_setup(keys)
+        st2, ok2, _, t2 = scan(state, jnp.asarray(starts), jnp.asarray(counts))
+        stats = np.asarray(st2.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_HITS] > 0
+        assert stats[dex_mod.STAT_DROPS] == 0
+        assert stats[dex_mod.STAT_OPS] == 2 * 128
+        ok2 = np.asarray(ok2)
+        for i in range(starts.size):
+            exp = _expected(host, starts[i], int(counts[i]))
+            assert ok2[i][ok2[i] != KEY_MAX].tolist() == exp
+
+        # Plane A runs the identical ops through Simulator._op_scan against
+        # the same ground-truth tree: the per-op record sets must agree
+        sim = Simulator(host, SimConfig(n_compute=2, n_mem_servers=2), seed=1)
+        ops_arr = np.full(starts.size, ycsb.OP_SCAN, np.int32)
+        sim.run(ops_arr, starts, scan_lens=counts.astype(np.int32))
+        assert sim.totals().ops == starts.size
+        assert sim.totals().rdma_read > 0
+        for i in range(starts.size):
+            assert [k for _, ks in sim.tree.scan(int(starts[i]), int(counts[i]))
+                    for k in ks][: int(counts[i])] == _expected(
+                        host, starts[i], int(counts[i]))
+
+
+# ---------------------------------------------------------------------------
+# YCSB-E generation
+# ---------------------------------------------------------------------------
+
+
+class TestYcsbScanLens:
+    def test_uniform_scan_lens(self):
+        ds = _dataset(2000, seed=1)
+        wl = ycsb.generate("ycsb-e", ds, 5000, seed=2, scan_len=100,
+                           scan_len_dist="uniform")
+        assert wl.scan_lens is not None and wl.scan_lens.shape == (5000,)
+        assert wl.scan_lens.min() >= 1 and wl.scan_lens.max() <= 100
+        frac_scan = float(np.mean(wl.ops == ycsb.OP_SCAN))
+        assert 0.9 < frac_scan < 1.0           # 95% scans
+        assert np.mean(wl.ops == ycsb.OP_INSERT) > 0.01
+
+    def test_fixed_default_unchanged(self):
+        ds = _dataset(1000, seed=2)
+        wl = ycsb.generate("scan-intensive", ds, 1000, seed=3)
+        assert wl.scan_lens is None and wl.scan_len == 100
+
+    def test_bad_dist_rejected(self):
+        ds = _dataset(100, seed=3)
+        with pytest.raises(ValueError):
+            ycsb.generate("ycsb-e", ds, 10, scan_len_dist="pareto")
+
+    def test_simulator_consumes_per_op_lens(self):
+        ds = _dataset(1500, seed=4)
+        host = HostBTree(ds, fill=0.7)
+        sim = Simulator(host, SimConfig(n_compute=2, n_mem_servers=2), seed=5)
+        wl = ycsb.generate("ycsb-e", ds, 400, seed=6, scan_len=40,
+                           scan_len_dist="uniform")
+        sim.run(wl.ops, wl.keys, scan_lens=wl.scan_lens)
+        assert sim.totals().ops == 400

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_config
+from repro.compat import make_mesh_compat, shard_map_compat
 from repro.data.pipeline import TokenPipeline
 from repro.launch.train import build_run, train
 from repro.models import model as M
@@ -211,10 +212,7 @@ class TestEndToEnd:
         )
         train(run, 5, ckpt_every=5, log_every=100)
         # restore onto a "different" mesh (1x1 here; geometry-independent API)
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = make_mesh_compat((1, 1), ("data", "model"))
         (p2, o2), step, _ = reshard_checkpoint(
             run.ckpt, (run.params, run.opt_state), mesh, run.cfg
         )
@@ -231,9 +229,7 @@ class TestEndToEnd:
         if len(jax.devices()) < 1:
             pytest.skip("no devices")
         from repro.train.optimizer import compressed_psum
-        mesh = jax.make_mesh(
-            (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh_compat((1,), ("data",))
         g = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
                         jnp.float32)
         err = jnp.zeros_like(g)
@@ -242,11 +238,10 @@ class TestEndToEnd:
             return compressed_psum(g, err, "data")
 
         out, new_err = jax.jit(
-            jax.shard_map(
+            shard_map_compat(
                 f, mesh=mesh,
                 in_specs=(jax.sharding.PartitionSpec(),) * 2,
                 out_specs=(jax.sharding.PartitionSpec(),) * 2,
-                check_vma=False,
             )
         )(g, err)
         np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=0.05)
