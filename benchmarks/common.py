@@ -11,14 +11,12 @@ verb counts come from the mechanistic simulator (core/sim.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional
 
-import numpy as np
 
 from repro.core import baselines
 from repro.core.cost_model import HardwareModel, ThroughputReport, analyze
-from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.core.sim import HostBTree, Simulator
 from repro.data import ycsb
 
 N_KEYS = 200_000          # paper: 200M (1/1000 scale)

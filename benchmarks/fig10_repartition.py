@@ -4,9 +4,7 @@ Paper claims: repartitioning finishes < 2 s for 256MB-1GB caches; the cost
 is (1) flushing dirty cache pages, (2) moving a range boundary (metadata);
 after it, throughput dips only for cache re-warm."""
 
-import numpy as np
-
-from benchmarks.common import DEFAULT_CACHE_RATIO, N_KEYS
+from benchmarks.common import N_KEYS
 from repro.core import baselines
 from repro.core.partition import LogicalPartitions
 from repro.core.sim import HostBTree, Simulator

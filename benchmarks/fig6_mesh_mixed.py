@@ -1,0 +1,236 @@
+"""Figs. 6-7 companion: the mixed read/write YCSB mixes (A, B, D)
+end-to-end on the *mesh plane* (Plane B), next to the event simulator's
+counter-based numbers on identical traces.
+
+Each workload batch is split by op type into three masked sub-batches
+(inactive lanes carry KEY_MAX) and driven through ``make_dex_lookup``,
+``make_dex_update`` and ``make_dex_insert`` — real collectives, real cache
+state, real Pallas leaf-write merges — with shed inserts replayed through
+the host SMO path (``drain_splits``) between batches.  Results are
+cross-validated per batch against a ``HostBTree`` mirror that replays the
+same ops, and the mesh plane's remote read/write counters are compared
+against the simulator running the *write-through* DEX preset (``dex-wt``,
+the exact protocol the mesh implements) on the very same op/key arrays.
+
+Run with ``PYTHONPATH=src python benchmarks/fig6_mesh_mixed.py [--quick]``
+or via the suite: ``PYTHONPATH=src python -m benchmarks.run --only
+fig6mesh``.  On hosts without accelerators it forces an 8-device CPU mesh
+(2 route x 4 memory) when devices allow, the same topology as
+tests/mesh_check.py.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import baselines  # noqa: E402
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import write as write_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+BATCH = 1024
+UPDATE_XOR = 0x5A5A  # update value = key ^ 0x5A5A, matching Simulator._op_update
+
+MIXES = ("ycsb-a", "ycsb-b", "ycsb-d")
+
+
+def _build_ops(meta, cfg, mesh):
+    lookup = jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh))
+    update = jax.jit(write_mod.make_dex_update(meta, cfg, mesh))
+    insert = jax.jit(write_mod.make_dex_insert(meta, cfg, mesh))
+    return lookup, update, insert
+
+
+def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7,
+                                     n_shards=4)
+    host = HostBTree(dataset, vals, fill=0.7)
+
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=512, cache_ways=4,
+        policy="fetch",  # the protocol dex-wt prices: one-sided reads+writes
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    shardings = dex_mod.state_shardings(mesh, cfg)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    lookup, update, insert = _build_ops(meta, cfg, mesh)
+
+    n_total = n_warm_batches + n_batches
+    wl = ycsb.generate(name, dataset, n_total * BATCH, theta=0.99, seed=11)
+    ops, keys = wl.ops, wl.keys
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    n_drains = 0
+    stats_warm = None
+    t_start = time.perf_counter()
+    for b in range(n_total):
+        if b == n_warm_batches:
+            # warm phase over (paper §8.1): snapshot counters, restart clock
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+            t_start = time.perf_counter()
+        bo = ops[b * BATCH : (b + 1) * BATCH]
+        bk = keys[b * BATCH : (b + 1) * BATCH]
+        lk = np.where(bo == ycsb.OP_LOOKUP, bk, KEY_MAX)
+        uk = np.where(bo == ycsb.OP_UPDATE, bk, KEY_MAX)
+        ik = np.where(bo == ycsb.OP_INSERT, bk, KEY_MAX)
+        uv = uk ^ UPDATE_XOR
+        state, found, got_v = lookup(state, put(lk))
+        state, _ru = update(state, put(uk), put(uv))
+        state, ri = insert(state, put(ik), put(ik))
+        # cross-validate a sample of this batch's lookups against the mirror
+        # BEFORE replaying its writes (the lookup phase precedes them)
+        found, got_v = np.asarray(found), np.asarray(got_v)
+        lanes = np.where(bo == ycsb.OP_LOOKUP)[0]
+        for i in rng.choice(lanes, size=min(16, lanes.size), replace=False):
+            hv = host.get(int(bk[i]))
+            assert bool(found[i]) == (hv is not None), (name, b, i)
+            if hv is not None:
+                assert int(got_v[i]) == hv, (name, b, i, int(got_v[i]), hv)
+        # host mirror replays the same phased batch
+        for k in bk[bo == ycsb.OP_UPDATE]:
+            host.update(int(k), int(k) ^ UPDATE_XOR)
+        ri = np.asarray(ri)
+        ins_mask = bo == ycsb.OP_INSERT
+        for k, r in zip(bk[ins_mask], ri[ins_mask]):
+            if r == write_mod.STATUS_OK:
+                host.insert(int(k), int(k))
+        shed = ins_mask & (ri == write_mod.STATUS_SPLIT)
+        if shed.any():
+            n_drains += 1
+            state, meta = write_mod.drain_splits(
+                state, meta, cfg, host, bk[shed], bk[shed], bounds
+            )
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s),
+                state, dex_mod.state_shardings(mesh, cfg),
+            )
+            lookup, update, insert = _build_ops(meta, cfg, mesh)
+    jax.block_until_ready(state.stats)
+    dt = time.perf_counter() - t_start
+
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    meas = slice(n_warm_batches * BATCH, None)
+    n_ops = int(stats[dex_mod.STAT_OPS])
+    n_write_ops = int(np.sum(
+        (ops[meas] == ycsb.OP_UPDATE) | (ops[meas] == ycsb.OP_INSERT)
+    ))
+    mesh_reads = stats[dex_mod.STAT_FETCHES] / max(n_ops, 1)
+    mesh_writes = stats[dex_mod.STAT_WRITES] / max(n_ops, 1)
+
+    # Plane A on the *identical* trace: write-through DEX preset, matched
+    # topology (one cache per mesh chip, within-row dispersion), matched
+    # per-traversal cache capacity (sets x ways nodes) and P_A, same
+    # warm/measure split
+    sim_tree = HostBTree(dataset, vals, fill=0.7, level_m=1,
+                         n_mem_servers=n_memory)
+    sim_cfg = baselines.dex_write_through(
+        n_compute=n_route * n_memory,
+        route_dispersion=n_memory,
+        coherence_batch=BATCH,
+        n_mem_servers=n_memory,
+        level_m=1,
+        p_admit_leaf=cfg.p_admit_leaf_pct / 100.0,
+        cache_bytes=cfg.cache_sets * cfg.cache_ways * 1024,
+    )
+    sim = Simulator(sim_tree, sim_cfg, seed=3)
+    warm = slice(0, n_warm_batches * BATCH)
+    sim.run(ops[warm], keys[warm])
+    sim.reset_counters()
+    sim.run(ops[meas], keys[meas])
+    per_op = sim.totals().per_op()
+    sim_reads = per_op["node_reads"]
+    sim_writes = per_op["writes"]
+
+    rows = [
+        f"mesh,{name},ops_per_s,{n_ops / dt:.1f}",
+        f"mesh,{name},remote_reads_per_op,{mesh_reads:.4f}",
+        f"mesh,{name},remote_writes_per_op,{mesh_writes:.4f}",
+        f"mesh,{name},splits_shed,{stats[dex_mod.STAT_SPLITS]}",
+        f"mesh,{name},drains,{n_drains}",
+        f"mesh,{name},dropped,{stats[dex_mod.STAT_DROPS]}",
+        f"sim,{name},node_reads_per_op,{sim_reads:.4f}",
+        f"sim,{name},writes_per_op,{sim_writes:.4f}",
+    ]
+    summary = {
+        f"{name}_mesh_writes_per_op": float(mesh_writes),
+        f"{name}_sim_writes_per_op": float(sim_writes),
+        f"{name}_mesh_reads_per_op": float(mesh_reads),
+        f"{name}_sim_reads_per_op": float(sim_reads),
+        f"{name}_write_ops_frac": n_write_ops / ops.size,
+    }
+    # both planes price the identical protocol on the identical trace with
+    # matched cache topology: the per-op remote verb counters must agree
+    if n_write_ops:
+        rel_w = abs(mesh_writes - sim_writes) / max(sim_writes, 1e-9)
+        assert rel_w < 0.10, (
+            f"{name}: mesh writes/op {mesh_writes:.4f} vs sim "
+            f"{sim_writes:.4f} ({rel_w:.1%} apart)"
+        )
+    rel_r = abs(mesh_reads - sim_reads) / max(sim_reads, 1e-9)
+    assert rel_r < 0.10, (
+        f"{name}: mesh reads/op {mesh_reads:.4f} vs sim "
+        f"{sim_reads:.4f} ({rel_r:.1%} apart)"
+    )
+    return rows, summary
+
+
+def run(quick: bool = False):
+    n_keys = 30_000 if quick else 100_000
+    n_batches = 4 if quick else 8
+    n_warm_batches = 2 if quick else 4
+    rng = np.random.default_rng(5)
+    dataset = ycsb.make_dataset(n_keys, seed=0)
+    rows = ["plane,workload,metric,value"]
+    summary = {}
+    for name in MIXES:
+        r, s = _run_mix(name, dataset, n_batches, n_warm_batches, rng)
+        rows += r
+        summary.update(s)
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

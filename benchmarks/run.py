@@ -5,20 +5,25 @@ Usage::
     PYTHONPATH=src python -m benchmarks.run            # full suite
     PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed subset
     PYTHONPATH=src python -m benchmarks.run --only fig6,tab2
+    PYTHONPATH=src python -m benchmarks.run --quick --json results.json
 
 Each module prints CSV rows plus ``# claim`` comment lines comparing against
-the paper's published numbers; EXPERIMENTS.md snapshots these outputs."""
+the paper's published numbers; EXPERIMENTS.md snapshots these outputs.
+``--json`` additionally writes every module's rows/summary (plus timing) to
+a machine-readable file — CI uploads it as a perf-trajectory artifact."""
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import time
 import traceback
 
 MODULES = [
     ("fig6", "benchmarks.fig6_skewed"),
+    ("fig6mesh", "benchmarks.fig6_mesh_mixed"),
     ("fig7", "benchmarks.fig7_uniform"),
     ("tab2", "benchmarks.tab2_rdma_stats"),
     ("fig8", "benchmarks.fig8_ablation"),
@@ -42,10 +47,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(k for k, _ in MODULES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows/summaries of every module to PATH")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
     failures = []
+    results = {}
     for key, modname in MODULES:
         if only and key not in only:
             continue
@@ -57,10 +65,22 @@ def main(argv=None) -> None:
             print("\n".join(rows))
             for k, v in summary.items():
                 print(f"# {k}: {v}")
+            results[key] = {
+                "rows": rows,
+                "summary": {k: float(v) for k, v in summary.items()},
+                "seconds": round(time.time() - t0, 2),
+            }
         except Exception as e:
             failures.append((key, e))
+            results[key] = {"error": repr(e)}
             traceback.print_exc()
         print(f"# [{key}] took {time.time() - t0:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"quick": args.quick, "results": results}, f, indent=2
+            )
+        print(f"# wrote {args.json}")
     if failures:
         print(f"\n{len(failures)} benchmark module(s) failed: "
               f"{[k for k, _ in failures]}")

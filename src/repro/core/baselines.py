@@ -23,8 +23,6 @@ Modeling notes (recorded per DESIGN.md §2.1):
 
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core.sim import SimConfig
 
 
@@ -35,6 +33,15 @@ def dex(**kw) -> SimConfig:
 def dex_cache_only(**kw) -> SimConfig:
     """DEX without opportunistic offloading (ablation middle bar, Fig. 8)."""
     return SimConfig(name="dex-cache", offloading=False, **kw)
+
+
+def dex_write_through(**kw) -> SimConfig:
+    """DEX with write-through leaf writes and no offloading: the exact
+    protocol the mesh plane's write path (core/write.py) implements, used
+    for counter-level cross-validation (benchmarks/fig6_mesh_mixed.py)."""
+    return SimConfig(
+        name="dex-wt", offloading=False, write_through=True, **kw
+    )
 
 
 def dex_partition_only(**kw) -> SimConfig:
@@ -133,6 +140,7 @@ def offload_only(**kw) -> SimConfig:
 ALL = {
     "dex": dex,
     "dex-cache": dex_cache_only,
+    "dex-wt": dex_write_through,
     "dex-partition": dex_partition_only,
     "naive": naive_rdma_btree,
     "sherman": sherman_like,

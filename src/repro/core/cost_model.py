@@ -28,7 +28,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.sim import SimConfig, Simulator
+from repro.core.sim import Simulator
 
 
 @dataclasses.dataclass

@@ -26,7 +26,6 @@ on predicted bytes instead of measured latencies (DESIGN.md §2.1).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -48,7 +47,16 @@ OFFLOAD_REQ_BYTES = 16
 OFFLOAD_RESP_BYTES = 16
 
 # stat counter indices
-STAT_OPS, STAT_HITS, STAT_FETCHES, STAT_OFFLOADS, STAT_DROPS, N_STATS = range(6)
+(
+    STAT_OPS,
+    STAT_HITS,
+    STAT_FETCHES,
+    STAT_OFFLOADS,
+    STAT_DROPS,
+    STAT_SPLITS,   # inserts shed to the host SMO path (core/write.py)
+    STAT_WRITES,   # remote leaf-write messages (RDMA WRITE analogue)
+    N_STATS,
+) = range(8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +92,7 @@ class DexCache(NamedTuple):
     children: jax.Array  # [Dev, sets, ways, FANOUT] int32
     values: jax.Array    # [Dev, sets, ways, FANOUT] int64
     fifo: jax.Array      # [Dev, sets] int32 (FIFO-within-set pointer)
+    ver: jax.Array       # [Dev, sets, ways] int32 node version at admit time
 
 
 class DexState(NamedTuple):
@@ -92,6 +101,8 @@ class DexState(NamedTuple):
     boundaries: jax.Array  # [n_route + 1] int64, replicated
     miss_ema: jax.Array    # [Dev, levels] f32 per-level miss-rate EMA
     stats: jax.Array       # [Dev, N_STATS] int64
+    versions: jax.Array    # [Dev, n_nodes] int32 per-node write version
+    occupancy: jax.Array   # [S, C] int32 keys per node (pool-aligned shard)
 
 
 def init_cache(cfg: DexMeshConfig) -> DexCache:
@@ -102,6 +113,7 @@ def init_cache(cfg: DexMeshConfig) -> DexCache:
         children=jnp.zeros((d, s, w, FANOUT), jnp.int32),
         values=jnp.zeros((d, s, w, FANOUT), jnp.int64),
         fifo=jnp.zeros((d, s), jnp.int32),
+        ver=jnp.zeros((d, s, w), jnp.int32),
     )
 
 
@@ -112,12 +124,15 @@ def init_state(
     boundaries: np.ndarray,
 ) -> DexState:
     levels = meta.levels_in_subtree
+    n_nodes = meta.n_subtrees_padded * meta.subtree_cap
     return DexState(
         pool=pool,
         cache=init_cache(cfg),
         boundaries=jnp.asarray(boundaries, jnp.int64),
         miss_ema=jnp.ones((cfg.n_devices, levels), jnp.float32),
         stats=jnp.zeros((cfg.n_devices, N_STATS), jnp.int64),
+        versions=jnp.zeros((cfg.n_devices, n_nodes), jnp.int32),
+        occupancy=jnp.sum(pool.pool_keys != KEY_MAX, axis=-1).astype(jnp.int32),
     )
 
 
@@ -136,7 +151,8 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         pool_values=ns(P(cfg.memory_axis)),
     )
     cache_spec = DexCache(
-        tags=ns(dev), keys=ns(dev), children=ns(dev), values=ns(dev), fifo=ns(dev)
+        tags=ns(dev), keys=ns(dev), children=ns(dev), values=ns(dev),
+        fifo=ns(dev), ver=ns(dev),
     )
     return DexState(
         pool=pool_spec,
@@ -144,6 +160,8 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         boundaries=ns(P()),
         miss_ema=ns(dev),
         stats=ns(dev),
+        versions=ns(dev),
+        occupancy=ns(P(cfg.memory_axis)),
     )
 
 
@@ -153,23 +171,33 @@ def state_shardings(mesh, cfg: DexMeshConfig):
 # ---------------------------------------------------------------------------
 
 
-def _cache_probe(cache: DexCache, cfg: DexMeshConfig, gid: jax.Array):
-    """Probe the per-chip cache.  Returns (hit, keys_row, children_row,
-    values_row, set_idx)."""
+def _cache_probe(cache: DexCache, cfg: DexMeshConfig, versions: jax.Array,
+                 gid: jax.Array):
+    """Probe the per-chip cache.  A tag match only counts as a hit when the
+    entry's admit-time version still equals the node's current version
+    (``versions`` is this chip's replicated per-node version table) — rows
+    made stale by another chip's write are rejected and re-fetched.  Returns
+    ``(hit, keys_row, children_row, values_row, set_idx, present)`` where
+    ``present`` marks a tag match regardless of version (a stale copy that
+    ``_cache_admit`` will refresh in place)."""
     set_idx = (_hash64(gid) % jnp.uint64(cfg.cache_sets)).astype(jnp.int32)
     tags = cache.tags[0, set_idx]                        # [B, W]
-    eq = tags == gid[:, None]
+    tagged = tags == gid[:, None]
+    fresh = cache.ver[0, set_idx] == versions[gid][:, None]
+    eq = tagged & fresh
     hit = jnp.any(eq, axis=-1)
+    present = jnp.any(tagged, axis=-1)  # tag match, possibly version-stale
     way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
     k = cache.keys[0, set_idx, way]
     c = cache.children[0, set_idx, way]
     v = cache.values[0, set_idx, way]
-    return hit, k, c, v, set_idx
+    return hit, k, c, v, set_idx, present
 
 
 def _cache_admit(
     cache: DexCache,
     cfg: DexMeshConfig,
+    versions: jax.Array,
     gid: jax.Array,
     set_idx: jax.Array,
     admit: jax.Array,
@@ -177,16 +205,28 @@ def _cache_admit(
     rows_c: jax.Array,
     rows_v: jax.Array,
 ) -> DexCache:
-    """FIFO-within-set insertion of fetched rows (cooling-map analogue)."""
-    way = (cache.fifo[0, set_idx] % cfg.cache_ways).astype(jnp.int32)
+    """FIFO-within-set insertion of fetched rows (cooling-map analogue).
+    Admitted rows are stamped with the node's current version.  A row whose
+    tag is already present (a version-stale copy being refetched) is
+    *refreshed in place* — same way, no FIFO advance — so staleness heals
+    without re-rolling the admission dice."""
+    tagged = cache.tags[0, set_idx] == gid[:, None]
+    present = jnp.any(tagged, axis=-1)
+    pway = jnp.argmax(tagged, axis=-1).astype(jnp.int32)
+    fway = (cache.fifo[0, set_idx] % cfg.cache_ways).astype(jnp.int32)
+    way = jnp.where(present, pway, fway)
     # non-admitting lanes scatter out of bounds (dropped)
     sidx = jnp.where(admit, set_idx, cfg.cache_sets)
     tags = cache.tags.at[0, sidx, way].set(gid, mode="drop")
     keys = cache.keys.at[0, sidx, way].set(rows_k, mode="drop")
     children = cache.children.at[0, sidx, way].set(rows_c, mode="drop")
     values = cache.values.at[0, sidx, way].set(rows_v, mode="drop")
-    fifo = cache.fifo.at[0, sidx].add(1, mode="drop")
-    return DexCache(tags=tags, keys=keys, children=children, values=values, fifo=fifo)
+    fifo = cache.fifo.at[0, jnp.where(present, cfg.cache_sets, sidx)].add(
+        1, mode="drop"
+    )
+    ver = cache.ver.at[0, sidx, way].set(versions[gid], mode="drop")
+    return DexCache(tags=tags, keys=keys, children=children, values=values,
+                    fifo=fifo, ver=ver)
 
 
 _fetch_rows = routing.fetch_rows  # re-export; shared with core/scan.py
@@ -197,27 +237,34 @@ def cached_fetch_level(
     meta: PoolMeta,
     cfg: DexMeshConfig,
     cache: DexCache,
+    versions: jax.Array,
     gid: jax.Array,
     want: jax.Array,
     admit_ok: jax.Array,
 ):
-    """One level of the cached traversal, shared by lookup and scan: probe
-    the per-chip cache for ``gid`` rows, remote-fetch the misses, and admit
-    fetched rows where ``admit_ok`` (a load-shed fetch's placeholder row is
-    never admitted).  Returns ``(rows_k, rows_c, rows_v, hit, miss, shed,
-    new_cache)`` with ``hit``/``miss`` already masked by ``want``."""
-    hit, ck, cc, cv, set_idx = _cache_probe(cache, cfg, gid)
+    """One level of the cached traversal, shared by lookup, scan and the
+    write path: probe the per-chip cache for ``gid`` rows (rejecting entries
+    whose admit-time version is stale against ``versions``), remote-fetch
+    the misses, and admit fetched rows where ``admit_ok`` (a load-shed
+    fetch's placeholder row is never admitted).  Returns ``(rows_k, rows_c,
+    rows_v, hit, miss, shed, n_msgs, new_cache)`` with ``hit``/``miss`` already
+    masked by ``want``; ``n_msgs`` counts the coalesced remote-read messages
+    (duplicate same-node misses in a batch share one message)."""
+    hit, ck, cc, cv, set_idx, present = _cache_probe(cache, cfg, versions, gid)
     hit = hit & want
     miss = want & ~hit
-    fk, fc, fv, shed = _fetch_rows(pool, meta, cfg, gid, miss)
+    fk, fc, fv, shed, n_msgs = _fetch_rows(pool, meta, cfg, gid, miss)
     rows_k = jnp.where(hit[:, None], ck, fk)
     rows_c = jnp.where(hit[:, None], cc, fc)
     rows_v = jnp.where(hit[:, None], cv, fv)
+    # version-stale tagged rows always refresh in place; the admission dice
+    # only gates brand-new entries
     new_cache = _cache_admit(
-        cache, cfg, gid, set_idx, miss & admit_ok & ~shed,
+        cache, cfg, versions, gid, set_idx,
+        miss & (admit_ok | present) & ~shed,
         rows_k, rows_c, rows_v,
     )
-    return rows_k, rows_c, rows_v, hit, miss, shed, new_cache
+    return rows_k, rows_c, rows_v, hit, miss, shed, n_msgs, new_cache
 
 
 def _offload_walk(
@@ -270,9 +317,10 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
     """
     levels = meta.levels_in_subtree
 
-    def local_fn(pool, cache, boundaries, miss_ema, stats, keys):
+    def local_fn(pool, cache, boundaries, miss_ema, stats, versions, keys):
         b = keys.shape[0]
         n_route = cfg.n_route
+        vers = versions[0]
 
         # --- 1. route to the owning partition (logical partitioning, §4) ---
         owner = (
@@ -310,22 +358,28 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
             new_cache = cache
             miss_counts = []
             n_fetch = jnp.int64(0)
+            n_hit = jnp.int64(0)
             shed = jnp.zeros(q.shape, bool)  # lanes whose fetch was load-shed
             for lvl in range(levels):
                 gid = meta.node_gid(subtree, local)
-                # lazy admission: inner always, leaves with P_A (§5.4)
+                # lazy admission: inner always, leaves with P_A (§5.4);
+                # op counter + lane index re-roll the dice per access
                 if lvl == levels - 1:
-                    p_ok = routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct)
+                    p_ok = routing.leaf_admit_dice(
+                        gid, cfg.p_admit_leaf_pct,
+                        salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
+                    )
                 else:
                     p_ok = jnp.ones(q.shape, bool)
-                rows_k, rows_c, rows_v, hit, miss, f_drop, new_cache = (
+                rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
                     cached_fetch_level(
-                        pool, meta, cfg, new_cache, gid, live, p_ok
+                        pool, meta, cfg, new_cache, vers, gid, live, p_ok
                     )
                 )
                 shed = shed | f_drop
                 miss_counts.append(jnp.sum(miss))
-                n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+                n_fetch = n_fetch + n_msgs
+                n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
                 if lvl < levels - 1:
                     cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
                     slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
@@ -343,8 +397,7 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
                 [m.astype(jnp.float32) / total.astype(jnp.float32)
                  for m in miss_counts]
             )
-            hits = levels * jnp.sum(live).astype(jnp.int64) - n_fetch
-            return (found, vals, new_cache, rates, n_fetch, hits,
+            return (found, vals, new_cache, rates, n_fetch, n_hit,
                     jnp.int64(0), jnp.sum(shed).astype(jnp.int64))
 
         # --- 4b. offload the whole sub-path (two-sided path) ---------------
@@ -394,26 +447,23 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
         pool_children=P(cfg.memory_axis),
         pool_values=P(cfg.memory_axis),
     )
-    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev, fifo=dev)
+    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
+                           fifo=dev, ver=dev)
 
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, P(cfg.all_axes)),
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, P(cfg.all_axes)),
         out_specs=(cache_specs, dev, dev, P(cfg.all_axes), P(cfg.all_axes)),
     )
 
     def lookup(state: DexState, keys: jax.Array):
         new_cache, new_ema, new_stats, found, vals = sharded(
             state.pool, state.cache, state.boundaries, state.miss_ema,
-            state.stats, keys,
+            state.stats, state.versions, keys,
         )
-        new_state = DexState(
-            pool=state.pool,
-            cache=new_cache,
-            boundaries=state.boundaries,
-            miss_ema=new_ema,
-            stats=new_stats,
+        new_state = state._replace(
+            cache=new_cache, miss_ema=new_ema, stats=new_stats
         )
         return new_state, found, vals
 

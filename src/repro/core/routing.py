@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import shard_map_compat
+from repro.compat import shard_map_compat  # noqa: F401  (re-export)
 from repro.core.nodes import KEY_MAX
 from repro.core.pool import PoolMeta, SubtreePool
 
@@ -40,12 +40,17 @@ def hash64(x: jax.Array) -> jax.Array:
     return x ^ (x >> jnp.uint64(33))
 
 
-def leaf_admit_dice(gid: jax.Array, pct) -> jax.Array:
-    """Lazy leaf-admission coin flip (paper §5.4, P_A): deterministic per
-    node id so lookup and scan agree on which leaves are cacheable."""
-    luck = (hash64(gid ^ jnp.int64(0x9E3779B9)) % jnp.uint64(100)).astype(
-        jnp.int32
-    )
+def leaf_admit_dice(gid: jax.Array, pct, salt=None) -> jax.Array:
+    """Lazy leaf-admission coin flip (paper §5.4, P_A), deterministic per
+    (node id, ``salt``).  Ops pass their chip's running op counter plus the
+    lane index as the salt, so every *access* re-rolls the dice — a hot
+    leaf that loses the flip can still be admitted on a later access, the
+    same per-miss coin-flip semantics the paper (and the Plane-A simulator)
+    uses, just derived from a hash instead of an RNG stream."""
+    x = gid ^ jnp.int64(0x9E3779B9)
+    if salt is not None:
+        x = x ^ (jnp.int64(salt) * jnp.int64(0x5851F42D4C957F2D))
+    luck = (hash64(x) % jnp.uint64(100)).astype(jnp.int32)
     return luck < pct
 
 
@@ -120,6 +125,40 @@ def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.A
     return r.reshape(buf.shape)
 
 
+def device_linear_index(cfg, mesh) -> jax.Array:
+    """This device's linear position over *all* mesh axes (route-major),
+    matching how ``P(cfg.all_axes)``-sharded batch dims are chunked.  Used to
+    derive globally unique per-lane priorities for write conflict
+    resolution."""
+    idx = jnp.int32(0)
+    for ax in cfg.all_axes:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def route_linear_index(cfg, mesh) -> jax.Array:
+    """This device's linear position along the composed route axes (matches
+    the leading axis of :func:`gather_route`)."""
+    idx = jnp.int32(0)
+    for ax in cfg.route_axes:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def gather_route(x: jax.Array, cfg) -> jax.Array:
+    """All-gather ``x`` across the route axes: ``[...] -> [n_route, ...]``.
+
+    The write path uses this to make every route-replica of a memory
+    column's pool shard apply the *same* batch of writes: the pool is only
+    sharded over the memory axis, so devices along the route axes hold
+    replicas that must mutate identically (the SPMD analogue of "the memory
+    server applies the write once, all compute servers see it")."""
+    shape = x.shape
+    for ax in reversed(cfg.route_axes):
+        x = jax.lax.all_gather(x, ax, axis=0)
+    return x.reshape((cfg.n_route,) + shape)
+
+
 def fetch_rows(
     pool: SubtreePool,
     meta: PoolMeta,
@@ -129,11 +168,33 @@ def fetch_rows(
 ):
     """Remote-read node rows (the RDMA READ analogue): request/response
     all_to_all over the memory axis.  Lanes with ``want == False`` send a
-    padded no-op request."""
+    padded no-op request.
+
+    Requests are *coalesced*: duplicate gids on this chip (a hot node
+    missed by many lanes of one batch) collapse into a single remote read
+    whose response fans back out to every requesting lane — fewer messages
+    and far less routing-bucket pressure under zipfian skew.  Returns
+    ``(keys, children, values, dropped, n_msgs)`` where ``n_msgs`` is the
+    number of coalesced read messages actually served (the RDMA-READ count
+    for stats)."""
     b = gid.shape[0]
+    gidr = jnp.where(want, gid, KEY_MAX)
+    order = jnp.argsort(gidr, stable=True)
+    gs = gidr[order]
+    head = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
+    rep_sorted = jax.lax.cummax(
+        jnp.where(head, jnp.arange(b), 0), axis=0
+    )                                         # sorted-pos of my run's head
+    rep = (
+        jnp.zeros((b,), jnp.int32)
+        .at[order].set(order[rep_sorted].astype(jnp.int32))
+    )                                         # lane -> representative lane
+    is_head = jnp.zeros((b,), bool).at[order].set(head)
+    want_h = want & is_head                   # only representatives send
+
     s_per = meta.n_subtrees_padded // cfg.n_memory
     subtree = (gid // meta.subtree_cap).astype(jnp.int32)
-    owner = jnp.where(want, subtree // s_per, cfg.n_memory)  # OOB when unused
+    owner = jnp.where(want_h, subtree // s_per, cfg.n_memory)  # OOB if unused
     cap = route_capacity(b, cfg.n_memory, cfg.route_capacity_factor)
     buf, lane, dropped = pack_by_dest(gid, owner.astype(jnp.int32), cfg.n_memory, cap)
     req = a2a(buf, cfg.memory_axis)                        # [n_mem, cap]
@@ -155,6 +216,9 @@ def fetch_rows(
     out_k = unpack_to_lanes(rk, lane, b, KEY_MAX)
     out_c = unpack_to_lanes(rc, lane, b, 0)
     out_v = unpack_to_lanes(rv, lane, b, 0)
+    # fan the representative's response (and shed fate) out to duplicates;
     # only lanes that actually wanted a fetch can be load-shed: no-op lanes
     # share the OOB sentinel bucket, whose overflow is meaningless
-    return out_k, out_c, out_v, dropped & want
+    shed = dropped[rep] & want
+    n_msgs = jnp.sum(want_h & ~dropped).astype(jnp.int64)
+    return out_k[rep], out_c[rep], out_v[rep], shed, n_msgs

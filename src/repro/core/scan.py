@@ -97,9 +97,10 @@ def make_dex_scan(
     if interpret is None:
         interpret = use_interpret()  # compiled kernel on real TPU backends
 
-    def local_fn(pool, cache, boundaries, stats, start_keys, counts):
+    def local_fn(pool, cache, boundaries, stats, versions, start_keys, counts):
         b = start_keys.shape[0]
         n_route = cfg.n_route
+        vers = versions[0]
 
         # --- 1. route to the partition owning the start key ----------------
         owner = (
@@ -128,11 +129,13 @@ def make_dex_scan(
         always = jnp.ones(q.shape, bool)  # inner nodes: admit unconditionally
         for _ in range(levels - 1):
             gid = meta.node_gid(subtree, local)
-            rows_k, rows_c, _rows_v, hit, miss, f_drop, new_cache = (
-                cached_fetch_level(pool, meta, cfg, new_cache, gid, live, always)
+            rows_k, rows_c, _rows_v, hit, miss, f_drop, n_msgs, new_cache = (
+                cached_fetch_level(
+                    pool, meta, cfg, new_cache, vers, gid, live, always
+                )
             )
             shed = shed | f_drop
-            n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+            n_fetch = n_fetch + n_msgs
             n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
             slot = jnp.maximum(
                 jnp.sum(rows_k <= q[:, None], axis=-1) - 1, 0
@@ -164,17 +167,20 @@ def make_dex_scan(
                 0,
             )
             gid = meta.node_gid(st_h, lo_h)
-            # lazy leaf admission with P_A (§5.4)
-            p_ok = routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct)
-            rows_k, _rows_c, rows_v, hit, miss, f_drop, new_cache = (
+            # lazy leaf admission with P_A (§5.4), re-rolled per access
+            p_ok = routing.leaf_admit_dice(
+                gid, cfg.p_admit_leaf_pct,
+                salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
+            )
+            rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
                 cached_fetch_level(
-                    pool, meta, cfg, new_cache, gid, in_range, p_ok
+                    pool, meta, cfg, new_cache, vers, gid, in_range, p_ok
                 )
             )
             shed = shed | f_drop
             rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
             rows_v = jnp.where(in_range[:, None], rows_v, 0)
-            n_fetch = n_fetch + jnp.sum(miss).astype(jnp.int64)
+            n_fetch = n_fetch + n_msgs
             n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
             window_k.append(rows_k)
             window_v.append(rows_v)
@@ -224,12 +230,13 @@ def make_dex_scan(
         pool_children=P(cfg.memory_axis),
         pool_values=P(cfg.memory_axis),
     )
-    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev, fifo=dev)
+    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
+                           fifo=dev, ver=dev)
 
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev),
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev),
         out_specs=(cache_specs, dev, dev, dev, dev),
     )
 
@@ -239,16 +246,11 @@ def make_dex_scan(
             state.cache,
             state.boundaries,
             state.stats,
+            state.versions,
             start_keys.astype(jnp.int64),
             counts.astype(jnp.int64),
         )
-        new_state = DexState(
-            pool=state.pool,
-            cache=new_cache,
-            boundaries=state.boundaries,
-            miss_ema=state.miss_ema,
-            stats=new_stats,
-        )
+        new_state = state._replace(cache=new_cache, stats=new_stats)
         return new_state, keys, values, taken
 
     return scan

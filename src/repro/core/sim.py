@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import btree as btree_mod
 from repro.core.cache import ComputeCache, DEFAULT_P_ADMIT_LEAF
-from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, NULL, node_nbytes
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, NULL
 from repro.core.partition import LogicalPartitions
 
 NODE_BYTES = 1024          # paper: 1KB nodes
@@ -409,6 +409,21 @@ class SimConfig:
     logical_partitioning: bool = True
     caching: bool = True
     offloading: bool = True
+    route_dispersion: int = 1               # caches serving each partition;
+                                            # > 1 models the mesh plane's
+                                            # source-dispersed within-row
+                                            # routing (fig6_mesh_mixed cross-
+                                            # validation): an op lands on a
+                                            # random one of the partition's
+                                            # `route_dispersion` caches
+    coherence_batch: int = 1                # ops per batch window when
+                                            # pricing the mesh plane's
+                                            # *batched* execution: repeated
+                                            # misses of one node coalesce
+                                            # into one read per window, and
+                                            # write-staleness marks flush at
+                                            # window boundaries (the pmax
+                                            # version sync)
 
     # --- cache behaviour (Fig. 9) ---
     cache_leaves: bool = True               # False for Sherman/SMART-like
@@ -422,6 +437,12 @@ class SimConfig:
     rdma_optimistic_reads: bool = False     # version+node+version for ALL reads
                                             # (shared-everything baselines)
     immediate_leaf_writeback: bool = True   # overridden by partitioning
+    write_through: bool = False             # every leaf write goes home at
+                                            # once (cached copy refreshed, no
+                                            # dirty state) — the protocol the
+                                            # mesh plane (core/write.py) uses,
+                                            # enabling counter-level cross-
+                                            # validation between the planes
     single_record_leaves: bool = False      # SMART-like trie: 1 record/leaf
     write_combining: bool = False           # SMART: consolidate concurrent
                                             # writes (Table 2: ~8x fewer)
@@ -467,7 +488,13 @@ class Simulator:
         self.tree = tree
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
-        n_parts = cfg.n_compute if cfg.logical_partitioning else 1
+        if cfg.n_compute % max(cfg.route_dispersion, 1):
+            raise ValueError("n_compute must be a multiple of route_dispersion")
+        n_parts = (
+            cfg.n_compute // max(cfg.route_dispersion, 1)
+            if cfg.logical_partitioning
+            else 1
+        )
         lo = int(np.min(tree.K[tree.LV == 0][tree.K[tree.LV == 0] != KEY_MAX]))
         hi = int(
             np.max(
@@ -495,6 +522,15 @@ class Simulator:
             for i in range(cfg.n_compute)
         ]
         self.counters = [Counters() for _ in range(cfg.n_compute)]
+        # write-through coherence state: nodes whose cached copy on server s
+        # is version-stale (kept cached, refreshed in place on next access)
+        self.stale = [set() for _ in range(cfg.n_compute)]
+        # batched-execution state (coherence_batch > 1): per-server nodes
+        # already fetched this window, and write-staleness marks deferred
+        # to the next window boundary
+        self._window_fetched = [set() for _ in range(cfg.n_compute)]
+        self._pending_writes = []           # (writer server, leaf)
+        self._ops_in_window = 0
         self.mem_busy = np.zeros((cfg.n_mem_servers,), dtype=np.float64)
         self.mem_reqs = np.zeros((cfg.n_mem_servers,), dtype=np.int64)
         self.estimators = [
@@ -533,6 +569,12 @@ class Simulator:
     def _owner(self, key: int) -> int:
         if self.cfg.logical_partitioning:
             p = int(self.partitions.owner_of(np.asarray([key]))[0])
+            d = max(self.cfg.route_dispersion, 1)
+            if d > 1:
+                # one of the partition's d caches, chosen per op — the mesh
+                # plane's within-row dispersion (requests reach the route
+                # row's chips by source lane, not by key)
+                return (p * d + int(self.rng.integers(d))) % self.cfg.n_compute
             return p % self.cfg.n_compute
         self._rr = (self._rr + 1) % self.cfg.n_compute
         return self._rr
@@ -545,6 +587,47 @@ class Simulator:
                 np.asarray([self.tree.FLO[nid]]), np.asarray([self.tree.FHI[nid]])
             )[0]
         )
+
+    def _write_coherence(self, server: int, nid: int, *,
+                         drop_self: bool = False) -> None:
+        """Write-through-and-invalidate (core/write.py): after a leaf write,
+        every *other* cache serving the partition (``route_dispersion`` > 1)
+        holds a version-stale copy — it stays cached but must pay one remote
+        read to refresh on its next access.  The writer's own copy is
+        refreshed in place (update) or dropped (insert: the key set
+        shifted, ``drop_self``).  Under batched pricing
+        (``coherence_batch`` > 1) sibling staleness flushes at the window
+        boundary — the mesh's pmax version sync — so same-window writers
+        of one leaf all end up fresh."""
+        self.stale[server].discard(nid)
+        if drop_self and self.caches[server].invalidate(nid):
+            self.counters[server].coherence_invalidations += 1
+        if self.cfg.coherence_batch > 1:
+            self._pending_writes.append((server, nid))
+            return
+        # the version table is global: every other cache's copy goes stale,
+        # not just the writer's dispersion group (scans cache across
+        # partitions), matching _flush_window's batched flush
+        for s in range(self.cfg.n_compute):
+            if s != server and nid in self.caches[s]:
+                self.stale[s].add(nid)
+                self.counters[s].coherence_invalidations += 1
+
+    def _flush_window(self) -> None:
+        """Window boundary: publish deferred staleness (every cache that is
+        not one of the window's writers of a leaf goes stale on it) and
+        clear the per-window read-coalescing sets."""
+        writers = {}
+        for server, nid in self._pending_writes:
+            writers.setdefault(nid, set()).add(server)
+        for nid, ws in writers.items():
+            for s in range(self.cfg.n_compute):
+                if s not in ws and nid in self.caches[s]:
+                    self.stale[s].add(nid)
+                    self.counters[s].coherence_invalidations += 1
+        self._pending_writes.clear()
+        for w in self._window_fetched:
+            w.clear()
 
     def _cacheable(self, nid: int) -> bool:
         cfg = self.cfg
@@ -642,6 +725,11 @@ class Simulator:
                 self._op_delete(server, key)
             else:
                 raise ValueError(f"bad op {op}")
+            if self.cfg.coherence_batch > 1:
+                self._ops_in_window += 1
+                if self._ops_in_window >= self.cfg.coherence_batch:
+                    self._flush_window()
+                    self._ops_in_window = 0
 
     # Traversal core: walk the ground-truth path, consulting the cache and
     # issuing remote verbs per the configured protocol.  Returns the list of
@@ -658,10 +746,36 @@ class Simulator:
             if cfg.caching and self._cacheable(nid):
                 r = cache.lookup(nid)
                 if r == "hit":
+                    if nid in self.stale[server]:
+                        # version-stale copy: one remote read refreshes it
+                        # in place (no re-admission dice), mirroring the
+                        # mesh's version-checked probe + in-place refresh
+                        lat = self._remote_read(
+                            server, nid, self._is_shared(nid)
+                        )
+                        self.op_clock[server] += lat
+                        self.stale[server].discard(nid)
+                        self._window_fetched[server].add(nid)
+                        visited.append((nid, True))
+                        continue
                     c.local_accesses += 1
                     self.op_clock[server] += cfg.t_cached_access
                     visited.append((nid, True))
                     continue
+            if (
+                cfg.coherence_batch > 1
+                and nid in self._window_fetched[server]
+            ):
+                # batched read coalescing: this node was already fetched in
+                # the current window — the row is on chip, no second read
+                # (the mesh's duplicate-gid request combining); admission
+                # still re-rolls its dice per access
+                c.local_accesses += 1
+                self.op_clock[server] += cfg.t_cached_access
+                if cfg.caching and self._cacheable(nid):
+                    cache.admit(nid)
+                visited.append((nid, cfg.caching and nid in cache))
+                continue
             shared = self._is_shared(nid)
             levels_left = lvl + 1  # nodes from here to leaf inclusive
             if (
@@ -678,6 +792,8 @@ class Simulator:
                     return visited, True
             lat = self._remote_read(server, nid, shared)
             self.op_clock[server] += lat
+            if cfg.coherence_batch > 1:
+                self._window_fetched[server].add(nid)
             if self._cacheable(nid):
                 cache.admit(nid)
             visited.append((nid, False))
@@ -706,7 +822,11 @@ class Simulator:
         leaf, was_cached = visited[-1]
         shared = self._is_shared(leaf)
         if cfg.logical_partitioning and not shared:
-            if was_cached or (self.cfg.caching and leaf in cache):
+            if cfg.write_through:
+                c.add_write()                # write-through: always go home
+                self.op_clock[server] += cfg.t_rdma_write
+                self._write_coherence(server, leaf)
+            elif was_cached or (self.cfg.caching and leaf in cache):
                 cache.mark_dirty(leaf)       # deferred write-back
             else:
                 c.add_write()                # not cached: write home now
@@ -739,7 +859,7 @@ class Simulator:
                     cfg.t_rdma_cas + cfg.t_rdma_read + cfg.t_rdma_write
                 )
             else:
-                if cfg.caching and snode in cache:
+                if cfg.caching and not cfg.write_through and snode in cache:
                     cache.mark_dirty(snode)
                 else:
                     c.add_write()
@@ -748,11 +868,15 @@ class Simulator:
         leaf = self.tree.search_path(key)[-1]
         shared = self._is_shared(leaf)
         if cfg.logical_partitioning and not shared:
-            if cfg.caching and leaf in cache:
+            if cfg.caching and not cfg.write_through and leaf in cache:
                 cache.mark_dirty(leaf)
             else:
                 c.add_write()
                 self.op_clock[server] += cfg.t_rdma_write
+                if cfg.write_through:
+                    # an insert shifts the leaf's key set: the writer drops
+                    # its own copy, siblings' copies go stale
+                    self._write_coherence(server, leaf, drop_self=True)
         else:
             self._shared_write(server)
 

@@ -1,0 +1,542 @@
+"""Batched writes on the TPU mesh (Plane B): the paper's update/insert
+protocols (§7) as SPMD collectives.
+
+Two operations share one dataflow skeleton with the lookup/scan descent
+(core/routing.py, ``cached_fetch_level``):
+
+* ``make_dex_update`` — in-place value overwrite.  Route each ``(key,
+  value)`` to the partition owning the key, descend through the per-chip
+  cache to the target leaf, then issue **one request/response all_to_all
+  round over the memory axis** carrying ``(leaf_gid, slot, key, value,
+  prio)`` records.  The owning memory column applies them CAS-style: the
+  write lands only if ``key`` still sits at ``slot`` (the RDMA-CAS
+  analogue), conflicting writers to one slot are resolved by batch priority
+  (last-in-batch wins, matching sequential replay), and the response carries
+  the leaf's merged post-batch value row.
+* ``make_dex_insert`` — append into leaf slack slots.  Same route + descent
+  (inner levels only); the owning memory column groups incoming keys by
+  target leaf, converts duplicates of existing keys into value updates, and
+  merges fresh keys into the leaf's slack via the ``leaf_write`` Pallas
+  kernel, bumping the per-leaf occupancy array.  **Leaves that would
+  overflow are shed**: none of their staged inserts apply, the lanes come
+  back with status ``STATUS_SPLIT`` and are counted in ``STAT_SPLITS`` —
+  mirroring the scan subsystem's load-shed discipline — and the caller
+  replays them through the host tree's true structural-modification path
+  between batches (:func:`drain_splits`).  This replaces the paper's
+  latch-based SMOs: an SPMD batch cannot take per-node latches, but it can
+  refuse the structural change and let the host replay it.
+
+Cache coherence is **write-through-and-invalidate** with per-leaf versions:
+the writing chip refreshes (update) or drops (insert) its *own* cached row
+and bumps the leaf's entry in the replicated per-node version table
+(``DexState.versions``, pmax-synchronized across the mesh each batch), so
+*other* chips' stale rows fail the version check inside ``_cache_probe`` on
+their next hit and are re-fetched.
+
+Replica consistency: the pool shards only over the memory axis, so devices
+along the route axes hold replicas of each memory column.  The write round
+all-gathers the request buffers across the route axes
+(:func:`repro.core.routing.gather_route`) so every replica applies the
+identical batch.
+
+Result status codes (per lane): ``STATUS_OK`` applied; ``STATUS_MISS``
+no-op (update of an absent key / inactive lane); ``STATUS_SHED`` load-shed
+by a routing bucket (retryable, counted in ``STAT_DROPS``);
+``STATUS_SPLIT`` insert shed to the host SMO path (feed to
+:func:`drain_splits`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import routing
+from repro.core.dex import (
+    N_STATS,
+    STAT_DROPS,
+    STAT_FETCHES,
+    STAT_HITS,
+    STAT_OPS,
+    STAT_SPLITS,
+    STAT_WRITES,
+    DexCache,
+    DexMeshConfig,
+    DexState,
+    cached_fetch_level,
+    init_state,
+)
+from repro.core.nodes import FANOUT, KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool, build_pool, top_walk
+from repro.kernels.leaf_write import leaf_write
+from repro.kernels.ops import use_interpret
+from repro.kernels.ref import leaf_write_ref
+
+STATUS_MISS = 0    # update of an absent key / inactive lane: no-op
+STATUS_OK = 1      # write applied by the owning memory column
+STATUS_SPLIT = 2   # insert shed to the host SMO path (drain_splits)
+STATUS_SHED = -1   # routing-bucket load shed; retry (STAT_DROPS)
+
+
+def _seg_positions(mask: jax.Array, new_seg: jax.Array) -> jax.Array:
+    """Rank of each ``mask``-lane within its segment (segments are runs
+    delimited by ``new_seg`` over a sorted lane order)."""
+    inc = mask.astype(jnp.int32)
+    c = jnp.cumsum(inc)
+    base = jax.lax.cummax(jnp.where(new_seg, c - inc, 0), axis=0)
+    return c - inc - base
+
+
+def _apply_leaf_writes(
+    pool_keys: jax.Array,    # [S_local, C, F] this memory column's shard
+    pool_values: jax.Array,  # [S_local, C, F]
+    occupancy: jax.Array,    # [S_local, C]
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    gid: jax.Array,          # [N] int64 leaf gids (KEY_MAX = inactive lane)
+    slot: jax.Array,         # [N] int64 claimed slot (update mode only)
+    key: jax.Array,          # [N] int64
+    value: jax.Array,        # [N] int64
+    prio: jax.Array,         # [N] int64 globally unique batch priority
+    *,
+    is_insert: bool,
+    use_kernel: bool,
+    interpret: bool,
+):
+    """Apply one flat batch of leaf-write requests to the local pool shard.
+
+    Every route-replica of this memory column calls this with identical
+    inputs (see ``gather_route``), so the replicas stay consistent.  Returns
+    ``(new_pool_keys, new_pool_values, new_occupancy, status [N] int32,
+    rows_v_out [N, F] post-batch value rows)``.
+    """
+    n = gid.shape[0]
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    valid = gid != KEY_MAX
+    st = jnp.where(valid, (gid // meta.subtree_cap) % s_per, 0).astype(jnp.int32)
+    lo = jnp.where(valid, gid % meta.subtree_cap, 0).astype(jnp.int32)
+    row_k0 = pool_keys[st, lo]                              # [N, F] pre-batch
+
+    if is_insert:
+        eqk = row_k0 == key[:, None]
+        exists = jnp.any(eqk, axis=-1) & valid
+        slot32 = jnp.argmax(eqk, axis=-1).astype(jnp.int32)
+        live = valid
+    else:
+        # CAS: the key must still sit at the claimed slot
+        slot32 = jnp.clip(slot.astype(jnp.int32), 0, FANOUT - 1)
+        cur = jnp.take_along_axis(row_k0, slot32[:, None], axis=-1)[:, 0]
+        exists = valid & (cur == key)
+        live = exists
+    is_upd = exists  # staged as in-place value write (vs slack-slot insert)
+
+    # ---- conflict resolution: sort by (gid, key, prio); the last writer of
+    # each (gid, key) run wins, everything else is superseded (still counts
+    # as applied — sequential replay would have applied then overwritten it)
+    route_gid = jnp.where(live, gid, KEY_MAX)
+    order = jnp.lexsort((prio, key, route_gid))
+    g_s = route_gid[order]
+    k_s = key[order]
+    live_s = live[order]
+    diff = (g_s[1:] != g_s[:-1]) | (k_s[1:] != k_s[:-1])
+    new_run = jnp.concatenate([jnp.ones((1,), bool), diff])
+    run_id = jnp.cumsum(new_run) - 1
+    winner = jnp.concatenate([diff, jnp.ones((1,), bool)]) & live_s
+
+    # ---- segments: one per distinct target leaf ---------------------------
+    new_seg = jnp.concatenate([jnp.ones((1,), bool), g_s[1:] != g_s[:-1]])
+    seg_id = jnp.cumsum(new_seg) - 1
+    st_s = st[order]
+    lo_s = lo[order]
+    seg_st = (
+        jnp.zeros((n,), jnp.int32).at[seg_id].max(jnp.where(live_s, st_s, 0))
+    )
+    seg_lo = (
+        jnp.zeros((n,), jnp.int32).at[seg_id].max(jnp.where(live_s, lo_s, 0))
+    )
+
+    upd_w = winner & is_upd[order]
+    ins_w = winner & live_s & ~is_upd[order]                # insert mode only
+    # ---- overflow check: leaves whose fresh keys exceed the slack are shed
+    occ_lane = occupancy[st_s, lo_s]                        # [N]
+    n_new_seg = (
+        jnp.zeros((n,), jnp.int32).at[seg_id].add(ins_w.astype(jnp.int32))
+    )
+    over_lane = (occ_lane + n_new_seg[seg_id]) > FANOUT
+    ins_apply = ins_w & ~over_lane
+    upd_apply = upd_w  # in-place updates apply even when the leaf overflows
+
+    # ---- staged write matrices, one row per segment -----------------------
+    s_width = FANOUT
+    pos_u = _seg_positions(upd_apply, new_seg)
+    pos_i = _seg_positions(ins_apply, new_seg)
+    v_s = value[order]
+    slot_ss = slot32[order]
+    ur = jnp.where(upd_apply, seg_id, n)
+    uc = jnp.where(upd_apply, pos_u, s_width)
+    upd_slot_st = (
+        jnp.full((n, s_width), -1, jnp.int32)
+        .at[ur, uc].set(slot_ss, mode="drop")
+    )
+    upd_val_st = (
+        jnp.zeros((n, s_width), jnp.int64).at[ur, uc].set(v_s, mode="drop")
+    )
+    ir = jnp.where(ins_apply, seg_id, n)
+    ic = jnp.where(ins_apply, pos_i, s_width)
+    ins_key_st = (
+        jnp.full((n, s_width), KEY_MAX, jnp.int64)
+        .at[ir, ic].set(k_s, mode="drop")
+    )
+    ins_val_st = (
+        jnp.zeros((n, s_width), jnp.int64).at[ir, ic].set(v_s, mode="drop")
+    )
+
+    # ---- the masked scatter + merge itself (Pallas kernel or oracle) ------
+    rows_k = pool_keys[seg_st, seg_lo]
+    rows_v = pool_values[seg_st, seg_lo]
+    writer = leaf_write if use_kernel else leaf_write_ref
+    kw = {"interpret": interpret} if use_kernel else {}
+    new_k, new_v, new_occ = writer(
+        rows_k, rows_v, upd_slot_st, upd_val_st, ins_key_st, ins_val_st, **kw
+    )
+
+    seg_active = (
+        jnp.zeros((n,), bool).at[seg_id].max(upd_apply | ins_apply)
+    )
+    w_st = jnp.where(seg_active, seg_st, pool_keys.shape[0])  # OOB drop
+    out_pk = pool_keys.at[w_st, seg_lo].set(new_k, mode="drop")
+    out_pv = pool_values.at[w_st, seg_lo].set(new_v, mode="drop")
+    out_occ = occupancy.at[w_st, seg_lo].set(new_occ, mode="drop")
+
+    # ---- per-lane status: every lane inherits its (gid, key) winner's fate
+    outcome_w = jnp.where(
+        upd_apply | ins_apply,
+        STATUS_OK,
+        jnp.where(ins_w & over_lane, STATUS_SPLIT, STATUS_MISS),
+    ).astype(jnp.int32)
+    run_out = (
+        jnp.zeros((n,), jnp.int32)
+        .at[run_id].max(jnp.where(winner, outcome_w, 0))
+    )
+    status_s = jnp.where(live_s, run_out[run_id], STATUS_MISS)
+    status = jnp.zeros((n,), jnp.int32).at[order].set(status_s)
+
+    rows_v_out = out_pv[st, lo]                             # post-batch rows
+    return out_pk, out_pv, out_occ, status, rows_v_out
+
+
+def _make_dex_write(
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    mesh,
+    *,
+    is_insert: bool,
+    use_kernel: bool = True,
+    interpret: "bool | None" = None,
+):
+    """Shared builder for the two write ops (see module docstring)."""
+    levels = meta.levels_in_subtree
+    if interpret is None:
+        interpret = use_interpret()
+
+    def local_fn(pool, occupancy, cache, boundaries, stats, versions,
+                 keys, values):
+        b = keys.shape[0]
+        n_route = cfg.n_route
+        vers = versions[0]
+
+        # --- 1. route to the owning partition, carrying a globally unique
+        # batch priority so conflicting writers resolve as sequential replay
+        dev = routing.device_linear_index(cfg, mesh)
+        prio = dev.astype(jnp.int64) * b + jnp.arange(b, dtype=jnp.int64)
+        owner = (
+            jnp.searchsorted(boundaries, keys, side="right") - 1
+        ).astype(jnp.int32)
+        owner = jnp.clip(owner, 0, n_route - 1)
+        # spread inactive (KEY_MAX) lanes round-robin so they don't pile
+        # into the last partition's bucket
+        owner = jnp.where(
+            keys == KEY_MAX,
+            (jnp.arange(b) % n_route).astype(jnp.int32),
+            owner,
+        )
+        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
+        payload = jnp.stack([keys, values, prio], axis=-1)  # [B, 3]
+        buf, lane, dropped_r = routing.pack_by_dest(payload, owner, n_route, cap)
+        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 3]
+        q = routed[..., 0].reshape(-1)                      # [Q]
+        val = routed[..., 1].reshape(-1)
+        pr = routed[..., 2].reshape(-1)
+        live = q != KEY_MAX
+
+        # --- 2. cached descent to the target leaf --------------------------
+        subtree = top_walk(pool, meta, q)
+        subtree = jnp.where(live, subtree, 0)
+        local = jnp.zeros(q.shape, jnp.int32)
+        new_cache = cache
+        n_fetch = jnp.int64(0)
+        n_hit = jnp.int64(0)
+        shed = jnp.zeros(q.shape, bool)
+        found = live
+        wslot = jnp.zeros(q.shape, jnp.int32)
+        descent_levels = levels if not is_insert else levels - 1
+        for lvl in range(descent_levels):
+            gid = meta.node_gid(subtree, local)
+            if not is_insert and lvl == levels - 1:
+                p_ok = routing.leaf_admit_dice(
+                    gid, cfg.p_admit_leaf_pct,
+                    salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
+                )
+            else:
+                p_ok = jnp.ones(q.shape, bool)
+            rows_k, rows_c, _rows_v, hit, miss, f_drop, n_msgs, new_cache = (
+                cached_fetch_level(
+                    pool, meta, cfg, new_cache, vers, gid, live, p_ok
+                )
+            )
+            shed = shed | f_drop
+            n_fetch = n_fetch + n_msgs
+            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+            if lvl < levels - 1:
+                cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
+                slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+                local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
+            else:
+                # update: locate the slot for the CAS-style write
+                eq = rows_k == q[:, None]
+                found = jnp.any(eq, axis=-1) & live
+                wslot = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+        leaf_gid = meta.node_gid(subtree, local)
+
+        # --- 3. one write round to the owning memory column ----------------
+        want_w = live & found & ~shed
+        s_per = meta.n_subtrees_padded // cfg.n_memory
+        w_owner = jnp.where(want_w, subtree // s_per, cfg.n_memory)
+        wcap = routing.route_capacity(
+            q.shape[0], cfg.n_memory, cfg.route_capacity_factor
+        )
+        wpayload = jnp.stack(
+            [
+                jnp.where(want_w, leaf_gid, KEY_MAX),
+                wslot.astype(jnp.int64),
+                q,
+                val,
+                pr,
+            ],
+            axis=-1,
+        )                                                   # [Q, 5]
+        wbuf, wlane, dropped_w = routing.pack_by_dest(
+            wpayload, w_owner.astype(jnp.int32), cfg.n_memory, wcap
+        )
+        req = routing.a2a(wbuf, cfg.memory_axis)            # [n_mem, wcap, 5]
+        # every route-replica of this column applies the identical batch
+        req_all = routing.gather_route(req, cfg)            # [R, n_mem, wcap, 5]
+        flat = req_all.reshape(-1, 5)
+        new_pk, new_pv, new_occ, status_all, rows_v_all = _apply_leaf_writes(
+            pool.pool_keys, pool.pool_values, occupancy, meta, cfg,
+            flat[:, 0], flat[:, 1], flat[:, 2], flat[:, 3], flat[:, 4],
+            is_insert=is_insert, use_kernel=use_kernel, interpret=interpret,
+        )
+        # respond to this device's own route row
+        r_lin = routing.route_linear_index(cfg, mesh)
+        status_own = jnp.take(
+            status_all.reshape(cfg.n_route, cfg.n_memory, wcap), r_lin, axis=0
+        )
+        rows_own = jnp.take(
+            rows_v_all.reshape(cfg.n_route, cfg.n_memory, wcap, FANOUT),
+            r_lin, axis=0,
+        )
+        resp = jnp.concatenate(
+            [status_own[..., None].astype(jnp.int64), rows_own], axis=-1
+        )                                                   # [n_mem, wcap, F+1]
+        resp = routing.a2a(resp, cfg.memory_axis)
+        back = routing.unpack_to_lanes(resp, wlane, q.shape[0], 0)
+        wstatus = back[..., 0].astype(jnp.int32)
+        wrow_v = back[..., 1:]
+        applied = want_w & ~dropped_w & (wstatus == STATUS_OK)
+
+        # --- 4. write-through-and-invalidate + version bump ----------------
+        nv = vers[leaf_gid] + 1
+        set_idx = (
+            routing.hash64(leaf_gid) % jnp.uint64(cfg.cache_sets)
+        ).astype(jnp.int32)
+        eqt = new_cache.tags[0, set_idx] == leaf_gid[:, None]
+        chit = jnp.any(eqt, axis=-1) & applied
+        way = jnp.argmax(eqt, axis=-1).astype(jnp.int32)
+        sidx = jnp.where(chit, set_idx, cfg.cache_sets)
+        if is_insert:
+            # drop the chip's own (now key-shifted) cached row
+            new_tags = new_cache.tags.at[0, sidx, way].set(-1, mode="drop")
+            new_cache = new_cache._replace(tags=new_tags)
+        else:
+            # refresh the chip's own cached row with the authoritative
+            # post-batch values and stamp it with the bumped version
+            cvals = new_cache.values.at[0, sidx, way].set(wrow_v, mode="drop")
+            cver = new_cache.ver.at[0, sidx, way].set(
+                jnp.where(chit, nv, 0), mode="drop"
+            )
+            new_cache = new_cache._replace(values=cvals, ver=cver)
+        gsafe = jnp.where(applied, leaf_gid, vers.shape[0])
+        vers2 = vers.at[gsafe].max(nv, mode="drop")
+        new_versions = jax.lax.pmax(vers2[None, :], cfg.all_axes)
+
+        # --- 5. stats + result codes back to the requesting lanes ----------
+        res = jnp.where(
+            applied,
+            STATUS_OK,
+            jnp.where(
+                shed | (want_w & dropped_w),
+                STATUS_SHED,
+                jnp.where(wstatus == STATUS_SPLIT, STATUS_SPLIT, STATUS_MISS),
+            ),
+        )
+        res = jnp.where(live, res, STATUS_MISS)
+        upd = jnp.zeros((1, N_STATS), jnp.int64)
+        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
+        upd = upd.at[0, STAT_HITS].set(n_hit)
+        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
+        upd = upd.at[0, STAT_WRITES].set(
+            jnp.sum(want_w & ~dropped_w).astype(jnp.int64)
+        )
+        upd = upd.at[0, STAT_DROPS].set(
+            (jnp.sum(dropped_r) + jnp.sum(shed & live)
+             + jnp.sum(want_w & dropped_w)).astype(jnp.int64)
+        )
+        upd = upd.at[0, STAT_SPLITS].set(
+            jnp.sum(res == STATUS_SPLIT).astype(jnp.int64)
+        )
+        new_stats = stats + upd
+
+        resp2 = res.astype(jnp.int64).reshape(n_route, cap, 1)
+        back2 = routing.route_exchange(resp2, cfg, mesh, reverse=True)
+        out = routing.unpack_to_lanes(back2, lane, b, 0)
+        out_res = jnp.where(
+            dropped_r, STATUS_SHED, out[..., 0].astype(jnp.int32)
+        )
+        return (new_pk, new_pv, new_occ, new_cache, new_versions, new_stats,
+                out_res)
+
+    dev = P(cfg.all_axes)
+    pool_specs = SubtreePool(
+        top_keys=P(),
+        top_children=P(),
+        pool_keys=P(cfg.memory_axis),
+        pool_children=P(cfg.memory_axis),
+        pool_values=P(cfg.memory_axis),
+    )
+    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
+                           fifo=dev, ver=dev)
+    mem = P(cfg.memory_axis)
+
+    sharded = routing.shard_map_compat(
+        local_fn,
+        mesh=mesh,
+        in_specs=(pool_specs, mem, cache_specs, P(), dev, dev,
+                  P(cfg.all_axes), P(cfg.all_axes)),
+        out_specs=(mem, mem, mem, cache_specs, dev, dev, P(cfg.all_axes)),
+    )
+
+    def write(state: DexState, keys: jax.Array, values: jax.Array):
+        new_pk, new_pv, new_occ, new_cache, new_versions, new_stats, res = (
+            sharded(
+                state.pool, state.occupancy, state.cache, state.boundaries,
+                state.stats, state.versions,
+                keys.astype(jnp.int64), values.astype(jnp.int64),
+            )
+        )
+        new_pool = state.pool._replace(pool_keys=new_pk, pool_values=new_pv)
+        new_state = state._replace(
+            pool=new_pool,
+            occupancy=new_occ,
+            cache=new_cache,
+            versions=new_versions,
+            stats=new_stats,
+        )
+        return new_state, res
+
+    return write
+
+
+def make_dex_update(meta, cfg, mesh, *, use_kernel=True, interpret=None):
+    """Build the sharded in-place update:
+    ``(state, keys, values) -> (state, status)``.
+
+    ``keys``/``values`` are [B] globally sharded over all mesh axes;
+    ``status`` comes back in the caller's lane order (``STATUS_OK`` /
+    ``STATUS_MISS`` / ``STATUS_SHED``).  ``keys == KEY_MAX`` lanes are
+    inactive no-ops (useful for op-type-masked mixed batches).  Wrap with
+    ``jax.jit``."""
+    return _make_dex_write(
+        meta, cfg, mesh, is_insert=False,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+def make_dex_insert(meta, cfg, mesh, *, use_kernel=True, interpret=None):
+    """Build the sharded insert: ``(state, keys, values) -> (state, status)``.
+
+    Fresh keys append into their leaf's slack slots (occupancy-tracked);
+    keys that already exist become value updates; leaves that would overflow
+    shed their inserts with ``STATUS_SPLIT`` (counted in ``STAT_SPLITS``) —
+    replay them with :func:`drain_splits` between batches.  ``keys ==
+    KEY_MAX`` lanes are inactive no-ops.  Wrap with ``jax.jit``."""
+    return _make_dex_write(
+        meta, cfg, mesh, is_insert=True,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side split replay (the SMO path)
+# ---------------------------------------------------------------------------
+
+
+def host_items(host) -> "tuple[np.ndarray, np.ndarray]":
+    """All (key, value) pairs of a :class:`repro.core.sim.HostBTree` in
+    sorted key order."""
+    lv = np.asarray(host.LV)
+    nk = np.asarray(host.NK)
+    keys, vals = [], []
+    for nid in np.where(lv == 0)[0]:
+        m = int(nk[nid])
+        keys.append(np.asarray(host.K[nid, :m]))
+        vals.append(np.asarray(host.V[nid, :m]))
+    k = np.concatenate(keys) if keys else np.zeros((0,), np.int64)
+    v = np.concatenate(vals) if vals else np.zeros((0,), np.int64)
+    order = np.argsort(k, kind="stable")
+    return k[order], v[order]
+
+
+def drain_splits(
+    state: DexState,
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    host,
+    shed_keys: np.ndarray,
+    shed_values: np.ndarray,
+    boundaries: np.ndarray,
+):
+    """Replay shed inserts through the host tree's true eager-split SMO path
+    and rebuild the mesh state from the result.
+
+    ``host`` is the :class:`repro.core.sim.HostBTree` mirror the caller
+    keeps in sync (it must already contain every *applied* mesh write);
+    ``shed_keys``/``shed_values`` are the lanes that came back with
+    ``STATUS_SPLIT``, in original batch order.  Returns ``(new_state,
+    new_meta)`` — a freshly blocked pool (splits change the leaf layout, so
+    caches/versions restart cold; accumulated stats carry over).  Ops built
+    by ``make_dex_*`` must be rebuilt against ``new_meta``.
+    """
+    for k, v in zip(np.asarray(shed_keys), np.asarray(shed_values)):
+        host.insert(int(k), int(v))
+    items_k, items_v = host_items(host)
+    pool, new_meta = build_pool(
+        items_k, items_v,
+        level_m=meta.level_m,
+        fill=meta.per_node / FANOUT,
+        n_shards=cfg.n_memory,
+    )
+    new_state = init_state(pool, new_meta, cfg, boundaries)
+    return new_state._replace(stats=state.stats), new_meta

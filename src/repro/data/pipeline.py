@@ -11,7 +11,7 @@ The same partition tables as the DEX index route shard -> host (DESIGN.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

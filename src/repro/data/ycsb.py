@@ -26,6 +26,11 @@ WORKLOADS: Dict[str, Tuple[float, float, float, float]] = {
     # standard YCSB-E: 95% short range scans / 5% inserts — identical mix to
     # the paper's scan-intensive, kept as an alias for workload-suite users
     "ycsb-e": (0.05, 0.0, 0.0, 0.95),
+    # standard YCSB A/B/D aliases (the paper's mixed read/write mixes of
+    # Figs. 6-7); D models "read latest" as read-intensive with inserts
+    "ycsb-a": (0.0, 0.50, 0.50, 0.0),
+    "ycsb-b": (0.0, 0.95, 0.05, 0.0),
+    "ycsb-d": (0.05, 0.95, 0.0, 0.0),
 }
 
 

@@ -1,0 +1,192 @@
+"""Pallas kernel: batched leaf mutation for the mesh-plane write path.
+
+The compute core of ``core/write.py``: after the owning memory column has
+grouped a batch of write requests by target leaf (one row per touched leaf),
+this kernel applies, per 1KB leaf row,
+
+  1. a *masked value scatter* — staged in-place updates ``(slot, value)``
+     land at their slot via a one-hot compare+reduce (no scatter primitive);
+  2. a *rank-based insert merge* — staged new keys (pre-sorted and
+     deduplicated by the caller) are merged into the row's slack slots while
+     keeping the row sorted: every element's output column is its rank,
+     computed with branchless pairwise compares (row-vs-staged both ways),
+     then gathered one-hot.  This is the SPMD form of "append into the leaf's
+     slack space";
+  3. an *occupancy bump* — the new number of live keys per row.
+
+Caller contract (enforced by core/write.py): active staged insert keys are
+strictly ascending within a row, distinct from the row's existing keys, and
+the row has enough slack (overflowing leaves are shed *before* the kernel —
+the host SMO path replays them).  Staged updates target distinct slots.
+
+int64 keys/values travel as (hi, lo) int32 planes like kernels/leaf_scan.py
+(the TPU VPU has no native 64-bit lanes).  The pure-jnp oracle is
+``kernels/ref.py::leaf_write_ref``; ``interpret=True`` (the default off-TPU)
+runs the same body through the Pallas interpreter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.nodes import KEY_MAX
+
+BLOCK_B = 8
+
+# KEY_MAX = 0x7FFF_FFFF_FFFF_FFFF as (hi, lo-reinterpreted-signed) planes
+_KMAX_HI = np.int32(0x7FFFFFFF)
+_KMAX_LO = np.int32(-1)
+
+
+def _split_i64(x: jax.Array):
+    """int64 -> (hi int32, lo uint32-as-int32) planes."""
+    hi = (x >> 32).astype(jnp.int32)
+    lo = (x & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32).astype(jnp.int32)
+    return hi, lo
+
+
+def _join_i64(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return (hi.astype(jnp.int64) << 32) | lo.astype(jnp.uint32).astype(jnp.int64)
+
+
+def _lt_planes(ahi, alo, bhi, blo):
+    """(ahi,alo) < (bhi,blo) treating lo as unsigned."""
+    flip = jnp.int32(-0x80000000)
+    return (ahi < bhi) | ((ahi == bhi) & ((alo ^ flip) < (blo ^ flip)))
+
+
+def _make_kernel(fanout: int):
+    def kernel(
+        khi_ref, klo_ref, vhi_ref, vlo_ref,
+        us_ref, uvh_ref, uvl_ref,
+        ikh_ref, ikl_ref, ivh_ref, ivl_ref,
+        okh_ref, okl_ref, ovh_ref, ovl_ref, occ_ref,
+    ):
+        khi = khi_ref[...]                     # [B, F] int32 planes
+        klo = klo_ref[...]
+        vhi = vhi_ref[...]
+        vlo = vlo_ref[...]
+        us = us_ref[...]                       # [B, S] int32 (-1 inactive)
+        ikh = ikh_ref[...]                     # [B, S]
+        ikl = ikl_ref[...]
+
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, fanout), 2)
+
+        # 1. masked value scatter: staged update j lands at column us[j]
+        #    (one-hot compare + reduce; staged slots are distinct per row)
+        umask = us >= 0                        # [B, S]
+        onehot = umask[:, :, None] & (us[:, :, None] == col)      # [B, S, F]
+        has_u = jnp.any(onehot, axis=1)                           # [B, F]
+
+        def upd_pick(plane):
+            return jnp.sum(jnp.where(onehot, plane[:, :, None], 0), axis=1,
+                           dtype=jnp.int32)
+
+        v1h = jnp.where(has_u, upd_pick(uvh_ref[...]), vhi)
+        v1l = jnp.where(has_u, upd_pick(uvl_ref[...]), vlo)
+
+        # 2. rank-based insert merge.  Active staged keys are distinct from
+        #    each other and from the row's keys, so strict compares give a
+        #    total order; KEY_MAX padding never participates.
+        act = ~((ikh == _KMAX_HI) & (ikl == _KMAX_LO))            # [B, S]
+        validr = ~((khi == _KMAX_HI) & (klo == _KMAX_LO))         # [B, F]
+        # row element i keeps its index plus the staged keys below it
+        ins_below_row = act[:, :, None] & _lt_planes(
+            ikh[:, :, None], ikl[:, :, None], khi[:, None, :], klo[:, None, :]
+        )                                                         # [B, S, F]
+        rank_row = col[0] + jnp.sum(ins_below_row.astype(jnp.int32), axis=1)
+        # staged element j: actives before it plus the row keys below it
+        before = jnp.cumsum(act.astype(jnp.int32), axis=1) - act.astype(
+            jnp.int32
+        )                                                         # [B, S]
+        row_below_ins = validr[:, None, :] & _lt_planes(
+            khi[:, None, :], klo[:, None, :], ikh[:, :, None], ikl[:, :, None]
+        )                                                         # [B, S, F]
+        rank_ins = before + jnp.sum(row_below_ins.astype(jnp.int32), axis=2)
+
+        # 3. one-hot rank gather into the F output columns + occupancy bump
+        out_col = jax.lax.broadcasted_iota(jnp.int32, (1, fanout, 1), 1)
+        pick_row = validr[:, None, :] & (rank_row[:, None, :] == out_col)
+        pick_ins = act[:, None, :] & (rank_ins[:, None, :] == out_col)
+        hit = jnp.any(pick_row, axis=-1) | jnp.any(pick_ins, axis=-1)
+
+        def compact(plane_row, plane_ins, fill):
+            got = jnp.sum(
+                jnp.where(pick_row, plane_row[:, None, :], 0), axis=-1,
+                dtype=jnp.int32,
+            ) + jnp.sum(
+                jnp.where(pick_ins, plane_ins[:, None, :], 0), axis=-1,
+                dtype=jnp.int32,
+            )
+            return jnp.where(hit, got, fill)
+
+        okh_ref[...] = compact(khi, ikh, _KMAX_HI)
+        okl_ref[...] = compact(klo, ikl, _KMAX_LO)
+        ovh_ref[...] = compact(v1h, ivh_ref[...], 0)
+        ovl_ref[...] = compact(v1l, ivl_ref[...], 0)
+        occ_ref[...] = jnp.sum(hit, axis=-1, dtype=jnp.int32)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def leaf_write(
+    rows_k: jax.Array,    # [Q, F] int64 leaf key rows (KEY_MAX padding)
+    rows_v: jax.Array,    # [Q, F] int64 leaf value rows
+    upd_slot: jax.Array,  # [Q, S] int32 staged update slots (-1 inactive)
+    upd_val: jax.Array,   # [Q, S] int64 staged update values
+    ins_key: jax.Array,   # [Q, S] int64 staged insert keys (KEY_MAX inactive)
+    ins_val: jax.Array,   # [Q, S] int64 staged insert values
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+):
+    """Apply one batch of staged writes per leaf row.  Returns ``(new_keys
+    [Q, F] int64, new_values [Q, F] int64, new_occupancy [Q] int32)``."""
+    q, f = rows_k.shape
+    s = upd_slot.shape[1]
+    pad = (-q) % block_b
+    if pad:
+        rows_k = jnp.pad(rows_k, ((0, pad), (0, 0)), constant_values=KEY_MAX)
+        rows_v = jnp.pad(rows_v, ((0, pad), (0, 0)))
+        upd_slot = jnp.pad(upd_slot, ((0, pad), (0, 0)), constant_values=-1)
+        upd_val = jnp.pad(upd_val, ((0, pad), (0, 0)))
+        ins_key = jnp.pad(ins_key, ((0, pad), (0, 0)), constant_values=KEY_MAX)
+        ins_val = jnp.pad(ins_val, ((0, pad), (0, 0)))
+    qp = rows_k.shape[0]
+
+    khi, klo = _split_i64(rows_k)
+    vhi, vlo = _split_i64(rows_v)
+    uvh, uvl = _split_i64(upd_val)
+    ikh, ikl = _split_i64(ins_key)
+    ivh, ivl = _split_i64(ins_val)
+
+    grid = (qp // block_b,)
+    row = pl.BlockSpec((block_b, f), lambda i: (i, 0))
+    staged = pl.BlockSpec((block_b, s), lambda i: (i, 0))
+    lane = pl.BlockSpec((block_b,), lambda i: (i,))
+    okh, okl, ovh, ovl, occ = pl.pallas_call(
+        _make_kernel(f),
+        grid=grid,
+        in_specs=[row, row, row, row,
+                  staged, staged, staged,
+                  staged, staged, staged, staged],
+        out_specs=[row, row, row, row, lane],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, f), jnp.int32),
+            jax.ShapeDtypeStruct((qp, f), jnp.int32),
+            jax.ShapeDtypeStruct((qp, f), jnp.int32),
+            jax.ShapeDtypeStruct((qp, f), jnp.int32),
+            jax.ShapeDtypeStruct((qp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(khi, klo, vhi, vlo, upd_slot.astype(jnp.int32), uvh, uvl,
+      ikh, ikl, ivh, ivl)
+    out_k = _join_i64(okh, okl)
+    out_v = _join_i64(ovh, ovl)
+    return out_k[:q], out_v[:q], occ[:q]

@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.leaf_scan import leaf_scan
+from repro.kernels.leaf_write import leaf_write
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.node_search import node_search
 from repro.kernels.paged_attention import paged_attention
@@ -19,6 +20,7 @@ from repro.kernels.subtree_walk import subtree_walk
 __all__ = [
     "flash_attention",
     "leaf_scan",
+    "leaf_write",
     "mamba_scan",
     "node_search",
     "paged_attention",

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nodes import FANOUT, KEY_MAX
+from repro.core.nodes import KEY_MAX
 from repro.core.pool import subtree_walk_ref  # noqa: F401  (re-export)
 
 
@@ -37,6 +37,42 @@ def leaf_scan_ref(window_keys, window_values, start_keys, counts, *, max_count):
     out_k = jnp.take_along_axis(jnp.where(sel, k, KEY_MAX), order, axis=-1)
     out_v = jnp.take_along_axis(jnp.where(sel, v, 0), order, axis=-1)
     return out_k[:, :max_count], out_v[:, :max_count], taken
+
+
+def leaf_write_ref(rows_k, rows_v, upd_slot, upd_val, ins_key, ins_val):
+    """Oracle for kernels/leaf_write.py.
+
+    Applies staged in-place value updates ``(upd_slot, upd_val)`` (slot -1 =
+    inactive) then merges staged inserts ``(ins_key, ins_val)`` (KEY_MAX =
+    inactive) into the sorted leaf rows.  Active staged insert keys must be
+    distinct from each other and from the row's keys, and must fit in the
+    row's slack (core/write.py sheds overflowing leaves first).  Returns
+    ``(new_keys [Q, F], new_values [Q, F], new_occupancy [Q] int32)``.
+    """
+    k = rows_k.astype(jnp.int64)
+    v = rows_v.astype(jnp.int64)
+    f = k.shape[1]
+    upd_slot = upd_slot.astype(jnp.int32)
+    umask = upd_slot >= 0
+    onehot = umask[:, :, None] & (
+        upd_slot[:, :, None] == jnp.arange(f, dtype=jnp.int32)
+    )
+    has_u = jnp.any(onehot, axis=1)
+    uv = jnp.sum(
+        jnp.where(onehot, upd_val.astype(jnp.int64)[:, :, None], 0), axis=1
+    )
+    v1 = jnp.where(has_u, uv, v)
+    act = ins_key != KEY_MAX
+    merged_k = jnp.concatenate([k, jnp.where(act, ins_key, KEY_MAX)], axis=-1)
+    merged_v = jnp.concatenate(
+        [jnp.where(k != KEY_MAX, v1, 0), jnp.where(act, ins_val, 0)], axis=-1
+    )
+    order = jnp.argsort(merged_k, axis=-1, stable=True)
+    out_k = jnp.take_along_axis(merged_k, order, axis=-1)[:, :f]
+    out_v = jnp.take_along_axis(merged_v, order, axis=-1)[:, :f]
+    out_v = jnp.where(out_k != KEY_MAX, out_v, 0)
+    occ = jnp.sum(out_k != KEY_MAX, axis=-1).astype(jnp.int32)
+    return out_k, out_v, occ
 
 
 def node_search_ref(node_keys, queries, node_values):

@@ -7,8 +7,6 @@ dry-run needs to set XLA_FLAGS before that happens.
 
 from __future__ import annotations
 
-import jax
-
 from repro.compat import make_mesh_compat
 
 

@@ -16,14 +16,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ARCHS, get_config
 from repro.compat import make_mesh_compat
@@ -32,7 +29,7 @@ from repro.models import model as M
 from repro.train import sharding as SH
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import (
-    FailureInjector, Heartbeat, RetryPolicy, StepWatchdog, TransientError,
+    FailureInjector, Heartbeat, RetryPolicy, StepWatchdog,
 )
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.train_step import make_train_step

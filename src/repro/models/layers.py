@@ -9,7 +9,6 @@ default to bf16.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -19,12 +19,10 @@ Families:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compat import shard_map_compat
 from repro.models import layers as L

@@ -17,7 +17,7 @@ Why an ordered index rather than a dense table (vLLM-style)?  Ranges:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

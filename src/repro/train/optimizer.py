@@ -8,7 +8,7 @@ State dtype is configurable: bf16 moments make llama3-405b fit 512 chips
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,10 @@ class OptState(NamedTuple):
 
 def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return OptState(
         mu=jax.tree.map(zeros, params),
         nu=jax.tree.map(zeros, params),

@@ -16,8 +16,6 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
 
-import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ArchConfig

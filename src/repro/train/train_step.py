@@ -8,8 +8,7 @@ Buffers are donated (params/opt state update in place).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 tests/test_dex_mesh.py so the main pytest session keeps a single device."""
 
 import os
-import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -14,6 +13,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core import dex as dex_mod  # noqa: E402
 from repro.core import pool as pool_mod  # noqa: E402
 from repro.core import scan as scan_mod  # noqa: E402
+from repro.core import write as write_mod  # noqa: E402
 from repro.compat import make_mesh_compat  # noqa: E402
 from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
 from repro.core.sim import HostBTree  # noqa: E402
@@ -122,6 +122,131 @@ def main() -> None:
     d_hits = (np.asarray(s_scan2.stats)[:, dex_mod.STAT_HITS].sum()
               - np.asarray(s_scan.stats)[:, dex_mod.STAT_HITS].sum())
     assert d_hits > 0, "no cache hits on repeat scan batch"
+
+    # ---- batched writes (core/write.py): update/insert across 2 route ----
+    # partitions x 4 memory columns, with cross-partition stale-cache
+    # rejection via the per-leaf version table
+    cfg_w = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=256,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=100,   # make every leaf cacheable: the staleness
+                                # check below needs rows cached on all chips
+        route_capacity_factor=4.0,
+    )
+    host_w = HostBTree(keys, vals, fill=0.7)
+    state = dex_mod.init_state(pool, meta, cfg_w, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg_w)
+    )
+    lk = jax.jit(dex_mod.make_dex_lookup(meta, cfg_w, mesh))
+    up = jax.jit(write_mod.make_dex_update(meta, cfg_w, mesh))
+    ins = jax.jit(write_mod.make_dex_insert(meta, cfg_w, mesh))
+    scan_w = jax.jit(scan_mod.make_dex_scan(meta, cfg_w, mesh, max_count=MC))
+
+    BW = 512
+    # scans crossing the partition boundary cache partition-1 leaves on
+    # chips of BOTH route rows (start below 500_000, scan across)
+    below = keys[(keys > 480_000) & (keys < 500_000)]
+    sk = np.concatenate([below[-BW // 2:],
+                         rng.choice(keys, size=BW - min(BW // 2, below.size))])
+    sk = sk[:BW].astype(np.int64)
+    counts = np.full(BW, MC, np.int64)
+    state, pre_k, pre_v, pre_t = scan_w(
+        state,
+        jax.device_put(jnp.asarray(sk), sharding),
+        jax.device_put(jnp.asarray(counts), sharding),
+    )
+    jax.block_until_ready(pre_t)
+
+    # duplicate writers of the same keys land on different source chips;
+    # batch-priority conflict resolution must make the last lane win
+    wk = rng.choice(keys, size=BW).astype(np.int64)
+    wk[: BW // 4] = wk[BW // 4 : BW // 2]   # cross-chip duplicate writers
+    wv = rng.integers(0, 1 << 40, size=BW).astype(np.int64)
+    state, res = up(
+        state,
+        jax.device_put(jnp.asarray(wk), sharding),
+        jax.device_put(jnp.asarray(wv), sharding),
+    )
+    res = np.asarray(res)
+    assert (res == write_mod.STATUS_OK).all(), "update lanes failed"
+    for k, v in zip(wk, wv):
+        host_w.update(int(k), int(v))
+
+    # lookups (all chips) must see the new values — any chip still holding
+    # the pre-update row must reject it via the version check
+    s2, f2, v2 = lk(
+        state, jax.device_put(jnp.asarray(wk), sharding)
+    )
+    f2, v2 = np.asarray(f2), np.asarray(v2)
+    assert f2.all(), "updated keys must be found"
+    for i in range(BW):
+        assert int(v2[i]) == host_w.get(int(wk[i])), f"stale value at {i}"
+    state = s2
+
+    # scans from the *other* partition over the written leaves must also
+    # see fresh values (their cached copies are version-stale)
+    state, k3, v3, t3 = scan_w(
+        state,
+        jax.device_put(jnp.asarray(sk), sharding),
+        jax.device_put(jnp.asarray(counts), sharding),
+    )
+    k3, v3, t3 = np.asarray(k3), np.asarray(v3), np.asarray(t3)
+    for i in range(BW):
+        if t3[i] < 0:
+            continue
+        expect = [kk for _, ks in host_w.scan(int(sk[i]), int(counts[i]))
+                  for kk in ks][: int(counts[i])]
+        got = k3[i][k3[i] != KEY_MAX].tolist()
+        assert got == expect, f"post-write scan keys diverge at {i}"
+        for j, kk in enumerate(expect):
+            assert int(v3[i, j]) == host_w.get(int(kk)), (
+                f"post-write scan value stale at {i},{j}"
+            )
+
+    # inserts: fresh keys spread over both partitions; applied on the mesh,
+    # shed leaves replayed via the host SMO path
+    ik = (rng.choice(keys[:-1], size=BW) + 1).astype(np.int64)
+    ik = np.unique(ik[~np.isin(ik, keys)])
+    ik = ik[: (ik.size // 8) * 8]
+    iv = ik * 3
+    meta_w = meta
+    state, ri = ins(
+        state,
+        jax.device_put(jnp.asarray(ik), sharding),
+        jax.device_put(jnp.asarray(iv), sharding),
+    )
+    ri = np.asarray(ri)
+    assert (ri != write_mod.STATUS_SHED).all()
+    for k, v, r in zip(ik, iv, ri):
+        if r == write_mod.STATUS_OK:
+            host_w.insert(int(k), int(v))
+    shed = ri == write_mod.STATUS_SPLIT
+    if shed.any():
+        state, meta_w = write_mod.drain_splits(
+            state, meta, cfg_w, host_w, ik[shed], iv[shed], bounds
+        )
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state,
+            dex_mod.state_shardings(mesh, cfg_w)
+        )
+        lk = jax.jit(dex_mod.make_dex_lookup(meta_w, cfg_w, mesh))
+    s4, f4, v4 = lk(
+        state, jax.device_put(jnp.asarray(ik[: (ik.size // 8) * 8]), sharding)
+    )
+    f4, v4 = np.asarray(f4), np.asarray(v4)
+    probe = ik[: (ik.size // 8) * 8]
+    for i in range(probe.size):
+        hv = host_w.get(int(probe[i]))
+        assert bool(f4[i]) == (hv is not None), f"insert missing at {i}"
+        if hv is not None:
+            assert int(v4[i]) == hv, f"insert value wrong at {i}"
     print("MESH_CHECK_OK")
 
 

@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import btree
-from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, TreeMeta
+from repro.core.nodes import FANOUT, KEY_MAX
 
 
 def make_keys(n, seed=0, lo=0, hi=None):

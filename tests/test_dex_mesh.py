@@ -14,7 +14,6 @@ import numpy as np
 import pytest
 
 from repro.core import pool as pool_mod
-from repro.core.nodes import FANOUT
 
 
 def _dataset(n, seed=0):

@@ -3,7 +3,6 @@ oracles (kernels run in interpret mode on CPU)."""
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.core import pool as pool_mod
@@ -101,6 +100,91 @@ class TestSubtreeWalk:
         st = np.asarray(pool_mod.top_walk(pool, meta, jnp.asarray(q)))
         mask = st == 0
         assert bool(np.all(np.asarray(f)[mask]))
+
+
+# ---------------------------------------------------------------------------
+# leaf_write
+# ---------------------------------------------------------------------------
+
+
+class TestLeafWrite:
+    def _case(self, q, s, seed):
+        """Random leaf rows plus staged updates (distinct slots) and staged
+        inserts (sorted, distinct from the row, within slack) — the caller
+        contract that core/write.py enforces."""
+        rng = np.random.default_rng(seed)
+        k = np.full((q, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((q, FANOUT), np.int64)
+        us = np.full((q, s), -1, np.int32)
+        uv = np.zeros((q, s), np.int64)
+        ik = np.full((q, s), KEY_MAX, np.int64)
+        iv = np.zeros((q, s), np.int64)
+        for i in range(q):
+            occ = int(rng.integers(0, FANOUT - s + 1))
+            keys = np.sort(
+                rng.choice(1 << 30, size=occ, replace=False).astype(np.int64)
+            ) * 2 + 2                          # even keys
+            k[i, :occ] = keys
+            v[i, :occ] = keys * 3
+            nu = int(rng.integers(0, min(occ, s) + 1))
+            if nu:
+                us[i, :nu] = rng.choice(occ, size=nu, replace=False)
+                uv[i, :nu] = rng.integers(0, 1 << 40, size=nu)
+            ni = int(rng.integers(0, min(s, FANOUT - occ) + 1))
+            if ni:
+                newk = np.sort(
+                    rng.choice(1 << 30, size=ni, replace=False).astype(np.int64)
+                ) * 2 + 1                      # odd: distinct from the row
+                ik[i, :ni] = newk
+                iv[i, :ni] = newk * 5
+        return map(jnp.asarray, (k, v, us, uv, ik, iv))
+
+    @pytest.mark.parametrize("q", [1, 8, 37, 130])
+    def test_matches_ref(self, q):
+        args = list(self._case(q, s=16, seed=q))
+        got = ops.leaf_write(*args)
+        want = ref.leaf_write_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_full_width_staging(self):
+        # staged width == FANOUT: a completely empty row filled in one batch
+        k = np.full((2, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((2, FANOUT), np.int64)
+        us = np.full((2, FANOUT), -1, np.int32)
+        uv = np.zeros((2, FANOUT), np.int64)
+        ik = np.full((2, FANOUT), KEY_MAX, np.int64)
+        iv = np.zeros((2, FANOUT), np.int64)
+        ik[0] = np.arange(1, FANOUT + 1, dtype=np.int64) * 7
+        iv[0] = ik[0] * 11
+        args = list(map(jnp.asarray, (k, v, us, uv, ik, iv)))
+        gk, gv, gocc = ops.leaf_write(*args)
+        rk, rv, rocc = ref.leaf_write_ref(*args)
+        np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(gocc), np.asarray(rocc))
+        assert np.asarray(gocc).tolist() == [FANOUT, 0]
+        np.testing.assert_array_equal(np.asarray(gk)[0], ik[0])
+
+    def test_negative_and_extreme_keys(self):
+        k = np.full((1, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((1, FANOUT), np.int64)
+        k[0, :4] = [-(2**62), -7, 0, 2**62]
+        v[0, :4] = [1, 2, 3, 4]
+        us = np.array([[1, -1]], np.int32)
+        uv = np.array([[99, 0]], np.int64)
+        ik = np.array([[-(2**61), 2**61]], np.int64)
+        iv = np.array([[5, 6]], np.int64)
+        args = list(map(jnp.asarray, (k, v, us, uv, ik, iv)))
+        gk, gv, gocc = ops.leaf_write(*args)
+        rk, rv, rocc = ref.leaf_write_ref(*args)
+        np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+        assert int(gocc[0]) == 6
+        assert np.asarray(gk)[0, :6].tolist() == [
+            -(2**62), -(2**61), -7, 0, 2**61, 2**62
+        ]
+        assert np.asarray(gv)[0, :6].tolist() == [1, 5, 99, 3, 6, 4]
 
 
 # ---------------------------------------------------------------------------

@@ -8,11 +8,11 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import baselines
-from repro.core.cache import BUCKET_SLOTS, ComputeCache, CoolingMap
+from repro.core.cache import ComputeCache, CoolingMap
 from repro.core.cost_model import analyze
 from repro.core.nodes import KEY_MAX, KEY_MIN
 from repro.core.partition import LogicalPartitions
-from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.core.sim import HostBTree, Simulator
 from repro.data import ycsb
 
 

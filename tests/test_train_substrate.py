@@ -12,7 +12,6 @@ from repro.configs.registry import get_config
 from repro.compat import make_mesh_compat, shard_map_compat
 from repro.data.pipeline import TokenPipeline
 from repro.launch.train import build_run, train
-from repro.models import model as M
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import (
     FailureInjector, FatalError, RetryPolicy, StepWatchdog, TransientError,

@@ -1,0 +1,279 @@
+"""Write-path tests: ``make_dex_update`` / ``make_dex_insert`` (Plane B)
+vs ``HostBTree`` replay, write-through-and-invalidate cache coherence with
+per-leaf versions, shed-insert replay through ``drain_splits``, and a
+hypothesis property test interleaving update/insert/lookup batches.
+
+Multi-device write parity (two route partitions, four memory columns,
+cross-partition stale-cache rejection) lives in tests/mesh_check.py,
+exercised via the ``slow`` subprocess test in tests/test_dex_mesh.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dex as dex_mod
+from repro.core import pool as pool_mod
+from repro.core import write as write_mod
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN
+from repro.compat import make_mesh_compat
+from repro.core.sim import HostBTree
+
+
+def _dataset(n, seed=0, space=None):
+    rng = np.random.default_rng(seed)
+    space = space or 16 * n
+    return np.sort(rng.choice(space, size=n, replace=False).astype(np.int64) + 1)
+
+
+def _setup(keys, *, level_m=1, p_admit_leaf_pct=10, cache_sets=128):
+    vals = keys * 5
+    pool, meta = pool_mod.build_pool(keys, vals, level_m=level_m, fill=0.7,
+                                     n_shards=1)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        n_route=1, n_memory=1, cache_sets=cache_sets, cache_ways=4,
+        p_admit_leaf_pct=p_admit_leaf_pct, route_capacity_factor=2.0,
+        policy="fetch",   # exercise the cached one-sided path (writes never
+                          # offload; offload-policy lookups are covered in
+                          # tests/mesh_check.py)
+    )
+    bounds = np.array([KEY_MIN, KEY_MAX], np.int64)
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    host = HostBTree(keys, vals, fill=0.7)
+    return state, meta, cfg, mesh, host, bounds
+
+
+def _ops(meta, cfg, mesh, **kw):
+    return (
+        jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh)),
+        jax.jit(write_mod.make_dex_update(meta, cfg, mesh, **kw)),
+        jax.jit(write_mod.make_dex_insert(meta, cfg, mesh, **kw)),
+    )
+
+
+def _check_against_host(lookup, state, host, probe):
+    state, found, vals = lookup(state, jnp.asarray(probe))
+    found, vals = np.asarray(found), np.asarray(vals)
+    for i, k in enumerate(probe):
+        hv = host.get(int(k))
+        assert bool(found[i]) == (hv is not None), (i, int(k))
+        if hv is not None:
+            assert int(vals[i]) == hv, (i, int(k), int(vals[i]), hv)
+    return state
+
+
+class TestMeshUpdate:
+    def test_parity_with_host_including_batch_duplicates(self):
+        keys = _dataset(4000, seed=1)
+        state, meta, cfg, mesh, host, _ = _setup(keys)
+        lookup, update, _ = _ops(meta, cfg, mesh)
+        rng = np.random.default_rng(2)
+        uk = rng.choice(keys, size=256).astype(np.int64)
+        uk[::7] += 1                      # misses: update is a no-op
+        uk[10:14] = uk[10]                # duplicate writers of one key
+        uv = rng.integers(0, 1 << 40, size=256).astype(np.int64)
+        state, res = update(state, jnp.asarray(uk), jnp.asarray(uv))
+        res = np.asarray(res)
+        exists = np.isin(uk, keys)
+        assert (res[exists] == write_mod.STATUS_OK).all()
+        assert (res[~exists] == write_mod.STATUS_MISS).all()
+        # sequential replay on the host: last writer in batch order wins
+        for k, v in zip(uk, uv):
+            host.update(int(k), int(v))
+        _check_against_host(lookup, state, host, uk)
+        stats = np.asarray(state.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_WRITES] == int(exists.sum())
+        assert stats[dex_mod.STAT_SPLITS] == 0
+
+    def test_write_through_keeps_own_cache_fresh(self):
+        keys = _dataset(3000, seed=3)
+        # P_A = 100%: every leaf fetch is admitted, so the target leaf is
+        # definitely cached before the update
+        state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
+        lookup, update, _ = _ops(meta, cfg, mesh)
+        uk = keys[:128].astype(np.int64)
+        state, _, _ = lookup(state, jnp.asarray(uk))      # warm the cache
+        uv = (uk * 13 + 1).astype(np.int64)
+        state, res = update(state, jnp.asarray(uk), jnp.asarray(uv))
+        assert (np.asarray(res) == write_mod.STATUS_OK).all()
+        before = np.asarray(state.stats).sum(axis=0)
+        state, found, vals = lookup(state, jnp.asarray(uk))
+        after = np.asarray(state.stats).sum(axis=0)
+        assert bool(np.asarray(found).all())
+        np.testing.assert_array_equal(np.asarray(vals), uv)
+        # the refreshed rows must serve from cache, not refetch: the leaf
+        # level contributes hits, so hit count grows by at least the batch
+        assert after[dex_mod.STAT_HITS] - before[dex_mod.STAT_HITS] >= 128
+
+
+class TestMeshInsert:
+    def test_parity_fresh_and_duplicate_keys(self):
+        keys = _dataset(4000, seed=4)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        lookup, _, insert = _ops(meta, cfg, mesh)
+        rng = np.random.default_rng(5)
+        ik = (rng.choice(keys[:-1], size=256)
+              + rng.integers(1, 3, size=256)).astype(np.int64)
+        ik[:40] = rng.choice(keys, size=40)               # dups -> updates
+        iv = rng.integers(0, 1 << 40, size=256).astype(np.int64)
+        state, res = insert(state, jnp.asarray(ik), jnp.asarray(iv))
+        res = np.asarray(res)
+        assert (res != write_mod.STATUS_SHED).all()
+        for k, v, r in zip(ik, iv, res):
+            if r == write_mod.STATUS_OK:
+                host.insert(int(k), int(v))
+        shed = res == write_mod.STATUS_SPLIT
+        if shed.any():
+            state, meta = write_mod.drain_splits(
+                state, meta, cfg, host, ik[shed], iv[shed], bounds
+            )
+            lookup, _, insert = _ops(meta, cfg, mesh)
+        _check_against_host(lookup, state, host, ik)
+        _check_against_host(lookup, state, host, keys[:256])
+
+    def test_overflow_sheds_with_split_status_then_drains(self):
+        keys = _dataset(3000, seed=6)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        lookup, _, insert = _ops(meta, cfg, mesh)
+        # burst of fresh keys all targeting the first leaf: guaranteed to
+        # exceed its slack (fill 0.7 leaves ~0.3 * FANOUT free slots)
+        lo, hi = int(keys[0]), int(keys[1])
+        burst = np.arange(lo + 1, lo + 1 + FANOUT, dtype=np.int64)
+        burst = burst[~np.isin(burst, keys)][: FANOUT - 8]
+        iv = burst * 3
+        state, res = insert(state, jnp.asarray(burst), jnp.asarray(iv))
+        res = np.asarray(res)
+        assert (res == write_mod.STATUS_SPLIT).all(), res
+        stats = np.asarray(state.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_SPLITS] == burst.size
+        # none of the shed keys may have been half-applied
+        state, found, _ = lookup(state, jnp.asarray(burst))
+        assert not np.asarray(found)[~np.isin(burst, keys)].any()
+        # drain through the host SMO path and verify everything lands
+        state, meta = write_mod.drain_splits(
+            state, meta, cfg, host, burst, iv, bounds
+        )
+        assert host.splits > 0
+        lookup, _, insert = _ops(meta, cfg, mesh)
+        _check_against_host(lookup, state, host, burst)
+        _check_against_host(lookup, state, host, keys[:200])
+
+    def test_insert_invalidates_own_cached_row(self):
+        keys = _dataset(3000, seed=7)
+        state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
+        lookup, _, insert = _ops(meta, cfg, mesh)
+        probe = keys[:64].astype(np.int64)
+        state, _, _ = lookup(state, jnp.asarray(probe))   # cache leaf rows
+        # insert fresh keys adjacent to the cached leaves' keys
+        fresh = probe + 1
+        fresh = np.where(np.isin(fresh, keys), probe - 1, fresh)
+        fresh = fresh[~np.isin(fresh, keys)]
+        state, res = insert(state, jnp.asarray(fresh), jnp.asarray(fresh * 9))
+        ok = np.asarray(res) == write_mod.STATUS_OK
+        for k in fresh[ok]:
+            host.insert(int(k), int(k) * 9)
+        # the (invalidated) rows must be refetched and show the new keys
+        _check_against_host(lookup, state, host, fresh[ok])
+        _check_against_host(lookup, state, host, probe)
+
+
+class TestStaleVersionRejection:
+    def test_bumped_version_forces_refetch(self):
+        """A cached row whose per-leaf version is behind the version table
+        must be ignored — the mesh refetches the authoritative row.  This is
+        the single-device probe of the cross-chip invalidation that
+        tests/mesh_check.py exercises on 8 devices."""
+        keys = _dataset(2000, seed=8)
+        state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
+        lookup, _, _ = _ops(meta, cfg, mesh)
+        probe = keys[:64].astype(np.int64)
+        state, found, vals = lookup(state, jnp.asarray(probe))
+        assert bool(np.asarray(found).all())
+        # corrupt every cached value row (pretend the rows went stale)...
+        poisoned = state._replace(
+            cache=state.cache._replace(
+                values=jnp.zeros_like(state.cache.values) - 77
+            )
+        )
+        # ...control: WITHOUT a version bump the poison is served from cache
+        _, f2, v2 = lookup(poisoned, jnp.asarray(probe))
+        assert (np.asarray(v2)[np.asarray(f2)] == -77).any()
+        # ...with the version table bumped, every stale row is rejected and
+        # the refetched values are correct again
+        bumped = poisoned._replace(versions=poisoned.versions + 1)
+        st3, f3, v3 = lookup(bumped, jnp.asarray(probe))
+        assert bool(np.asarray(f3).all())
+        np.testing.assert_array_equal(np.asarray(v3), probe * 5)
+
+
+# ---------------------------------------------------------------------------
+# property test: interleaved mixed batches == sequential host replay
+# ---------------------------------------------------------------------------
+
+
+class TestInterleavedPropertyHypothesis:
+    def test_interleaved_batches_match_host_replay(self):
+        pytest.importorskip(
+            "hypothesis", reason="property tests need hypothesis"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        base = _dataset(800, seed=9, space=20_000)
+
+        @settings(max_examples=15, deadline=None)
+        @given(st.data())
+        def scenario(data):
+            state, meta, cfg, mesh, host, bounds = _setup(base)
+            lookup, update, insert = _ops(meta, cfg, mesh)
+            n_rounds = data.draw(st.integers(1, 3), label="rounds")
+            for rnd in range(n_rounds):
+                b = 64
+                op_kind = data.draw(
+                    st.lists(st.integers(0, 2), min_size=b, max_size=b),
+                    label=f"ops{rnd}",
+                )
+                raw = data.draw(
+                    st.lists(
+                        st.integers(0, 25_000), min_size=b, max_size=b
+                    ),
+                    label=f"keys{rnd}",
+                )
+                kind = np.asarray(op_kind)
+                karr = np.asarray(raw, np.int64) + 1
+                varr = (karr * 7 + rnd).astype(np.int64)
+                lk = np.where(kind == 0, karr, KEY_MAX)
+                uk = np.where(kind == 1, karr, KEY_MAX)
+                ik = np.where(kind == 2, karr, KEY_MAX)
+                state, found, vals = lookup(state, jnp.asarray(lk))
+                found, vals = np.asarray(found), np.asarray(vals)
+                for i in np.where(kind == 0)[0]:
+                    hv = host.get(int(karr[i]))
+                    assert bool(found[i]) == (hv is not None)
+                    if hv is not None:
+                        assert int(vals[i]) == hv
+                state, ru = update(state, jnp.asarray(uk), jnp.asarray(varr))
+                ru = np.asarray(ru)
+                for i in np.where(kind == 1)[0]:
+                    did = host.update(int(karr[i]), int(varr[i]))
+                    assert (ru[i] == write_mod.STATUS_OK) == did
+                state, ri = insert(state, jnp.asarray(ik), jnp.asarray(varr))
+                ri = np.asarray(ri)
+                ins_lanes = kind == 2
+                for i in np.where(ins_lanes)[0]:
+                    if ri[i] == write_mod.STATUS_OK:
+                        host.insert(int(karr[i]), int(varr[i]))
+                assert not (ri[ins_lanes] == write_mod.STATUS_SHED).any()
+                shed = ins_lanes & (ri == write_mod.STATUS_SPLIT)
+                if shed.any():
+                    state, meta = write_mod.drain_splits(
+                        state, meta, cfg, host, karr[shed], varr[shed],
+                        bounds,
+                    )
+                    lookup, update, insert = _ops(meta, cfg, mesh)
+            # final audit over every key ever touched
+            probe = np.unique(np.concatenate([base[:128]]))
+            _check_against_host(lookup, state, host, probe)
+
+        scenario()
