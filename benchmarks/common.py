@@ -134,3 +134,86 @@ def sweep_threads(system: str, workload: str, thread_counts, **kw):
             report=rep, per_op=sim.totals().per_op(),
         ))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh-plane (Plane B) shed replay, shared by the mesh benchmarks: lanes a
+# routing bucket load-sheds are retried (bounded), never silently dropped
+# from the op count (fig6_mesh_mixed, fig10_mesh_repartition)
+# ---------------------------------------------------------------------------
+
+
+def lookup_with_retries(lookup, state, put, lk, *, max_retries=4):
+    """Run a masked mesh lookup batch, replaying load-shed lanes up to
+    ``max_retries`` times.  Returns ``(state, found, vals, completed)`` —
+    ``completed`` is False only for lanes still shed after the bounded
+    replay (inactive KEY_MAX lanes count as completed)."""
+    import numpy as np
+    from repro.core.nodes import KEY_MAX
+
+    done = lk == KEY_MAX
+    found = np.zeros(lk.shape, bool)
+    vals = np.zeros(lk.shape, np.int64)
+    for _ in range(max_retries):
+        if done.all():
+            break
+        state, f, v, sh = lookup(state, put(np.where(done, KEY_MAX, lk)))
+        f, v, sh = np.asarray(f), np.asarray(v), np.asarray(sh)
+        ok = ~done & ~sh
+        found[ok] = f[ok]
+        vals[ok] = v[ok]
+        done |= ok
+    return state, found, vals, done
+
+
+def write_with_retries(write, state, put, wk, wv, *, max_retries=4):
+    """Run a masked mesh update/insert batch, replaying STATUS_SHED lanes
+    up to ``max_retries`` times.  Returns ``(state, status)`` with the
+    final per-lane status (still STATUS_SHED only if retries ran out)."""
+    import numpy as np
+    from repro.core.nodes import KEY_MAX
+    from repro.core.write import STATUS_MISS, STATUS_SHED
+
+    status = np.full(wk.shape, STATUS_MISS, np.int32)
+    pending = wk != KEY_MAX
+    for _ in range(max_retries):
+        if not pending.any():
+            break
+        state, r = write(
+            state,
+            put(np.where(pending, wk, KEY_MAX)),
+            put(np.where(pending, wv, 0)),
+        )
+        r = np.asarray(r)
+        settled = pending & (r != STATUS_SHED)
+        status[settled] = r[settled]
+        pending = pending & (r == STATUS_SHED)
+    status[pending] = STATUS_SHED
+    return state, status
+
+
+def scan_with_retries(scan, state, put, starts, cnts, *, max_count,
+                      max_retries=4):
+    """Run a masked mesh scan batch, replaying shed lanes (taken == -1) up
+    to ``max_retries`` times.  Returns ``(state, keys, vals, taken,
+    completed)``."""
+    import numpy as np
+    from repro.core.nodes import KEY_MAX
+
+    done = starts == KEY_MAX
+    out_k = np.full((starts.size, max_count), KEY_MAX, np.int64)
+    out_v = np.zeros((starts.size, max_count), np.int64)
+    taken = np.zeros(starts.size, np.int32)
+    for _ in range(max_retries):
+        if done.all():
+            break
+        state, kk, vv, tk = scan(
+            state, put(np.where(done, KEY_MAX, starts)), put(cnts)
+        )
+        kk, vv, tk = np.asarray(kk), np.asarray(vv), np.asarray(tk)
+        ok = ~done & (tk >= 0)
+        out_k[ok] = kk[ok]
+        out_v[ok] = vv[ok]
+        taken[ok] = tk[ok]
+        done |= ok
+    return state, out_k, out_v, taken, done

@@ -1,0 +1,361 @@
+"""Fig. 10 companion (mesh): *live* logical repartitioning under a shifting
+zipfian hotspot on the mesh plane (Plane B).
+
+The event-simulator benchmark (benchmarks/fig10_repartition.py) prices a
+single offline repartition.  This one closes the loop the paper describes in
+§4: a spatially localized zipfian workload (``ycsb.generate(...,
+hotspot=...)``) hammers one compute partition, the routing buckets load-shed
+the overflow (``STAT_DROPS``), and the :class:`RepartitionController`
+accumulates the per-partition served load from the ops' own stat counters,
+rebalances the boundary table between batches, and installs it — boundary
+metadata swap plus version-table invalidation of moved nodes, no data
+movement.  Mid-run the hotspot jumps to the other end of the key space and
+the controller must chase it.
+
+The same trace runs twice — static partitions vs. live controller — and the
+controller run must *strictly* reduce total drops.  Results stay
+bit-identical to a ``HostBTree`` replay (lookups over every key, scans, and
+the update stream), and each install is cross-validated against
+``Simulator.repartition`` cost on the same trace (fraction of the key space
+moved must agree; the simulator additionally prices the dirty-page flush).
+
+Run with ``PYTHONPATH=src python benchmarks/fig10_mesh_repartition.py
+[--quick]`` or via the suite: ``PYTHONPATH=src python -m benchmarks.run
+--only fig10meshrep``.  Needs the forced-8-device mesh (4 route x 2 memory);
+with fewer devices it degrades to fewer partitions and skips the
+drop-reduction assertion when partitioning is impossible.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import baselines  # noqa: E402
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import scan as scan_mod  # noqa: E402
+from repro.core import write as write_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX  # noqa: E402
+from repro.core.partition import LogicalPartitions  # noqa: E402
+from repro.core.repartition import (  # noqa: E402
+    RepartitionConfig,
+    RepartitionController,
+)
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+from benchmarks.common import (  # noqa: E402
+    lookup_with_retries,
+    scan_with_retries,
+)
+
+BATCH = 1024
+MAX_SCAN = 32
+UPDATE_XOR = 0x5A5A
+SCAN_EVERY = 4          # every 4th batch also runs a scan batch
+HOT_BEFORE, HOT_AFTER = 0.2, 0.8
+
+
+def _topology():
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        return (4, 2), 4, 2
+    if n_dev >= 2:
+        return (2, 1), 2, 1
+    return (1, 1), 1, 1
+
+
+def _make_trace(dataset, n_batches, seed):
+    """Hotspot-shift trace: ycsb-a (50/50 lookup/update) with the zipfian
+    centered at 20% of the key space, jumping to 80% halfway through."""
+    half = n_batches // 2
+    w1 = ycsb.generate("ycsb-a", dataset, half * BATCH, theta=0.99,
+                       seed=seed, hotspot=HOT_BEFORE)
+    w2 = ycsb.generate("ycsb-a", dataset, (n_batches - half) * BATCH,
+                       theta=0.99, seed=seed + 1, hotspot=HOT_AFTER)
+    ops = np.concatenate([w1.ops, w2.ops])
+    keys = np.concatenate([w1.keys, w2.keys])
+    return ops, keys, half
+
+
+def _run_trace(dataset, ops, keys, shift_batch, *, adaptive):
+    """One full pass over the trace; returns metrics + final state/host."""
+    vals = dataset * 7
+    shape, n_route, n_memory = _topology()
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7,
+                                     n_shards=n_memory)
+    host = HostBTree(dataset, vals, fill=0.7)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    parts = LogicalPartitions.equal_width(
+        n_route, int(dataset.min()), int(dataset.max()) + 1
+    )
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=512, cache_ways=4,
+        policy="fetch",
+        # tight enough that a partition absorbing > 2x its fair share of a
+        # batch sheds load — the signal repartitioning must eliminate
+        route_capacity_factor=2.0,
+    )
+    state = dex_mod.init_state(pool, meta, cfg, parts.boundaries)
+    shardings = dex_mod.state_shardings(mesh, cfg)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    lookup = jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh))
+    update = jax.jit(write_mod.make_dex_update(meta, cfg, mesh))
+    scan = jax.jit(scan_mod.make_dex_scan(meta, cfg, mesh, max_count=MAX_SCAN))
+
+    ctl = None
+    if adaptive:
+        ctl = RepartitionController(
+            parts, n_memory=n_memory,
+            # decide every batch: the rebalance refines the spike-bearing
+            # partition geometrically, so a hotspot shift needs ~3 quick
+            # rounds to converge
+            cfg=RepartitionConfig(
+                imbalance_threshold=1.25, drop_frac=0.005,
+                min_ops=BATCH, cooldown_batches=0,
+            ),
+        )
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    rng = np.random.default_rng(17)
+    n_batches = ops.size // BATCH
+    drops_series = []
+    repart_batches = []
+    last_drops = 0
+    t_start = time.perf_counter()
+    for b in range(n_batches):
+        bo = ops[b * BATCH : (b + 1) * BATCH]
+        bk = keys[b * BATCH : (b + 1) * BATCH]
+        lk = np.where(bo == ycsb.OP_LOOKUP, bk, KEY_MAX)
+        uk = np.where(bo == ycsb.OP_UPDATE, bk, KEY_MAX)
+        uv = uk ^ (UPDATE_XOR + b)
+        state, found, got_v, shed_l = lookup(state, put(lk))
+        state, ru = update(state, put(uk), put(uv))
+        ru = np.asarray(ru)
+        # host mirror replays exactly what the mesh applied (shed update
+        # lanes were refused by the bucket, so the mirror skips them too)
+        upd_mask = (bo == ycsb.OP_UPDATE) & (ru == write_mod.STATUS_OK)
+        for k in bk[upd_mask]:
+            host.update(int(k), int(k) ^ (UPDATE_XOR + b))
+        # spot-check completed lookups against the mirror (pre-update phase
+        # ordering matches fig6_mesh_mixed)
+        found = np.asarray(found)
+        got_v = np.asarray(got_v)
+        shed_l = np.asarray(shed_l)
+        lanes = np.where((bo == ycsb.OP_LOOKUP) & ~shed_l)[0]
+        if lanes.size:
+            for i in rng.choice(lanes, size=min(8, lanes.size), replace=False):
+                hv = host.get(int(bk[i]))
+                assert bool(found[i]) == (hv is not None), (b, i)
+        if b % SCAN_EVERY == 0:
+            sk = bk[:BATCH].copy()            # scans over the same hot keys
+            cnt = np.full(BATCH, MAX_SCAN, np.int64)
+            state, _, _, _tk = scan(state, put(sk), put(cnt))
+        if ctl is not None:
+            ctl.observe(np.asarray(state.stats), bk,
+                        demand=np.asarray(state.route_demand))
+            state, report = ctl.maybe_repartition(state, meta)
+            if report is not None:
+                repart_batches.append((b, report))
+        total_drops = int(np.asarray(state.stats)[:, dex_mod.STAT_DROPS].sum())
+        drops_series.append(total_drops - last_drops)
+        last_drops = total_drops
+    jax.block_until_ready(state.stats)
+    dt = time.perf_counter() - t_start
+
+    stats = np.asarray(state.stats).sum(axis=0)
+    return {
+        "state": state, "host": host, "meta": meta, "cfg": cfg,
+        "mesh": mesh, "sharding": sharding, "lookup": lookup, "scan": scan,
+        "n_route": n_route, "dt": dt,
+        "drops_series": np.asarray(drops_series),
+        "drops_total": int(stats[dex_mod.STAT_DROPS]),
+        "ops_total": int(stats[dex_mod.STAT_OPS]),
+        "repart_events": repart_batches,
+        "shift_batch": shift_batch,
+        "controller": ctl,
+    }
+
+
+def _validate_bit_identical(res, dataset, rng):
+    """Post-trace: every key's lookup and a scan sweep must replay the host
+    mirror bit-for-bit; shed lanes are retried (bounded), never compared."""
+    host, lookup, scan = res["host"], res["lookup"], res["scan"]
+    state = res["state"]
+    put = lambda x: jax.device_put(jnp.asarray(x), res["sharding"])  # noqa: E731
+
+    probe = dataset.copy()
+    pad = (-probe.size) % BATCH
+    probe = np.concatenate([probe, np.full(pad, KEY_MAX, np.int64)])
+    exp_vals = np.array(
+        [host.get(int(k)) if k != KEY_MAX else 0 for k in probe], np.int64
+    )
+    got_vals = np.zeros_like(exp_vals)
+    got_found = np.zeros(probe.shape, bool)
+    for b in range(probe.size // BATCH):
+        sl = slice(b * BATCH, (b + 1) * BATCH)
+        state, fnd, vls, done = lookup_with_retries(
+            lookup, state, put, probe[sl], max_retries=8
+        )
+        assert done.all(), "lookup lanes still shed after bounded retries"
+        got_found[sl] = fnd
+        got_vals[sl] = vls
+    real = probe != KEY_MAX
+    assert got_found[real].all(), "post-repartition lookup lost keys"
+    assert np.array_equal(got_vals[real], exp_vals[real]), (
+        "post-repartition lookups diverge from HostBTree replay"
+    )
+
+    starts = rng.choice(dataset, size=256).astype(np.int64)
+    starts = np.concatenate([starts, np.full(BATCH - 256, KEY_MAX, np.int64)])
+    cnts = np.full(BATCH, MAX_SCAN, np.int64)
+    state, out_k, out_v, _taken, done = scan_with_retries(
+        scan, state, put, starts, cnts, max_count=MAX_SCAN, max_retries=8
+    )
+    assert done.all(), "scan lanes still shed after bounded retries"
+    for i in range(256):
+        expect = [k for _, ks in host.scan(int(starts[i]), MAX_SCAN)
+                  for k in ks][:MAX_SCAN]
+        got = out_k[i][out_k[i] != KEY_MAX].tolist()
+        assert got == expect, f"post-repartition scan keys diverge at {i}"
+        for j, k in enumerate(expect):
+            assert int(out_v[i, j]) == host.get(int(k)), (
+                f"post-repartition scan value diverges at {i},{j}"
+            )
+    return state
+
+
+def _simulator_cross_check(dataset, ops, keys, res):
+    """Plane A on the same trace: replay the op stream, apply the very same
+    boundary tables at the same batch indices, and check both planes agree
+    on the fraction of the *dataset* whose owner each install moved (the
+    simulator additionally prices the dirty-page flush).
+
+    The comparison is over dataset keys under each plane's actual tables
+    (mesh: the requested boundaries; sim: its leaf-fence-snapped version)
+    rather than the hull-sampled ``assignment_diff`` — once the controller
+    converges, boundaries sit closer together than a leaf span and the
+    hull-sampled fractions measure different windows entirely."""
+    tree = HostBTree(dataset, dataset * 7, fill=0.7, level_m=3,
+                     n_mem_servers=4)
+    sim = Simulator(tree, baselines.dex(n_compute=res["n_route"]), seed=7)
+    cursor = 0
+    rows = []
+    n_checked = 0
+    for b, report in res["repart_events"]:
+        upto = (b + 1) * BATCH
+        sim.run(ops[cursor:upto], keys[cursor:upto])
+        cursor = upto
+        sim_prev = sim.partitions
+        cost = sim.repartition(LogicalPartitions(report.new_boundaries))
+        rows.append((b, report, cost))
+        old = LogicalPartitions(report.old_boundaries)
+        new = LogicalPartitions(report.new_boundaries)
+        # the check only applies while the simulator's snapped tables still
+        # express the same partition count: once the controller converges,
+        # adjacent boundaries can fall inside one leaf and the snap merges
+        # them, shifting every higher owner id
+        if (sim_prev.num_partitions == old.num_partitions
+                and sim.partitions.num_partitions == new.num_partitions):
+            mesh_frac = float(
+                np.mean(old.owner_of(dataset) != new.owner_of(dataset))
+            )
+            sim_frac = float(
+                np.mean(sim_prev.owner_of(dataset)
+                        != sim.partitions.owner_of(dataset))
+            )
+            # fence snapping shifts each boundary by at most one leaf span
+            assert abs(mesh_frac - sim_frac) < 0.10, (
+                f"repartition @batch {b}: mesh moved {mesh_frac:.3f} of "
+                f"the dataset, simulator {sim_frac:.3f}"
+            )
+            n_checked += 1
+    if cursor < ops.size:
+        sim.run(ops[cursor:], keys[cursor:])
+    assert n_checked > 0, "no install was cross-checked against Plane A"
+    return rows
+
+
+def run(quick: bool = False):
+    n_keys = 20_000 if quick else 50_000
+    n_batches = 12 if quick else 20
+    rng = np.random.default_rng(9)
+    dataset = ycsb.make_dataset(n_keys, seed=0)
+    ops, keys, shift_batch = _make_trace(dataset, n_batches, seed=21)
+
+    static = _run_trace(dataset, ops, keys, shift_batch, adaptive=False)
+    live = _run_trace(dataset, ops, keys, shift_batch, adaptive=True)
+
+    _validate_bit_identical(live, dataset, rng)
+    sim_rows = _simulator_cross_check(dataset, ops, keys, live)
+
+    sh = shift_batch
+    rows = ["mode,metric,value"]
+    for name, r in (("static", static), ("live", live)):
+        rows += [
+            f"{name},ops_per_s,{r['ops_total'] / r['dt']:.1f}",
+            f"{name},drops_total,{r['drops_total']}",
+            f"{name},drops_before_shift,{int(r['drops_series'][:sh].sum())}",
+            f"{name},drops_after_shift,{int(r['drops_series'][sh:].sum())}",
+        ]
+    for b, report in live["repart_events"]:
+        rows.append(
+            f"live,repartition@batch{b},imbalance={report.imbalance:.2f};"
+            f"moved={report.fraction_keyspace_moved:.3f};"
+            f"invalidated={report.nodes_invalidated};"
+            f"shared={report.shared_nodes_before}->{report.shared_nodes_after}"
+        )
+    for b, _report, cost in sim_rows:
+        rows.append(
+            f"sim,repartition@batch{b},"
+            f"flush_pages={cost['dirty_pages_flushed']:.0f};"
+            f"flush_s={cost['flush_seconds_single_thread']:.4f};"
+            f"moved={cost['fraction_keyspace_moved']:.3f}"
+        )
+
+    summary = {
+        "static_drops": float(static["drops_total"]),
+        "live_drops": float(live["drops_total"]),
+        "n_repartitions": float(len(live["repart_events"])),
+        "live_ops_per_s": live["ops_total"] / live["dt"],
+    }
+    if live["n_route"] >= 2:
+        assert live["repart_events"], "controller never repartitioned"
+        assert live["drops_total"] < static["drops_total"], (
+            f"live repartitioning must strictly reduce drops: "
+            f"{live['drops_total']} vs static {static['drops_total']}"
+        )
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -132,8 +132,34 @@ def run(quick: bool = False):
         state, kk, vv, tk = scan(state, bs, bl)
         takens.append(tk)
     jax.block_until_ready((state.stats, takens))
-    dt = time.perf_counter() - t_start
     tk = np.concatenate([np.asarray(t) for t in takens])
+    # snapshot the first-pass counters before retrying: a lane shed in
+    # every retry round would otherwise recount in STAT_DROPS once per
+    # attempt, making the reported drop rate depend on the retry cap
+    stats_first = np.asarray(state.stats).sum(axis=0) - stats_before
+    # bounded replay of load-shed lanes (taken == -1), still on the clock:
+    # serving a scan includes retrying it, and only completed scans enter
+    # the throughput figure
+    shed_idx = np.where(tk < 0)[0]
+    for _ in range(4):
+        if shed_idx.size == 0:
+            break
+        pad = (-shed_idx.size) % BATCH
+        rs = np.concatenate(
+            [starts[shed_idx], np.full(pad, KEY_MAX, np.int64)]
+        )
+        rl = np.concatenate([lens[shed_idx], np.zeros(pad, np.int64)])
+        retks = []
+        for b in range(rs.size // BATCH):
+            sl = slice(b * BATCH, (b + 1) * BATCH)
+            state, _k, _v, rtk = scan(state, put(rs[sl]), put(rl[sl]))
+            retks.append(rtk)
+        rtk = np.concatenate([np.asarray(t) for t in retks])[: shed_idx.size]
+        ok = rtk >= 0
+        tk[shed_idx[ok]] = rtk[ok]
+        shed_idx = shed_idx[~ok]
+    jax.block_until_ready(state.stats)
+    dt = time.perf_counter() - t_start
     total_records = int(np.maximum(tk, 0).sum())
     completed = int((tk >= 0).sum())
     shed_scans = int((tk < 0).sum())
@@ -161,7 +187,7 @@ def run(quick: bool = False):
         f"mesh,remote_fetches_per_scan,{fetches_per_scan:.3f}",
         f"mesh,cache_hit_rate,{hit_rate:.3f}",
         f"mesh,shed_scans,{shed_scans}",
-        f"mesh,dropped,{stats[dex_mod.STAT_DROPS]}",
+        f"mesh,dropped_first_pass,{stats_first[dex_mod.STAT_DROPS]}",
         f"sim,mops,{sim_res.report.mops():.3f}",
         f"sim,node_reads_per_op,{sim_res.per_op['node_reads']:.3f}",
         f"sim,local_accesses_per_op,{sim_res.per_op['local_accesses']:.3f}",

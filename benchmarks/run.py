@@ -29,6 +29,7 @@ MODULES = [
     ("fig8", "benchmarks.fig8_ablation"),
     ("fig9", "benchmarks.fig9_cache_design"),
     ("fig10", "benchmarks.fig10_repartition"),
+    ("fig10meshrep", "benchmarks.fig10_mesh_repartition"),
     ("fig12", "benchmarks.fig12_cache_size"),
     ("fig13", "benchmarks.fig13_offload_threads"),
     ("fig15", "benchmarks.fig15_extra_workloads"),

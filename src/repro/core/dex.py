@@ -103,6 +103,12 @@ class DexState(NamedTuple):
     stats: jax.Array       # [Dev, N_STATS] int64
     versions: jax.Array    # [Dev, n_nodes] int32 per-node write version
     occupancy: jax.Array   # [S, C] int32 keys per node (pool-aligned shard)
+    route_demand: jax.Array  # [Dev, n_route] int64 routed requests per
+    #                          partition measured at the *source* chip —
+    #                          counts shed lanes too, so unlike the served
+    #                          STAT_OPS it never saturates at bucket
+    #                          capacity (the repartition controller's load
+    #                          signal, core/repartition.py)
 
 
 def init_cache(cfg: DexMeshConfig) -> DexCache:
@@ -133,6 +139,7 @@ def init_state(
         stats=jnp.zeros((cfg.n_devices, N_STATS), jnp.int64),
         versions=jnp.zeros((cfg.n_devices, n_nodes), jnp.int32),
         occupancy=jnp.sum(pool.pool_keys != KEY_MAX, axis=-1).astype(jnp.int32),
+        route_demand=jnp.zeros((cfg.n_devices, cfg.n_route), jnp.int64),
     )
 
 
@@ -162,6 +169,7 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         stats=ns(dev),
         versions=ns(dev),
         occupancy=ns(P(cfg.memory_axis)),
+        route_demand=ns(dev),
     )
 
 
@@ -310,25 +318,32 @@ def _offload_walk(
 
 
 def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
-    """Build the sharded lookup: ``(state, keys) -> (state, found, values)``.
+    """Build the sharded lookup:
+    ``(state, keys) -> (state, found, values, shed)``.
 
     ``keys`` is globally sharded over all mesh axes; results come back in the
-    caller's lane order.  Wrap with ``jax.jit`` (see serve/ and launch/).
+    caller's lane order.  ``shed`` marks lanes that were load-shed by a
+    routing bucket (their ``found``/``values`` are not answers — the caller
+    retries them, and the repartition controller uses the drop counters to
+    move partition boundaries so they stop happening).  Wrap with
+    ``jax.jit`` (see serve/ and launch/).
     """
     levels = meta.levels_in_subtree
 
-    def local_fn(pool, cache, boundaries, miss_ema, stats, versions, keys):
+    def local_fn(pool, cache, boundaries, miss_ema, stats, demand, versions,
+                 keys):
         b = keys.shape[0]
         n_route = cfg.n_route
         vers = versions[0]
 
         # --- 1. route to the owning partition (logical partitioning, §4) ---
-        owner = (
-            jnp.searchsorted(boundaries, keys, side="right") - 1
-        ).astype(jnp.int32)
-        owner = jnp.clip(owner, 0, n_route - 1)
+        owner, dem = routing.route_owners(boundaries, keys, n_route)
+        new_demand = demand + dem
         cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
         buf, lane, dropped_r = _pack_by_dest(keys, owner, n_route, cap)
+        # inactive lanes share the OOB sentinel bucket; its overflow is
+        # meaningless (see routing.route_owners)
+        dropped_r = dropped_r & (keys != KEY_MAX)
         routed = routing.route_exchange(buf, cfg, mesh)
         q = routed.reshape(-1)                              # [n_route*cap]
         live = q != KEY_MAX
@@ -398,7 +413,7 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
                  for m in miss_counts]
             )
             return (found, vals, new_cache, rates, n_fetch, n_hit,
-                    jnp.int64(0), jnp.sum(shed).astype(jnp.int64))
+                    jnp.int64(0), shed)
 
         # --- 4b. offload the whole sub-path (two-sided path) ---------------
         def offload_branch(cache):
@@ -408,11 +423,13 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
             rates = miss_ema[0]  # unchanged estimate
             n_off = jnp.sum(live).astype(jnp.int64)
             return (found, vals, cache, rates, jnp.int64(0), jnp.int64(0),
-                    n_off, jnp.sum(o_drop & live).astype(jnp.int64))
+                    n_off, o_drop & live)
 
-        found, vals, new_cache, rates, n_fetch, n_hit, n_off, n_shed = jax.lax.cond(
+        found, vals, new_cache, rates, n_fetch, n_hit, n_off, q_shed = jax.lax.cond(
             want_offload, offload_branch, fetch_branch, cache
         )
+        q_shed = q_shed & live
+        n_shed = jnp.sum(q_shed).astype(jnp.int64)
 
         # --- 5. EMA + stats -------------------------------------------------
         # synchronize the miss EMA across the full mesh so future decisions
@@ -431,13 +448,17 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
         new_stats = stats + upd
 
         # --- 6. results back to the requesting lanes ------------------------
-        resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
-        resp = resp.reshape(n_route, cap, 2)
+        resp = jnp.stack(
+            [found.astype(jnp.int64), vals, q_shed.astype(jnp.int64)], axis=-1
+        )
+        resp = resp.reshape(n_route, cap, 3)
         back = routing.route_exchange(resp, cfg, mesh, reverse=True)
         out = _unpack_to_lanes(back, lane, b, 0)
         out_found = (out[..., 0] != 0) & ~dropped_r
         out_vals = out[..., 1]
-        return new_cache, new_ema, new_stats, out_found, out_vals
+        out_shed = (out[..., 2] != 0) | dropped_r
+        return (new_cache, new_ema, new_stats, new_demand, out_found,
+                out_vals, out_shed)
 
     dev = P(cfg.all_axes)
     pool_specs = SubtreePool(
@@ -453,18 +474,21 @@ def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, P(cfg.all_axes)),
-        out_specs=(cache_specs, dev, dev, P(cfg.all_axes), P(cfg.all_axes)),
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev,
+                  P(cfg.all_axes)),
+        out_specs=(cache_specs, dev, dev, dev, P(cfg.all_axes),
+                   P(cfg.all_axes), P(cfg.all_axes)),
     )
 
     def lookup(state: DexState, keys: jax.Array):
-        new_cache, new_ema, new_stats, found, vals = sharded(
+        new_cache, new_ema, new_stats, new_demand, found, vals, shed = sharded(
             state.pool, state.cache, state.boundaries, state.miss_ema,
-            state.stats, state.versions, keys,
+            state.stats, state.route_demand, state.versions, keys,
         )
         new_state = state._replace(
-            cache=new_cache, miss_ema=new_ema, stats=new_stats
+            cache=new_cache, miss_ema=new_ema, stats=new_stats,
+            route_demand=new_demand,
         )
-        return new_state, found, vals
+        return new_state, found, vals, shed
 
     return lookup

@@ -24,6 +24,45 @@ import numpy as np
 from repro.core.nodes import KEY_MAX, KEY_MIN
 
 
+def _distinct_inner(candidates, num_partitions: int) -> np.ndarray:
+    """Force ``num_partitions - 1`` strictly increasing int64 boundaries in
+    the open interval ``(KEY_MIN, KEY_MAX)``.
+
+    A fixed mesh has a fixed server count, so the inner-boundary count is a
+    hard invariant: duplicate or colliding candidates are perturbed (forward
+    pass pushes collisions up, backward pass resolves clamps at the top),
+    and the function raises only when the key space itself cannot hold the
+    requested count.  All arithmetic is in Python ints — candidates can sit
+    next to the int64 sentinels, where ``+ 1`` would overflow int64.
+    """
+    n_inner = num_partitions - 1
+    inner = sorted(int(c) for c in candidates)
+    if len(inner) != n_inner:
+        raise ValueError(
+            f"expected {n_inner} boundary candidates, got {len(inner)}"
+        )
+    kmin, kmax = int(KEY_MIN), int(KEY_MAX)
+    if n_inner == 0:
+        return np.zeros((0,), np.int64)
+    if kmax - kmin - 1 < n_inner:
+        raise ValueError(
+            f"key space cannot hold {n_inner} distinct inner boundaries"
+        )
+    prev = kmin
+    for i in range(n_inner):
+        inner[i] = min(max(inner[i], prev + 1), kmax - 1)
+        prev = inner[i]
+    nxt = kmax
+    for i in range(n_inner - 1, -1, -1):
+        inner[i] = min(inner[i], nxt - 1)
+        nxt = inner[i]
+    if inner[0] <= kmin:
+        raise ValueError(
+            f"cannot fit {n_inner} distinct inner boundaries above KEY_MIN"
+        )
+    return np.asarray(inner, dtype=np.int64)
+
+
 @dataclasses.dataclass(frozen=True)
 class LogicalPartitions:
     """Key-range ownership table.
@@ -46,9 +85,13 @@ class LogicalPartitions:
 
     @staticmethod
     def equal_width(num_partitions: int, lo: int, hi: int) -> "LogicalPartitions":
-        """Equal key-range widths over [lo, hi) (paper's default setup)."""
+        """Equal key-range widths over [lo, hi) (paper's default setup).
+
+        Always produces exactly ``num_partitions`` partitions: a range too
+        narrow for distinct boundaries gets them perturbed upward instead of
+        silently merged (a fixed mesh needs a fixed server count)."""
         inner = np.linspace(lo, hi, num_partitions + 1).astype(np.int64)[1:-1]
-        inner = np.unique(inner)
+        inner = _distinct_inner(inner, num_partitions)
         b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
         return LogicalPartitions(b)
 
@@ -57,10 +100,11 @@ class LogicalPartitions:
         """Workload-aware: equal-*frequency* boundaries from sampled keys
         (the paper notes DEX works with any range scheme; boundaries should
         be picked from lowest-inner-node fence keys, which sampled leaf keys
-        approximate)."""
+        approximate).  Few distinct samples perturb duplicate quantiles
+        instead of collapsing the partition count."""
         keys = np.sort(np.asarray(keys, dtype=np.int64))
         qs = np.quantile(keys, np.linspace(0, 1, num_partitions + 1)[1:-1])
-        inner = np.unique(qs.astype(np.int64))
+        inner = _distinct_inner(qs.astype(np.int64), num_partitions)
         b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
         return LogicalPartitions(b)
 
@@ -112,36 +156,68 @@ class LogicalPartitions:
         b = np.delete(self.boundaries, p + 1)
         return LogicalPartitions(b)
 
-    def rebalance(self, loads: Sequence[float]) -> "LogicalPartitions":
+    def rebalance(
+        self,
+        loads: Sequence[float],
+        *,
+        key_range: "tuple[int, int] | None" = None,
+    ) -> "LogicalPartitions":
         """Move boundaries toward equal load, assuming load uniform within
-        each partition (lightweight logical repartitioning; no data moves)."""
-        loads = np.asarray(loads, dtype=np.float64)
+        each partition (lightweight logical repartitioning; no data moves).
+
+        The walk is confined to the *data hull*: the edge partitions
+        nominally span to the int64 sentinels, but their load lives in real
+        key space, so treating the sentinel widths as populated emits
+        boundaries (e.g. ``-6.8e18`` for loads ``[100, 1, 1, 1]``) that own
+        no real keys.  ``key_range = (min_key, max_key)`` — sampled from the
+        data or the routed workload — bounds the edge partitions exactly;
+        without it the edge extents are approximated by the mean inner
+        partition width.  With ``num_partitions == 2`` there are no inner
+        widths to average, so the no-``key_range`` fallback hull collapses
+        to one key around the single boundary and it barely moves — callers
+        that want two-partition rebalancing to chase load must supply
+        ``key_range`` (the controller does whenever it has observed keys).
+
+        The result always has ``num_partitions`` partitions: zero total load
+        returns the table unchanged (no signal, and a fixed mesh needs a
+        fixed server count), and colliding boundaries are perturbed rather
+        than merged (a degenerate near-zero-width hull may spill the
+        perturbed boundaries past its top edge by at most
+        ``num_partitions - 2`` keys).
+        """
+        loads = np.maximum(np.asarray(loads, dtype=np.float64), 0.0)
         assert loads.size == self.num_partitions
-        widths = np.diff(self.boundaries.astype(np.float64))
-        density = loads / np.maximum(widths, 1.0)
-        total = loads.sum()
-        target = total / self.num_partitions
-        # walk the key space accumulating load until each target is met
-        new_inner = []
-        acc = 0.0
-        need = target
-        for p in range(self.num_partitions):
-            seg_lo = float(self.boundaries[p])
-            seg_hi = float(self.boundaries[p + 1])
-            seg_load = loads[p]
-            seg_w = seg_hi - seg_lo
-            pos = seg_lo
-            while acc + (seg_hi - pos) * density[p] >= need and len(new_inner) < (
-                self.num_partitions - 1
-            ):
-                if density[p] <= 0:
-                    break
-                step = (need - acc) / density[p]
-                pos = pos + step
-                new_inner.append(int(pos))
-                acc = 0.0
-            acc += (seg_hi - pos) * density[p]
-        inner = np.unique(np.asarray(new_inner, dtype=np.int64))
+        n_parts = self.num_partitions
+        total = float(loads.sum())
+        if n_parts == 1 or total <= 0.0:
+            return self
+        inner_b = [int(x) for x in self.boundaries[1:-1]]
+        if key_range is not None:
+            hull_lo, hull_hi = int(key_range[0]), int(key_range[1])
+            if hull_lo > hull_hi:
+                hull_lo, hull_hi = hull_hi, hull_lo
+        else:
+            mean_w = (
+                max(1, (inner_b[-1] - inner_b[0]) // (n_parts - 2))
+                if n_parts > 2
+                else 1
+            )
+            hull_lo = inner_b[0] - mean_w
+            hull_hi = inner_b[-1] + mean_w
+        # the hull must enclose the existing inner boundaries (monotone
+        # segment edges) and stay off the sentinels
+        hull_lo = max(min(hull_lo, inner_b[0]), int(KEY_MIN) + 1)
+        hull_hi = min(max(hull_hi, inner_b[-1]), int(KEY_MAX) - 1)
+        edges = np.asarray([hull_lo] + inner_b + [hull_hi], dtype=np.float64)
+        # piecewise-constant density inverse CDF: cumulative load at the
+        # segment edges, equal-load targets interpolated back to key space.
+        # The epsilon keeps the CDF strictly increasing through zero-load
+        # partitions so interpolation stays well defined.
+        eps = total * 1e-9 + 1e-12
+        cum = np.concatenate([[0.0], np.cumsum(loads + eps)])
+        targets = cum[-1] * np.arange(1, n_parts) / n_parts
+        cand = np.floor(np.interp(targets, cum, edges))
+        inner = _distinct_inner(cand, n_parts)
         b = np.concatenate([[KEY_MIN], inner, [KEY_MAX]]).astype(np.int64)
         return LogicalPartitions(b)
 

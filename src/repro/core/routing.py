@@ -59,6 +59,31 @@ def route_capacity(b: int, n_dest: int, factor: float) -> int:
     return int(np.ceil(b / n_dest * factor))
 
 
+def route_owners(boundaries: jax.Array, keys: jax.Array, n_route: int):
+    """Owning compute partition per lane (logical partitioning, §4), plus
+    this batch's per-partition demand.
+
+    Returns ``(owner [B] int32, demand [1, n_route] int64)``.  ``demand``
+    counts every real lane *before* bucketing — shed lanes included — so it
+    never saturates at bucket capacity the way served-op counters do (it
+    accumulates into ``DexState.route_demand``, the repartition
+    controller's load signal).  Inactive lanes (``KEY_MAX``, masked mixed
+    batches) get the out-of-bounds sentinel destination ``n_route`` — they
+    scatter nowhere in :func:`pack_by_dest` (``mode="drop"``), consume no
+    bucket capacity and contribute no demand; callers must mask the
+    returned ``dropped`` flags with their real-lane mask, since overflow of
+    the sentinel run is meaningless (same contract as the offload path)."""
+    owner = (
+        jnp.searchsorted(boundaries, keys, side="right") - 1
+    ).astype(jnp.int32)
+    owner = jnp.clip(owner, 0, n_route - 1)
+    demand = jnp.zeros((1, n_route), jnp.int64).at[0, owner].add(
+        (keys != KEY_MAX).astype(jnp.int64)
+    )
+    owner = jnp.where(keys == KEY_MAX, n_route, owner)
+    return owner, demand
+
+
 def pack_by_dest(payload: jax.Array, dest: jax.Array, n_dest: int, cap: int):
     """Bucket ``payload`` rows by destination with bounded capacity.
 

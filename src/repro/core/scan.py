@@ -97,21 +97,23 @@ def make_dex_scan(
     if interpret is None:
         interpret = use_interpret()  # compiled kernel on real TPU backends
 
-    def local_fn(pool, cache, boundaries, stats, versions, start_keys, counts):
+    def local_fn(pool, cache, boundaries, stats, demand, versions,
+                 start_keys, counts):
         b = start_keys.shape[0]
         n_route = cfg.n_route
         vers = versions[0]
 
         # --- 1. route to the partition owning the start key ----------------
-        owner = (
-            jnp.searchsorted(boundaries, start_keys, side="right") - 1
-        ).astype(jnp.int32)
-        owner = jnp.clip(owner, 0, n_route - 1)
+        owner, dem = routing.route_owners(boundaries, start_keys, n_route)
+        new_demand = demand + dem
         cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
         payload = jnp.stack(
             [start_keys, counts.astype(jnp.int64)], axis=-1
         )                                                   # [B, 2]
         buf, lane, dropped = routing.pack_by_dest(payload, owner, n_route, cap)
+        # inactive lanes share the OOB sentinel bucket; its overflow is
+        # meaningless (see routing.route_owners)
+        dropped = dropped & (start_keys != KEY_MAX)
         routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 2]
         q = routed[..., 0].reshape(-1)                      # [n_route*cap]
         cnt = routed[..., 1].reshape(-1)
@@ -220,7 +222,7 @@ def make_dex_scan(
         res_k = jnp.where(dropped[:, None], KEY_MAX, out[..., :mc])
         res_v = jnp.where(dropped[:, None], 0, out[..., mc : 2 * mc])
         res_taken = jnp.where(dropped, -1, out[..., 2 * mc]).astype(jnp.int32)
-        return new_cache, new_stats, res_k, res_v, res_taken
+        return new_cache, new_stats, new_demand, res_k, res_v, res_taken
 
     dev = P(cfg.all_axes)
     pool_specs = SubtreePool(
@@ -236,21 +238,24 @@ def make_dex_scan(
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev),
-        out_specs=(cache_specs, dev, dev, dev, dev),
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev, dev),
+        out_specs=(cache_specs, dev, dev, dev, dev, dev),
     )
 
     def scan(state: DexState, start_keys: jax.Array, counts: jax.Array):
-        new_cache, new_stats, keys, values, taken = sharded(
+        new_cache, new_stats, new_demand, keys, values, taken = sharded(
             state.pool,
             state.cache,
             state.boundaries,
             state.stats,
+            state.route_demand,
             state.versions,
             start_keys.astype(jnp.int64),
             counts.astype(jnp.int64),
         )
-        new_state = state._replace(cache=new_cache, stats=new_stats)
+        new_state = state._replace(
+            cache=new_cache, stats=new_stats, route_demand=new_demand
+        )
         return new_state, keys, values, taken
 
     return scan

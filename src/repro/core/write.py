@@ -241,7 +241,7 @@ def _make_dex_write(
     if interpret is None:
         interpret = use_interpret()
 
-    def local_fn(pool, occupancy, cache, boundaries, stats, versions,
+    def local_fn(pool, occupancy, cache, boundaries, stats, demand, versions,
                  keys, values):
         b = keys.shape[0]
         n_route = cfg.n_route
@@ -251,20 +251,14 @@ def _make_dex_write(
         # batch priority so conflicting writers resolve as sequential replay
         dev = routing.device_linear_index(cfg, mesh)
         prio = dev.astype(jnp.int64) * b + jnp.arange(b, dtype=jnp.int64)
-        owner = (
-            jnp.searchsorted(boundaries, keys, side="right") - 1
-        ).astype(jnp.int32)
-        owner = jnp.clip(owner, 0, n_route - 1)
-        # spread inactive (KEY_MAX) lanes round-robin so they don't pile
-        # into the last partition's bucket
-        owner = jnp.where(
-            keys == KEY_MAX,
-            (jnp.arange(b) % n_route).astype(jnp.int32),
-            owner,
-        )
+        owner, dem = routing.route_owners(boundaries, keys, n_route)
+        new_demand = demand + dem
         cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
         payload = jnp.stack([keys, values, prio], axis=-1)  # [B, 3]
         buf, lane, dropped_r = routing.pack_by_dest(payload, owner, n_route, cap)
+        # inactive lanes share the OOB sentinel bucket; its overflow is
+        # meaningless (see routing.route_owners)
+        dropped_r = dropped_r & (keys != KEY_MAX)
         routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 3]
         q = routed[..., 0].reshape(-1)                      # [Q]
         val = routed[..., 1].reshape(-1)
@@ -416,7 +410,7 @@ def _make_dex_write(
             dropped_r, STATUS_SHED, out[..., 0].astype(jnp.int32)
         )
         return (new_pk, new_pv, new_occ, new_cache, new_versions, new_stats,
-                out_res)
+                new_demand, out_res)
 
     dev = P(cfg.all_axes)
     pool_specs = SubtreePool(
@@ -433,16 +427,18 @@ def _make_dex_write(
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, mem, cache_specs, P(), dev, dev,
+        in_specs=(pool_specs, mem, cache_specs, P(), dev, dev, dev,
                   P(cfg.all_axes), P(cfg.all_axes)),
-        out_specs=(mem, mem, mem, cache_specs, dev, dev, P(cfg.all_axes)),
+        out_specs=(mem, mem, mem, cache_specs, dev, dev, dev,
+                   P(cfg.all_axes)),
     )
 
     def write(state: DexState, keys: jax.Array, values: jax.Array):
-        new_pk, new_pv, new_occ, new_cache, new_versions, new_stats, res = (
+        (new_pk, new_pv, new_occ, new_cache, new_versions, new_stats,
+         new_demand, res) = (
             sharded(
                 state.pool, state.occupancy, state.cache, state.boundaries,
-                state.stats, state.versions,
+                state.stats, state.route_demand, state.versions,
                 keys.astype(jnp.int64), values.astype(jnp.int64),
             )
         )
@@ -453,6 +449,7 @@ def _make_dex_write(
             cache=new_cache,
             versions=new_versions,
             stats=new_stats,
+            route_demand=new_demand,
         )
         return new_state, res
 
@@ -539,4 +536,8 @@ def drain_splits(
         n_shards=cfg.n_memory,
     )
     new_state = init_state(pool, new_meta, cfg, boundaries)
-    return new_state._replace(stats=state.stats), new_meta
+    # accumulated stats and the controller's demand counters carry over
+    # (their shapes don't depend on the pool layout)
+    return new_state._replace(
+        stats=state.stats, route_demand=state.route_demand
+    ), new_meta

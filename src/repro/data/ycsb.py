@@ -122,6 +122,7 @@ def generate(
     seed: int = 1,
     scan_len: int = 100,
     scan_len_dist: str = "fixed",
+    hotspot: "float | None" = None,
 ) -> Workload:
     """Generate ``n_ops`` operations of the named mix over ``dataset``.
 
@@ -132,6 +133,13 @@ def generate(
     ``scan_len_dist``: ``"fixed"`` scans all take ``scan_len`` records (the
     paper's Table 1 setup); ``"uniform"`` draws per-op lengths uniformly from
     ``[1, scan_len]`` (standard YCSB workload E) into ``Workload.scan_lens``.
+
+    ``hotspot``: ``None`` keeps YCSB's scrambled mapping (hot ranks spread
+    over the whole key space — range partitioning cannot see the skew).  A
+    float in ``[0, 1)`` instead centers the zipfian on that *fractional
+    position* of the sorted dataset without scrambling, so the hot keys form
+    a contiguous range — the spatially localized skew that drives logical
+    repartitioning (paper §4 / Fig. 10, benchmarks/fig10_mesh_repartition).
     """
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; options: {list(WORKLOADS)}")
@@ -148,7 +156,15 @@ def generate(
         p=[p_ins, p_look, p_upd, p_scan],
     )
     ranks = zipf.draw_ranks(n_ops)
-    idx = scramble(ranks, n)
+    if hotspot is None:
+        idx = scramble(ranks, n)
+    else:
+        if not (0.0 <= hotspot < 1.0):
+            raise ValueError(f"hotspot must be in [0, 1), got {hotspot!r}")
+        # rank 0 at the hotspot center, ranks fanning out alternately left
+        # and right keeps the hot range contiguous in key space
+        offset = np.where(ranks % 2 == 0, ranks // 2, -(ranks // 2 + 1))
+        idx = (int(hotspot * n) + offset) % n
     keys = dataset[idx]
 
     is_ins = ops == OP_INSERT

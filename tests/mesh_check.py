@@ -53,14 +53,14 @@ def main() -> None:
             jnp.asarray(qk), NamedSharding(mesh, P(("data", "model")))
         )
         lk = jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh))
-        s2, found, values = lk(state, qk_dev)
+        s2, found, values, _ = lk(state, qk_dev)
         found, values = np.asarray(found), np.asarray(values)
         assert (found == expect).all(), f"{policy}: found mismatch"
         assert (values[expect] == qk[expect] * 7).all(), f"{policy}: value mismatch"
         assert int(np.asarray(s2.stats)[:, dex_mod.STAT_DROPS].sum()) == 0
         if policy == "fetch":
             # second batch must produce cache hits
-            s3, f3, _ = lk(s2, qk_dev)
+            s3, f3, _, _ = lk(s2, qk_dev)
             hits = int(np.asarray(s3.stats)[:, dex_mod.STAT_HITS].sum())
             assert hits > 0, "no cache hits on repeat batch"
             assert (np.asarray(f3) == expect).all()
@@ -181,7 +181,7 @@ def main() -> None:
 
     # lookups (all chips) must see the new values — any chip still holding
     # the pre-update row must reject it via the version check
-    s2, f2, v2 = lk(
+    s2, f2, v2, _ = lk(
         state, jax.device_put(jnp.asarray(wk), sharding)
     )
     f2, v2 = np.asarray(f2), np.asarray(v2)
@@ -237,7 +237,7 @@ def main() -> None:
             dex_mod.state_shardings(mesh, cfg_w)
         )
         lk = jax.jit(dex_mod.make_dex_lookup(meta_w, cfg_w, mesh))
-    s4, f4, v4 = lk(
+    s4, f4, v4, _ = lk(
         state, jax.device_put(jnp.asarray(ik[: (ik.size // 8) * 8]), sharding)
     )
     f4, v4 = np.asarray(f4), np.asarray(v4)
@@ -247,6 +247,126 @@ def main() -> None:
         assert bool(f4[i]) == (hv is not None), f"insert missing at {i}"
         if hv is not None:
             assert int(v4[i]) == hv, f"insert value wrong at {i}"
+
+    # ---- live logical repartitioning round trip (core/repartition.py) ----
+    # a skewed batch sheds load under tight buckets; the controller moves
+    # the boundary, results stay identical, drops strictly fall, and
+    # version-stale cached rows of moved nodes are rejected, never served
+    from repro.core.partition import LogicalPartitions  # noqa: E402
+    from repro.core.repartition import (  # noqa: E402
+        RepartitionConfig,
+        RepartitionController,
+        moved_intervals,
+        node_key_ranges,
+    )
+
+    cfg_r = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=256,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=100,       # deterministic cache warm for the
+                                    # stale-row poisoning check below
+        route_capacity_factor=1.25,  # tight: skew must shed
+    )
+    state = dex_mod.init_state(pool, meta, cfg_r, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg_r)
+    )
+    lkr = jax.jit(dex_mod.make_dex_lookup(meta, cfg_r, mesh))
+    scan_r = jax.jit(scan_mod.make_dex_scan(meta, cfg_r, mesh, max_count=MC))
+
+    BR = 512
+    low = keys[keys < 500_000]
+    qs = rng.choice(low, size=BR).astype(np.int64)   # all -> partition 0
+    qs_dev = jax.device_put(jnp.asarray(qs), sharding)
+    cnts = np.full(BR, 16, np.int64)
+    cnts_dev = jax.device_put(jnp.asarray(cnts), sharding)
+
+    def drops_of(st):
+        return int(np.asarray(st.stats)[:, dex_mod.STAT_DROPS].sum())
+
+    def fetches_of(st):
+        return int(np.asarray(st.stats)[:, dex_mod.STAT_FETCHES].sum())
+
+    s1, f1, v1, sh1 = lkr(state, qs_dev)
+    f1, v1, sh1 = np.asarray(f1), np.asarray(v1), np.asarray(sh1)
+    drops_skew = drops_of(s1)
+    assert drops_skew > 0, "tight buckets under full skew must shed"
+    assert f1[~sh1].all() and (v1[~sh1] == qs[~sh1] * 7).all()
+    # warm repeat (also routes to partition 0; caches now hold the rows)
+    s2, _, _, _ = lkr(s1, qs_dev)
+    s2s, pre_k, pre_v, pre_t = scan_r(s2, qs_dev, cnts_dev)
+    pre_k, pre_v, pre_t = np.asarray(pre_k), np.asarray(pre_v), np.asarray(pre_t)
+    s2 = s2s
+
+    ctl = RepartitionController(
+        LogicalPartitions(bounds), n_memory=cfg_r.n_memory,
+        cfg=RepartitionConfig(imbalance_threshold=1.2, min_ops=BR,
+                              cooldown_batches=0),
+    )
+    ctl.observe(np.asarray(s2.stats), qs,
+                demand=np.asarray(s2.route_demand))
+    s3, report = ctl.maybe_repartition(s2, meta)
+    assert report is not None, "skewed load must trigger a repartition"
+    newp = LogicalPartitions(report.new_boundaries)
+    assert newp.num_partitions == 2, "server count is fixed"
+    assert report.nodes_invalidated > 0
+    assert int(report.new_boundaries[1]) < 500_000  # boundary chased skew
+
+    # poison every cached copy of a moved node on every chip: if the
+    # version bump failed to invalidate them, lookups would serve garbage
+    gids_all, lo_all, hi_all = node_key_ranges(
+        np.asarray(state.pool.pool_keys), meta
+    )
+    affected = np.zeros(gids_all.shape, bool)
+    for a, b2 in moved_intervals(LogicalPartitions(bounds), newp):
+        affected |= (lo_all.astype(object) < b2) & (hi_all.astype(object) > a)
+    moved_gids = gids_all[affected]
+    tags = np.asarray(s3.cache.tags)
+    poisoned_vals = np.asarray(s3.cache.values).copy()
+    hitmask = np.isin(tags, moved_gids)
+    assert hitmask.any(), "warm caches must hold some moved rows"
+    poisoned_vals[hitmask] = -12345
+    s3 = s3._replace(cache=s3.cache._replace(
+        values=jax.device_put(
+            jnp.asarray(poisoned_vals),
+            dex_mod.state_shardings(mesh, cfg_r).cache.values,
+        )
+    ))
+
+    fetches_before = fetches_of(s3)
+    s4r, f4r, v4r, sh4 = lkr(s3, qs_dev)
+    f4r, v4r, sh4 = np.asarray(f4r), np.asarray(v4r), np.asarray(sh4)
+    drops_after = drops_of(s4r) - drops_of(s3)
+    assert drops_after < drops_skew, (
+        f"repartitioning must strictly reduce drops: {drops_after} vs "
+        f"{drops_skew}"
+    )
+    # identical results before/after the mid-stream boundary change
+    both = ~sh1 & ~sh4
+    assert (f4r[both] == f1[both]).all(), "found flipped across repartition"
+    assert (v4r[both] == v1[both]).all(), "values drifted across repartition"
+    assert f4r[~sh4].all() and (v4r[~sh4] == qs[~sh4] * 7).all(), (
+        "stale cached rows of moved nodes were served"
+    )
+    assert fetches_of(s4r) > fetches_before, (
+        "moved rows must re-fetch (version-stale), not serve from cache"
+    )
+    # scans across the moved boundary replay identically too
+    s5, post_k, post_v, post_t = scan_r(s4r, qs_dev, cnts_dev)
+    post_k, post_v, post_t = (
+        np.asarray(post_k), np.asarray(post_v), np.asarray(post_t)
+    )
+    ok_scan = (pre_t >= 0) & (post_t >= 0)
+    assert ok_scan.any()
+    np.testing.assert_array_equal(post_k[ok_scan], pre_k[ok_scan])
+    np.testing.assert_array_equal(post_v[ok_scan], pre_v[ok_scan])
+    np.testing.assert_array_equal(post_t[ok_scan], pre_t[ok_scan])
     print("MESH_CHECK_OK")
 
 

@@ -60,6 +60,35 @@ class TestPartitions:
         assert int(p2.boundaries[1]) < int(p.boundaries[1])
         assert p.assignment_diff(p2) > 0
 
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(2, 12),
+        st.lists(st.floats(0.0, 1e6), min_size=2, max_size=12),
+        st.data(),
+    )
+    def test_prop_rebalance_valid_and_count_preserving(self, nparts, raw,
+                                                       data):
+        """Any loads (skewed, zero, tiny) on any table: the result is a
+        valid strictly-increasing table with the same partition count, and
+        with a roomy key_range the boundaries stay inside the hull."""
+        p = LogicalPartitions.equal_width(nparts, 0, 100_000)
+        loads = (raw * nparts)[:nparts]
+        lo = data.draw(st.integers(-(2**40), 2**40))
+        hi = lo + data.draw(st.integers(4 * nparts, 2**41))
+        p2 = p.rebalance(loads, key_range=(lo, hi))
+        assert p2.num_partitions == nparts
+        b = p2.boundaries
+        assert b[0] == KEY_MIN and b[-1] == KEY_MAX
+        assert np.all(np.diff(b.astype(object)) > 0)
+        if sum(loads) > 0:
+            # hull clamps to enclose the existing inner boundaries; the
+            # count-preserving perturbation may spill past a degenerate
+            # (near-zero-width) hull edge by at most num_partitions - 2
+            hull_lo = min(lo, int(p.boundaries[1]))
+            hull_hi = max(hi, int(p.boundaries[-2]))
+            assert (b[1:-1] >= hull_lo).all()
+            assert (b[1:-1] <= hull_hi + nparts).all()
+
     @settings(max_examples=20, deadline=None)
     @given(st.integers(2, 16), st.data())
     def test_prop_owner_in_range(self, nparts, data):

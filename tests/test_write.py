@@ -54,7 +54,7 @@ def _ops(meta, cfg, mesh, **kw):
 
 
 def _check_against_host(lookup, state, host, probe):
-    state, found, vals = lookup(state, jnp.asarray(probe))
+    state, found, vals, _ = lookup(state, jnp.asarray(probe))
     found, vals = np.asarray(found), np.asarray(vals)
     for i, k in enumerate(probe):
         hv = host.get(int(k))
@@ -94,12 +94,12 @@ class TestMeshUpdate:
         state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
         lookup, update, _ = _ops(meta, cfg, mesh)
         uk = keys[:128].astype(np.int64)
-        state, _, _ = lookup(state, jnp.asarray(uk))      # warm the cache
+        state, _, _, _ = lookup(state, jnp.asarray(uk))   # warm the cache
         uv = (uk * 13 + 1).astype(np.int64)
         state, res = update(state, jnp.asarray(uk), jnp.asarray(uv))
         assert (np.asarray(res) == write_mod.STATUS_OK).all()
         before = np.asarray(state.stats).sum(axis=0)
-        state, found, vals = lookup(state, jnp.asarray(uk))
+        state, found, vals, _ = lookup(state, jnp.asarray(uk))
         after = np.asarray(state.stats).sum(axis=0)
         assert bool(np.asarray(found).all())
         np.testing.assert_array_equal(np.asarray(vals), uv)
@@ -149,7 +149,7 @@ class TestMeshInsert:
         stats = np.asarray(state.stats).sum(axis=0)
         assert stats[dex_mod.STAT_SPLITS] == burst.size
         # none of the shed keys may have been half-applied
-        state, found, _ = lookup(state, jnp.asarray(burst))
+        state, found, _, _ = lookup(state, jnp.asarray(burst))
         assert not np.asarray(found)[~np.isin(burst, keys)].any()
         # drain through the host SMO path and verify everything lands
         state, meta = write_mod.drain_splits(
@@ -165,7 +165,7 @@ class TestMeshInsert:
         state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
         lookup, _, insert = _ops(meta, cfg, mesh)
         probe = keys[:64].astype(np.int64)
-        state, _, _ = lookup(state, jnp.asarray(probe))   # cache leaf rows
+        state, _, _, _ = lookup(state, jnp.asarray(probe))  # cache leaf rows
         # insert fresh keys adjacent to the cached leaves' keys
         fresh = probe + 1
         fresh = np.where(np.isin(fresh, keys), probe - 1, fresh)
@@ -189,7 +189,7 @@ class TestStaleVersionRejection:
         state, meta, cfg, mesh, host, _ = _setup(keys, p_admit_leaf_pct=100)
         lookup, _, _ = _ops(meta, cfg, mesh)
         probe = keys[:64].astype(np.int64)
-        state, found, vals = lookup(state, jnp.asarray(probe))
+        state, found, vals, _ = lookup(state, jnp.asarray(probe))
         assert bool(np.asarray(found).all())
         # corrupt every cached value row (pretend the rows went stale)...
         poisoned = state._replace(
@@ -198,12 +198,12 @@ class TestStaleVersionRejection:
             )
         )
         # ...control: WITHOUT a version bump the poison is served from cache
-        _, f2, v2 = lookup(poisoned, jnp.asarray(probe))
+        _, f2, v2, _ = lookup(poisoned, jnp.asarray(probe))
         assert (np.asarray(v2)[np.asarray(f2)] == -77).any()
         # ...with the version table bumped, every stale row is rejected and
         # the refetched values are correct again
         bumped = poisoned._replace(versions=poisoned.versions + 1)
-        st3, f3, v3 = lookup(bumped, jnp.asarray(probe))
+        st3, f3, v3, _ = lookup(bumped, jnp.asarray(probe))
         assert bool(np.asarray(f3).all())
         np.testing.assert_array_equal(np.asarray(v3), probe * 5)
 
@@ -246,7 +246,7 @@ class TestInterleavedPropertyHypothesis:
                 lk = np.where(kind == 0, karr, KEY_MAX)
                 uk = np.where(kind == 1, karr, KEY_MAX)
                 ik = np.where(kind == 2, karr, KEY_MAX)
-                state, found, vals = lookup(state, jnp.asarray(lk))
+                state, found, vals, _ = lookup(state, jnp.asarray(lk))
                 found, vals = np.asarray(found), np.asarray(vals)
                 for i in np.where(kind == 0)[0]:
                     hv = host.get(int(karr[i]))
