@@ -32,6 +32,7 @@ MODULES = [
     ("fig10meshrep", "benchmarks.fig10_mesh_repartition"),
     ("fig12", "benchmarks.fig12_cache_size"),
     ("fig13", "benchmarks.fig13_offload_threads"),
+    ("fig14meshload", "benchmarks.fig14_mesh_load"),
     ("fig15", "benchmarks.fig15_extra_workloads"),
     ("fig15mesh", "benchmarks.fig15_mesh_scan"),
     ("fig16", "benchmarks.fig16_key_size"),

@@ -35,7 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import routing
 from repro.core.nodes import FANOUT, KEY_MAX
-from repro.core.pool import PoolMeta, SubtreePool, top_walk
+from repro.core.pool import PoolMeta, SubtreePool, initial_succ, top_walk
 from repro.core.routing import (
     hash64 as _hash64,
     pack_by_dest as _pack_by_dest,
@@ -53,10 +53,13 @@ OFFLOAD_RESP_BYTES = 16
     STAT_FETCHES,
     STAT_OFFLOADS,
     STAT_DROPS,
-    STAT_SPLITS,   # inserts shed to the host SMO path (core/write.py)
-    STAT_WRITES,   # remote leaf-write messages (RDMA WRITE analogue)
+    STAT_SPLITS,      # inserts shed by an overflowing leaf (core/write.py);
+    #                   resolved on-mesh by core/smo.py or drained to host
+    STAT_WRITES,      # remote leaf-write messages (RDMA WRITE analogue)
+    STAT_SMO_SPLITS,  # structural splits executed device-side (core/smo.py)
+    STAT_DRAINS,      # host pool rebuilds (drain_splits fallback ladder)
     N_STATS,
-) = range(8)
+) = range(10)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +112,14 @@ class DexState(NamedTuple):
     #                          STAT_OPS it never saturates at bucket
     #                          capacity (the repartition controller's load
     #                          signal, core/repartition.py)
+    succ: jax.Array        # [Dev, n_nodes] int64 leaf successor gid (-1
+    #                        ends the chain; scans follow this instead of
+    #                        leaf-id arithmetic — on-mesh splits relocate
+    #                        leaves into the free-list headroom)
+    n_alloc: jax.Array     # [S] int32 per-subtree free-list watermark
+    #                        (pool-aligned shard): next free local node id;
+    #                        subtree_cap means the block is out of headroom
+    #                        and its splits drain through the host path
 
 
 def init_cache(cfg: DexMeshConfig) -> DexCache:
@@ -131,6 +142,8 @@ def init_state(
 ) -> DexState:
     levels = meta.levels_in_subtree
     n_nodes = meta.n_subtrees_padded * meta.subtree_cap
+    succ0 = jnp.asarray(initial_succ(meta))
+    base = meta.base_cap if meta.base_cap > 0 else meta.subtree_cap
     return DexState(
         pool=pool,
         cache=init_cache(cfg),
@@ -140,6 +153,8 @@ def init_state(
         versions=jnp.zeros((cfg.n_devices, n_nodes), jnp.int32),
         occupancy=jnp.sum(pool.pool_keys != KEY_MAX, axis=-1).astype(jnp.int32),
         route_demand=jnp.zeros((cfg.n_devices, cfg.n_route), jnp.int64),
+        succ=jnp.broadcast_to(succ0[None, :], (cfg.n_devices, n_nodes)),
+        n_alloc=jnp.full((meta.n_subtrees_padded,), base, jnp.int32),
     )
 
 
@@ -170,6 +185,8 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         versions=ns(dev),
         occupancy=ns(P(cfg.memory_axis)),
         route_demand=ns(dev),
+        succ=ns(dev),
+        n_alloc=ns(P(cfg.memory_axis)),
     )
 
 

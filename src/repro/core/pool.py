@@ -13,6 +13,18 @@ the paper's root-side nodes that are effectively always cached.  Local node
 ids inside a subtree are level-ordered (root = 0) so the offload executor
 (and the Pallas ``subtree_walk`` kernel) can traverse entirely within one
 VMEM-resident block.
+
+**Free-list headroom (the on-mesh SMO allocation layer).**  Each block is
+built ``headroom`` fraction larger than the bulk layout needs; the extra
+slots ``[base_cap, subtree_cap)`` form a per-subtree bump free-list from
+which the on-mesh SMO engine (core/smo.py) allocates sibling nodes for
+device-side leaf/inner splits.  The watermark lives in
+``DexState.n_alloc`` (one int per subtree, sharded with the pool); when a
+subtree's watermark hits ``subtree_cap`` its splits fall back to the host
+rebuild path (``core/write.py::drain_splits``).  Because splits relocate
+leaves out of the dense bulk order, sibling-leaf iteration (core/scan.py)
+follows the explicit successor table seeded by :func:`initial_succ` rather
+than leaf-id arithmetic.
 """
 
 from __future__ import annotations
@@ -44,26 +56,66 @@ class SubtreePool(NamedTuple):
 class PoolMeta:
     level_m: int              # subtree root level (0 = leaves only)
     per_node: int             # fill-factor entries per node at build
-    subtree_cap: int          # nodes per subtree block
+    subtree_cap: int          # nodes per subtree block (incl. headroom)
     n_subtrees: int           # real subtrees (<= padded S)
     n_subtrees_padded: int
     top_height: int           # levels above M (0 => single-subtree tree)
     n_keys: int
     leaf_start: int           # local id of first leaf within a block
+    base_cap: int = 0         # nodes per block used by the bulk layout;
+    #                           [base_cap, subtree_cap) is SMO headroom
+    subtree_leaves: int = 0   # leaves per block at build (0 = the dense
+    #                           default per_node**level_m); smaller blocks
+    #                           leave block roots separator room for splits
+
+    @property
+    def leaves_per_subtree(self) -> int:
+        return self.subtree_leaves or self.per_node**self.level_m
 
     @property
     def levels_in_subtree(self) -> int:
         return self.level_m + 1
+
+    @property
+    def min_leaf_fill(self) -> int:
+        """Smallest key count a *non-last* leaf can hold: bulk-built leaves
+        carry ``per_node`` keys and an on-mesh split leaves each half with at
+        least ``FANOUT // 2`` (core/smo.py splits only overflowing rows)."""
+        return min(self.per_node, FANOUT // 2)
+
+    @property
+    def headroom_frac(self) -> float:
+        """Free-list fraction this pool was built with (for rebuilds)."""
+        if self.base_cap <= 0:
+            return 0.0
+        return (self.subtree_cap - self.base_cap) / self.base_cap
 
     def node_gid(self, subtree: jax.Array, local: jax.Array) -> jax.Array:
         """Global node id used as the cache tag."""
         return subtree.astype(jnp.int64) * self.subtree_cap + local
 
 
-def _level_offsets(per_node: int, level_m: int) -> np.ndarray:
-    """Local-id offset of each subtree level: level M at 0, leaves last."""
-    sizes = [per_node**i for i in range(level_m + 1)]  # level M..0 counts
+def _level_offsets(
+    per_node: int, level_m: int, subtree_leaves: "int | None" = None
+) -> np.ndarray:
+    """Local-id offset of each subtree level: level M at 0, leaves last.
+
+    ``subtree_leaves`` overrides the dense default of ``per_node**level_m``
+    leaves per block — fewer leaves per subtree build the block's root with
+    fewer children, leaving separator room for on-mesh splits (and spread a
+    dataset over more subtrees / memory columns).
+    """
+    if subtree_leaves is None:
+        subtree_leaves = per_node**level_m
+    counts = [subtree_leaves]                      # level 0 (leaves) first
+    for _ in range(level_m):
+        counts.append(-(-counts[-1] // per_node))
+    counts[-1] = 1                                 # block root
+    sizes = counts[::-1]                           # level M..0 counts
     return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+
+DEFAULT_HEADROOM = 0.5
 
 
 def build_pool(
@@ -73,11 +125,20 @@ def build_pool(
     level_m: int = 1,
     fill: float = 0.7,
     n_shards: int = 1,
+    headroom: float = DEFAULT_HEADROOM,
+    subtree_leaves: Optional[int] = None,
 ) -> Tuple[SubtreePool, PoolMeta]:
     """Bulk-build the blocked pool from sorted unique keys.
 
     ``n_shards``: pad the subtree axis to a multiple of this (the `model`
-    mesh axis size) so the arrays block-shard evenly.
+    mesh axis size) so the arrays block-shard evenly.  ``headroom``: extra
+    node slots per subtree block, as a fraction of the bulk layout's node
+    count — the free-list the on-mesh SMO engine allocates split siblings
+    from (0 disables device-side splits; every overflow then drains through
+    the host rebuild).  ``subtree_leaves``: leaves per block (default the
+    dense ``per_node**level_m``); smaller blocks build roomier block roots
+    (more separator slack before a subtree overflows to the host path) and
+    spread a dataset over more subtrees.
     """
     keys = np.asarray(keys, dtype=np.int64)
     if np.any(keys[1:] <= keys[:-1]):
@@ -85,15 +146,25 @@ def build_pool(
     if values is None:
         values = keys.copy()
     values = np.asarray(values, dtype=np.int64)
+    if headroom < 0:
+        raise ValueError(f"headroom must be >= 0, got {headroom!r}")
 
     per_node = max(2, int(FANOUT * fill))
     n = keys.size
     n_leaves = -(-n // per_node)
-    leaves_per_subtree = per_node**level_m
+    if subtree_leaves is None:
+        subtree_leaves = per_node**level_m
+    if not (1 <= subtree_leaves <= per_node**level_m):
+        raise ValueError(
+            f"subtree_leaves must be in [1, per_node**level_m], got "
+            f"{subtree_leaves!r}"
+        )
+    leaves_per_subtree = int(subtree_leaves)
     n_subtrees = -(-n_leaves // leaves_per_subtree)
     S = -(-n_subtrees // n_shards) * n_shards
-    offs = _level_offsets(per_node, level_m)
-    cap = int(offs[-1])
+    offs = _level_offsets(per_node, level_m, leaves_per_subtree)
+    base_cap = int(offs[-1])
+    cap = base_cap + int(np.ceil(base_cap * headroom))
     leaf_start = int(offs[-2])
 
     PK = np.full((S, cap, FANOUT), KEY_MAX, dtype=np.int64)
@@ -184,8 +255,26 @@ def build_pool(
         top_height=top_height,
         n_keys=n,
         leaf_start=leaf_start,
+        base_cap=base_cap,
+        subtree_leaves=leaves_per_subtree,
     )
     return pool, meta
+
+
+def initial_succ(meta: PoolMeta) -> np.ndarray:
+    """Leaf successor table over the bulk layout: ``succ[gid]`` is the next
+    leaf's global node id in key order (``-1`` ends the chain; non-leaf
+    slots are ``-1``).  On-mesh leaf splits (core/smo.py) link allocated
+    siblings into this chain; range scans (core/scan.py) follow it instead
+    of assuming leaves are consecutive in local-id order."""
+    n_nodes = meta.n_subtrees_padded * meta.subtree_cap
+    succ = np.full((n_nodes,), -1, dtype=np.int64)
+    n_leaves = -(-meta.n_keys // meta.per_node)
+    lps = meta.leaves_per_subtree
+    g = np.arange(n_leaves, dtype=np.int64)
+    gid = (g // lps) * meta.subtree_cap + meta.leaf_start + (g % lps)
+    succ[gid[:-1]] = gid[1:]
+    return succ
 
 
 # ---------------------------------------------------------------------------

@@ -80,34 +80,59 @@ class RepartitionReport:
 
 
 def node_key_ranges(
-    pool_keys: np.ndarray, meta: PoolMeta
+    pool_keys: np.ndarray, meta: PoolMeta,
+    pool_children: "np.ndarray | None" = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-node fence ranges ``(gids, lo, hi)`` for every real pool node.
 
-    Within each subtree level, nodes sit in global key order (subtrees are
-    key-ordered and level slots within a block are key-ordered), so a node's
-    range runs from its first key to the next real node's first key at the
-    same level; the leftmost node of a level covers from ``KEY_MIN`` (the
-    in-node search clamps slot 0) and the rightmost to ``KEY_MAX``.
+    Each node's range runs from its first key to the next node's first key
+    at the same level (the leftmost node of a level covers from ``KEY_MIN``
+    — the in-node search clamps slot 0 — and the rightmost to ``KEY_MAX``).
+    Node levels are derived by walking the children graph from each block's
+    root rather than from local-id offsets: on-mesh splits (core/smo.py)
+    allocate siblings from the free-list headroom, so after the first split
+    a node's level is no longer a function of its slot.  Pass
+    ``pool_children`` whenever the pool may have seen on-mesh splits; when
+    omitted, the dense bulk layout is assumed (bulk-built pools only).
     """
     pk0 = np.asarray(pool_keys[:, :, 0])              # [S, C] first keys
     n_sub, cap = pk0.shape
-    sizes = [meta.per_node**i for i in range(meta.level_m + 1)]
-    offs = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    lvl_of = np.full((n_sub, cap), -1, np.int32)
+    lvl_of[:, 0] = meta.level_m                       # block roots
+    if pool_children is not None:
+        pc = np.asarray(pool_children)
+        for lvl in range(meta.level_m, 0, -1):
+            s_idx, c_idx = np.where(lvl_of == lvl)
+            if s_idx.size == 0:
+                break
+            ch = pc[s_idx, c_idx]                     # [K, FANOUT]
+            valid = (ch >= 0) & (ch < cap)
+            s_rep = np.broadcast_to(s_idx[:, None], ch.shape)[valid]
+            lvl_of[s_rep, ch[valid]] = lvl - 1
+    else:
+        from repro.core.pool import _level_offsets
+
+        offs = _level_offsets(
+            meta.per_node, meta.level_m, meta.leaves_per_subtree
+        )
+        for lvl in range(meta.level_m + 1):
+            lvl_of[:, int(offs[lvl]) : int(offs[lvl + 1])] = (
+                meta.level_m - lvl
+            )
+    base = np.arange(n_sub, dtype=np.int64) * meta.subtree_cap
+    gid_grid = base[:, None] + np.arange(cap, dtype=np.int64)[None, :]
     all_gids: List[np.ndarray] = []
     all_lo: List[np.ndarray] = []
     all_hi: List[np.ndarray] = []
-    base = np.arange(n_sub, dtype=np.int64) * meta.subtree_cap
-    for lvl in range(meta.level_m + 1):
-        lo_lvl = pk0[:, offs[lvl] : offs[lvl + 1]]     # [S, n_lvl]
-        gid_lvl = (
-            base[:, None] + np.arange(offs[lvl], offs[lvl + 1], dtype=np.int64)
-        )
-        lo_flat = lo_lvl.reshape(-1)
-        gid_flat = gid_lvl.reshape(-1)
-        real = lo_flat != KEY_MAX
-        lo_r = lo_flat[real]
-        gid_r = gid_flat[real]
+    for lvl in range(meta.level_m, -1, -1):
+        real = (lvl_of == lvl) & (pk0 != KEY_MAX)
+        lo_r = pk0[real]
+        gid_r = gid_grid[real]
+        # global key order within the level: subtrees are key-ordered and
+        # ranges within a level are disjoint, so first-key order is it
+        order = np.argsort(lo_r, kind="stable")
+        lo_r = lo_r[order]
+        gid_r = gid_r[order]
         if lo_r.size:
             hi_r = np.concatenate([lo_r[1:], [KEY_MAX]])
             lo_r = lo_r.copy()
@@ -159,7 +184,9 @@ def install_boundaries(
     the paper's dirty-flush + cache re-warm.  The pool itself never moves.
     Returns ``(new_state, nodes_invalidated, shared_before, shared_after)``.
     """
-    gids, lo, hi = node_key_ranges(state.pool.pool_keys, meta)
+    gids, lo, hi = node_key_ranges(
+        state.pool.pool_keys, meta, state.pool.pool_children
+    )
     moved = moved_intervals(old, new)
     affected = np.zeros(gids.shape, dtype=bool)
     for a, b in moved:

@@ -4,12 +4,15 @@ as SPMD collectives.
 DEX keeps no leaf links on the memory servers; a multi-leaf scan is
 *fence-key subdivided* — conceptually a sequence of root-to-leaf descents
 whose next start key is the current leaf's upper fence.  In the blocked pool
-layout (core/pool.py) leaves are consecutive in global leaf order
-(``global_leaf = subtree * leaves_per_subtree + (local - leaf_start)``), so
-"follow the fence key" degenerates to "read the next leaf id" — one remote
-leaf READ per hop, without re-walking the upper levels, which is exactly the
-traffic the paper counts for its scans (one node READ per additional leaf,
-§7).
+layout (core/pool.py) "follow the fence key" degenerates to "read the next
+leaf's gid from the replicated successor table" (``DexState.succ``, seeded
+by ``pool.initial_succ`` and re-linked by on-mesh leaf splits in
+core/smo.py) — one remote leaf READ per hop, without re-walking the upper
+levels, which is exactly the traffic the paper counts for its scans (one
+node READ per additional leaf, §7).  A lane issues hop ``h`` only while the
+records it has already collected fall short of its count, so the read count
+matches the host replay's leaf visits exactly even when splits leave leaves
+half-full.
 
 Dataflow per batch of ``(start_key, count)`` requests (DESIGN.md §3):
 
@@ -60,8 +63,11 @@ DEFAULT_MAX_COUNT = 128
 def scan_hops(meta: PoolMeta, max_count: int) -> int:
     """Leaves that may contribute to a ``max_count``-record scan: the start
     leaf (which can contribute as little as nothing when the start key lies
-    above its last record) plus enough full leaves for the rest."""
-    return 1 + -(-max_count // meta.per_node)
+    above its last record) plus enough minimally-filled leaves for the rest
+    (``min_leaf_fill``: on-mesh splits can leave leaves half-full).  This is
+    only the static loop bound — per-lane collected-count masking stops each
+    lane's remote reads as soon as its count is covered."""
+    return 1 + -(-max_count // meta.min_leaf_fill)
 
 
 def make_dex_scan(
@@ -91,17 +97,16 @@ def make_dex_scan(
     """
     levels = meta.levels_in_subtree
     hops = scan_hops(meta, max_count)
-    leaves_per_subtree = meta.per_node ** meta.level_m
-    n_leaves = -(-meta.n_keys // meta.per_node)
     mc = max_count
     if interpret is None:
         interpret = use_interpret()  # compiled kernel on real TPU backends
 
-    def local_fn(pool, cache, boundaries, stats, demand, versions,
+    def local_fn(pool, cache, boundaries, stats, demand, versions, succ,
                  start_keys, counts):
         b = start_keys.shape[0]
         n_route = cfg.n_route
         vers = versions[0]
+        succ_t = succ[0]
 
         # --- 1. route to the partition owning the start key ----------------
         owner, dem = routing.route_owners(boundaries, start_keys, n_route)
@@ -144,31 +149,23 @@ def make_dex_scan(
             ).astype(jnp.int32)
             local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
 
-        # global leaf index of the start leaf
-        g0 = (
-            subtree.astype(jnp.int64) * leaves_per_subtree
-            + (local - meta.leaf_start).astype(jnp.int64)
-        )
+        # gid of the start leaf (the successor chain starts here)
+        gid_h = meta.node_gid(subtree, local)
 
         # --- 3. iterated sibling-leaf reads (fence-key subdivision) ---------
+        # hop h+1 follows the successor table; a lane keeps reading only
+        # while the records collected so far fall short of its count, so
+        # remote leaf reads match the host replay's leaf visits exactly
         window_k = []
         window_v = []
+        collected = jnp.zeros(q.shape, jnp.int32)
+        in_range = live
         for h in range(hops):
-            g = g0 + h
-            in_range = live & (g >= 0) & (g < n_leaves)
             if h > 0:
-                # a lane only needs hop h if hops 1..h-1 (full leaves) cannot
-                # already cover its count — skip the remote read otherwise
-                in_range = in_range & (jnp.int32((h - 1) * meta.per_node) < cnt)
-            st_h = jnp.where(
-                in_range, (g // leaves_per_subtree).astype(jnp.int32), 0
-            )
-            lo_h = jnp.where(
-                in_range,
-                (meta.leaf_start + g % leaves_per_subtree).astype(jnp.int32),
-                0,
-            )
-            gid = meta.node_gid(st_h, lo_h)
+                nxt = succ_t[jnp.where(in_range, gid_h, 0)]
+                in_range = in_range & (collected < cnt) & (nxt >= 0)
+                gid_h = jnp.where(in_range, nxt, gid_h)
+            gid = jnp.where(in_range, gid_h, 0)
             # lazy leaf admission with P_A (§5.4), re-rolled per access
             p_ok = routing.leaf_admit_dice(
                 gid, cfg.p_admit_leaf_pct,
@@ -182,6 +179,10 @@ def make_dex_scan(
             shed = shed | f_drop
             rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
             rows_v = jnp.where(in_range[:, None], rows_v, 0)
+            collected = collected + jnp.sum(
+                ((rows_k != KEY_MAX) & (rows_k >= q[:, None])).astype(jnp.int32),
+                axis=-1,
+            )
             n_fetch = n_fetch + n_msgs
             n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
             window_k.append(rows_k)
@@ -238,7 +239,7 @@ def make_dex_scan(
     sharded = routing.shard_map_compat(
         local_fn,
         mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev, dev),
+        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev, dev, dev),
         out_specs=(cache_specs, dev, dev, dev, dev, dev),
     )
 
@@ -250,6 +251,7 @@ def make_dex_scan(
             state.stats,
             state.route_demand,
             state.versions,
+            state.succ,
             start_keys.astype(jnp.int64),
             counts.astype(jnp.int64),
         )

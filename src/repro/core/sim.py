@@ -353,6 +353,8 @@ class Counters:
     offload_fallbacks: int = 0
     coherence_invalidations: int = 0
     refresh_from_root: int = 0
+    smo_inserts: int = 0          # inserts whose split ran memory-side
+    #                               (SimConfig.onmesh_smo pricing)
 
     def add_read(self, nbytes: int = NODE_BYTES) -> None:
         self.rdma_read += 1
@@ -448,6 +450,18 @@ class SimConfig:
                                             # writes (Table 2: ~8x fewer)
     write_combine_factor: float = 0.11
     cache_above_m_only: bool = False        # Offload-only variant (Fig. 5)
+    onmesh_smo: bool = False                # price structural splits as the
+                                            # mesh plane's SMO engine does
+                                            # (core/smo.py): the insert ships
+                                            # one tiny two-sided message to
+                                            # the owning memory server, which
+                                            # runs the split next to the data
+                                            # — instead of the compute-side
+                                            # CAS + read + write-back per
+                                            # split node (counted in
+                                            # Counters.smo_inserts for
+                                            # cross-plane validation,
+                                            # benchmarks/fig14_mesh_load.py)
 
     # --- offload policy ---
     offload_always: bool = False            # Offload-only variant (Fig. 5)
@@ -841,6 +855,28 @@ class Simulator:
         cache = self.caches[server]
         c = self.counters[server]
         visited, offloaded = self._traverse(server, key, for_write=True)
+        if (
+            cfg.onmesh_smo
+            and not offloaded
+            and self.tree.would_split(key)
+        ):
+            # the mesh SMO engine (core/smo.py): the insert ships one tiny
+            # (key, value) message to the owning memory server, which runs
+            # the split next to the data — no compute-side CAS/read/write
+            # per split node, no pool rebuild; the writer's own cached leaf
+            # copy drops (key set shifted) and siblings' copies go stale
+            _, split_nodes = self.tree.insert(key, key)
+            c.add_rpc()
+            leaf = self.tree.search_path(key)[-1]
+            ms = int(self.tree.server[leaf])
+            service = (len(split_nodes) + 1) * self.cfg.t_mem_search
+            self.mem_busy[ms] += service
+            self.mem_reqs[ms] += 1
+            c.smo_inserts += 1
+            self._write_coherence(server, leaf, drop_self=True)
+            for snode in split_nodes:
+                self._write_coherence(server, snode, drop_self=True)
+            return
         _, split_nodes = self.tree.insert(key, key)
         if offloaded:
             leaf = self.tree.search_path(key)[-1]
@@ -926,6 +962,7 @@ class Simulator:
             out.local_accesses += c.local_accesses
             out.offload_fallbacks += c.offload_fallbacks
             out.coherence_invalidations += c.coherence_invalidations
+            out.smo_inserts += c.smo_inserts
         return out
 
     def cache_stats(self):

@@ -56,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import routing
 from repro.core.dex import (
     N_STATS,
+    STAT_DRAINS,
     STAT_DROPS,
     STAT_FETCHES,
     STAT_HITS,
@@ -516,17 +517,28 @@ def drain_splits(
     boundaries: np.ndarray,
 ):
     """Replay shed inserts through the host tree's true eager-split SMO path
-    and rebuild the mesh state from the result.
+    and rebuild the mesh state from the result — the *bottom rung* of the
+    SMO fallback ladder (core/smo.py resolves plain leaf splits device-side;
+    this path remains for subtree-block overflow, exhausted free-lists and
+    top-tree growth, and stays the validation oracle).
 
     ``host`` is the :class:`repro.core.sim.HostBTree` mirror the caller
     keeps in sync (it must already contain every *applied* mesh write);
     ``shed_keys``/``shed_values`` are the lanes that came back with
     ``STATUS_SPLIT``, in original batch order.  Returns ``(new_state,
     new_meta)`` — a freshly blocked pool (splits change the leaf layout, so
-    caches/versions restart cold; accumulated stats carry over).  Ops built
-    by ``make_dex_*`` must be rebuilt against ``new_meta``.
+    caches/versions restart cold; accumulated stats carry over, and the
+    rebuild is counted in ``STAT_DRAINS`` so benchmarks can report fallback
+    frequency).  Ops built by ``make_dex_*`` must be rebuilt against
+    ``new_meta``.  With no shed lanes this is a **no-op**: the existing
+    state is returned untouched — no rebuild, no cache/version cold
+    restart, no drain counted.
     """
-    for k, v in zip(np.asarray(shed_keys), np.asarray(shed_values)):
+    shed_keys = np.asarray(shed_keys)
+    shed_values = np.asarray(shed_values)
+    if shed_keys.size == 0:
+        return state, meta
+    for k, v in zip(shed_keys, shed_values):
         host.insert(int(k), int(v))
     items_k, items_v = host_items(host)
     pool, new_meta = build_pool(
@@ -534,10 +546,14 @@ def drain_splits(
         level_m=meta.level_m,
         fill=meta.per_node / FANOUT,
         n_shards=cfg.n_memory,
+        headroom=meta.headroom_frac,
+        subtree_leaves=meta.leaves_per_subtree,
     )
     new_state = init_state(pool, new_meta, cfg, boundaries)
     # accumulated stats and the controller's demand counters carry over
-    # (their shapes don't depend on the pool layout)
+    # (their shapes don't depend on the pool layout); the rebuild itself is
+    # counted so callers can report how often the fallback fired
+    stats = jnp.asarray(state.stats).at[0, STAT_DRAINS].add(1)
     return new_state._replace(
-        stats=state.stats, route_demand=state.route_demand
+        stats=stats, route_demand=state.route_demand
     ), new_meta

@@ -31,6 +31,13 @@ WORKLOADS: Dict[str, Tuple[float, float, float, float]] = {
     "ycsb-a": (0.0, 0.50, 0.50, 0.0),
     "ycsb-b": (0.0, 0.95, 0.05, 0.0),
     "ycsb-d": (0.05, 0.95, 0.0, 0.0),
+    # YCSB load phase: pure inserts (alias of insert-only) — the trace that
+    # drives the on-mesh SMO engine's benchmark (fig14_mesh_load), consumed
+    # by both planes
+    "ycsb-load": (1.0, 0.0, 0.0, 0.0),
+    # insert-heavy D variant (D's mix inverted: 95% insert / 5% read) —
+    # models the insert-dominated tail of a "read latest" workload
+    "ycsb-d95i": (0.95, 0.05, 0.0, 0.0),
 }
 
 

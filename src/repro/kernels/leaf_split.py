@@ -1,0 +1,217 @@
+"""Pallas kernel: leaf split + pending-insert merge for the on-mesh SMO
+engine (core/smo.py).
+
+Given one leaf row per lane plus the staged inserts that made it overflow,
+the kernel rank-merges row keys and staged keys into one sorted sequence of
+``m`` records and emits it as **two** rows:
+
+  * ``m <= FANOUT``: everything lands in the *left* row (a plain merge, the
+    same result as ``leaf_write`` with no updates staged) and the right row
+    comes back empty — the caller applies the left row in place and no
+    structural change happens;
+  * ``m > FANOUT``: the sequence is cut at ``m // 2`` — the left row keeps
+    the lower half (matching ``HostBTree._split_child``), the right row gets
+    the upper half, and ``sep`` carries the right row's first key (the
+    separator the parent absorbs).  ``did_split`` marks the lane.
+
+The caller (core/smo.py) allocates the sibling slot from the subtree's
+free-list headroom, writes the right row there, links the leaf-successor
+table and merges ``(sep, sibling)`` into the parent node — the kernel is
+purely the in-VMEM cut + merge.
+
+Caller contract (mirroring kernels/leaf_write.py): active staged keys are
+strictly ascending within a lane, distinct from each other and from the
+row's keys; at most ``FANOUT`` staged keys per lane, so ``m <= 2 * FANOUT``
+and one split always absorbs the whole batch.
+
+int64 keys/values travel as (hi, lo) int32 planes (the TPU VPU has no
+native 64-bit lanes).  The pure-jnp oracle is
+``kernels/ref.py::leaf_split_ref``; ``interpret=True`` (the default off-TPU)
+runs the same body through the Pallas interpreter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.nodes import KEY_MAX
+from repro.kernels.leaf_write import (
+    _KMAX_HI,
+    _KMAX_LO,
+    _join_i64,
+    _lt_planes,
+    _split_i64,
+)
+
+BLOCK_B = 8
+
+
+def _make_kernel(fanout: int):
+    def kernel(
+        khi_ref, klo_ref, vhi_ref, vlo_ref,
+        ikh_ref, ikl_ref, ivh_ref, ivl_ref,
+        lkh_ref, lkl_ref, lvh_ref, lvl_ref,
+        rkh_ref, rkl_ref, rvh_ref, rvl_ref,
+        occl_ref, occr_ref, sep_hi_ref, sep_lo_ref, did_ref,
+    ):
+        khi = khi_ref[...]                     # [B, F] int32 planes
+        klo = klo_ref[...]
+        ikh = ikh_ref[...]                     # [B, S]
+        ikl = ikl_ref[...]
+
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, fanout), 2)
+
+        # merged rank of every element (same branchless pairwise compares as
+        # kernels/leaf_write.py: actives are distinct, KEY_MAX never counts)
+        act = ~((ikh == _KMAX_HI) & (ikl == _KMAX_LO))            # [B, S]
+        validr = ~((khi == _KMAX_HI) & (klo == _KMAX_LO))         # [B, F]
+        ins_below_row = act[:, :, None] & _lt_planes(
+            ikh[:, :, None], ikl[:, :, None], khi[:, None, :], klo[:, None, :]
+        )                                                         # [B, S, F]
+        rank_row = col[0] + jnp.sum(ins_below_row.astype(jnp.int32), axis=1)
+        before = jnp.cumsum(act.astype(jnp.int32), axis=1) - act.astype(
+            jnp.int32
+        )                                                         # [B, S]
+        row_below_ins = validr[:, None, :] & _lt_planes(
+            khi[:, None, :], klo[:, None, :], ikh[:, :, None], ikl[:, :, None]
+        )                                                         # [B, S, F]
+        rank_ins = before + jnp.sum(row_below_ins.astype(jnp.int32), axis=2)
+
+        # cut point: m <= F keeps everything left; m > F cuts at m // 2
+        m = (
+            jnp.sum(validr.astype(jnp.int32), axis=-1)
+            + jnp.sum(act.astype(jnp.int32), axis=-1)
+        )                                                         # [B]
+        split = m > fanout
+        left_n = jnp.where(split, m // 2, m)                      # [B]
+
+        out_col = jax.lax.broadcasted_iota(jnp.int32, (1, fanout, 1), 1)
+        ln = left_n[:, None, None]
+
+        def gather(sel_rank_row, sel_rank_ins, target):
+            """One-hot gather of elements whose shifted rank hits ``target``
+            output columns; returns the pick masks [B, F, F|S]."""
+            pr = validr[:, None, :] & (sel_rank_row[:, None, :] == target)
+            pi = act[:, None, :] & (sel_rank_ins[:, None, :] == target)
+            return pr, pi
+
+        # left side: rank < left_n at column rank
+        pick_row_l, pick_ins_l = gather(rank_row, rank_ins, out_col)
+        keep_l = out_col < ln
+        pick_row_l = pick_row_l & keep_l
+        pick_ins_l = pick_ins_l & keep_l
+        # right side: rank >= left_n at column rank - left_n
+        pick_row_r, pick_ins_r = gather(
+            rank_row - left_n[:, None], rank_ins - left_n[:, None], out_col
+        )
+        keep_r = split[:, None, None]
+        pick_row_r = pick_row_r & keep_r
+        pick_ins_r = pick_ins_r & keep_r
+
+        hit_l = jnp.any(pick_row_l, axis=-1) | jnp.any(pick_ins_l, axis=-1)
+        hit_r = jnp.any(pick_row_r, axis=-1) | jnp.any(pick_ins_r, axis=-1)
+
+        def compact(pick_row, pick_ins, hit, plane_row, plane_ins, fill):
+            got = jnp.sum(
+                jnp.where(pick_row, plane_row[:, None, :], 0), axis=-1,
+                dtype=jnp.int32,
+            ) + jnp.sum(
+                jnp.where(pick_ins, plane_ins[:, None, :], 0), axis=-1,
+                dtype=jnp.int32,
+            )
+            return jnp.where(hit, got, fill)
+
+        vhi = vhi_ref[...]
+        vlo = vlo_ref[...]
+        ivh = ivh_ref[...]
+        ivl = ivl_ref[...]
+        lkh_ref[...] = compact(pick_row_l, pick_ins_l, hit_l, khi, ikh, _KMAX_HI)
+        lkl_ref[...] = compact(pick_row_l, pick_ins_l, hit_l, klo, ikl, _KMAX_LO)
+        lvh_ref[...] = compact(pick_row_l, pick_ins_l, hit_l, vhi, ivh, 0)
+        lvl_ref[...] = compact(pick_row_l, pick_ins_l, hit_l, vlo, ivl, 0)
+        rkh_ref[...] = compact(pick_row_r, pick_ins_r, hit_r, khi, ikh, _KMAX_HI)
+        rkl_ref[...] = compact(pick_row_r, pick_ins_r, hit_r, klo, ikl, _KMAX_LO)
+        rvh_ref[...] = compact(pick_row_r, pick_ins_r, hit_r, vhi, ivh, 0)
+        rvl_ref[...] = compact(pick_row_r, pick_ins_r, hit_r, vlo, ivl, 0)
+        occl_ref[...] = jnp.sum(hit_l, axis=-1, dtype=jnp.int32)
+        occr_ref[...] = jnp.sum(hit_r, axis=-1, dtype=jnp.int32)
+
+        # separator = the merged element of rank left_n (right row's head)
+        sep_row = validr & (rank_row == left_n[:, None])          # [B, F]
+        sep_ins = act & (rank_ins == left_n[:, None])             # [B, S]
+
+        def pick_sep(plane_row, plane_ins, fill):
+            got = jnp.sum(
+                jnp.where(sep_row, plane_row, 0), axis=-1, dtype=jnp.int32
+            ) + jnp.sum(
+                jnp.where(sep_ins, plane_ins, 0), axis=-1, dtype=jnp.int32
+            )
+            has = jnp.any(sep_row, axis=-1) | jnp.any(sep_ins, axis=-1)
+            return jnp.where(split & has, got, fill)
+
+        sep_hi_ref[...] = pick_sep(khi, ikh, _KMAX_HI)
+        sep_lo_ref[...] = pick_sep(klo, ikl, _KMAX_LO)
+        did_ref[...] = split.astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def leaf_split(
+    rows_k: jax.Array,   # [Q, F] int64 leaf key rows (KEY_MAX padding)
+    rows_v: jax.Array,   # [Q, F] int64 leaf value rows
+    ins_key: jax.Array,  # [Q, S] int64 staged insert keys (KEY_MAX inactive)
+    ins_val: jax.Array,  # [Q, S] int64 staged insert values
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+):
+    """Merge staged inserts into each leaf row, splitting rows that
+    overflow.  Returns ``(left_k [Q, F], left_v [Q, F], right_k [Q, F],
+    right_v [Q, F], occ_l [Q] int32, occ_r [Q] int32, sep [Q] int64,
+    did_split [Q] int32)`` — ``sep`` is ``KEY_MAX`` and the right row empty
+    for lanes that did not split."""
+    q, f = rows_k.shape
+    s = ins_key.shape[1]
+    pad = (-q) % block_b
+    if pad:
+        rows_k = jnp.pad(rows_k, ((0, pad), (0, 0)), constant_values=KEY_MAX)
+        rows_v = jnp.pad(rows_v, ((0, pad), (0, 0)))
+        ins_key = jnp.pad(ins_key, ((0, pad), (0, 0)), constant_values=KEY_MAX)
+        ins_val = jnp.pad(ins_val, ((0, pad), (0, 0)))
+    qp = rows_k.shape[0]
+
+    khi, klo = _split_i64(rows_k)
+    vhi, vlo = _split_i64(rows_v)
+    ikh, ikl = _split_i64(ins_key)
+    ivh, ivl = _split_i64(ins_val)
+
+    grid = (qp // block_b,)
+    row = pl.BlockSpec((block_b, f), lambda i: (i, 0))
+    staged = pl.BlockSpec((block_b, s), lambda i: (i, 0))
+    lane = pl.BlockSpec((block_b,), lambda i: (i,))
+    outs = pl.pallas_call(
+        _make_kernel(f),
+        grid=grid,
+        in_specs=[row, row, row, row, staged, staged, staged, staged],
+        out_specs=[row, row, row, row, row, row, row, row,
+                   lane, lane, lane, lane, lane],
+        out_shape=[jax.ShapeDtypeStruct((qp, f), jnp.int32)] * 8
+        + [jax.ShapeDtypeStruct((qp,), jnp.int32)] * 5,
+        interpret=interpret,
+    )(khi, klo, vhi, vlo, ikh, ikl, ivh, ivl)
+    lkh, lkl, lvh, lvl, rkh, rkl, rvh, rvl, occl, occr, sh, sl, did = outs
+    return (
+        _join_i64(lkh, lkl)[:q],
+        _join_i64(lvh, lvl)[:q],
+        _join_i64(rkh, rkl)[:q],
+        _join_i64(rvh, rvl)[:q],
+        occl[:q],
+        occr[:q],
+        _join_i64(sh, sl)[:q],
+        did[:q],
+    )

@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.leaf_scan import leaf_scan
+from repro.kernels.leaf_split import leaf_split
 from repro.kernels.leaf_write import leaf_write
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.node_search import node_search
@@ -20,6 +21,7 @@ from repro.kernels.subtree_walk import subtree_walk
 __all__ = [
     "flash_attention",
     "leaf_scan",
+    "leaf_split",
     "leaf_write",
     "mamba_scan",
     "node_search",

@@ -75,6 +75,49 @@ def leaf_write_ref(rows_k, rows_v, upd_slot, upd_val, ins_key, ins_val):
     return out_k, out_v, occ
 
 
+def leaf_split_ref(rows_k, rows_v, ins_key, ins_val):
+    """Oracle for kernels/leaf_split.py.
+
+    Rank-merges staged inserts ``(ins_key, ins_val)`` (KEY_MAX = inactive)
+    into the sorted leaf rows; rows whose merged count ``m`` exceeds FANOUT
+    are cut at ``m // 2`` (left keeps the lower half, matching
+    ``HostBTree._split_child``), others come back whole in the left row.
+    Active staged keys must be distinct from each other and from the row's
+    keys.  Returns ``(left_k, left_v, right_k, right_v, occ_l, occ_r, sep,
+    did_split)``; ``sep`` is the right row's first key (KEY_MAX when the
+    lane did not split).
+    """
+    k = rows_k.astype(jnp.int64)
+    v = rows_v.astype(jnp.int64)
+    f = k.shape[1]
+    act = ins_key != KEY_MAX
+    merged_k = jnp.concatenate([k, jnp.where(act, ins_key, KEY_MAX)], axis=-1)
+    merged_v = jnp.concatenate(
+        [jnp.where(k != KEY_MAX, v, 0), jnp.where(act, ins_val, 0)], axis=-1
+    )
+    order = jnp.argsort(merged_k, axis=-1, stable=True)
+    mk = jnp.take_along_axis(merged_k, order, axis=-1)
+    mv = jnp.take_along_axis(merged_v, order, axis=-1)
+    m = jnp.sum(mk != KEY_MAX, axis=-1).astype(jnp.int32)
+    split = m > f
+    left_n = jnp.where(split, m // 2, m)
+    col = jnp.arange(mk.shape[1], dtype=jnp.int32)[None, :]
+    in_left = col < left_n[:, None]
+    lk = jnp.where(in_left, mk, KEY_MAX)[:, :f]
+    lv = jnp.where(in_left & (mk != KEY_MAX), mv, 0)[:, :f]
+    # right side: shift the tail down by left_n
+    idx = jnp.clip(col[:, :f] + left_n[:, None], 0, mk.shape[1] - 1)
+    rk_full = jnp.take_along_axis(mk, idx, axis=-1)
+    rv_full = jnp.take_along_axis(mv, idx, axis=-1)
+    in_right = split[:, None] & (col[:, :f] < (m - left_n)[:, None])
+    rk = jnp.where(in_right, rk_full, KEY_MAX)
+    rv = jnp.where(in_right & (rk_full != KEY_MAX), rv_full, 0)
+    occ_l = jnp.sum(lk != KEY_MAX, axis=-1).astype(jnp.int32)
+    occ_r = jnp.sum(rk != KEY_MAX, axis=-1).astype(jnp.int32)
+    sep = jnp.where(split, rk[:, 0], KEY_MAX)
+    return lk, lv, rk, rv, occ_l, occ_r, sep, split.astype(jnp.int32)
+
+
 def node_search_ref(node_keys, queries, node_values):
     """Oracle for kernels/node_search.py."""
     queries = queries.astype(jnp.int64)

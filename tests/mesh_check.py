@@ -15,7 +15,7 @@ from repro.core import pool as pool_mod  # noqa: E402
 from repro.core import scan as scan_mod  # noqa: E402
 from repro.core import write as write_mod  # noqa: E402
 from repro.compat import make_mesh_compat  # noqa: E402
-from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN  # noqa: E402
 from repro.core.sim import HostBTree  # noqa: E402
 
 
@@ -248,6 +248,131 @@ def main() -> None:
         if hv is not None:
             assert int(v4[i]) == hv, f"insert value wrong at {i}"
 
+    # ---- on-mesh SMO engine (core/smo.py): 8-device split round trip -----
+    # leaf overflows on two different memory columns split device-side; the
+    # split leaf/sibling/parent versions bump (poisoned stale cached rows
+    # must be rejected) while every other warm row survives untouched — no
+    # global version reset, no pool rebuild
+    from repro.core import smo as smo_mod  # noqa: E402
+
+    cfg_m = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=256,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=100,   # deterministic warm rows for the poison check
+        route_capacity_factor=4.0,
+    )
+    host_m = HostBTree(keys, vals, fill=0.7)
+    state = dex_mod.init_state(pool, meta, cfg_m, bounds)
+    shardings_m = dex_mod.state_shardings(mesh, cfg_m)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings_m)
+    lk_m = jax.jit(dex_mod.make_dex_lookup(meta, cfg_m, mesh))
+    ins_m = jax.jit(write_mod.make_dex_insert(meta, cfg_m, mesh))
+    scan_m = jax.jit(scan_mod.make_dex_scan(meta, cfg_m, mesh, max_count=MC))
+    smo_m = jax.jit(smo_mod.make_dex_smo(meta, cfg_m, mesh))
+
+    def put_m(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    def pad512(x):
+        return np.concatenate(
+            [x, np.full(512 - x.size, KEY_MAX, np.int64)]
+        )
+
+    # warm rows far from the burst regions on every chip (both partitions)
+    far = np.concatenate([keys[2000:2256], keys[-256:]]).astype(np.int64)
+    state, f_far, v_far, _ = lk_m(state, put_m(far))
+    assert bool(np.asarray(f_far).all())
+    # warm the to-be-split leaves too, so stale copies exist to poison
+    near = pad512(np.concatenate([keys[:32], keys[-40:-8]]).astype(np.int64))
+    state, _, _, _ = lk_m(state, put_m(near))
+
+    # overflow bursts on two memory columns: around the smallest keys
+    # (partition 0 / column 0) and the largest (partition 1 / last column)
+    b_lo = np.arange(int(keys[0]) + 1, int(keys[0]) + 1 + FANOUT, dtype=np.int64)
+    b_lo = b_lo[~np.isin(b_lo, keys)][: FANOUT - 8]
+    b_hi = np.arange(int(keys[-2]) + 1, int(keys[-2]) + 1 + FANOUT,
+                     dtype=np.int64)
+    b_hi = b_hi[~np.isin(b_hi, keys)][: FANOUT - 8]
+    burst = pad512(np.concatenate([b_lo, b_hi]))
+    bvals = np.where(burst != KEY_MAX, burst * 3, 0)
+    state, ri_m = ins_m(state, put_m(burst), put_m(bvals))
+    ri_m = np.asarray(ri_m)
+    live_b = burst != KEY_MAX
+    for kk, rr in zip(burst[live_b], ri_m[live_b]):
+        if rr == write_mod.STATUS_OK:
+            host_m.insert(int(kk), int(kk) * 3)
+    shed_m = live_b & (ri_m == write_mod.STATUS_SPLIT)
+    assert shed_m.sum() > 0, "bursts must overflow their leaves"
+    state, meta_m, info = smo_mod.settle_splits(
+        state, meta, cfg_m, smo_m, host_m,
+        np.where(shed_m, burst, KEY_MAX), np.where(shed_m, bvals, 0), bounds,
+    )
+    assert meta_m is meta, "on-mesh SMO must not rebuild the pool"
+    assert not info["drained"] and info["residual"] == 0
+    assert info["onmesh"] == int(shed_m.sum())
+    stats_m = np.asarray(state.stats).sum(axis=0)
+    assert int(stats_m[dex_mod.STAT_SMO_SPLITS]) >= 2  # one per column
+    assert int(stats_m[dex_mod.STAT_DRAINS]) == 0
+
+    # surgical invalidation: only the split leaves + siblings + ancestors
+    # bumped; every cached copy of a bumped node is poisoned on every chip
+    # and must be re-fetched, never served
+    vers_m = np.asarray(state.versions)
+    assert (vers_m == vers_m[:1]).all(), "version table must be pmax-synced"
+    bumped = np.where(vers_m[0] > 0)[0]
+    assert 0 < bumped.size <= 8 * meta.levels_in_subtree, bumped.size
+    tags_m = np.asarray(state.cache.tags)
+    hitm = np.isin(tags_m, bumped)
+    assert hitm.any(), "warm caches must hold a stale copy of a split node"
+    pois = np.asarray(state.cache.values).copy()
+    pois[hitm] = -424242
+    state = state._replace(cache=state.cache._replace(
+        values=jax.device_put(jnp.asarray(pois), shardings_m.cache.values)
+    ))
+    probe = pad512(np.concatenate([b_lo, b_hi, keys[:16], keys[-16:]]))
+    state, f_p, v_p, _ = lk_m(state, put_m(probe))
+    f_p, v_p = np.asarray(f_p), np.asarray(v_p)
+    for i in np.where(probe != KEY_MAX)[0]:
+        hv = host_m.get(int(probe[i]))
+        assert bool(f_p[i]) == (hv is not None), f"smo lookup {i}"
+        if hv is not None:
+            assert int(v_p[i]) == hv, f"poisoned stale row served at {i}"
+
+    # unmoved warm rows survive the splits: the far probe repeats entirely
+    # from cache (hits grow by at least the batch) with identical results
+    before_m = np.asarray(state.stats).sum(axis=0)
+    state, f_far2, v_far2, _ = lk_m(state, put_m(far))
+    after_m = np.asarray(state.stats).sum(axis=0)
+    np.testing.assert_array_equal(np.asarray(f_far2), np.asarray(f_far))
+    np.testing.assert_array_equal(np.asarray(v_far2), np.asarray(v_far))
+    assert (
+        after_m[dex_mod.STAT_HITS] - before_m[dex_mod.STAT_HITS]
+        >= far.size
+    ), "far-region cached rows must survive an on-mesh split"
+
+    # scans across both split leaves follow the successor chain (multi-hop
+    # across the relocated sibling) and stay bit-identical to the host
+    starts_m = pad512(np.array(
+        [int(keys[0]), int(b_lo[0]), int(keys[-2]), int(b_hi[0])], np.int64
+    ))
+    cnts_m = np.where(starts_m != KEY_MAX, 48, 0).astype(np.int64)
+    state, sk_m, sv_m, tk_m = scan_m(state, put_m(starts_m), put_m(cnts_m))
+    sk_m, sv_m, tk_m = np.asarray(sk_m), np.asarray(sv_m), np.asarray(tk_m)
+    for i in np.where(starts_m != KEY_MAX)[0]:
+        expect = [
+            kk for _, ks in host_m.scan(int(starts_m[i]), int(cnts_m[i]))
+            for kk in ks
+        ][: int(cnts_m[i])]
+        got = sk_m[i][sk_m[i] != KEY_MAX].tolist()
+        assert got == expect, f"post-split scan diverges at {i}"
+        for j, kk in enumerate(expect):
+            assert int(sv_m[i, j]) == host_m.get(int(kk)), (i, j)
+
     # ---- live logical repartitioning round trip (core/repartition.py) ----
     # a skewed batch sheds load under tight buckets; the controller moves
     # the boundary, results stay identical, drops strictly fall, and
@@ -321,7 +446,8 @@ def main() -> None:
     # poison every cached copy of a moved node on every chip: if the
     # version bump failed to invalidate them, lookups would serve garbage
     gids_all, lo_all, hi_all = node_key_ranges(
-        np.asarray(state.pool.pool_keys), meta
+        np.asarray(state.pool.pool_keys), meta,
+        np.asarray(state.pool.pool_children),
     )
     affected = np.zeros(gids_all.shape, bool)
     for a, b2 in moved_intervals(LogicalPartitions(bounds), newp):

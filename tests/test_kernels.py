@@ -188,6 +188,130 @@ class TestLeafWrite:
 
 
 # ---------------------------------------------------------------------------
+# leaf_split
+# ---------------------------------------------------------------------------
+
+
+class TestLeafSplit:
+    def _case(self, q, s, seed, *, force_overflow=False):
+        """Random leaf rows plus staged inserts (sorted, distinct from the
+        row) — the core/smo.py caller contract.  ``force_overflow`` draws
+        occupancy + staging so every lane must split."""
+        rng = np.random.default_rng(seed)
+        k = np.full((q, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((q, FANOUT), np.int64)
+        ik = np.full((q, s), KEY_MAX, np.int64)
+        iv = np.zeros((q, s), np.int64)
+        for i in range(q):
+            if force_overflow:
+                occ = FANOUT
+                ni = int(rng.integers(1, s + 1))
+            else:
+                occ = int(rng.integers(0, FANOUT + 1))
+                ni = int(rng.integers(0, s + 1))
+            keys = np.sort(
+                rng.choice(1 << 30, size=occ, replace=False).astype(np.int64)
+            ) * 2 + 2                          # even keys
+            k[i, :occ] = keys
+            v[i, :occ] = keys * 3
+            if ni:
+                newk = np.sort(
+                    rng.choice(1 << 30, size=ni, replace=False).astype(np.int64)
+                ) * 2 + 1                      # odd: distinct from the row
+                ik[i, :ni] = newk
+                iv[i, :ni] = newk * 5
+        return list(map(jnp.asarray, (k, v, ik, iv)))
+
+    @pytest.mark.parametrize("q", [1, 8, 37, 130])
+    def test_matches_ref(self, q):
+        args = self._case(q, s=FANOUT, seed=q)
+        got = ops.leaf_split(*args)
+        want = ref.leaf_split_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_overflow_always_splits_in_halves(self):
+        q = 16
+        args = self._case(q, s=FANOUT, seed=3, force_overflow=True)
+        lk, lv, rk, rv, occl, occr, sep, did = map(
+            np.asarray, ops.leaf_split(*args)
+        )
+        wk = np.asarray(args[0])
+        wik = np.asarray(args[2])
+        assert (did == 1).all()
+        for i in range(q):
+            merged = np.sort(np.concatenate(
+                [wk[i][wk[i] != KEY_MAX], wik[i][wik[i] != KEY_MAX]]
+            ))
+            m = merged.size
+            assert int(occl[i]) == m // 2
+            assert int(occr[i]) == m - m // 2
+            np.testing.assert_array_equal(lk[i][: m // 2], merged[: m // 2])
+            np.testing.assert_array_equal(rk[i][: m - m // 2], merged[m // 2:])
+            assert int(sep[i]) == int(merged[m // 2])
+            # left/right key sets partition around the separator
+            assert (lk[i][lk[i] != KEY_MAX] < sep[i]).all()
+            assert (rk[i][rk[i] != KEY_MAX] >= sep[i]).all()
+
+    def test_no_overflow_is_plain_merge(self):
+        # m <= FANOUT must reproduce leaf_write's merge in the left row
+        q = 9
+        rng = np.random.default_rng(11)
+        k = np.full((q, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((q, FANOUT), np.int64)
+        ik = np.full((q, FANOUT), KEY_MAX, np.int64)
+        iv = np.zeros((q, FANOUT), np.int64)
+        for i in range(q):
+            occ = int(rng.integers(0, FANOUT - 4))
+            ni = int(rng.integers(0, FANOUT - occ + 1))
+            keys = np.sort(
+                rng.choice(1 << 20, size=occ, replace=False).astype(np.int64)
+            ) * 2 + 2
+            k[i, :occ] = keys
+            v[i, :occ] = keys * 3
+            if ni:
+                newk = np.sort(
+                    rng.choice(1 << 20, size=ni, replace=False).astype(np.int64)
+                ) * 2 + 1
+                ik[i, :ni] = newk
+                iv[i, :ni] = newk * 5
+        args = list(map(jnp.asarray, (k, v, ik, iv)))
+        lk, lv, rk, rv, occl, occr, sep, did = ops.leaf_split(*args)
+        us = np.full((q, FANOUT), -1, np.int32)
+        uv = np.zeros((q, FANOUT), np.int64)
+        mk, mv, mocc = ref.leaf_write_ref(
+            args[0], args[1], jnp.asarray(us), jnp.asarray(uv), args[2], args[3]
+        )
+        assert (np.asarray(did) == 0).all()
+        np.testing.assert_array_equal(np.asarray(lk), np.asarray(mk))
+        np.testing.assert_array_equal(np.asarray(lv), np.asarray(mv))
+        np.testing.assert_array_equal(np.asarray(occl), np.asarray(mocc))
+        assert (np.asarray(occr) == 0).all()
+        assert (np.asarray(rk) == KEY_MAX).all()
+        assert (np.asarray(sep) == KEY_MAX).all()
+
+    def test_negative_and_extreme_keys(self):
+        k = np.full((1, FANOUT), KEY_MAX, np.int64)
+        v = np.zeros((1, FANOUT), np.int64)
+        keys = np.sort(np.concatenate([
+            np.array([-(2**62), -7, 0, 2**61], np.int64),
+            np.arange(2, 2 * (FANOUT - 4) + 1, 2, dtype=np.int64),
+        ]))
+        k[0] = keys
+        v[0] = np.arange(FANOUT, dtype=np.int64) + 1
+        ik = np.full((1, 8), KEY_MAX, np.int64)
+        iv = np.zeros((1, 8), np.int64)
+        ik[0, :3] = [-(2**61), 3, 2**62]
+        iv[0, :3] = [7, 8, 9]
+        args = list(map(jnp.asarray, (k, v, ik, iv)))
+        got = ops.leaf_split(*args)
+        want = ref.leaf_split_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        assert int(got[7][0]) == 1  # FANOUT + 3 merged records must split
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

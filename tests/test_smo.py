@@ -1,0 +1,336 @@
+"""On-mesh SMO engine tests (core/smo.py): device-side leaf splits vs
+``HostBTree`` replay, successor-chain scans across split leaves, warm-cache
+survival (no global version reset), the inner-split pass at level_m=2, the
+free-list-exhaustion fallback through ``drain_splits``, and a hypothesis
+property test interleaving insert/update/lookup batches with on-mesh splits
+(``importorskip``, matching tests/test_write.py style).
+
+Multi-device split parity (8 devices, poisoned stale cached rows) lives in
+tests/mesh_check.py, exercised via the ``slow`` subprocess test in
+tests/test_dex_mesh.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dex as dex_mod
+from repro.core import pool as pool_mod
+from repro.core import scan as scan_mod
+from repro.core import smo as smo_mod
+from repro.core import write as write_mod
+from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN
+from repro.compat import make_mesh_compat
+from repro.core.sim import HostBTree
+
+
+def _dataset(n, seed=0, space=None):
+    rng = np.random.default_rng(seed)
+    space = space or 16 * n
+    return np.sort(rng.choice(space, size=n, replace=False).astype(np.int64) + 1)
+
+
+def _setup(keys, *, level_m=1, headroom=0.5, p_admit_leaf_pct=10,
+           cache_sets=128):
+    vals = keys * 5
+    pool, meta = pool_mod.build_pool(keys, vals, level_m=level_m, fill=0.7,
+                                     n_shards=1, headroom=headroom)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        n_route=1, n_memory=1, cache_sets=cache_sets, cache_ways=4,
+        p_admit_leaf_pct=p_admit_leaf_pct, route_capacity_factor=2.0,
+        policy="fetch",
+    )
+    bounds = np.array([KEY_MIN, KEY_MAX], np.int64)
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    host = HostBTree(keys, vals, fill=0.7)
+    return state, meta, cfg, mesh, host, bounds
+
+
+def _ops(meta, cfg, mesh):
+    return (
+        jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh)),
+        jax.jit(write_mod.make_dex_update(meta, cfg, mesh)),
+        jax.jit(write_mod.make_dex_insert(meta, cfg, mesh)),
+        jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh)),
+    )
+
+
+def _check_against_host(lookup, state, host, probe):
+    state, found, vals, _ = lookup(state, jnp.asarray(probe))
+    found, vals = np.asarray(found), np.asarray(vals)
+    for i, k in enumerate(probe):
+        hv = host.get(int(k))
+        assert bool(found[i]) == (hv is not None), (i, int(k))
+        if hv is not None:
+            assert int(vals[i]) == hv, (i, int(k), int(vals[i]), hv)
+    return state
+
+
+def _overflow_burst(keys, rng=None, width=FANOUT):
+    """Fresh keys all targeting the first leaf: guaranteed overflow."""
+    lo = int(keys[0])
+    burst = np.arange(lo + 1, lo + 1 + width, dtype=np.int64)
+    return burst[~np.isin(burst, keys)][: width - 8]
+
+
+class TestOnMeshLeafSplit:
+    def test_split_applies_without_rebuild_and_matches_host(self):
+        keys = _dataset(3000, seed=1)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        lookup, _, insert, smo = _ops(meta, cfg, mesh)
+        burst = _overflow_burst(keys)
+        iv = burst * 3
+        state, res = insert(state, jnp.asarray(burst), jnp.asarray(iv))
+        res = np.asarray(res)
+        assert (res == write_mod.STATUS_SPLIT).all()
+        state, meta2, info = smo_mod.settle_splits(
+            state, meta, cfg, smo, host, burst, iv, bounds
+        )
+        assert meta2 is meta, "on-mesh split must not rebuild the pool"
+        assert not info["drained"]
+        assert info["onmesh"] == burst.size
+        assert host.splits > 0  # settle replayed the inserts into the host
+        stats = np.asarray(state.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_SMO_SPLITS] >= 1
+        assert stats[dex_mod.STAT_DRAINS] == 0
+        # free-list watermark moved exactly by the executed splits
+        n_alloc = np.asarray(state.n_alloc)
+        assert (
+            int((n_alloc - meta.base_cap).sum())
+            == int(stats[dex_mod.STAT_SMO_SPLITS])
+        )
+        _check_against_host(lookup, state, host, burst)
+        _check_against_host(lookup, state, host, keys[:256])
+
+    def test_scan_follows_successor_chain_across_split(self):
+        keys = _dataset(3000, seed=2)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        _, _, insert, smo = _ops(meta, cfg, mesh)
+        scan = jax.jit(scan_mod.make_dex_scan(meta, cfg, mesh, max_count=64))
+        burst = _overflow_burst(keys)
+        state, res = insert(state, jnp.asarray(burst), jnp.asarray(burst * 3))
+        shed = np.asarray(res) == write_mod.STATUS_SPLIT
+        state, meta, info = smo_mod.settle_splits(
+            state, meta, cfg, smo, host, burst[shed], burst[shed] * 3, bounds
+        )
+        assert not info["drained"]
+        # scans starting before, inside and after the split leaf's range
+        lo = int(keys[0])
+        starts = np.array([lo, lo + 3, int(burst[-1]), int(keys[50])],
+                          np.int64)
+        cnts = np.array([64, 64, 40, 30], np.int64)
+        state, sk, sv, tk = scan(state, jnp.asarray(starts), jnp.asarray(cnts))
+        sk, sv, tk = np.asarray(sk), np.asarray(sv), np.asarray(tk)
+        for i in range(starts.size):
+            expect = [
+                kk for _, ks in host.scan(int(starts[i]), int(cnts[i]))
+                for kk in ks
+            ][: int(cnts[i])]
+            got = sk[i][sk[i] != KEY_MAX].tolist()
+            assert got == expect, (i, got[:6], expect[:6])
+            assert int(tk[i]) == len(expect)
+            for j, kk in enumerate(expect):
+                assert int(sv[i, j]) == host.get(int(kk)), (i, j)
+
+    def test_unrelated_cached_rows_survive_split(self):
+        """The drain path colds every cache; the SMO engine must bump only
+        the split leaf and its touched ancestors, so warm rows elsewhere
+        keep serving hits (no global version reset)."""
+        keys = _dataset(3000, seed=3)
+        state, meta, cfg, mesh, host, bounds = _setup(
+            keys, p_admit_leaf_pct=100
+        )
+        lookup, _, insert, smo = _ops(meta, cfg, mesh)
+        probe = keys[-256:]  # far from the burst region (first leaf)
+        state, _, _, _ = lookup(state, jnp.asarray(probe))  # warm
+        burst = _overflow_burst(keys)
+        state, res = insert(state, jnp.asarray(burst), jnp.asarray(burst * 3))
+        shed = np.asarray(res) == write_mod.STATUS_SPLIT
+        assert shed.any()
+        state, meta, info = smo_mod.settle_splits(
+            state, meta, cfg, smo, host, burst[shed], burst[shed] * 3, bounds
+        )
+        assert not info["drained"]
+        # only the split leaf + sibling + ancestors were version-bumped
+        vers = np.asarray(state.versions)[0]
+        assert 0 < int((vers > 0).sum()) <= 4 * meta.levels_in_subtree
+        before = np.asarray(state.stats).sum(axis=0)
+        state, f, v, _ = lookup(state, jnp.asarray(probe))
+        after = np.asarray(state.stats).sum(axis=0)
+        assert bool(np.asarray(f).all())
+        np.testing.assert_array_equal(np.asarray(v), probe * 5)
+        # the warm rows must keep serving from cache: at least the leaf
+        # level of every probe lane hits (no refetch)
+        d_hits = int(after[dex_mod.STAT_HITS] - before[dex_mod.STAT_HITS])
+        assert d_hits >= probe.size, d_hits
+
+    def test_inner_split_at_level_m2(self):
+        """Hammering one key region at level_m=2 fills the leaves' shared
+        level-1 parent; the dense inner pass must split it device-side
+        (no host rebuild) and keep parity with the host replay."""
+        rng = np.random.default_rng(4)
+        keys = _dataset(30_000, seed=4, space=4_000_000)
+        state, meta, cfg, mesh, host, bounds = _setup(keys, level_m=2)
+        lookup, _, insert, smo = _ops(meta, cfg, mesh)
+        assert meta.levels_in_subtree == 3
+        lo, hi = int(keys[500]), int(keys[900])
+        drained = 0
+        smo_before = int(
+            np.asarray(state.stats).sum(axis=0)[dex_mod.STAT_SMO_SPLITS]
+        )
+        for _ in range(8):
+            fresh = np.unique(
+                rng.integers(lo, hi, size=256).astype(np.int64)
+            )
+            fresh = fresh[~np.isin(fresh, keys)]
+            pad = 256 - fresh.size
+            ik = np.concatenate([fresh, np.full(pad, KEY_MAX, np.int64)])
+            iv = np.where(ik != KEY_MAX, ik * 3, 0)
+            state, res = insert(state, jnp.asarray(ik), jnp.asarray(iv))
+            res = np.asarray(res)
+            okm = (res == write_mod.STATUS_OK) & (ik != KEY_MAX)
+            for kk in ik[okm]:
+                host.insert(int(kk), int(kk) * 3)
+            shed = res == write_mod.STATUS_SPLIT
+            state, meta, info = smo_mod.settle_splits(
+                state, meta, cfg, smo, host, ik[shed], iv[shed], bounds
+            )
+            drained += int(info["drained"])
+            if info["drained"]:
+                lookup, _, insert, smo = _ops(meta, cfg, mesh)
+            keys = np.union1d(keys, ik[okm])
+        stats = np.asarray(state.stats).sum(axis=0)
+        assert int(stats[dex_mod.STAT_SMO_SPLITS]) - smo_before > 1
+        assert drained == 0, "level-2 headroom must absorb this burst"
+        hk, hv = write_mod.host_items(host)
+        idx = rng.choice(hk.size, size=512, replace=False)
+        _check_against_host(lookup, state, host, hk[idx])
+
+    def test_exhausted_free_list_falls_back_to_drain(self):
+        keys = _dataset(3000, seed=5)
+        state, meta, cfg, mesh, host, bounds = _setup(keys, headroom=0.0)
+        lookup, _, insert, smo = _ops(meta, cfg, mesh)
+        assert meta.subtree_cap == meta.base_cap  # no slack at all
+        burst = _overflow_burst(keys)
+        state, res = insert(state, jnp.asarray(burst), jnp.asarray(burst * 3))
+        shed = np.asarray(res) == write_mod.STATUS_SPLIT
+        assert shed.any()
+        state, meta2, info = smo_mod.settle_splits(
+            state, meta, cfg, smo, host, burst[shed], burst[shed] * 3, bounds
+        )
+        assert info["drained"] and info["onmesh"] == 0
+        assert meta2 is not meta  # pool rebuilt by the fallback
+        lookup, _, insert, smo = _ops(meta2, cfg, mesh)
+        stats = np.asarray(state.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_DRAINS] == 1
+        assert stats[dex_mod.STAT_SMO_SPLITS] == 0
+        _check_against_host(lookup, state, host, burst)
+        _check_against_host(lookup, state, host, keys[:200])
+
+    def test_zero_shed_drain_is_a_noop(self):
+        keys = _dataset(2000, seed=6)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        empty = np.zeros((0,), np.int64)
+        state2, meta2 = write_mod.drain_splits(
+            state, meta, cfg, host, empty, empty, bounds
+        )
+        assert state2 is state and meta2 is meta
+        stats = np.asarray(state2.stats).sum(axis=0)
+        assert stats[dex_mod.STAT_DRAINS] == 0
+        _, _, _, smo = _ops(meta, cfg, mesh)
+        state3, meta3, info = smo_mod.settle_splits(
+            state, meta, cfg, smo, host, empty, empty, bounds
+        )
+        assert state3 is state and meta3 is meta
+        assert info == {"onmesh": 0, "residual": 0, "rounds": 0,
+                        "drained": False}
+
+
+# ---------------------------------------------------------------------------
+# property test: interleaved batches + on-mesh splits == sequential replay
+# ---------------------------------------------------------------------------
+
+
+class TestInterleavedSmoPropertyHypothesis:
+    def test_interleaved_batches_with_onmesh_splits_match_host(self):
+        pytest.importorskip(
+            "hypothesis", reason="property tests need hypothesis"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        base = _dataset(800, seed=9, space=20_000)
+
+        @settings(max_examples=10, deadline=None)
+        @given(st.data())
+        def scenario(data):
+            # headroom 0.05: early splits run on-mesh, sustained pressure
+            # exhausts the free-list; headroom 0.0: the free-list is born
+            # exhausted, so every shed crosses the drain fallback — both
+            # must stay bit-identical to the host replay
+            headroom = data.draw(
+                st.sampled_from([0.05, 0.0]), label="headroom"
+            )
+            state, meta, cfg, mesh, host, bounds = _setup(
+                base, headroom=headroom
+            )
+            lookup, update, insert, smo = _ops(meta, cfg, mesh)
+            n_rounds = data.draw(st.integers(1, 3), label="rounds")
+            for rnd in range(n_rounds):
+                b = 64
+                op_kind = data.draw(
+                    st.lists(st.integers(0, 2), min_size=b, max_size=b),
+                    label=f"ops{rnd}",
+                )
+                # narrow key range: one-two leaves serve it, so a couple of
+                # rounds of inserts reliably overflow one (leaf slack is
+                # FANOUT - per_node = 20) and exercise the SMO engine
+                raw = data.draw(
+                    st.lists(
+                        st.integers(0, 1_500), min_size=b, max_size=b
+                    ),
+                    label=f"keys{rnd}",
+                )
+                kind = np.asarray(op_kind)
+                karr = np.asarray(raw, np.int64) + 1
+                varr = (karr * 7 + rnd).astype(np.int64)
+                lk = np.where(kind == 0, karr, KEY_MAX)
+                uk = np.where(kind == 1, karr, KEY_MAX)
+                ik = np.where(kind == 2, karr, KEY_MAX)
+                state, found, vals, _ = lookup(state, jnp.asarray(lk))
+                found, vals = np.asarray(found), np.asarray(vals)
+                for i in np.where(kind == 0)[0]:
+                    hv = host.get(int(karr[i]))
+                    assert bool(found[i]) == (hv is not None)
+                    if hv is not None:
+                        assert int(vals[i]) == hv
+                state, ru = update(state, jnp.asarray(uk), jnp.asarray(varr))
+                ru = np.asarray(ru)
+                for i in np.where(kind == 1)[0]:
+                    did = host.update(int(karr[i]), int(varr[i]))
+                    assert (ru[i] == write_mod.STATUS_OK) == did
+                state, ri = insert(state, jnp.asarray(ik), jnp.asarray(varr))
+                ri = np.asarray(ri)
+                ins_lanes = kind == 2
+                for i in np.where(ins_lanes)[0]:
+                    if ri[i] == write_mod.STATUS_OK:
+                        host.insert(int(karr[i]), int(varr[i]))
+                assert not (ri[ins_lanes] == write_mod.STATUS_SHED).any()
+                shed = ins_lanes & (ri == write_mod.STATUS_SPLIT)
+                if shed.any():
+                    # on-mesh SMO first (settle replays applied lanes into
+                    # the host mirror), drain fallback for the residue
+                    state, meta, info = smo_mod.settle_splits(
+                        state, meta, cfg, smo, host, karr[shed],
+                        varr[shed], bounds,
+                    )
+                    assert info["onmesh"] + info["residual"] == int(
+                        shed.sum()
+                    )
+                    if info["drained"]:
+                        lookup, update, insert, smo = _ops(meta, cfg, mesh)
+            probe = np.unique(np.concatenate([base[:128]]))
+            _check_against_host(lookup, state, host, probe)
+
+        scenario()
