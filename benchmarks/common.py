@@ -49,6 +49,17 @@ HEADER = (
 )
 
 
+def seed_kwargs(seed: "int | None") -> dict:
+    """Map the bench suite's ``--seed`` to :func:`run_one` /
+    :func:`sweep_threads` kwargs.  ``None`` keeps every module's built-in
+    defaults (bit-identical to historical runs); an int reseeds both the
+    dataset and the workload/simulator streams, so ``bench_results.json``
+    is reproducible for any chosen seed."""
+    if seed is None:
+        return {}
+    return {"seed": int(seed) + 7, "dataset_seed": int(seed)}
+
+
 def run_one(
     system: str,
     workload: str,
@@ -60,13 +71,14 @@ def run_one(
     theta: float = 0.99,
     threads: int = 144,
     seed: int = 7,
+    dataset_seed: int = 0,
     cfg_overrides: Optional[dict] = None,
     hw: Optional[HardwareModel] = None,
     hot_leaf_fraction: Optional[float] = None,
     scan_len: int = 100,
     scan_len_dist: str = "fixed",
 ) -> BenchResult:
-    dataset = ycsb.make_dataset(n_keys, seed=0)
+    dataset = ycsb.make_dataset(n_keys, seed=dataset_seed)
     tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
     cache_nodes = max(64, int(cache_ratio * tree.num_nodes))
     overrides = dict(cache_bytes=cache_nodes * 1024)
@@ -103,7 +115,8 @@ def sweep_threads(system: str, workload: str, thread_counts, **kw):
     so simulate once and re-analyze the caps at each thread count."""
     from repro.core.cost_model import analyze as _an
 
-    dataset = ycsb.make_dataset(kw.get("n_keys", N_KEYS), seed=0)
+    dataset = ycsb.make_dataset(kw.get("n_keys", N_KEYS),
+                                seed=kw.get("dataset_seed", 0))
     tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
     cache_nodes = max(64, int(kw.get("cache_ratio", DEFAULT_CACHE_RATIO) * tree.num_nodes))
     overrides = dict(cache_bytes=cache_nodes * 1024)
@@ -111,12 +124,14 @@ def sweep_threads(system: str, workload: str, thread_counts, **kw):
     cfg = baselines.ALL[system](**overrides)
     sim = Simulator(tree, cfg, seed=kw.get("seed", 7))
     theta = kw.get("theta", 0.99)
+    # workload seeds derive from the base seed (defaults keep the
+    # historical 11/12 streams bit-identical)
     warm = ycsb.generate(workload, dataset, kw.get("n_warm", N_WARM),
-                         theta=theta, seed=11)
+                         theta=theta, seed=kw.get("seed", 7) + 4)
     sim.run(warm.ops, warm.keys, scan_len=warm.scan_len, scan_lens=warm.scan_lens)
     sim.reset_counters()
     wl = ycsb.generate(workload, dataset, kw.get("n_ops", N_OPS),
-                       theta=theta, seed=12)
+                       theta=theta, seed=kw.get("seed", 7) + 5)
     sim.run(wl.ops, wl.keys, scan_len=wl.scan_len, scan_lens=wl.scan_lens)
     mix = ycsb.WORKLOADS[workload]
     write_frac = mix[0] + mix[2]
@@ -190,6 +205,49 @@ def write_with_retries(write, state, put, wk, wv, *, max_retries=4):
         pending = pending & (r == STATUS_SHED)
     status[pending] = STATUS_SHED
     return state, status
+
+
+def engine_with_retries(engine, state, put, opc, kk, vv, *, max_retries=4):
+    """Run one mixed-op engine batch (core/engine.py), replaying load-shed
+    lanes (``EngineResult.shed``) up to ``max_retries`` times.  Returns
+    ``(state, found, vals, status, scan_k, scan_v, taken, completed)`` —
+    ``completed`` is False only for lanes still shed after the bounded
+    replay; ``scan_k``/``scan_v`` are None for engines built without
+    ``"scan"``.  Lanes never silently vanish from the op count."""
+    import numpy as np
+    from repro.core.nodes import KEY_MAX
+    from repro.core.write import STATUS_MISS, STATUS_SHED
+
+    done = kk == KEY_MAX
+    found = np.zeros(kk.shape, bool)
+    vals = np.zeros(kk.shape, np.int64)
+    status = np.full(kk.shape, STATUS_MISS, np.int32)
+    sk = sv = None
+    taken = np.zeros(kk.shape, np.int32)
+    for _ in range(max_retries):
+        if done.all():
+            break
+        state, r = engine(
+            state,
+            put(np.where(done, 0, opc).astype(np.int32)),
+            put(np.where(done, KEY_MAX, kk)),
+            put(np.where(done, 0, vv)),
+        )
+        sh = np.asarray(r.shed)
+        ok = ~done & ~sh
+        found[ok] = np.asarray(r.found)[ok]
+        vals[ok] = np.asarray(r.values)[ok]
+        status[ok] = np.asarray(r.status)[ok]
+        if r.scan_keys is not None:
+            if sk is None:
+                sk = np.full(np.asarray(r.scan_keys).shape, KEY_MAX, np.int64)
+                sv = np.zeros(sk.shape, np.int64)
+            sk[ok] = np.asarray(r.scan_keys)[ok]
+            sv[ok] = np.asarray(r.scan_values)[ok]
+            taken[ok] = np.asarray(r.taken)[ok]
+        done |= ok
+    status[~done] = STATUS_SHED
+    return state, found, vals, status, sk, sv, taken, done
 
 
 def scan_with_retries(scan, state, put, starts, cnts, *, max_count,

@@ -297,12 +297,13 @@ def _simulator_cross_check(dataset, ops, keys, res):
     return rows
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     n_keys = 20_000 if quick else 50_000
     n_batches = 12 if quick else 20
-    rng = np.random.default_rng(9)
-    dataset = ycsb.make_dataset(n_keys, seed=0)
-    ops, keys, shift_batch = _make_trace(dataset, n_batches, seed=21)
+    rng = np.random.default_rng(s + 9)
+    dataset = ycsb.make_dataset(n_keys, seed=s)
+    ops, keys, shift_batch = _make_trace(dataset, n_batches, seed=s + 21)
 
     static = _run_trace(dataset, ops, keys, shift_batch, adaptive=False)
     live = _run_trace(dataset, ops, keys, shift_batch, adaptive=True)

@@ -11,19 +11,20 @@ from repro.core.sim import HostBTree, Simulator
 from repro.data import ycsb
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     rows = ["cache_ratio,dirty_pages,flush_seconds,keyspace_moved_frac"]
     summary = {}
     ratios = [0.08] if quick else [0.08, 0.16, 0.32]  # 256MB..1GB analogue
     for ratio in ratios:
-        dataset = ycsb.make_dataset(N_KEYS, seed=0)
+        dataset = ycsb.make_dataset(N_KEYS, seed=s)
         tree = HostBTree(dataset, fill=0.7, level_m=3, n_mem_servers=4)
         cfg = baselines.dex(
             cache_bytes=max(64, int(ratio * tree.num_nodes)) * 1024,
             n_compute=3,  # paper: three compute servers, then scale out
         )
-        sim = Simulator(tree, cfg, seed=5)
-        wl = ycsb.generate("write-intensive", dataset, 40_000, seed=6)
+        sim = Simulator(tree, cfg, seed=s + 5)
+        wl = ycsb.generate("write-intensive", dataset, 40_000, seed=s + 6)
         sim.run(wl.ops, wl.keys)
         newp = LogicalPartitions.equal_width(
             4, int(dataset.min()), int(dataset.max()) + 1

@@ -6,19 +6,21 @@ while Sherman/SMART flatline (they never cache leaves); (b) write-intensive
 hot-leaf optimistic-lock contention (NUMA) becomes the bottleneck; 18
 threads on one socket do not collapse."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 RATIOS = [0.01, 0.02, 0.04, 0.08, 0.16, 0.32]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     ratios = RATIOS[::2] if quick else RATIOS
     curve = {}
     for ratio in ratios:
         for system in ["dex", "sherman", "smart"]:
-            r = run_one(system, "read-intensive", cache_ratio=ratio)
+            r = run_one(system, "read-intensive", cache_ratio=ratio,
+                        **skw)
             rows.append(f"{system}@{ratio:.0%}," + r.row().split(",", 1)[1])
             curve.setdefault(system, []).append(r.report.mops())
     summary["dex_gain_small_to_big"] = curve["dex"][-1] / max(curve["dex"][0], 1e-9)

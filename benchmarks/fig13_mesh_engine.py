@@ -1,0 +1,547 @@
+"""Unified mixed-op engine (core/engine.py) vs the per-op-type
+split-program baseline, end-to-end on the forced-8-device mesh.
+
+Part 1 — *one communication plan for mixed batches*.  YCSB-A/B/E-mix
+traces (data/ycsb.py, one interleaved stream with opcodes via
+``ycsb.engine_lanes``) run through (a) the unified engine — one route
+round, one shared version-checked cached descent, one fused tagged
+request/response ``all_to_all`` pair — and (b) the pre-engine baseline:
+one masked single-opcode program per op type, each paying its own route
+round, descent and write/offload round.  Asserted per mix:
+
+  * the engine's traced program holds exactly ONE route round
+    (``route_exchange`` forward+reverse) and ONE fused pair, and strictly
+    fewer ``all_to_all`` collectives than the split programs combined
+    (``routing.trace_collective_counts``);
+  * engine results are bit-identical to a phased ``HostBTree`` replay
+    (reads see the pre-batch index, then updates, then inserts);
+  * engine throughput on completed ops is no worse than the split path.
+
+Part 2 — *per-group cost-aware offloading*.  A localized-hotspot YCSB-A
+trace warms one memory column's per-(column, level) miss EMA under a
+forced-fetch engine, then switches to ``policy="auto"``: the warm column
+must keep fetching while cold columns offload *within the same batch*
+(``STAT_OFFLOAD_GROUPS`` / ``STAT_FETCH_GROUPS`` both move in one batch),
+and the mesh's per-group counts are cross-validated against the
+``Simulator`` running the identical trace with ``SimConfig.group_offload``
+(same byte-cost rule, same windowing, blocked subtree placement).
+
+Run with ``PYTHONPATH=src python benchmarks/fig13_mesh_engine.py
+[--quick]`` or via the suite: ``python -m benchmarks.run --only
+fig13engine``.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import engine as engine_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import routing  # noqa: E402
+from repro.core import scan as scan_mod  # noqa: E402
+from repro.core import smo as smo_mod  # noqa: E402
+from repro.core import write as write_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, SimConfig, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+from benchmarks.common import (  # noqa: E402
+    engine_with_retries,
+    lookup_with_retries,
+    scan_with_retries,
+    write_with_retries,
+)
+
+BATCH = 1024          # full-mode batch width (quick mode halves it; the
+#                       simulator's coherence window always matches)
+MC = 32              # scan max_count (E-mix scan lengths draw from [1, 24])
+SCAN_LEN = 24
+UPDATE_XOR = 0x5A5A
+MAX_RETRIES = 4
+
+#: part-1 mixes and the opcode sets their engines need
+MIXES = (
+    ("ycsb-a", ("lookup", "update", "insert")),
+    ("ycsb-b", ("lookup", "update", "insert")),
+    ("ycsb-e", ("insert", "scan")),
+)
+
+
+def _mesh_setup(dataset, *, policy="fetch", cache_sets=512, ema_decay=0.98,
+                p_admit_leaf_pct=10):
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7,
+                                     n_shards=4)
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=cache_sets, cache_ways=4,
+        policy=policy, ema_decay=ema_decay,
+        p_admit_leaf_pct=p_admit_leaf_pct,
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg),
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    return pool, meta, mesh, cfg, bounds, state, sharding
+
+
+def _phased_host_replay(host, rng, opc, kk, vv, found, vals, status,
+                        sk, sv, tk, done):
+    """Validate one engine batch against the phased sequential replay:
+    reads against the pre-batch host, then updates, then inserts.  Returns
+    the insert lanes shed with STATUS_SPLIT (for the SMO ladder)."""
+    lk_ok = np.where((opc == ycsb.OP_LOOKUP) & done)[0]
+    for i in rng.choice(lk_ok, size=min(24, lk_ok.size), replace=False):
+        hv = host.get(int(kk[i]))
+        assert bool(found[i]) == (hv is not None), int(kk[i])
+        if hv is not None:
+            assert int(vals[i]) == hv, int(kk[i])
+    sc_ok = np.where((opc == ycsb.OP_SCAN) & done)[0]
+    for i in rng.choice(sc_ok, size=min(8, sc_ok.size), replace=False):
+        exp = [k for _, ks in host.scan(int(kk[i]), int(vv[i]))
+               for k in ks][: int(vv[i])]
+        got = sk[i][sk[i] != KEY_MAX].tolist()
+        assert got == exp, (int(kk[i]), got[:4], exp[:4])
+        assert int(tk[i]) == len(exp)
+    upd = (opc == ycsb.OP_UPDATE) & done
+    for i in np.where(upd)[0]:
+        applied = host.update(int(kk[i]), int(vv[i]))
+        assert (status[i] == write_mod.STATUS_OK) == applied, int(kk[i])
+    ins = (opc == ycsb.OP_INSERT) & done
+    for i in np.where(ins)[0]:
+        if status[i] == write_mod.STATUS_OK:
+            host.insert(int(kk[i]), int(vv[i]))
+    return ins & (status == write_mod.STATUS_SPLIT)
+
+
+def _run_engine_path(name, ops_set, dataset, n_batches, n_warm, rng,
+                     batch):
+    """Drive the mixed trace through the unified engine, with host-replay
+    validation and the SMO settle ladder for shed inserts."""
+    _pool, meta, mesh, cfg, bounds, state, sharding = _mesh_setup(dataset)
+    host = HostBTree(dataset, dataset * 7, fill=0.7)
+    eng_fn = engine_mod.make_dex_engine(meta, cfg, mesh, ops=ops_set,
+                                        max_count=MC)
+    eng = jax.jit(eng_fn)
+    smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+
+    wl = ycsb.generate(name, dataset, (n_warm + n_batches) * batch,
+                       theta=0.99, seed=11, scan_len=SCAN_LEN,
+                       scan_len_dist="uniform")
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    # static communication plan + traced collective counts (first batch)
+    opc0, kk0, vv0 = ycsb.engine_lanes(wl, 0, batch, update_xor=UPDATE_XOR)
+    counts = routing.trace_collective_counts(
+        eng_fn, state, jnp.asarray(opc0), jnp.asarray(kk0), jnp.asarray(vv0)
+    )
+    plan = eng_fn.plan
+
+    completed = 0
+    batch_dts = []
+    stats_warm = None
+    for b in range(n_warm + n_batches):
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+            completed = 0
+            batch_dts = []
+        opc, kk, vv = ycsb.engine_lanes(
+            wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR
+        )
+        # the clock covers mesh execution only (engine_with_retries blocks
+        # on every output); host-replay validation and the SMO settle
+        # ladder run off the clock on both paths, and the throughput
+        # figure uses the median per-batch duration (robust to GC /
+        # host-contention spikes on the emulated mesh)
+        t0 = time.perf_counter()
+        state, found, vals, status, sk, sv, tk, done = engine_with_retries(
+            eng, state, put, opc, kk, vv, max_retries=MAX_RETRIES
+        )
+        batch_dts.append(time.perf_counter() - t0)
+        completed += int((done & (kk != KEY_MAX)).sum())
+        shed = _phased_host_replay(host, rng, opc, kk, vv, found, vals,
+                                   status, sk, sv, tk, done)
+        if shed.any():
+            state, meta2, info = smo_mod.settle_splits(
+                state, meta, cfg, smo, host,
+                np.where(shed, kk, KEY_MAX), np.where(shed, vv, 0), bounds,
+            )
+            if info["drained"]:
+                meta = meta2
+                state = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), state,
+                    dex_mod.state_shardings(mesh, cfg),
+                )
+                eng_fn = engine_mod.make_dex_engine(meta, cfg, mesh,
+                                                    ops=ops_set, max_count=MC)
+                eng = jax.jit(eng_fn)
+                smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+    jax.block_until_ready(state.stats)
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    tput = (completed / len(batch_dts)) / float(np.median(batch_dts))
+    return dict(tput=tput, completed=completed, counts=counts,
+                plan=plan, stats=stats)
+
+
+def _run_split_path(name, ops_set, dataset, n_batches, n_warm, rng,
+                    batch):
+    """The pre-engine baseline: one masked single-opcode program per op
+    type, each with its own route round / descent / write round."""
+    _pool, meta, mesh, cfg, bounds, state, sharding = _mesh_setup(dataset)
+    host = HostBTree(dataset, dataset * 7, fill=0.7)
+
+    def build():
+        progs = {}
+        if "lookup" in ops_set:
+            progs["lookup"] = (
+                dex_mod.make_dex_lookup(meta, cfg, mesh))
+        if "update" in ops_set:
+            progs["update"] = (
+                write_mod.make_dex_update(meta, cfg, mesh))
+        if "insert" in ops_set:
+            progs["insert"] = (
+                write_mod.make_dex_insert(meta, cfg, mesh))
+        if "scan" in ops_set:
+            progs["scan"] = (
+                scan_mod.make_dex_scan(meta, cfg, mesh, max_count=MC))
+        return progs
+
+    progs = build()
+    # traced collective counts: the sum over the split programs
+    b0 = np.zeros(batch, np.int64)
+    counts = {"all_to_all": 0, "route_exchange": 0}
+    for kind, fn in progs.items():
+        if kind == "lookup":
+            c = routing.trace_collective_counts(fn, state, jnp.asarray(b0))
+        elif kind == "scan":
+            c = routing.trace_collective_counts(
+                fn, state, jnp.asarray(b0), jnp.asarray(b0))
+        else:
+            c = routing.trace_collective_counts(
+                fn, state, jnp.asarray(b0), jnp.asarray(b0))
+        for k in counts:
+            counts[k] += c[k]
+    progs = {k: jax.jit(v) for k, v in build().items()}
+    smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+
+    wl = ycsb.generate(name, dataset, (n_warm + n_batches) * batch,
+                       theta=0.99, seed=11, scan_len=SCAN_LEN,
+                       scan_len_dist="uniform")
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    completed = 0
+    batch_dts = []
+    for b in range(n_warm + n_batches):
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            completed = 0
+            batch_dts = []
+        dt = 0.0
+        opc, kk, vv = ycsb.engine_lanes(
+            wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR
+        )
+        # the split path masks the mixed stream into per-op-type batches;
+        # the clock covers the three programs' mesh execution only, like
+        # the engine path's
+        if "lookup" in progs:
+            lk = np.where(opc == ycsb.OP_LOOKUP, kk, KEY_MAX)
+            t0 = time.perf_counter()
+            state, _f, _v, done_l = lookup_with_retries(
+                progs["lookup"], state, put, lk, max_retries=MAX_RETRIES)
+            dt += time.perf_counter() - t0
+            completed += int((done_l & (lk != KEY_MAX)).sum())
+        if "update" in progs:
+            uk = np.where(opc == ycsb.OP_UPDATE, kk, KEY_MAX)
+            t0 = time.perf_counter()
+            state, ru = write_with_retries(
+                progs["update"], state, put, uk,
+                np.where(opc == ycsb.OP_UPDATE, vv, 0),
+                max_retries=MAX_RETRIES)
+            dt += time.perf_counter() - t0
+            completed += int(
+                ((uk != KEY_MAX) & (ru != write_mod.STATUS_SHED)).sum())
+            # mirror applied updates: a drain_splits rebuild reconstructs
+            # the pool from the host, so unmirrored updates would revert
+            ok_u = (uk != KEY_MAX) & (ru == write_mod.STATUS_OK)
+            for k, v in zip(uk[ok_u], vv[ok_u]):
+                host.update(int(k), int(v))
+        if "insert" in progs:
+            ik = np.where(opc == ycsb.OP_INSERT, kk, KEY_MAX)
+            t0 = time.perf_counter()
+            state, ri = write_with_retries(
+                progs["insert"], state, put, ik,
+                np.where(opc == ycsb.OP_INSERT, vv, 0),
+                max_retries=MAX_RETRIES)
+            dt += time.perf_counter() - t0
+            completed += int(
+                ((ik != KEY_MAX) & (ri != write_mod.STATUS_SHED)).sum())
+            for k in ik[(ik != KEY_MAX) & (ri == write_mod.STATUS_OK)]:
+                host.insert(int(k), int(k))
+            shed = (ik != KEY_MAX) & (ri == write_mod.STATUS_SPLIT)
+            if shed.any():
+                state, meta2, info = smo_mod.settle_splits(
+                    state, meta, cfg, smo, host,
+                    np.where(shed, ik, KEY_MAX),
+                    np.where(shed, np.where(opc == ycsb.OP_INSERT, vv, 0), 0),
+                    bounds,
+                )
+                if info["drained"]:
+                    meta = meta2
+                    state = jax.tree.map(
+                        lambda x, s: jax.device_put(x, s), state,
+                        dex_mod.state_shardings(mesh, cfg),
+                    )
+                    progs = {k: jax.jit(v) for k, v in build().items()}
+                    smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+        if "scan" in progs:
+            sk_in = np.where(opc == ycsb.OP_SCAN, kk, KEY_MAX)
+            cnts = np.where(opc == ycsb.OP_SCAN, vv, 0)
+            t0 = time.perf_counter()
+            state, _k, _v, _t, done_s = scan_with_retries(
+                progs["scan"], state, put, sk_in, cnts, max_count=MC,
+                max_retries=MAX_RETRIES)
+            dt += time.perf_counter() - t0
+            completed += int((done_s & (sk_in != KEY_MAX)).sum())
+        batch_dts.append(dt)
+    jax.block_until_ready(state.stats)
+    tput = (completed / len(batch_dts)) / float(np.median(batch_dts))
+    return dict(tput=tput, completed=completed, counts=counts)
+
+
+def _run_group_offload(dataset, n_warm, n_batches, rng, batch):
+    """Part 2: the per-group cost model serves a warm column one-sided and
+    cold columns two-sided in the same batch; group counts cross-validate
+    against the simulator on the identical trace."""
+    # faster EMA decay + eager leaf admission so the warm/cold contrast
+    # forms inside a short benchmark run; both planes use the same knobs
+    _pool, meta, mesh, cfg_auto, bounds, state, sharding = _mesh_setup(
+        dataset, policy="auto", cache_sets=2048, ema_decay=0.5,
+        p_admit_leaf_pct=100,
+    )
+    cfg_fetch = dex_mod.DexMeshConfig(
+        **{**cfg_auto.__dict__, "policy": "fetch"}
+    )
+    host = HostBTree(dataset, dataset * 7, fill=0.7)
+    eng_fetch = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg_fetch, mesh, ops=("lookup", "update"), max_count=1))
+    eng_auto = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg_auto, mesh, ops=("lookup", "update"), max_count=1))
+
+    n_total = n_warm + n_batches
+    wl = ycsb.generate("ycsb-a", dataset, n_batches * batch, theta=0.99,
+                       seed=11, hotspot=0.1)
+    # warm phase: a dense forced-fetch lookup sweep of the hot column's key
+    # range (the hotspot center 0.1 lies inside memory column 0, whose
+    # whole leaf population fits the per-chip cache) — its per-(column,
+    # level) miss EMA falls below the cost crossover while the untouched
+    # columns stay cold at EMA 1.  The measured auto phase then exploits
+    # exactly that contrast.  Both planes consume the identical stream.
+    s_per = meta.n_subtrees_padded // cfg_auto.n_memory
+    hot_n = min(dataset.size,
+                -(-dataset.size * s_per // max(meta.n_subtrees, 1)))
+    # lane order is what routes a key to a serving chip (source-dispersed
+    # within the route row), so each warm batch re-permutes the sweep:
+    # every chip ends up caching every hot-column leaf, and the measured
+    # phase's differently-ordered lanes keep hitting
+    rng_w = np.random.default_rng(23)
+    warm_keys = np.concatenate([
+        rng_w.permutation(
+            dataset[(np.arange(batch) * hot_n // batch + 17 * b) % hot_n]
+        )
+        for b in range(n_warm)
+    ]).astype(np.int64)
+    warm_ops = np.zeros(warm_keys.shape, np.int32)       # all lookups
+    wl_all = ycsb.Workload(
+        ops=np.concatenate([warm_ops, wl.ops]),
+        keys=np.concatenate([warm_keys, wl.keys]),
+        scan_len=wl.scan_len,
+    )
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    def grp(stats):
+        return (int(stats[dex_mod.STAT_OFFLOAD_GROUPS]),
+                int(stats[dex_mod.STAT_FETCH_GROUPS]))
+
+    both_in_one_batch = False
+    stats_warm = None
+    for b in range(n_total):
+        eng = eng_fetch if b < n_warm else eng_auto
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+        before = np.asarray(state.stats).sum(axis=0)
+        opc, kk, vv = ycsb.engine_lanes(
+            wl_all, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR
+        )
+        state, found, vals, status, _sk, _sv, _tk, done = engine_with_retries(
+            eng, state, put, opc, kk, vv, max_retries=MAX_RETRIES
+        )
+        after = np.asarray(state.stats).sum(axis=0)
+        if b >= n_warm:
+            d_off = after[dex_mod.STAT_OFFLOAD_GROUPS] - before[
+                dex_mod.STAT_OFFLOAD_GROUPS]
+            d_f = after[dex_mod.STAT_FETCH_GROUPS] - before[
+                dex_mod.STAT_FETCH_GROUPS]
+            if d_off > 0 and d_f > 0:
+                both_in_one_batch = True
+        # host mirror: lookups see the pre-batch index, then updates apply
+        lk_ok = np.where((opc == ycsb.OP_LOOKUP) & done)[0]
+        for i in rng.choice(lk_ok, size=min(16, lk_ok.size), replace=False):
+            hv = host.get(int(kk[i]))
+            assert bool(found[i]) == (hv is not None), int(kk[i])
+            if hv is not None:
+                assert int(vals[i]) == hv, int(kk[i])
+        for i in np.where((opc == ycsb.OP_UPDATE) & done)[0]:
+            applied = host.update(int(kk[i]), int(vv[i]))
+            assert (status[i] == write_mod.STATUS_OK) == applied, int(kk[i])
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    mesh_off, mesh_fetch = grp(stats)
+
+    # Plane A on the identical trace: same byte-cost rule, same windowing,
+    # blocked subtree placement so both planes agree on column ownership
+    sim_tree = HostBTree(
+        dataset, dataset * 7, fill=0.7, level_m=1,
+        n_mem_servers=cfg_auto.n_memory, placement="blocked",
+        subtrees_per_server=meta.n_subtrees_padded // cfg_auto.n_memory,
+    )
+    sim_cfg = SimConfig(
+        name="dex-engine", n_compute=cfg_auto.n_devices,
+        n_mem_servers=cfg_auto.n_memory, level_m=1,
+        write_through=True, offloading=True,
+        group_offload=True, group_ema_decay=cfg_auto.ema_decay,
+        coherence_batch=batch, route_dispersion=cfg_auto.n_memory,
+        p_admit_leaf=cfg_auto.p_admit_leaf_pct / 100.0,
+        cache_bytes=cfg_auto.cache_sets * cfg_auto.cache_ways * 1024,
+        offload_c=cfg_auto.offload_c,
+    )
+    sim = Simulator(sim_tree, sim_cfg, seed=3)
+    warm = slice(0, n_warm * batch)
+    meas = slice(n_warm * batch, n_total * batch)
+    sim.run(wl_all.ops[warm], wl_all.keys[warm], group_policy="fetch")
+    sim.reset_counters()
+    sim.run(wl_all.ops[meas], wl_all.keys[meas])
+    t = sim.totals()
+    return dict(
+        mesh_offload_groups=mesh_off, mesh_fetch_groups=mesh_fetch,
+        sim_offload_groups=t.offload_groups, sim_fetch_groups=t.fetch_groups,
+        both_in_one_batch=both_in_one_batch,
+        mesh_offload_msgs=int(stats[dex_mod.STAT_OFFLOADS]),
+    )
+
+
+def run(quick: bool = False, seed: "int | None" = None):
+    base_seed = 0 if seed is None else int(seed)
+    n_keys = 30_000 if quick else 100_000
+    n_batches = 3 if quick else 6
+    n_warm = 2 if quick else 4
+    batch = 512 if quick else BATCH
+    rng = np.random.default_rng(base_seed + 5)
+    dataset = ycsb.make_dataset(n_keys, seed=base_seed)
+    rows = ["plane,workload,metric,value"]
+    summary = {}
+
+    for name, ops_set in MIXES:
+        eng = _run_engine_path(name, ops_set, dataset, n_batches, n_warm,
+                               rng, batch)
+        split = _run_split_path(name, ops_set, dataset, n_batches, n_warm,
+                                rng, batch)
+        # ONE route round + ONE fused pair per mixed batch, vs one route
+        # round per op-type program on the split path
+        assert eng["counts"]["route_exchange"] == 2, eng["counts"]
+        assert eng["plan"]["fused_pairs"] == 1, eng["plan"]
+        assert split["counts"]["route_exchange"] == 2 * len(ops_set)
+        assert eng["counts"]["all_to_all"] < split["counts"]["all_to_all"], (
+            name, eng["counts"], split["counts"]
+        )
+        # same completed work, fewer programs: the engine must not be slower
+        assert eng["tput"] >= 0.9 * split["tput"], (
+            f"{name}: engine {eng['tput']:.0f} ops/s vs split "
+            f"{split['tput']:.0f} ops/s"
+        )
+        rows += [
+            f"engine,{name},ops_per_s,{eng['tput']:.1f}",
+            f"engine,{name},completed_ops,{eng['completed']}",
+            f"engine,{name},a2a_per_batch,{eng['counts']['all_to_all']}",
+            f"engine,{name},route_rounds,1",
+            f"split,{name},ops_per_s,{split['tput']:.1f}",
+            f"split,{name},completed_ops,{split['completed']}",
+            f"split,{name},a2a_per_batch,{split['counts']['all_to_all']}",
+            f"split,{name},route_rounds,{len(ops_set)}",
+        ]
+        summary[f"{name}_engine_ops_per_s"] = eng["tput"]
+        summary[f"{name}_split_ops_per_s"] = split["tput"]
+        summary[f"{name}_engine_a2a"] = eng["counts"]["all_to_all"]
+        summary[f"{name}_split_a2a"] = split["counts"]["all_to_all"]
+        summary[f"{name}_speedup"] = eng["tput"] / max(split["tput"], 1e-9)
+
+    g = _run_group_offload(dataset, 10 if quick else 14,
+                           4 if quick else 8, rng, batch)
+    rows += [
+        f"engine,group,mesh_offload_groups,{g['mesh_offload_groups']}",
+        f"engine,group,mesh_fetch_groups,{g['mesh_fetch_groups']}",
+        f"sim,group,offload_groups,{g['sim_offload_groups']}",
+        f"sim,group,fetch_groups,{g['sim_fetch_groups']}",
+        f"engine,group,both_groups_in_one_batch,{int(g['both_in_one_batch'])}",
+    ]
+    summary.update({k: float(v) for k, v in g.items()})
+    if len(jax.devices()) >= 8:
+        # a cold column offloads while the warm one fetches, in ONE batch
+        assert g["both_in_one_batch"], g
+        assert g["mesh_offload_groups"] > 0 and g["mesh_fetch_groups"] > 0, g
+        assert g["sim_offload_groups"] > 0 and g["sim_fetch_groups"] > 0, g
+        # both planes priced the identical trace with the identical rule:
+        # the per-group offload counts must agree
+        ratio = g["mesh_offload_groups"] / max(g["sim_offload_groups"], 1)
+        assert 0.66 <= ratio <= 1.5, (
+            f"group counts diverge: mesh {g['mesh_offload_groups']} vs "
+            f"sim {g['sim_offload_groups']}"
+        )
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,12 +5,13 @@ Paper claims: going from 1 to 4 memory-side threads per server cuts RDMA ops
 by 56%/49% (RI/WI) and lifts throughput by 40%/55%; offload volume grows
 with available memory-side compute."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 MEM_THREADS = [1, 2, 4]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     wls = ["read-intensive"] if quick else ["read-intensive", "write-intensive"]
@@ -19,7 +20,7 @@ def run(quick: bool = False):
         for mt in MEM_THREADS:
             r = run_one(
                 "dex", wl, cache_ratio=0.01,
-                cfg_overrides=dict(mem_threads_per_server=mt),
+                cfg_overrides=dict(mem_threads_per_server=mt), **skw,
             )
             rows.append(f"dex-mt{mt}," + r.row().split(",", 1)[1])
             if first is None:

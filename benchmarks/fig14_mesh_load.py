@@ -242,19 +242,20 @@ def _run_mode(mode, dataset, ops_arr, keys_arr, n_warm_batches, rng):
     }
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     n_keys = 24_000 if quick else 48_000
     n_batches = 4 if quick else 10
     n_warm_batches = 1 if quick else 2
-    rng = np.random.default_rng(5)
-    dataset = ycsb.make_dataset(n_keys, seed=0)
+    rng = np.random.default_rng(s + 5)
+    dataset = ycsb.make_dataset(n_keys, seed=s)
 
     # insert trace over the lower 80% of the key space (uniform, so load
     # spreads across subtrees); the top decile stays write-free for the
     # survival probe
     lower = dataset[: int(dataset.size * TRACE_FRAC)]
     wl = ycsb.generate(
-        "ycsb-load", lower, n_batches * BATCH, theta=0.0, seed=11
+        "ycsb-load", lower, n_batches * BATCH, theta=0.0, seed=s + 11
     )
 
     results = {}

@@ -6,12 +6,13 @@ Paper claims: DEX 4x/10x/2.4x/6.1x over Sherman/SMART/P-Sherman/P-SMART on
 skewed read-intensive-2; 2.8x/56.3x/1.6x/48.4x on scan-intensive (SMART's
 one-record-per-leaf trie explodes on scans)."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 SYSTEMS = ["dex", "sherman", "p-sherman", "smart", "p-smart"]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     cases = [("read-intensive-2", 0.99), ("scan-intensive", 0.99)]
@@ -20,7 +21,7 @@ def run(quick: bool = False):
     for wl, theta in cases:
         at = {}
         for system in SYSTEMS:
-            r = run_one(system, wl, theta=theta, n_ops=20_000)
+            r = run_one(system, wl, theta=theta, n_ops=20_000, **skw)
             rows.append(r.row())
             at[system] = r.report.mops()
         tag = f"{wl}@{'skew' if theta else 'unif'}"

@@ -49,12 +49,13 @@ MAX_SCAN = 100
 BATCH = 1024
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     n_keys = 50_000 if quick else 200_000
     n_batches = 4 if quick else 8
-    rng = np.random.default_rng(3)
+    rng = np.random.default_rng(s + 3)
 
-    dataset = ycsb.make_dataset(n_keys, seed=0)
+    dataset = ycsb.make_dataset(n_keys, seed=s)
     vals = dataset * 7
     pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7, n_shards=4)
     host = HostBTree(dataset, vals, fill=0.7)
@@ -89,7 +90,7 @@ def run(quick: bool = False):
 
     # YCSB-E traffic: zipfian start keys, uniform lengths in [1, MAX_SCAN]
     wl = ycsb.generate(
-        "ycsb-e", dataset, n_batches * BATCH, theta=0.99, seed=11,
+        "ycsb-e", dataset, n_batches * BATCH, theta=0.99, seed=s + 11,
         scan_len=MAX_SCAN, scan_len_dist="uniform",
     )
     is_scan = wl.ops == ycsb.OP_SCAN

@@ -12,24 +12,25 @@ from repro.core.sim import HostBTree, Simulator
 from repro.data import ycsb
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     rows = [HEADER]
     summary = {}
     key_sizes = [8, 16] if quick else [8, 16, 32, 64]
     for ks in key_sizes:
         fill = 0.7 * 8 / ks          # effective entries per 1KB node
         for system in ["dex", "smart"]:
-            dataset = ycsb.make_dataset(N_KEYS, seed=0)
+            dataset = ycsb.make_dataset(N_KEYS, seed=s)
             tree = HostBTree(dataset, fill=max(fill, 0.06), level_m=3,
                              n_mem_servers=4)
             cfg = baselines.ALL[system](
                 cache_bytes=max(64, int(0.08 * tree.num_nodes)) * 1024
             )
-            sim = Simulator(tree, cfg, seed=9)
-            warm = ycsb.generate("read-intensive", dataset, N_WARM, seed=10)
+            sim = Simulator(tree, cfg, seed=s + 9)
+            warm = ycsb.generate("read-intensive", dataset, N_WARM, seed=s + 10)
             sim.run(warm.ops, warm.keys)
             sim.reset_counters()
-            wl = ycsb.generate("read-intensive", dataset, N_OPS, seed=11)
+            wl = ycsb.generate("read-intensive", dataset, N_OPS, seed=s + 11)
             sim.run(wl.ops, wl.keys)
             rep = analyze(sim, threads_total=144)
             rows.append(

@@ -4,19 +4,21 @@ Paper claims: DEX improves with skew (hot paths cache better); Sherman's
 write-intensive throughput collapses at theta=0.99 (RDMA lock retries on hot
 leaves), DEX does not (local locks only)."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 THETAS = [0.0, 0.5, 0.8, 0.99]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     thetas = THETAS[::3] if quick else THETAS
     for theta in thetas:
         for system in ["dex", "sherman"]:
             for wl in ["read-intensive", "write-intensive"]:
-                r = run_one(system, wl, theta=theta, n_ops=20_000)
+                r = run_one(system, wl, theta=theta, n_ops=20_000,
+                            **skw)
                 rows.append(
                     f"{system}@t{theta}," + r.row().split(",", 1)[1]
                 )

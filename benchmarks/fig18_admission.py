@@ -3,13 +3,14 @@
 Paper claims: at 64-128MB caches, P_A=1% beats always-admit by up to +34%;
 at 1GB lazy admission can cost ~7% — the optimum shifts with cache size."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 P_AS = [0.01, 0.05, 0.10, 0.20, 1.00]
 RATIOS = [0.02, 0.08, 0.32]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     ratios = RATIOS[:1] if quick else RATIOS
@@ -19,7 +20,7 @@ def run(quick: bool = False):
         for pa in pas:
             r = run_one(
                 "dex", "read-intensive", cache_ratio=ratio,
-                cfg_overrides=dict(p_admit_leaf=pa, offloading=False),
+                cfg_overrides=dict(p_admit_leaf=pa, offloading=False), **skw,
             )
             rows.append(f"dex-pa{pa:.2f}@{ratio:.0%}," + r.row().split(",", 1)[1])
             if pa == 1.00:

@@ -241,12 +241,13 @@ def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
     return rows, summary
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     n_keys = 30_000 if quick else 100_000
     n_batches = 4 if quick else 8
     n_warm_batches = 2 if quick else 4
-    rng = np.random.default_rng(5)
-    dataset = ycsb.make_dataset(n_keys, seed=0)
+    rng = np.random.default_rng(s + 5)
+    dataset = ycsb.make_dataset(n_keys, seed=s)
     rows = ["plane,workload,metric,value"]
     summary = {}
     for name in MIXES:

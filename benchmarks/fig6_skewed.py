@@ -4,21 +4,22 @@ Paper claims reproduced: DEX outperforms Sherman/SMART/P-Sherman/P-SMART by
 2.5-9.6x at 144 threads across read-only/read-intensive/write-intensive/
 insert-intensive; SMART's FIFO cache collapses with thread count."""
 
-from benchmarks.common import HEADER, sweep_threads
+from benchmarks.common import HEADER, seed_kwargs, sweep_threads
 
 SYSTEMS = ["dex", "sherman", "p-sherman", "smart", "p-smart"]
 WORKLOADS = ["read-only", "read-intensive", "write-intensive", "insert-intensive"]
 THREADS = [2, 18, 36, 72, 108, 144]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     workloads = WORKLOADS[:2] if quick else WORKLOADS
     rows = [HEADER]
     summary = {}
     for wl in workloads:
         at_max = {}
         for system in SYSTEMS:
-            for r in sweep_threads(system, wl, THREADS):
+            for r in sweep_threads(system, wl, THREADS, **skw):
                 rows.append(r.row())
                 if r.threads == THREADS[-1]:
                     at_max[system] = r.report.mops()

@@ -3,21 +3,22 @@
 Paper claims: DEX still beats Sherman/SMART/P-SMART; the gap narrows; DEX is
 close to P-Sherman because uniform traffic defeats leaf caching."""
 
-from benchmarks.common import HEADER, sweep_threads
+from benchmarks.common import HEADER, seed_kwargs, sweep_threads
 
 SYSTEMS = ["dex", "sherman", "p-sherman", "smart", "p-smart"]
 WORKLOADS = ["read-only", "read-intensive", "write-intensive"]
 THREADS = [18, 72, 144]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     workloads = WORKLOADS[:1] if quick else WORKLOADS
     rows = [HEADER]
     summary = {}
     for wl in workloads:
         at_max = {}
         for system in SYSTEMS:
-            for r in sweep_threads(system, wl, THREADS, theta=0.0):
+            for r in sweep_threads(system, wl, THREADS, theta=0.0, **skw):
                 rows.append(r.row())
                 if r.threads == THREADS[-1]:
                     at_max[system] = r.report.mops()

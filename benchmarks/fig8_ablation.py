@@ -4,7 +4,7 @@
 Paper claims: partitioning 2.4x at 2 threads; +caching 21.2x (skew) / 6.9x
 (uniform); +offloading +55% (skew) / +34% (uniform)."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 STAGES = [
     ("naive", "baseline"),
@@ -14,7 +14,8 @@ STAGES = [
 ]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     for theta, label in ([(0.99, "skewed")] if quick else
@@ -23,7 +24,7 @@ def run(quick: bool = False):
         for system, stage in STAGES:
             r = run_one(
                 system, "write-intensive", cache_ratio=0.01, theta=theta,
-                threads=144,
+                threads=144, **skw,
             )
             rows.append(r.row())
             x = r.report.mops()

@@ -5,7 +5,7 @@ baseline vs cooling map vs cooling map + lazy leaf admission, at stressed
 Paper claims: cooling map +12x/+10x (64MB/256MB caches); +lazy admission
 +25%/+21% more."""
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 VARIANTS = [
     ("fifo+eager", dict(centralized_fifo=True, eager_admission=True)),
@@ -16,7 +16,8 @@ VARIANTS = [
 CACHES = [0.02, 0.08]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     summary = {}
     caches = CACHES[:1] if quick else CACHES
@@ -25,7 +26,7 @@ def run(quick: bool = False):
         for label, overrides in VARIANTS:
             r = run_one(
                 "dex", "read-intensive", cache_ratio=ratio,
-                cfg_overrides=dict(offloading=False, **overrides),
+                cfg_overrides=dict(offloading=False, **overrides), **skw,
             )
             rows.append(f"{label}@{ratio:.0%}," + r.row().split(",", 1)[1])
             x = r.report.mops()

@@ -23,12 +23,13 @@ def _time(fn, *args, warmup=2, iters=5, **kw):
     return (time.perf_counter() - t0) / iters * 1e6, out
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    s = 0 if seed is None else int(seed)
     n = 100_000 if quick else 400_000
     b = 4096
-    dataset = ycsb.make_dataset(n, seed=0)
+    dataset = ycsb.make_dataset(n, seed=s)
     tree, meta = btree.bulk_build(dataset, dataset * 2)
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(s + 1)
     q = rng.choice(dataset, size=b).astype(np.int64)
 
     rows = ["name,us_per_call,derived"]

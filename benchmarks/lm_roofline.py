@@ -46,7 +46,11 @@ def rows_from_cells(cells):
     return rows
 
 
-def run(quick: bool = False, out_dir: str = "dryrun_results"):
+def run(quick: bool = False, out_dir: str = "dryrun_results",
+        seed: "int | None" = None):
+    # deterministic analysis of dry-run artifacts: `seed` (threaded by
+    # benchmarks/run.py into every module) has nothing to reseed here
+    del seed
     cells = load_cells(out_dir)
     rows = rows_from_cells(cells)
     ok = [c for c in cells if c.get("status") == "ok"]

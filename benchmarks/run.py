@@ -32,6 +32,7 @@ MODULES = [
     ("fig10meshrep", "benchmarks.fig10_mesh_repartition"),
     ("fig12", "benchmarks.fig12_cache_size"),
     ("fig13", "benchmarks.fig13_offload_threads"),
+    ("fig13engine", "benchmarks.fig13_mesh_engine"),
     ("fig14meshload", "benchmarks.fig14_mesh_load"),
     ("fig15", "benchmarks.fig15_extra_workloads"),
     ("fig15mesh", "benchmarks.fig15_mesh_scan"),
@@ -51,6 +52,11 @@ def main(argv=None) -> None:
                          + ",".join(k for k, _ in MODULES))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows/summaries of every module to PATH")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base RNG seed threaded into every module's "
+                         "dataset/workload generation, so bench_results.json "
+                         "is reproducible across runs (default: each "
+                         "module's built-in seed)")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -63,7 +69,7 @@ def main(argv=None) -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
-            rows, summary = mod.run(quick=args.quick)
+            rows, summary = mod.run(quick=args.quick, seed=args.seed)
             print("\n".join(rows))
             for k, v in summary.items():
                 print(f"# {k}: {v}")
@@ -80,7 +86,8 @@ def main(argv=None) -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(
-                {"quick": args.quick, "results": results}, f, indent=2
+                {"quick": args.quick, "seed": args.seed, "results": results},
+                f, indent=2,
             )
         print(f"# wrote {args.json}")
     if failures:

@@ -13,17 +13,18 @@ Paper values for reference (reads/writes/atomics/two-sided/traffic-B):
     P-SMART (WI)   1.16 / 0.13 / 0    / 0      / 404.2
 """
 
-from benchmarks.common import HEADER, run_one
+from benchmarks.common import HEADER, run_one, seed_kwargs
 
 SYSTEMS = ["dex", "sherman", "smart", "p-sherman", "p-smart"]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: "int | None" = None):
+    skw = seed_kwargs(seed)
     rows = [HEADER]
     stats = {}
     for wl, tag in [("read-only", "RO"), ("write-intensive", "WI")]:
         for system in SYSTEMS:
-            r = run_one(system, wl, n_warm=120_000)
+            r = run_one(system, wl, n_warm=120_000, **skw)
             rows.append(r.row())
             stats[f"{system}({tag})"] = r.per_op
     return rows, stats

@@ -16,11 +16,19 @@ Mapping (DESIGN.md §2):
   cache               the vectorized form of the paper's cooling map
                       (bucket == set), lazy admission via key-hash bits
 
-The batch-level offload decision replaces the paper's per-op moving-average
-latency estimates (which require wall-clock self-measurement, impossible in
-an SPMD program) with running per-level miss-rate EMAs and a byte-cost
-comparison — the same ``l_p < (L+1) * (l_o + l_s) * c`` structure evaluated
-on predicted bytes instead of measured latencies (DESIGN.md §2.1).
+The offload decision replaces the paper's per-op moving-average latency
+estimates (which require wall-clock self-measurement, impossible in an
+SPMD program) with running miss-rate EMAs and a byte-cost comparison —
+the same ``l_p < (L+1) * (l_o + l_s) * c`` structure evaluated on
+predicted bytes instead of measured latencies, made **per destination
+memory column** by the unified engine: ``DexState.miss_ema`` tracks one
+EMA per (column, level) and each batch's per-column lane groups choose
+fetch or offload independently (core/engine.py, DESIGN.md §7).
+
+This module holds the mesh plane's shared state (config, cache, state
+pytree, stat indices), the cache probe/admit machinery of the shared
+descent (``cached_fetch_level``), and the thin lookup wrapper; the
+execution dataflow for all four ops lives in core/engine.py.
 """
 
 from __future__ import annotations
@@ -35,12 +43,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import routing
 from repro.core.nodes import FANOUT, KEY_MAX
-from repro.core.pool import PoolMeta, SubtreePool, initial_succ, top_walk
-from repro.core.routing import (
-    hash64 as _hash64,
-    pack_by_dest as _pack_by_dest,
-    unpack_to_lanes as _unpack_to_lanes,
-)
+from repro.core.pool import PoolMeta, SubtreePool, initial_succ
+from repro.core.routing import hash64 as _hash64
 
 NODE_ROW_BYTES = FANOUT * 8 * 3  # keys + children + values on the wire
 OFFLOAD_REQ_BYTES = 16
@@ -58,8 +62,11 @@ OFFLOAD_RESP_BYTES = 16
     STAT_WRITES,      # remote leaf-write messages (RDMA WRITE analogue)
     STAT_SMO_SPLITS,  # structural splits executed device-side (core/smo.py)
     STAT_DRAINS,      # host pool rebuilds (drain_splits fallback ladder)
+    STAT_OFFLOAD_GROUPS,  # per-batch (destination-column) groups that chose
+    #                       the two-sided path (core/engine.py cost model)
+    STAT_FETCH_GROUPS,    # per-batch groups that chose one-sided fetches
     N_STATS,
-) = range(10)
+) = range(12)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +109,11 @@ class DexState(NamedTuple):
     pool: SubtreePool
     cache: DexCache
     boundaries: jax.Array  # [n_route + 1] int64, replicated
-    miss_ema: jax.Array    # [Dev, levels] f32 per-level miss-rate EMA
+    miss_ema: jax.Array    # [Dev, n_memory, levels] f32 per-(destination
+    #                        memory column, level) miss-rate EMA — the input
+    #                        of the engine's per-group offload cost model
+    #                        (core/engine.py); psum-synchronized so every
+    #                        chip prices a column identically
     stats: jax.Array       # [Dev, N_STATS] int64
     versions: jax.Array    # [Dev, n_nodes] int32 per-node write version
     occupancy: jax.Array   # [S, C] int32 keys per node (pool-aligned shard)
@@ -148,7 +159,7 @@ def init_state(
         pool=pool,
         cache=init_cache(cfg),
         boundaries=jnp.asarray(boundaries, jnp.int64),
-        miss_ema=jnp.ones((cfg.n_devices, levels), jnp.float32),
+        miss_ema=jnp.ones((cfg.n_devices, cfg.n_memory, levels), jnp.float32),
         stats=jnp.zeros((cfg.n_devices, N_STATS), jnp.int64),
         versions=jnp.zeros((cfg.n_devices, n_nodes), jnp.int32),
         occupancy=jnp.sum(pool.pool_keys != KEY_MAX, axis=-1).astype(jnp.int32),
@@ -292,220 +303,29 @@ def cached_fetch_level(
     return rows_k, rows_c, rows_v, hit, miss, shed, n_msgs, new_cache
 
 
-def _offload_walk(
-    pool: SubtreePool,
-    meta: PoolMeta,
-    cfg: DexMeshConfig,
-    queries: jax.Array,
-    subtree: jax.Array,
-    want: jax.Array,
-):
-    """Offload the remaining traversal to the owning memory column (§6):
-    one request/response all_to_all; the owner walks its local block."""
-    b = queries.shape[0]
-    s_per = meta.n_subtrees_padded // cfg.n_memory
-    owner = jnp.where(want, subtree // s_per, cfg.n_memory)
-    cap = routing.route_capacity(b, cfg.n_memory, cfg.route_capacity_factor)
-    payload = jnp.stack([queries, subtree.astype(jnp.int64)], axis=-1)  # [B, 2]
-    buf, lane, dropped = _pack_by_dest(payload, owner.astype(jnp.int32), cfg.n_memory, cap)
-    req = routing.a2a(buf, cfg.memory_axis)                # [n_mem, cap, 2]
-    q = req[..., 0]
-    st_global = req[..., 1]
-    valid = q != KEY_MAX
-    st = jnp.where(valid, st_global.astype(jnp.int32) % s_per, 0)
-    # local walk, levels_in_subtree levels, entirely in the owner's block
-    local = jnp.zeros(st.shape, jnp.int32)
-    for _ in range(meta.levels_in_subtree - 1):
-        rows = pool.pool_keys[st, local]                   # [n_mem, cap, F]
-        cnt = jnp.sum(rows <= q[..., None], axis=-1)
-        slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
-        local = jnp.take_along_axis(
-            pool.pool_children[st, local], slot[..., None], axis=-1
-        )[..., 0]
-    rows = pool.pool_keys[st, local]
-    eq = rows == q[..., None]
-    found = jnp.any(eq, axis=-1) & valid
-    vals = jnp.sum(jnp.where(eq, pool.pool_values[st, local], 0), axis=-1)
-    resp = jnp.stack([found.astype(jnp.int64), vals], axis=-1)
-    resp = routing.a2a(resp, cfg.memory_axis)
-    out = _unpack_to_lanes(resp, lane, b, 0)
-    # only lanes that sent a real request can be load-shed (OOB no-op lanes
-    # share a sentinel bucket whose overflow is meaningless)
-    return out[..., 0] != 0, out[..., 1], dropped & want
-
-
 def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):
     """Build the sharded lookup:
     ``(state, keys) -> (state, found, values, shed)``.
 
-    ``keys`` is globally sharded over all mesh axes; results come back in the
-    caller's lane order.  ``shed`` marks lanes that were load-shed by a
-    routing bucket (their ``found``/``values`` are not answers — the caller
-    retries them, and the repartition controller uses the drop counters to
-    move partition boundaries so they stop happening).  Wrap with
-    ``jax.jit`` (see serve/ and launch/).
+    A thin single-opcode wrapper over the unified mixed-op engine
+    (:func:`repro.core.engine.make_dex_engine`): one route round, one
+    version-checked cached descent, and — for columns whose per-group cost
+    model picks the two-sided path — tagged offload messages in the fused
+    ``all_to_all`` round.  ``keys`` is globally sharded over all mesh axes;
+    results come back in the caller's lane order.  ``shed`` marks lanes
+    that were load-shed by a routing bucket (their ``found``/``values`` are
+    not answers — the caller retries them, and the repartition controller
+    uses the drop counters to move partition boundaries so they stop
+    happening).  Wrap with ``jax.jit`` (see serve/ and launch/).
     """
-    levels = meta.levels_in_subtree
+    from repro.core import engine as engine_mod  # deferred: engine imports us
 
-    def local_fn(pool, cache, boundaries, miss_ema, stats, demand, versions,
-                 keys):
-        b = keys.shape[0]
-        n_route = cfg.n_route
-        vers = versions[0]
-
-        # --- 1. route to the owning partition (logical partitioning, §4) ---
-        owner, dem = routing.route_owners(boundaries, keys, n_route)
-        new_demand = demand + dem
-        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
-        buf, lane, dropped_r = _pack_by_dest(keys, owner, n_route, cap)
-        # inactive lanes share the OOB sentinel bucket; its overflow is
-        # meaningless (see routing.route_owners)
-        dropped_r = dropped_r & (keys != KEY_MAX)
-        routed = routing.route_exchange(buf, cfg, mesh)
-        q = routed.reshape(-1)                              # [n_route*cap]
-        live = q != KEY_MAX
-
-        # --- 2. replicated top-tree walk (always-cached upper levels) ------
-        subtree = top_walk(pool, meta, q)
-        subtree = jnp.where(live, subtree, 0)
-
-        # --- 3. offload decision (batch-level cost model, §6.1) ------------
-        # predicted one-sided cost: sum over levels of miss-EMA * node bytes
-        fetch_bytes = jnp.sum(miss_ema[0]) * NODE_ROW_BYTES * cfg.offload_c
-        offload_bytes = jnp.float32(OFFLOAD_REQ_BYTES + OFFLOAD_RESP_BYTES)
-        want_offload = fetch_bytes > offload_bytes
-        if cfg.policy == "fetch":
-            want_offload = jnp.asarray(False)
-        elif cfg.policy == "offload":
-            want_offload = jnp.asarray(True)
-        # uniform across devices: EMA is psum-synchronized below, and the
-        # predicate depends only on replicated state
-        want_offload = jnp.all(want_offload)
-
-        # --- 4a. cached walk with per-level remote fetch (one-sided path) --
-        def fetch_branch(cache):
-            local = jnp.zeros(q.shape, jnp.int32)
-            found = jnp.zeros(q.shape, bool)
-            vals = jnp.zeros(q.shape, jnp.int64)
-            new_cache = cache
-            miss_counts = []
-            n_fetch = jnp.int64(0)
-            n_hit = jnp.int64(0)
-            shed = jnp.zeros(q.shape, bool)  # lanes whose fetch was load-shed
-            for lvl in range(levels):
-                gid = meta.node_gid(subtree, local)
-                # lazy admission: inner always, leaves with P_A (§5.4);
-                # op counter + lane index re-roll the dice per access
-                if lvl == levels - 1:
-                    p_ok = routing.leaf_admit_dice(
-                        gid, cfg.p_admit_leaf_pct,
-                        salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
-                    )
-                else:
-                    p_ok = jnp.ones(q.shape, bool)
-                rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                    cached_fetch_level(
-                        pool, meta, cfg, new_cache, vers, gid, live, p_ok
-                    )
-                )
-                shed = shed | f_drop
-                miss_counts.append(jnp.sum(miss))
-                n_fetch = n_fetch + n_msgs
-                n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
-                if lvl < levels - 1:
-                    cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
-                    slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
-                    local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
-                else:
-                    eq = rows_k == q[:, None]
-                    found = jnp.any(eq, axis=-1) & live
-                    vals = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
-            # a shed lane walked on placeholder rows: its result is garbage,
-            # not a miss — report not-found and count it as load shed
-            found = found & ~shed
-            vals = jnp.where(shed, 0, vals)
-            total = jnp.maximum(jnp.sum(live), 1)
-            rates = jnp.stack(
-                [m.astype(jnp.float32) / total.astype(jnp.float32)
-                 for m in miss_counts]
-            )
-            return (found, vals, new_cache, rates, n_fetch, n_hit,
-                    jnp.int64(0), shed)
-
-        # --- 4b. offload the whole sub-path (two-sided path) ---------------
-        def offload_branch(cache):
-            found, vals, o_drop = _offload_walk(pool, meta, cfg, q, subtree, live)
-            found = found & ~o_drop
-            vals = jnp.where(o_drop, 0, vals)
-            rates = miss_ema[0]  # unchanged estimate
-            n_off = jnp.sum(live).astype(jnp.int64)
-            return (found, vals, cache, rates, jnp.int64(0), jnp.int64(0),
-                    n_off, o_drop & live)
-
-        found, vals, new_cache, rates, n_fetch, n_hit, n_off, q_shed = jax.lax.cond(
-            want_offload, offload_branch, fetch_branch, cache
-        )
-        q_shed = q_shed & live
-        n_shed = jnp.sum(q_shed).astype(jnp.int64)
-
-        # --- 5. EMA + stats -------------------------------------------------
-        # synchronize the miss EMA across the full mesh so future decisions
-        # are uniform
-        g_rates = jax.lax.pmean(rates, cfg.all_axes)
-        new_ema = cfg.ema_decay * miss_ema + (1 - cfg.ema_decay) * g_rates[None, :]
-        ops = jnp.sum(live).astype(jnp.int64)
-        upd = jnp.zeros((1, N_STATS), jnp.int64)
-        upd = upd.at[0, STAT_OPS].set(ops)
-        upd = upd.at[0, STAT_HITS].set(n_hit)
-        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
-        upd = upd.at[0, STAT_OFFLOADS].set(n_off)
-        upd = upd.at[0, STAT_DROPS].set(
-            jnp.sum(dropped_r).astype(jnp.int64) + n_shed
-        )
-        new_stats = stats + upd
-
-        # --- 6. results back to the requesting lanes ------------------------
-        resp = jnp.stack(
-            [found.astype(jnp.int64), vals, q_shed.astype(jnp.int64)], axis=-1
-        )
-        resp = resp.reshape(n_route, cap, 3)
-        back = routing.route_exchange(resp, cfg, mesh, reverse=True)
-        out = _unpack_to_lanes(back, lane, b, 0)
-        out_found = (out[..., 0] != 0) & ~dropped_r
-        out_vals = out[..., 1]
-        out_shed = (out[..., 2] != 0) | dropped_r
-        return (new_cache, new_ema, new_stats, new_demand, out_found,
-                out_vals, out_shed)
-
-    dev = P(cfg.all_axes)
-    pool_specs = SubtreePool(
-        top_keys=P(),
-        top_children=P(),
-        pool_keys=P(cfg.memory_axis),
-        pool_children=P(cfg.memory_axis),
-        pool_values=P(cfg.memory_axis),
-    )
-    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
-                           fifo=dev, ver=dev)
-
-    sharded = routing.shard_map_compat(
-        local_fn,
-        mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev,
-                  P(cfg.all_axes)),
-        out_specs=(cache_specs, dev, dev, dev, P(cfg.all_axes),
-                   P(cfg.all_axes), P(cfg.all_axes)),
-    )
+    eng = engine_mod.make_dex_engine(meta, cfg, mesh, ops=("lookup",))
 
     def lookup(state: DexState, keys: jax.Array):
-        new_cache, new_ema, new_stats, new_demand, found, vals, shed = sharded(
-            state.pool, state.cache, state.boundaries, state.miss_ema,
-            state.stats, state.route_demand, state.versions, keys,
-        )
-        new_state = state._replace(
-            cache=new_cache, miss_ema=new_ema, stats=new_stats,
-            route_demand=new_demand,
-        )
-        return new_state, found, vals, shed
+        keys = keys.astype(jnp.int64)
+        opcodes = jnp.full(keys.shape, engine_mod.OP_LOOKUP, jnp.int32)
+        new_state, r = eng(state, opcodes, keys, jnp.zeros_like(keys))
+        return new_state, r.found, r.values, r.shed
 
     return lookup

@@ -1,0 +1,794 @@
+"""Unified mixed-op execution engine for the mesh plane (Plane B).
+
+Before this module every mixed YCSB batch paid three separately-jitted
+programs — ``make_dex_lookup``, ``make_dex_update``/``make_dex_insert`` and
+``make_dex_scan`` — each with its own route round, its own cached descent
+and its own request/response ``all_to_all`` machinery, and the offload
+decision (§6.1) was a single batch-global, lookup-only gate.
+:func:`make_dex_engine` collapses all of that into **one SPMD program** that
+consumes a per-lane *opcode plane* (``OP_LOOKUP`` / ``OP_UPDATE`` /
+``OP_INSERT`` / ``OP_SCAN``) next to the key and value planes and executes
+the whole mixed batch through:
+
+  1. **one shared route round** (``routing.route_owners`` + a single
+     ``route_exchange`` pair) for every opcode;
+  2. **one shared version-checked cached descent** — inner levels for all
+     lanes, the leaf level for lookup/update/scan lanes (inserts stop above
+     the leaf, exactly like the old write path), with the per-chip cache
+     probe/admit and coalesced remote fetches of ``cached_fetch_level``;
+  3. scan lanes only: the successor-chain sibling hops of core/scan.py;
+  4. **one fused request/response ``all_to_all`` pair** over the memory
+     axis carrying *tagged mixed-op messages* — CAS-style updates and
+     slack-slot inserts from the fetched path next to offloaded
+     lookup/update/insert walks — applied by the owning memory column in a
+     single conflict-resolved batch (``write._apply_leaf_writes``).
+
+``make_dex_lookup`` / ``make_dex_update`` / ``make_dex_insert`` /
+``make_dex_scan`` are thin single-opcode wrappers over this engine (the
+static ``ops=`` set prunes dead machinery at trace time, so a lookup-only
+program is as lean as the old one).
+
+**Per-group cost-aware offloading (§6.1, refined).**  The old gate compared
+one predicted per-lane fetch cost against a *once-per-batch* RPC price and
+forced the whole batch down one branch.  The engine decides **per
+destination memory column**: ``DexState.miss_ema`` is now a per-(column,
+level) miss-rate EMA, and each column's group of live non-scan lanes
+compares
+
+  ``fetch(g) = sum_l min(n_live(g), nodes_l) * ema[g, l] * NODE_ROW_BYTES * c``
+  ``rpc(g)   = n_live(g) * (OFFLOAD_REQ_BYTES + OFFLOAD_RESP_BYTES)``
+
+— the RPC side now scales with the group's live-lane count (the fused plane
+sends per-lane tagged messages, so a mostly-inactive KEY_MAX batch no
+longer sees a spuriously cheap once-per-batch RPC price), while the fetch
+side is capped by the column's node population per level (coalesced reads
+never exceed the distinct nodes).  A cold column (EMA near 1) offloads
+while a warm one fetches *within the same batch*; scans never offload
+(§7), and offloaded inserts that would split shed ``STATUS_SPLIT`` to
+core/smo.py exactly like fetched-path ones (the paper's SMO fallback
+rule).  Group decisions are made on mesh-global live counts (one tiny
+psum), so they are uniform across devices and countable once per batch
+(``STAT_OFFLOAD_GROUPS`` / ``STAT_FETCH_GROUPS``, cross-validated against
+``Simulator`` group accounting in benchmarks/fig13_mesh_engine.py).
+
+Batch semantics match the phased sequential replay the benchmarks and
+tests use: reads (lookups, scans) observe the pre-batch index, then
+updates apply, then inserts — enforced by a phase-offset batch priority in
+the conflict resolution.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import routing
+from repro.core.dex import (
+    NODE_ROW_BYTES,
+    N_STATS,
+    OFFLOAD_REQ_BYTES,
+    OFFLOAD_RESP_BYTES,
+    STAT_DROPS,
+    STAT_FETCH_GROUPS,
+    STAT_FETCHES,
+    STAT_HITS,
+    STAT_OFFLOAD_GROUPS,
+    STAT_OFFLOADS,
+    STAT_OPS,
+    STAT_SPLITS,
+    STAT_WRITES,
+    DexCache,
+    DexMeshConfig,
+    DexState,
+    cached_fetch_level,
+)
+from repro.core.nodes import FANOUT, KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool, top_walk
+from repro.core.write import (
+    STATUS_MISS,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_SPLIT,
+    _apply_leaf_writes,
+)
+from repro.kernels.leaf_scan import leaf_scan
+from repro.kernels.ops import use_interpret
+from repro.kernels.ref import leaf_scan_ref
+
+# engine opcodes == the YCSB trace opcodes (data/ycsb.py), so a generated
+# mixed workload slice feeds the engine directly
+OP_LOOKUP, OP_UPDATE, OP_INSERT, OP_SCAN = 0, 1, 2, 3
+
+ALL_OPS = ("lookup", "update", "insert", "scan")
+DEFAULT_MAX_COUNT = 128
+
+# fused-plane message tags (field 0 of a request record)
+MSG_NONE = 0          # no request from this lane (or bucket padding)
+MSG_UPDATE = 1        # fetched-path CAS update: gid known from the descent
+MSG_INSERT = 2        # fetched-path slack-slot insert: gid from the descent
+MSG_OFF_LOOKUP = 3    # offloaded lookup: owner walks its block
+MSG_OFF_UPDATE = 4    # offloaded update: owner walks, then CAS
+MSG_OFF_INSERT = 5    # offloaded insert: owner walks, then slack merge
+REQ_FIELDS = 6        # (tag, gid, subtree, key, value, prio)
+RESP_HEAD = 4         # (status, value, gid, leaf-took-inserts flag) ahead
+#                       of the merged value row
+
+
+def scan_hops(meta: PoolMeta, max_count: int) -> int:
+    """Leaves that may contribute to a ``max_count``-record scan: the start
+    leaf (which can contribute as little as nothing when the start key lies
+    above its last record) plus enough minimally-filled leaves for the rest
+    (``min_leaf_fill``: on-mesh splits can leave leaves half-full).  This is
+    only the static loop bound — per-lane collected-count masking stops each
+    lane's remote reads as soon as its count is covered."""
+    return 1 + -(-max_count // meta.min_leaf_fill)
+
+
+class EngineResult(NamedTuple):
+    """Per-lane results of one mixed batch, in the caller's lane order.
+
+    ``found``/``values`` answer lookup lanes; ``status`` answers write lanes
+    (``STATUS_OK``/``STATUS_MISS``/``STATUS_SHED``/``STATUS_SPLIT``);
+    ``shed`` marks lanes load-shed anywhere along their path (retry them);
+    ``scan_keys``/``scan_values``/``taken`` answer scan lanes and are
+    ``None`` when the engine was built without ``"scan"`` in ``ops``."""
+
+    found: jax.Array
+    values: jax.Array
+    status: jax.Array
+    shed: jax.Array
+    scan_keys: Optional[jax.Array] = None
+    scan_values: Optional[jax.Array] = None
+    taken: Optional[jax.Array] = None
+
+
+def _empty_result(b, mc, has_scan):
+    return EngineResult(
+        found=jnp.zeros((b,), bool),
+        values=jnp.zeros((b,), jnp.int64),
+        status=jnp.full((b,), STATUS_MISS, jnp.int32),
+        shed=jnp.zeros((b,), bool),
+        scan_keys=jnp.full((b, mc), KEY_MAX, jnp.int64) if has_scan else None,
+        scan_values=jnp.zeros((b, mc), jnp.int64) if has_scan else None,
+        taken=jnp.zeros((b,), jnp.int32) if has_scan else None,
+    )
+
+
+def make_dex_engine(
+    meta: PoolMeta,
+    cfg: DexMeshConfig,
+    mesh,
+    *,
+    ops: Tuple[str, ...] = ALL_OPS,
+    max_count: int = DEFAULT_MAX_COUNT,
+    use_kernel: bool = True,
+    interpret: "bool | None" = None,
+):
+    """Build the unified mixed-op program:
+    ``(state, opcodes, keys, values) -> (state, EngineResult)``.
+
+    ``opcodes``/``keys``/``values`` are [B] lanes globally sharded over all
+    mesh axes; ``keys == KEY_MAX`` lanes are inactive no-ops regardless of
+    opcode.  The ``values`` plane is overloaded per opcode: update/insert
+    lanes carry the write payload, scan lanes carry their record count
+    (clipped to ``max_count``), lookup lanes ignore it.  ``ops`` statically
+    prunes machinery: opcodes outside the set are treated as inactive, and
+    e.g. a ``("lookup",)`` engine contains no write round or scan hops —
+    this is how the thin per-op wrappers stay as lean as the programs they
+    replaced.  Wrap with ``jax.jit``.
+
+    The returned function carries a ``plan`` attribute — the static
+    collective structure ``{"route_rounds", "fused_pairs",
+    "descent_levels", "scan_hops"}`` — which benchmarks print next to the
+    traced collective counts (``routing.trace_collective_counts``).
+    """
+    for o in ops:
+        if o not in ALL_OPS:
+            raise ValueError(f"unknown op {o!r}; options: {ALL_OPS}")
+    has_lookup = "lookup" in ops
+    has_update = "update" in ops
+    has_insert = "insert" in ops
+    has_scan = "scan" in ops
+    has_writes = has_update or has_insert
+    # lanes that can offload (scans never do, §7)
+    has_offloadable = has_lookup or has_writes
+    # policy="fetch" statically prunes every two-sided branch: no offload
+    # tags, no owner-side block walk inside the fused round
+    may_offload = has_offloadable and cfg.policy != "fetch"
+    # the one-sided descent is dead weight only when every offloadable lane
+    # is forced two-sided and no scan lanes exist
+    do_descent = has_scan or (cfg.policy != "offload") or not has_offloadable
+    # the leaf level of the descent serves lookup/update answers and scan
+    # hop 0; insert lanes stop above it
+    do_leaf = has_lookup or has_update or has_scan
+    do_fused = has_writes or may_offload
+    levels = meta.levels_in_subtree
+    hops = scan_hops(meta, max_count) if has_scan else 0
+    mc = max_count
+    if interpret is None:
+        interpret = use_interpret()
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    # per-level node population of one column's subtrees: the fetch side of
+    # the group cost model is capped by it (coalesced reads never exceed
+    # the distinct nodes of a level)
+    level_nodes = [
+        float(s_per * min(meta.per_node**lvl, meta.leaves_per_subtree))
+        for lvl in range(levels)
+    ]
+
+    def local_fn(pool, occupancy, cache, boundaries, miss_ema, stats, demand,
+                 versions, succ, opcodes, keys, values):
+        b = keys.shape[0]
+        n_route = cfg.n_route
+        vers = versions[0]
+        succ_t = succ[0]
+        n_nodes_total = vers.shape[0]
+
+        # --- 1. ONE shared route round for every opcode --------------------
+        dev = routing.device_linear_index(cfg, mesh)
+        lane_prio = dev.astype(jnp.int64) * b + jnp.arange(b, dtype=jnp.int64)
+        # phase-offset priority: all updates replay before all inserts, the
+        # phased batch order the host-mirror validation uses
+        phase = jnp.where(
+            opcodes == OP_INSERT, jnp.int64(cfg.n_devices) * b, jnp.int64(0)
+        )
+        prio0 = lane_prio + phase
+        owner, dem = routing.route_owners(boundaries, keys, n_route)
+        new_demand = demand + dem
+        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
+        payload = jnp.stack(
+            [keys, values, opcodes.astype(jnp.int64), prio0], axis=-1
+        )                                                   # [B, 4]
+        buf, lane, dropped_r = routing.pack_by_dest(payload, owner, n_route, cap)
+        # inactive lanes share the OOB sentinel bucket; its overflow is
+        # meaningless (see routing.route_owners)
+        dropped_r = dropped_r & (keys != KEY_MAX)
+        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 4]
+        q = routed[..., 0].reshape(-1)                      # [Q]
+        val = routed[..., 1].reshape(-1)
+        opc = routed[..., 2].reshape(-1).astype(jnp.int32)
+        pr = routed[..., 3].reshape(-1)
+        live = q != KEY_MAX
+        is_scan = live & (opc == OP_SCAN) if has_scan else jnp.zeros(q.shape, bool)
+
+        # --- 2. replicated top-tree walk + per-group offload decision ------
+        subtree = top_walk(pool, meta, q)
+        subtree = jnp.where(live, subtree, 0)
+        col = (subtree // s_per).astype(jnp.int32)
+        ema = miss_ema[0]                                   # [n_mem, levels]
+        if has_offloadable and cfg.policy == "auto":
+            # group = destination memory column; live counts are psum'd so
+            # the decision is uniform across devices (and countable once)
+            offable = live & ~is_scan
+            n_live_c = (
+                jnp.zeros((cfg.n_memory,), jnp.int64)
+                .at[col].add(offable.astype(jnp.int64))
+            )
+            n_live_c = jax.lax.psum(n_live_c, cfg.all_axes)
+            nf = n_live_c.astype(jnp.float32)
+            caps = jnp.minimum(
+                nf[:, None], jnp.asarray(level_nodes, jnp.float32)[None, :]
+            )                                               # [n_mem, levels]
+            fetch_cost = (
+                jnp.sum(caps * ema, axis=-1) * NODE_ROW_BYTES * cfg.offload_c
+            )
+            rpc_cost = nf * float(OFFLOAD_REQ_BYTES + OFFLOAD_RESP_BYTES)
+            want_off_c = fetch_cost > rpc_cost              # [n_mem] bool
+            grp_live = n_live_c > 0
+        elif has_offloadable and cfg.policy == "offload":
+            offable = live & ~is_scan
+            n_live_c = (
+                jnp.zeros((cfg.n_memory,), jnp.int64)
+                .at[col].add(offable.astype(jnp.int64))
+            )
+            n_live_c = jax.lax.psum(n_live_c, cfg.all_axes)
+            want_off_c = jnp.ones((cfg.n_memory,), bool)
+            grp_live = n_live_c > 0
+        else:
+            want_off_c = jnp.zeros((cfg.n_memory,), bool)
+            grp_live = jnp.zeros((cfg.n_memory,), bool)
+        offl = want_off_c[col] & live & ~is_scan if has_offloadable else (
+            jnp.zeros(q.shape, bool)
+        )
+        n_off_groups = jnp.sum(want_off_c & grp_live).astype(jnp.int64)
+        n_fetch_groups = jnp.sum(~want_off_c & grp_live).astype(jnp.int64)
+
+        # --- 3. ONE shared version-checked cached descent ------------------
+        fetchable = live & ~offl
+        local = jnp.zeros(q.shape, jnp.int32)
+        new_cache = cache
+        n_fetch = jnp.int64(0)
+        n_hit = jnp.int64(0)
+        shed = jnp.zeros(q.shape, bool)
+        found_leaf = jnp.zeros(q.shape, bool)
+        vals_leaf = jnp.zeros(q.shape, jnp.int64)
+        rows_k_leaf = jnp.full(q.shape + (FANOUT,), KEY_MAX, jnp.int64)
+        rows_v_leaf = jnp.zeros(q.shape + (FANOUT,), jnp.int64)
+        miss_cl = jnp.zeros((cfg.n_memory, levels), jnp.float32)
+        want_cl = jnp.zeros((cfg.n_memory, levels), jnp.float32)
+        if do_descent:
+            descent_levels = levels if do_leaf else levels - 1
+            for lvl in range(descent_levels):
+                leaf_lvl = lvl == levels - 1
+                if leaf_lvl:
+                    want = fetchable & (
+                        (opc == OP_LOOKUP) | (opc == OP_UPDATE) | is_scan
+                    )
+                    p_ok = routing.leaf_admit_dice(
+                        meta.node_gid(subtree, local), cfg.p_admit_leaf_pct,
+                        salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
+                    )
+                else:
+                    want = fetchable
+                    p_ok = jnp.ones(q.shape, bool)
+                gid = meta.node_gid(subtree, local)
+                rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
+                    cached_fetch_level(
+                        pool, meta, cfg, new_cache, vers, gid, want, p_ok
+                    )
+                )
+                shed = shed | f_drop
+                n_fetch = n_fetch + n_msgs
+                n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+                # per-(column, level) miss observation; scan lanes leave the
+                # EMA untouched (they never offload)
+                obs = (want & ~is_scan).astype(jnp.float32)
+                miss_cl = miss_cl.at[col, lvl].add(
+                    miss.astype(jnp.float32) * obs
+                )
+                want_cl = want_cl.at[col, lvl].add(obs)
+                if not leaf_lvl:
+                    cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
+                    slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+                    local = jnp.take_along_axis(
+                        rows_c, slot[:, None], axis=-1
+                    )[:, 0]
+                else:
+                    eq = rows_k == q[:, None]
+                    found_leaf = jnp.any(eq, axis=-1) & want
+                    vals_leaf = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
+                    rows_k_leaf, rows_v_leaf = rows_k, rows_v
+        leaf_gid = meta.node_gid(subtree, local)
+
+        # --- 4. scan lanes: successor-chain sibling hops -------------------
+        if has_scan:
+            cnt_s = jnp.clip(
+                jnp.where(is_scan, val, 0), 0, mc
+            ).astype(jnp.int32)
+            window_k = [jnp.where(is_scan[:, None], rows_k_leaf, KEY_MAX)]
+            window_v = [jnp.where(is_scan[:, None], rows_v_leaf, 0)]
+            collected = jnp.sum(
+                ((window_k[0] != KEY_MAX) & (window_k[0] >= q[:, None]))
+                .astype(jnp.int32),
+                axis=-1,
+            )
+            in_range = is_scan
+            gid_h = leaf_gid
+            for h in range(1, hops):
+                nxt = succ_t[jnp.where(in_range, gid_h, 0)]
+                in_range = in_range & (collected < cnt_s) & (nxt >= 0)
+                gid_h = jnp.where(in_range, nxt, gid_h)
+                gid = jnp.where(in_range, gid_h, 0)
+                p_ok = routing.leaf_admit_dice(
+                    gid, cfg.p_admit_leaf_pct,
+                    salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
+                )
+                rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
+                    cached_fetch_level(
+                        pool, meta, cfg, new_cache, vers, gid, in_range, p_ok
+                    )
+                )
+                shed = shed | f_drop
+                n_fetch = n_fetch + n_msgs
+                n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+                rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
+                rows_v = jnp.where(in_range[:, None], rows_v, 0)
+                collected = collected + jnp.sum(
+                    ((rows_k != KEY_MAX) & (rows_k >= q[:, None]))
+                    .astype(jnp.int32),
+                    axis=-1,
+                )
+                window_k.append(rows_k)
+                window_v.append(rows_v)
+            wk = jnp.concatenate(window_k, axis=-1)
+            wv = jnp.concatenate(window_v, axis=-1)
+            if use_kernel:
+                sc_k, sc_v, taken = leaf_scan(
+                    wk, wv, q, cnt_s, max_count=mc, interpret=interpret
+                )
+            else:
+                sc_k, sc_v, taken = leaf_scan_ref(wk, wv, q, cnt_s, max_count=mc)
+            ok_scan = is_scan & ~shed
+            sc_k = jnp.where(ok_scan[:, None], sc_k, KEY_MAX)
+            sc_v = jnp.where(ok_scan[:, None], sc_v, 0)
+            taken = jnp.where(
+                ok_scan, taken, jnp.where(is_scan & shed, -1, 0)
+            ).astype(jnp.int32)
+
+        # --- 5. ONE fused tagged request/response all_to_all pair ----------
+        rstat = jnp.zeros(q.shape, jnp.int32)
+        rval = jnp.zeros(q.shape, jnp.int64)
+        rgid = jnp.full(q.shape, KEY_MAX, jnp.int64)
+        rrow_v = jnp.zeros(q.shape + (FANOUT,), jnp.int64)
+        send = jnp.zeros(q.shape, bool)
+        dropped_w = jnp.zeros(q.shape, bool)
+        n_off_msgs = jnp.int64(0)
+        n_write_msgs = jnp.int64(0)
+        new_pk, new_pv, new_occ = (
+            pool.pool_keys, pool.pool_values, occupancy
+        )
+        if do_fused:
+            tag = jnp.zeros(q.shape, jnp.int64)
+            ok_lane = live & ~shed
+            if has_lookup and may_offload:
+                tag = jnp.where(
+                    ok_lane & (opc == OP_LOOKUP) & offl, MSG_OFF_LOOKUP, tag
+                )
+            if has_update:
+                if may_offload:
+                    tag = jnp.where(
+                        ok_lane & (opc == OP_UPDATE) & offl,
+                        MSG_OFF_UPDATE, tag,
+                    )
+                tag = jnp.where(
+                    ok_lane & (opc == OP_UPDATE) & ~offl & found_leaf,
+                    MSG_UPDATE, tag,
+                )
+            if has_insert:
+                if may_offload:
+                    tag = jnp.where(
+                        ok_lane & (opc == OP_INSERT) & offl,
+                        MSG_OFF_INSERT, tag,
+                    )
+                tag = jnp.where(
+                    ok_lane & (opc == OP_INSERT) & ~offl, MSG_INSERT, tag
+                )
+            send = tag != MSG_NONE
+            dest = jnp.where(send, col, cfg.n_memory)
+            wcap = routing.route_capacity(
+                q.shape[0], cfg.n_memory, cfg.route_capacity_factor
+            )
+            wpayload = jnp.stack(
+                [
+                    tag,
+                    jnp.where(
+                        (tag == MSG_UPDATE) | (tag == MSG_INSERT),
+                        leaf_gid, KEY_MAX,
+                    ),
+                    subtree.astype(jnp.int64),
+                    q,
+                    val,
+                    pr,
+                ],
+                axis=-1,
+            )                                               # [Q, REQ_FIELDS]
+            wbuf, wlane, dropped_w = routing.pack_by_dest(
+                wpayload, dest, cfg.n_memory, wcap
+            )
+            dropped_w = dropped_w & send
+            req = routing.a2a(wbuf, cfg.memory_axis)     # [n_mem, wcap, RF]
+            if has_writes:
+                # every route-replica of this memory column must apply the
+                # identical write batch (pool replicas stay consistent)
+                req = routing.gather_route(req, cfg)     # [R, n_mem, wcap, RF]
+            flat = req.reshape(-1, REQ_FIELDS)
+            tagf = flat[:, 0]
+            gidf = flat[:, 1]
+            stf = flat[:, 2]
+            kf = flat[:, 3]
+            vf = flat[:, 4]
+            prf = flat[:, 5]
+            wgid = jnp.where(
+                (tagf == MSG_UPDATE) | (tagf == MSG_INSERT), gidf, KEY_MAX
+            )
+            resp_val = jnp.zeros(kf.shape, jnp.int64)
+            o_found = jnp.zeros(kf.shape, bool)
+            if may_offload:
+                offf = (tagf >= MSG_OFF_LOOKUP) & (tagf <= MSG_OFF_INSERT)
+                # owner-side block walk for offloaded lanes (§6): the whole
+                # remaining traversal runs next to the data
+                stl = jnp.where(offf, stf % s_per, 0).astype(jnp.int32)
+                loc = jnp.zeros(kf.shape, jnp.int32)
+                for _ in range(levels - 1):
+                    rows = pool.pool_keys[stl, loc]
+                    cnt = jnp.sum(rows <= kf[:, None], axis=-1)
+                    slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+                    loc = jnp.take_along_axis(
+                        pool.pool_children[stl, loc], slot[:, None], axis=-1
+                    )[:, 0]
+                o_rows_k = pool.pool_keys[stl, loc]
+                o_eq = o_rows_k == kf[:, None]
+                o_found = jnp.any(o_eq, axis=-1) & offf
+                o_val = jnp.sum(
+                    jnp.where(o_eq, pool.pool_values[stl, loc], 0), axis=-1
+                )
+                gid_eff = meta.node_gid(stf, loc.astype(jnp.int64))
+                wgid = jnp.where(
+                    (tagf == MSG_OFF_UPDATE) | (tagf == MSG_OFF_INSERT),
+                    gid_eff, wgid,
+                )
+                resp_val = jnp.where(tagf == MSG_OFF_LOOKUP, o_val, 0)
+            if has_writes:
+                allow_ins = tagf == MSG_INSERT
+                if may_offload:
+                    allow_ins = allow_ins | (tagf == MSG_OFF_INSERT)
+                (new_pk, new_pv, new_occ, wstat, rows_v_all,
+                 ins_in_leaf) = _apply_leaf_writes(
+                    pool.pool_keys, pool.pool_values, occupancy, meta, cfg,
+                    wgid, kf, vf, prf, allow_ins,
+                    use_kernel=use_kernel, interpret=interpret,
+                )
+            else:
+                wstat = jnp.zeros(kf.shape, jnp.int32)
+                rows_v_all = jnp.zeros(kf.shape + (FANOUT,), jnp.int64)
+                ins_in_leaf = jnp.zeros(kf.shape, bool)
+            if may_offload:
+                wstat = jnp.where(
+                    tagf == MSG_OFF_LOOKUP,
+                    jnp.where(o_found, STATUS_OK, STATUS_MISS),
+                    wstat,
+                )
+            resp = jnp.concatenate(
+                [
+                    wstat[:, None].astype(jnp.int64),
+                    resp_val[:, None],
+                    wgid[:, None],
+                    ins_in_leaf[:, None].astype(jnp.int64),
+                    rows_v_all,
+                ],
+                axis=-1,
+            )
+            if has_writes:
+                # respond only to this device's own route row
+                r_lin = routing.route_linear_index(cfg, mesh)
+                resp = jnp.take(
+                    resp.reshape(
+                        cfg.n_route, cfg.n_memory, wcap, RESP_HEAD + FANOUT
+                    ),
+                    r_lin, axis=0,
+                )
+            else:
+                resp = resp.reshape(cfg.n_memory, wcap, RESP_HEAD + FANOUT)
+            resp = routing.a2a(resp, cfg.memory_axis)
+            back = routing.unpack_to_lanes(resp, wlane, q.shape[0], 0)
+            rstat = back[..., 0].astype(jnp.int32)
+            rval = back[..., 1]
+            rgid = back[..., 2]
+            r_ins = back[..., 3] != 0
+            rrow_v = back[..., RESP_HEAD:]
+            delivered = send & ~dropped_w
+            is_off_lane = offl & send
+            n_off_msgs = jnp.sum(delivered & is_off_lane).astype(jnp.int64)
+            n_write_msgs = jnp.sum(
+                delivered & ~is_off_lane & (opc != OP_LOOKUP)
+            ).astype(jnp.int64)
+
+        # --- 6. write-through-and-invalidate + version bump ----------------
+        new_versions = versions
+        if has_writes:
+            delivered = send & ~dropped_w
+            wrote_ok = (
+                delivered
+                & ((opc == OP_UPDATE) | (opc == OP_INSERT))
+                & (rstat == STATUS_OK)
+            )
+            gsafe0 = jnp.where(wrote_ok, rgid, 0)
+            nv = vers[gsafe0] + 1
+            gsafe = jnp.where(wrote_ok, rgid, n_nodes_total)
+            vers2 = vers.at[gsafe].max(nv, mode="drop")
+            new_versions = jax.lax.pmax(vers2[None, :], cfg.all_axes)
+            set_idx = (
+                routing.hash64(rgid) % jnp.uint64(cfg.cache_sets)
+            ).astype(jnp.int32)
+            eqt = new_cache.tags[0, set_idx] == rgid[:, None]
+            chit = jnp.any(eqt, axis=-1) & wrote_ok
+            way = jnp.argmax(eqt, axis=-1).astype(jnp.int32)
+            if has_update:
+                # refresh the chip's own cached row with the authoritative
+                # post-batch values, stamped with the bumped version — but
+                # NOT when the leaf also took same-batch inserts (possibly
+                # from another chip): the cached keys plane would be stale
+                # under a current version stamp; leaving the old stamp makes
+                # the version check refetch the whole row instead
+                u_hit = chit & (opc == OP_UPDATE) & ~r_ins
+                sidx = jnp.where(u_hit, set_idx, cfg.cache_sets)
+                cvals = new_cache.values.at[0, sidx, way].set(
+                    rrow_v, mode="drop"
+                )
+                cver = new_cache.ver.at[0, sidx, way].set(
+                    jnp.where(u_hit, nv, 0), mode="drop"
+                )
+                new_cache = new_cache._replace(values=cvals, ver=cver)
+            if has_insert:
+                # drop the chip's own (now key-shifted) cached row
+                i_hit = chit & (opc == OP_INSERT)
+                sidx = jnp.where(i_hit, set_idx, cfg.cache_sets)
+                ctags = new_cache.tags.at[0, sidx, way].set(-1, mode="drop")
+                new_cache = new_cache._replace(tags=ctags)
+
+        # --- 7. per-lane results + statuses --------------------------------
+        out_found = jnp.zeros(q.shape, bool)
+        out_val = jnp.zeros(q.shape, jnp.int64)
+        if has_lookup:
+            is_lk = live & (opc == OP_LOOKUP)
+            out_found = jnp.where(
+                offl,
+                (rstat == STATUS_OK) & send & ~dropped_w,
+                found_leaf & ~shed,
+            ) & is_lk
+            out_val = jnp.where(
+                out_found, jnp.where(offl, rval, vals_leaf), 0
+            )
+        status = jnp.full(q.shape, STATUS_MISS, jnp.int32)
+        if has_writes:
+            is_w = live & ((opc == OP_UPDATE) | (opc == OP_INSERT))
+            shed_w = is_w & (shed | dropped_w)
+            status = jnp.where(
+                is_w & send & ~dropped_w & ~shed,
+                rstat,
+                jnp.where(shed_w, STATUS_SHED, STATUS_MISS),
+            )
+        lane_shed = shed | (send & dropped_w)
+
+        # --- 8. EMA + stats -------------------------------------------------
+        g_miss = jax.lax.psum(miss_cl, cfg.all_axes)
+        g_want = jax.lax.psum(want_cl, cfg.all_axes)
+        rates = g_miss / jnp.maximum(g_want, 1.0)
+        new_ema = jnp.where(
+            g_want[None, :, :] > 0,
+            cfg.ema_decay * miss_ema + (1 - cfg.ema_decay) * rates[None, :, :],
+            miss_ema,
+        )
+        n_shed = jnp.sum(lane_shed & live).astype(jnp.int64)
+        upd = jnp.zeros((1, N_STATS), jnp.int64)
+        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
+        upd = upd.at[0, STAT_HITS].set(n_hit)
+        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
+        upd = upd.at[0, STAT_OFFLOADS].set(n_off_msgs)
+        upd = upd.at[0, STAT_WRITES].set(n_write_msgs)
+        upd = upd.at[0, STAT_DROPS].set(
+            jnp.sum(dropped_r).astype(jnp.int64) + n_shed
+        )
+        upd = upd.at[0, STAT_SPLITS].set(
+            jnp.sum(status == STATUS_SPLIT).astype(jnp.int64)
+        )
+        if has_offloadable:
+            # group decisions are mesh-global: count them once, on the
+            # first device
+            first = (dev == 0).astype(jnp.int64)
+            upd = upd.at[0, STAT_OFFLOAD_GROUPS].set(first * n_off_groups)
+            upd = upd.at[0, STAT_FETCH_GROUPS].set(first * n_fetch_groups)
+        new_stats = stats + upd
+
+        # --- 9. results back to the requesting lanes ------------------------
+        fields = [
+            out_found.astype(jnp.int64)[:, None],
+            out_val[:, None],
+            status.astype(jnp.int64)[:, None],
+            lane_shed.astype(jnp.int64)[:, None],
+        ]
+        if has_scan:
+            fields += [taken.astype(jnp.int64)[:, None], sc_k, sc_v]
+        resp_b = jnp.concatenate(fields, axis=-1)
+        width = resp_b.shape[-1]
+        resp_b = resp_b.reshape(n_route, cap, width)
+        back_b = routing.route_exchange(resp_b, cfg, mesh, reverse=True)
+        out = routing.unpack_to_lanes(back_b, lane, b, 0)
+        res_found = (out[..., 0] != 0) & ~dropped_r
+        res_val = jnp.where(dropped_r, 0, out[..., 1])
+        res_status = jnp.where(
+            dropped_r, STATUS_SHED, out[..., 2].astype(jnp.int32)
+        )
+        if not has_writes:
+            res_status = jnp.where(
+                dropped_r & (keys != KEY_MAX), STATUS_SHED, STATUS_MISS
+            ).astype(jnp.int32)
+        res_shed = (out[..., 3] != 0) | dropped_r
+
+        outs = [new_cache, new_ema, new_stats, new_demand,
+                res_found, res_val, res_status, res_shed]
+        if has_writes:
+            outs = [new_pk, new_pv, new_occ, new_versions] + outs
+        if has_scan:
+            res_taken = jnp.where(
+                dropped_r, -1, out[..., 4]
+            ).astype(jnp.int32)
+            res_k = jnp.where(
+                dropped_r[:, None], KEY_MAX, out[..., 5 : 5 + mc]
+            )
+            res_v = jnp.where(
+                dropped_r[:, None], 0, out[..., 5 + mc : 5 + 2 * mc]
+            )
+            outs += [res_k, res_v, res_taken]
+        return tuple(outs)
+
+    dev_spec = P(cfg.all_axes)
+    pool_specs = SubtreePool(
+        top_keys=P(),
+        top_children=P(),
+        pool_keys=P(cfg.memory_axis),
+        pool_children=P(cfg.memory_axis),
+        pool_values=P(cfg.memory_axis),
+    )
+    cache_specs = DexCache(
+        tags=dev_spec, keys=dev_spec, children=dev_spec, values=dev_spec,
+        fifo=dev_spec, ver=dev_spec,
+    )
+    mem = P(cfg.memory_axis)
+    lanes = P(cfg.all_axes)
+
+    out_specs = []
+    if has_writes:
+        out_specs += [mem, mem, mem, dev_spec]
+    out_specs += [cache_specs, dev_spec, dev_spec, dev_spec,
+                  lanes, lanes, lanes, lanes]
+    if has_scan:
+        out_specs += [lanes, lanes, lanes]
+
+    sharded = routing.shard_map_compat(
+        local_fn,
+        mesh=mesh,
+        in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
+                  dev_spec, dev_spec, dev_spec, lanes, lanes, lanes),
+        out_specs=tuple(out_specs),
+    )
+
+    enabled_codes = [
+        code for flag, code in [
+            (has_lookup, OP_LOOKUP), (has_update, OP_UPDATE),
+            (has_insert, OP_INSERT), (has_scan, OP_SCAN),
+        ] if flag
+    ]
+
+    def engine(state: DexState, opcodes: jax.Array, keys: jax.Array,
+               values: jax.Array):
+        if keys.shape[0] == 0:
+            return state, _empty_result(0, mc, has_scan)
+        opcodes = opcodes.astype(jnp.int32)
+        keys = keys.astype(jnp.int64)
+        # opcodes outside the static ``ops`` set are true no-ops: their
+        # keys are masked before routing, so they consume no bucket
+        # capacity, mint no demand/stats and return inactive results
+        allowed = jnp.zeros(opcodes.shape, bool)
+        for code in enabled_codes:
+            allowed = allowed | (opcodes == code)
+        keys = jnp.where(allowed, keys, KEY_MAX)
+        res = sharded(
+            state.pool, state.occupancy, state.cache, state.boundaries,
+            state.miss_ema, state.stats, state.route_demand, state.versions,
+            state.succ, opcodes, keys, values.astype(jnp.int64),
+        )
+        res = list(res)
+        new_state = state
+        if has_writes:
+            new_pk, new_pv, new_occ, new_versions = res[:4]
+            res = res[4:]
+            new_state = new_state._replace(
+                pool=state.pool._replace(pool_keys=new_pk, pool_values=new_pv),
+                occupancy=new_occ,
+                versions=new_versions,
+            )
+        new_cache, new_ema, new_stats, new_demand = res[:4]
+        found, vals, status, shed = res[4:8]
+        new_state = new_state._replace(
+            cache=new_cache, miss_ema=new_ema, stats=new_stats,
+            route_demand=new_demand,
+        )
+        result = EngineResult(found=found, values=vals, status=status,
+                              shed=shed)
+        if has_scan:
+            sk, sv, tk = res[8:11]
+            result = result._replace(scan_keys=sk, scan_values=sv, taken=tk)
+        return new_state, result
+
+    engine.plan = {
+        "route_rounds": 1,
+        "fused_pairs": 1 if do_fused else 0,
+        "descent_levels": (levels if do_leaf else levels - 1)
+        if do_descent else 0,
+        "scan_hops": hops,
+    }
+    return engine

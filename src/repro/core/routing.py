@@ -119,8 +119,26 @@ def unpack_to_lanes(resp: jax.Array, lane_of_slot: jax.Array, b: int, fill):
     return out.at[flat_lane].set(flat, mode="drop")
 
 
+# trace-time collective bookkeeping: every ``all_to_all`` issued while
+# tracing a mesh program bumps these, so a benchmark can count the
+# collective rounds of a jitted op without parsing HLO
+# (:func:`trace_collective_counts`)
+_TRACE_COUNTS = {"all_to_all": 0, "route_exchange": 0}
+
+
+def trace_collective_counts(fn, *args, **kwargs):
+    """Abstractly trace ``fn(*args, **kwargs)`` and return how many
+    ``all_to_all`` collectives and ``route_exchange`` invocations the traced
+    program contains — the honest "communication rounds per batch" metric
+    the engine benchmark asserts on (benchmarks/fig13_mesh_engine.py)."""
+    before = dict(_TRACE_COUNTS)
+    jax.eval_shape(fn, *args, **kwargs)
+    return {k: _TRACE_COUNTS[k] - before[k] for k in _TRACE_COUNTS}
+
+
 def a2a(x: jax.Array, axis: str) -> jax.Array:
     """[n_axis, ...] per-destination buffers -> per-source buffers."""
+    _TRACE_COUNTS["all_to_all"] += 1
     return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
 
 
@@ -132,6 +150,7 @@ def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.A
     permutation (and must be applied in the opposite order on the way back,
     ``reverse=True``).
     """
+    _TRACE_COUNTS["route_exchange"] += 1
     if len(cfg.route_axes) == 1:
         return a2a(buf, cfg.route_axes[0])
     a0, a1 = cfg.route_axes
@@ -139,9 +158,11 @@ def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.A
     r = buf.reshape((buf.shape[0] // s1, s1) + buf.shape[1:])
 
     def x0(r):
+        _TRACE_COUNTS["all_to_all"] += 1
         return jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
 
     def x1(r):
+        _TRACE_COUNTS["all_to_all"] += 1
         r = jnp.swapaxes(r, 0, 1)
         r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
         return jnp.swapaxes(r, 0, 1)

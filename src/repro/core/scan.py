@@ -14,60 +14,26 @@ records it has already collected fall short of its count, so the read count
 matches the host replay's leaf visits exactly even when splits leave leaves
 half-full.
 
-Dataflow per batch of ``(start_key, count)`` requests (DESIGN.md §3):
-
-  1. route requests to the compute partition owning ``start_key`` — shared
-     machinery with the point lookup (core/routing.py);
-  2. walk the replicated top tree to the owning subtree, then descend the
-     subtree's inner levels with per-chip cache probe/admit and remote
-     fetches of missing rows (same per-level all_to_all over the memory axis
-     as the lookup's one-sided path) to find the *start leaf*;
-  3. iterate ``hops`` sibling leaves: probe the cache for each consecutive
-     leaf, remote-read the misses, lazily admit with the leaf admission
-     probability P_A (§5.4), and append the rows to a per-lane window;
-  4. compact the window with the ``leaf_scan`` Pallas kernel (vectorized
-     in-leaf lower bound + masked rank gather, kernels/leaf_scan.py);
-  5. route results back to the requesting lanes.
-
-Scans are never offloaded (§7: memory-side CPUs would have to chase leaves
-too), so there is no offload branch and the miss EMA is left untouched.
+The dataflow — route round, version-checked cached descent to the start
+leaf, successor-chain sibling hops, ``leaf_scan`` Pallas compaction — lives
+in the unified mixed-op engine (:mod:`repro.core.engine`); this module is
+the thin single-opcode wrapper.  Scans are never offloaded (§7:
+memory-side CPUs would have to chase leaves too) and leave the offload
+miss-EMA untouched.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core import routing
-from repro.core.dex import (
-    N_STATS,
-    STAT_DROPS,
-    STAT_FETCHES,
-    STAT_HITS,
-    STAT_OPS,
-    DexCache,
-    DexMeshConfig,
-    DexState,
-    cached_fetch_level,
+from repro.core import engine as engine_mod
+from repro.core.dex import DexMeshConfig, DexState
+from repro.core.engine import (  # noqa: F401  (scan_hops re-export: the
+    DEFAULT_MAX_COUNT,           # static hop bound is part of this module's
+    scan_hops,                   # documented contract)
 )
-from repro.core.nodes import KEY_MAX
-from repro.core.pool import PoolMeta, SubtreePool, top_walk
-from repro.kernels.leaf_scan import leaf_scan
-from repro.kernels.ops import use_interpret
-from repro.kernels.ref import leaf_scan_ref
-
-DEFAULT_MAX_COUNT = 128
-
-
-def scan_hops(meta: PoolMeta, max_count: int) -> int:
-    """Leaves that may contribute to a ``max_count``-record scan: the start
-    leaf (which can contribute as little as nothing when the start key lies
-    above its last record) plus enough minimally-filled leaves for the rest
-    (``min_leaf_fill``: on-mesh splits can leave leaves half-full).  This is
-    only the static loop bound — per-lane collected-count masking stops each
-    lane's remote reads as soon as its count is covered."""
-    return 1 + -(-max_count // meta.min_leaf_fill)
+from repro.core.pool import PoolMeta
 
 
 def make_dex_scan(
@@ -82,12 +48,14 @@ def make_dex_scan(
     """Build the sharded range scan:
     ``(state, start_keys, counts) -> (state, keys, values, taken)``.
 
-    ``start_keys``/``counts`` are [B] globally sharded over all mesh axes;
-    results come back in the caller's lane order as ``keys``/``values``
-    [B, max_count] (KEY_MAX / 0 padded) and ``taken`` [B] int32.  Requests
-    with ``counts[b] > max_count`` are clipped; start keys need not exist in
-    the index (the scan begins at the smallest key >= start).  Wrap with
-    ``jax.jit``.
+    A thin single-opcode wrapper over the unified mixed-op engine
+    (:func:`repro.core.engine.make_dex_engine`); scan lanes carry their
+    record count in the engine's value plane.  ``start_keys``/``counts``
+    are [B] globally sharded over all mesh axes; results come back in the
+    caller's lane order as ``keys``/``values`` [B, max_count] (KEY_MAX / 0
+    padded) and ``taken`` [B] int32.  Requests with ``counts[b] >
+    max_count`` are clipped; start keys need not exist in the index (the
+    scan begins at the smallest key >= start).  Wrap with ``jax.jit``.
 
     Load shedding: a lane whose request (or any of whose per-level remote
     fetches) exceeded a routing bucket's capacity returns ``taken == -1``
@@ -95,169 +63,15 @@ def make_dex_scan(
     ``STAT_DROPS``; the caller retries (logical repartitioning is the
     systemic fix, §4).
     """
-    levels = meta.levels_in_subtree
-    hops = scan_hops(meta, max_count)
-    mc = max_count
-    if interpret is None:
-        interpret = use_interpret()  # compiled kernel on real TPU backends
-
-    def local_fn(pool, cache, boundaries, stats, demand, versions, succ,
-                 start_keys, counts):
-        b = start_keys.shape[0]
-        n_route = cfg.n_route
-        vers = versions[0]
-        succ_t = succ[0]
-
-        # --- 1. route to the partition owning the start key ----------------
-        owner, dem = routing.route_owners(boundaries, start_keys, n_route)
-        new_demand = demand + dem
-        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
-        payload = jnp.stack(
-            [start_keys, counts.astype(jnp.int64)], axis=-1
-        )                                                   # [B, 2]
-        buf, lane, dropped = routing.pack_by_dest(payload, owner, n_route, cap)
-        # inactive lanes share the OOB sentinel bucket; its overflow is
-        # meaningless (see routing.route_owners)
-        dropped = dropped & (start_keys != KEY_MAX)
-        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 2]
-        q = routed[..., 0].reshape(-1)                      # [n_route*cap]
-        cnt = routed[..., 1].reshape(-1)
-        live = q != KEY_MAX
-        cnt = jnp.clip(jnp.where(live, cnt, 0), 0, mc).astype(jnp.int32)
-
-        # --- 2. top-tree walk + cached descent to the start leaf ------------
-        subtree = top_walk(pool, meta, q)
-        subtree = jnp.where(live, subtree, 0)
-        local = jnp.full(q.shape, 0, jnp.int32)             # subtree root
-        new_cache = cache
-        n_fetch = jnp.int64(0)
-        n_hit = jnp.int64(0)
-        shed = jnp.zeros(q.shape, bool)   # lanes whose fetches were load-shed
-        always = jnp.ones(q.shape, bool)  # inner nodes: admit unconditionally
-        for _ in range(levels - 1):
-            gid = meta.node_gid(subtree, local)
-            rows_k, rows_c, _rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                cached_fetch_level(
-                    pool, meta, cfg, new_cache, vers, gid, live, always
-                )
-            )
-            shed = shed | f_drop
-            n_fetch = n_fetch + n_msgs
-            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
-            slot = jnp.maximum(
-                jnp.sum(rows_k <= q[:, None], axis=-1) - 1, 0
-            ).astype(jnp.int32)
-            local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
-
-        # gid of the start leaf (the successor chain starts here)
-        gid_h = meta.node_gid(subtree, local)
-
-        # --- 3. iterated sibling-leaf reads (fence-key subdivision) ---------
-        # hop h+1 follows the successor table; a lane keeps reading only
-        # while the records collected so far fall short of its count, so
-        # remote leaf reads match the host replay's leaf visits exactly
-        window_k = []
-        window_v = []
-        collected = jnp.zeros(q.shape, jnp.int32)
-        in_range = live
-        for h in range(hops):
-            if h > 0:
-                nxt = succ_t[jnp.where(in_range, gid_h, 0)]
-                in_range = in_range & (collected < cnt) & (nxt >= 0)
-                gid_h = jnp.where(in_range, nxt, gid_h)
-            gid = jnp.where(in_range, gid_h, 0)
-            # lazy leaf admission with P_A (§5.4), re-rolled per access
-            p_ok = routing.leaf_admit_dice(
-                gid, cfg.p_admit_leaf_pct,
-                salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
-            )
-            rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                cached_fetch_level(
-                    pool, meta, cfg, new_cache, vers, gid, in_range, p_ok
-                )
-            )
-            shed = shed | f_drop
-            rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
-            rows_v = jnp.where(in_range[:, None], rows_v, 0)
-            collected = collected + jnp.sum(
-                ((rows_k != KEY_MAX) & (rows_k >= q[:, None])).astype(jnp.int32),
-                axis=-1,
-            )
-            n_fetch = n_fetch + n_msgs
-            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
-            window_k.append(rows_k)
-            window_v.append(rows_v)
-        wk = jnp.concatenate(window_k, axis=-1)             # [Q, hops*F]
-        wv = jnp.concatenate(window_v, axis=-1)
-
-        # --- 4. in-window lower bound + masked compaction (Pallas) ----------
-        if use_kernel:
-            out_k, out_v, taken = leaf_scan(
-                wk, wv, q, cnt, max_count=mc, interpret=interpret
-            )
-        else:
-            out_k, out_v, taken = leaf_scan_ref(wk, wv, q, cnt, max_count=mc)
-        # shed lanes return an explicit failure, never truncated data
-        shed = shed & live
-        ok_lane = live & ~shed
-        out_k = jnp.where(ok_lane[:, None], out_k, KEY_MAX)
-        out_v = jnp.where(ok_lane[:, None], out_v, 0)
-        taken = jnp.where(ok_lane, taken, jnp.where(shed, -1, 0))
-
-        # --- 5. stats + results back to the requesting lanes ----------------
-        upd = jnp.zeros((1, N_STATS), jnp.int64)
-        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
-        upd = upd.at[0, STAT_HITS].set(n_hit)
-        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
-        upd = upd.at[0, STAT_DROPS].set(
-            (jnp.sum(dropped) + jnp.sum(shed)).astype(jnp.int64)
-        )
-        new_stats = stats + upd
-
-        resp = jnp.concatenate(
-            [out_k, out_v, taken[:, None].astype(jnp.int64)], axis=-1
-        )                                                   # [Q, 2*mc+1]
-        resp = resp.reshape(n_route, cap, 2 * mc + 1)
-        back = routing.route_exchange(resp, cfg, mesh, reverse=True)
-        out = routing.unpack_to_lanes(back, lane, b, 0)     # [B, 2*mc+1]
-        res_k = jnp.where(dropped[:, None], KEY_MAX, out[..., :mc])
-        res_v = jnp.where(dropped[:, None], 0, out[..., mc : 2 * mc])
-        res_taken = jnp.where(dropped, -1, out[..., 2 * mc]).astype(jnp.int32)
-        return new_cache, new_stats, new_demand, res_k, res_v, res_taken
-
-    dev = P(cfg.all_axes)
-    pool_specs = SubtreePool(
-        top_keys=P(),
-        top_children=P(),
-        pool_keys=P(cfg.memory_axis),
-        pool_children=P(cfg.memory_axis),
-        pool_values=P(cfg.memory_axis),
-    )
-    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
-                           fifo=dev, ver=dev)
-
-    sharded = routing.shard_map_compat(
-        local_fn,
-        mesh=mesh,
-        in_specs=(pool_specs, cache_specs, P(), dev, dev, dev, dev, dev, dev),
-        out_specs=(cache_specs, dev, dev, dev, dev, dev),
+    eng = engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("scan",), max_count=max_count,
+        use_kernel=use_kernel, interpret=interpret,
     )
 
     def scan(state: DexState, start_keys: jax.Array, counts: jax.Array):
-        new_cache, new_stats, new_demand, keys, values, taken = sharded(
-            state.pool,
-            state.cache,
-            state.boundaries,
-            state.stats,
-            state.route_demand,
-            state.versions,
-            state.succ,
-            start_keys.astype(jnp.int64),
-            counts.astype(jnp.int64),
-        )
-        new_state = state._replace(
-            cache=new_cache, stats=new_stats, route_demand=new_demand
-        )
-        return new_state, keys, values, taken
+        start_keys = start_keys.astype(jnp.int64)
+        opcodes = jnp.full(start_keys.shape, engine_mod.OP_SCAN, jnp.int32)
+        new_state, r = eng(state, opcodes, start_keys, counts.astype(jnp.int64))
+        return new_state, r.scan_keys, r.scan_values, r.taken
 
     return scan

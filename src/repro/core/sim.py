@@ -42,6 +42,13 @@ NODE_BYTES = 1024          # paper: 1KB nodes
 SMALL_READ_BYTES = 8       # version word
 RPC_BYTES = 64             # offload request/response payload
 
+# constants of the mesh engine's per-group byte-cost model, mirrored here so
+# ``SimConfig.group_offload`` prices the identical decision rule
+# (core/engine.py; keep in sync with core/dex.py NODE_ROW_BYTES /
+# OFFLOAD_REQ_BYTES / OFFLOAD_RESP_BYTES)
+ENGINE_NODE_ROW_BYTES = FANOUT * 8 * 3
+ENGINE_RPC_BYTES = 16 + 16
+
 
 # ---------------------------------------------------------------------------
 # Host B+-tree with true eager-split SMOs
@@ -57,7 +64,13 @@ class HostBTree:
     """
 
     def __init__(self, keys: np.ndarray, values: Optional[np.ndarray] = None,
-                 *, fill: float = 0.7, level_m: int = 1, n_mem_servers: int = 1):
+                 *, fill: float = 0.7, level_m: int = 1, n_mem_servers: int = 1,
+                 placement: str = "round_robin",
+                 subtrees_per_server: Optional[int] = None):
+        if placement not in ("round_robin", "blocked"):
+            raise ValueError(f"unknown placement {placement!r}")
+        self.placement = placement
+        self.subtrees_per_server = subtrees_per_server
         tree, meta = btree_mod.bulk_build(keys, values, fill=fill)
         self.K = np.asarray(tree.keys).copy()
         self.C = np.asarray(tree.children).copy()
@@ -114,25 +127,38 @@ class HostBTree:
                 self.parent[self.C[nid, i]] = nid
 
     def _assign_placement(self) -> None:
-        """Subtrees rooted at level M live wholly on one memory server."""
+        """Subtrees rooted at level M live wholly on one memory server.
+
+        ``placement="round_robin"`` (the default) deals subtrees out in
+        walk order; ``placement="blocked"`` assigns contiguous runs of
+        ``subtrees_per_server`` subtrees to each server — the mesh pool's
+        block sharding (``subtree // s_per``, core/pool.py), so the two
+        planes agree on which "memory column" owns a key range (the
+        per-group offload cross-validation relies on this,
+        benchmarks/fig13_mesh_engine.py)."""
         m = self.level_m
-        order = 0
+        roots: List[int] = []
         def assign(nid: int, server: int):
             self.server[nid] = server
             if self.LV[nid] > 0:
                 for i in range(int(self.NK[nid])):
                     assign(int(self.C[nid, i]), server)
         def walk(nid: int):
-            nonlocal order
             lvl = int(self.LV[nid])
             if lvl <= m:
-                assign(nid, order % self.n_mem_servers)
-                order += 1
+                roots.append(nid)
                 return
             self.server[nid] = int(nid) % self.n_mem_servers
             for i in range(int(self.NK[nid])):
                 walk(int(self.C[nid, i]))
         walk(self.root)
+        if self.placement == "blocked":
+            sps = self.subtrees_per_server or -(-len(roots) // self.n_mem_servers)
+            for order, r in enumerate(roots):
+                assign(r, min(order // sps, self.n_mem_servers - 1))
+        else:
+            for order, r in enumerate(roots):
+                assign(r, order % self.n_mem_servers)
 
     def subtree_root_of(self, nid: int) -> int:
         """Ancestor at level M (or self when the tree is shorter)."""
@@ -355,6 +381,12 @@ class Counters:
     refresh_from_root: int = 0
     smo_inserts: int = 0          # inserts whose split ran memory-side
     #                               (SimConfig.onmesh_smo pricing)
+    offload_groups: int = 0       # (window, memory server) groups the
+    #                               per-group cost model sent two-sided
+    #                               (SimConfig.group_offload; mirrors the
+    #                               mesh's STAT_OFFLOAD_GROUPS)
+    fetch_groups: int = 0         # groups that stayed one-sided
+    #                               (STAT_FETCH_GROUPS analogue)
 
     def add_read(self, nbytes: int = NODE_BYTES) -> None:
         self.rdma_read += 1
@@ -464,6 +496,23 @@ class SimConfig:
                                             # benchmarks/fig14_mesh_load.py)
 
     # --- offload policy ---
+    group_offload: bool = False             # per-(memory server, window)
+                                            # byte-cost offload decision,
+                                            # mirroring the mesh engine's
+                                            # per-group cost model
+                                            # (core/engine.py): a window's
+                                            # live non-scan ops targeting a
+                                            # server form one group whose
+                                            # predicted fetch bytes (per-
+                                            # level miss EMA x node bytes,
+                                            # population-capped) are
+                                            # compared against per-op RPC
+                                            # bytes; counted in
+                                            # Counters.offload_groups /
+                                            # fetch_groups for cross-plane
+                                            # validation
+                                            # (benchmarks/fig13_mesh_engine)
+    group_ema_decay: float = 0.98           # matches DexMeshConfig.ema_decay
     offload_always: bool = False            # Offload-only variant (Fig. 5)
     offload_epsilon: float = 0.01           # contrary-action probability (§6.1)
     offload_window: int = 50                # moving-average window (§6.1)
@@ -553,6 +602,18 @@ class Simulator:
         ]
         self.op_clock = np.zeros((cfg.n_compute,), dtype=np.float64)  # cpu-side work time
         self._rr = 0
+        # per-group (mesh-engine) offload state: a per-(memory server, block
+        # level) miss-rate EMA — the exact analogue of the mesh's
+        # ``DexState.miss_ema`` — plus this window's observation
+        # accumulators and the current per-server decisions (EMA starts at
+        # 1, so like the mesh a cold index begins on the two-sided path)
+        lv_blk = cfg.level_m + 1
+        self._gema = np.ones((cfg.n_mem_servers, lv_blk), dtype=np.float64)
+        self._gwin_miss = np.zeros((cfg.n_mem_servers, lv_blk), np.float64)
+        self._gwin_live = np.zeros((cfg.n_mem_servers, lv_blk), np.float64)
+        self._gdecision = np.ones((cfg.n_mem_servers,), dtype=bool)
+        self._group_active = False
+        self._group_obs_off = False
 
     # -- helpers ---------------------------------------------------------------
 
@@ -717,46 +778,186 @@ class Simulator:
         keys: np.ndarray,
         scan_len: int = 100,
         scan_lens: Optional[np.ndarray] = None,
+        *,
+        group_policy: Optional[str] = None,
     ) -> None:
         """Execute a workload.  ``ops``: array of {0:lookup, 1:update,
         2:insert, 3:scan, 4:delete}; ``keys``: target keys.  ``scan_lens``
         (per-op record counts, e.g. YCSB-E's uniform lengths) overrides the
-        fixed ``scan_len`` when given."""
+        fixed ``scan_len`` when given.
+
+        With ``SimConfig.group_offload`` the stream executes in windows of
+        ``coherence_batch`` ops (the mesh's batch): each window's live
+        non-scan ops per memory server form one cost group, decided and
+        counted *before* the window runs, exactly as the engine decides per
+        batch (core/engine.py).  ``group_policy`` overrides the cost model
+        for this call — ``"fetch"`` forces one-sided (and, like the mesh's
+        ``policy="fetch"``, mints no groups), ``"offload"`` forces
+        two-sided; ``None`` applies the byte-cost comparison."""
+        if self.cfg.group_offload:
+            w = max(self.cfg.coherence_batch, 1)
+            self._group_active = True
+            try:
+                for lo in range(0, len(ops), w):
+                    hi = min(lo + w, len(ops))
+                    self._group_window_begin(
+                        ops[lo:hi], keys[lo:hi], group_policy
+                    )
+                    for i in range(lo, hi):
+                        self._dispatch(i, ops[i], keys[i], scan_len, scan_lens)
+                    self._flush_window()
+                    self._group_window_end()
+            finally:
+                self._group_active = False
+            return
         for i, (op, key) in enumerate(zip(ops, keys)):
-            key = int(key)
-            server = self._owner(key)
-            self.counters[server].ops += 1
-            if op == 0:
-                self._op_lookup(server, key)
-            elif op == 1:
-                self._op_update(server, key)
-            elif op == 2:
-                self._op_insert(server, key)
-            elif op == 3:
-                n = int(scan_lens[i]) if scan_lens is not None else scan_len
-                self._op_scan(server, key, n)
-            elif op == 4:
-                self._op_delete(server, key)
-            else:
-                raise ValueError(f"bad op {op}")
+            self._dispatch(i, op, key, scan_len, scan_lens)
             if self.cfg.coherence_batch > 1:
                 self._ops_in_window += 1
                 if self._ops_in_window >= self.cfg.coherence_batch:
                     self._flush_window()
                     self._ops_in_window = 0
 
+    def _dispatch(self, i, op, key, scan_len, scan_lens) -> None:
+        key = int(key)
+        server = self._owner(key)
+        self.counters[server].ops += 1
+        if op == 0:
+            self._op_lookup(server, key)
+        elif op == 1:
+            self._op_update(server, key)
+        elif op == 2:
+            self._op_insert(server, key)
+        elif op == 3:
+            n = int(scan_lens[i]) if scan_lens is not None else scan_len
+            self._op_scan(server, key, n)
+        elif op == 4:
+            self._op_delete(server, key)
+        else:
+            raise ValueError(f"bad op {op}")
+
+    # -- per-group offload machinery (SimConfig.group_offload) ----------------
+
+    def _mem_server_of(self, key: int) -> int:
+        """Memory server owning the level-M subtree of ``key``'s leaf."""
+        leaf = self.tree.search_path(key)[-1]
+        return int(self.tree.server[self.tree.subtree_root_of(leaf)])
+
+    def _group_level_nodes(self) -> np.ndarray:
+        """Per-(server, mesh level) block-node population; mesh level 0 is
+        the subtree root (tree level M), the last is the leaves.  Caps the
+        group cost model's predicted fetch bytes: a batch's coalesced reads
+        never exceed a level's distinct nodes."""
+        m = self.cfg.level_m
+        lv = self.tree.LV
+        sv = self.tree.server
+        out = np.zeros((self.cfg.n_mem_servers, m + 1), np.float64)
+        for l_mesh in range(m + 1):
+            mask = (lv == m - l_mesh) & (sv >= 0)
+            if mask.any():
+                np.add.at(out, (sv[mask] % self.cfg.n_mem_servers, l_mesh), 1.0)
+        return out
+
+    def _group_window_begin(self, ops, keys, group_policy) -> None:
+        """Decide (and count) this window's per-server cost groups from its
+        live non-scan population — the sim-side mirror of the engine's
+        per-(destination column) decision on psum'd live-lane counts."""
+        cfg = self.cfg
+        live = np.zeros((cfg.n_mem_servers,), np.int64)
+        # the tree is static while a window's population is taken, and
+        # skewed windows repeat keys heavily: memoize the per-key server to
+        # avoid paying a second full tree walk per op
+        servers: Dict[int, int] = {}
+        for op, key in zip(ops, keys):
+            if op == 3:          # scans never offload (§7)
+                continue
+            k = int(key)
+            ms = servers.get(k)
+            if ms is None:
+                ms = servers[k] = self._mem_server_of(k)
+            live[ms] += 1
+        if group_policy == "fetch":
+            # forced one-sided windows mint no groups (mesh policy="fetch")
+            self._gdecision[:] = False
+            return
+        if group_policy == "offload":
+            self._gdecision[:] = True
+        else:
+            caps = np.minimum(
+                live[:, None].astype(np.float64), self._group_level_nodes()
+            )
+            fetch_cost = (
+                (caps * self._gema).sum(axis=1)
+                * ENGINE_NODE_ROW_BYTES * cfg.offload_c
+            )
+            rpc_cost = live.astype(np.float64) * ENGINE_RPC_BYTES
+            self._gdecision = fetch_cost > rpc_cost
+        c = self.counters[0]   # groups are index-global: count them once
+        c.offload_groups += int((self._gdecision & (live > 0)).sum())
+        c.fetch_groups += int((~self._gdecision & (live > 0)).sum())
+
+    def _group_window_end(self) -> None:
+        """Fold this window's per-(server, level) miss observations into the
+        EMA (decay matches the mesh's ``DexMeshConfig.ema_decay``); servers
+        whose window held no fetch-path ops keep their estimate, exactly
+        like an offloaded mesh column."""
+        obs = self._gwin_live > 0
+        rate = np.where(
+            obs, self._gwin_miss / np.maximum(self._gwin_live, 1.0), 0.0
+        )
+        d = self.cfg.group_ema_decay
+        self._gema = np.where(obs, d * self._gema + (1 - d) * rate, self._gema)
+        self._gwin_miss[:] = 0.0
+        self._gwin_live[:] = 0.0
+
+    def _gobs(self, nid: int, hit: bool) -> None:
+        """One fetch-path block-level cache observation (scan traversals are
+        excluded, as on the mesh)."""
+        if not self._group_active or self._group_obs_off:
+            return
+        lvl = int(self.tree.LV[nid])
+        if lvl > self.cfg.level_m:
+            return
+        ms = int(self.tree.server[nid]) % self.cfg.n_mem_servers
+        self._gwin_live[ms, self.cfg.level_m - lvl] += 1
+        if not hit:
+            self._gwin_miss[ms, self.cfg.level_m - lvl] += 1
+
     # Traversal core: walk the ground-truth path, consulting the cache and
     # issuing remote verbs per the configured protocol.  Returns the list of
     # (node, was_cached) and whether the op was completed via offload.
-    def _traverse(self, server: int, key: int, *, for_write: bool) -> Tuple[List[Tuple[int, bool]], bool]:
+    def _traverse(self, server: int, key: int, *, for_write: bool,
+                  is_insert: bool = False) -> Tuple[List[Tuple[int, bool]], bool]:
         cfg = self.cfg
         cache = self.caches[server]
         c = self.counters[server]
         path = self.tree.search_path(key)
         height = len(path)
         visited: List[Tuple[int, bool]] = []
+        group_tried = False
         for depth, nid in enumerate(path):
             lvl = int(self.tree.LV[nid])
+            if (
+                self._group_active
+                and cfg.offloading
+                and not group_tried
+                and lvl <= cfg.level_m
+                and self._gdecision[int(self.tree.server[nid])
+                                    % cfg.n_mem_servers]
+            ):
+                # per-group mode: the whole column's traffic goes two-sided
+                # at the first block-level node, before any cache probe
+                # (the mesh's offloaded lanes skip the descent entirely);
+                # decided once per op.  Only inserts that would split fall
+                # back to the one-sided path (§6 — on the mesh they shed
+                # STATUS_SPLIT to core/smo.py; offloaded updates always
+                # apply memory-side)
+                group_tried = True
+                if for_write and is_insert and self.tree.would_split(key):
+                    c.offload_fallbacks += 1
+                else:
+                    self._offload(server, nid, lvl + 1)
+                    return visited, True
             if cfg.caching and self._cacheable(nid):
                 r = cache.lookup(nid)
                 if r == "hit":
@@ -770,10 +971,12 @@ class Simulator:
                         self.op_clock[server] += lat
                         self.stale[server].discard(nid)
                         self._window_fetched[server].add(nid)
+                        self._gobs(nid, False)
                         visited.append((nid, True))
                         continue
                     c.local_accesses += 1
                     self.op_clock[server] += cfg.t_cached_access
+                    self._gobs(nid, True)
                     visited.append((nid, True))
                     continue
             if (
@@ -788,12 +991,17 @@ class Simulator:
                 self.op_clock[server] += cfg.t_cached_access
                 if cfg.caching and self._cacheable(nid):
                     cache.admit(nid)
+                # a window-coalesced read is still a cache-probe miss on the
+                # mesh (duplicate lanes of one batch all miss, then share
+                # one coalesced message) — the EMA counts the probe
+                self._gobs(nid, False)
                 visited.append((nid, cfg.caching and nid in cache))
                 continue
             shared = self._is_shared(nid)
             levels_left = lvl + 1  # nodes from here to leaf inclusive
             if (
-                cfg.offloading
+                not self._group_active
+                and cfg.offloading
                 and not shared
                 and lvl <= cfg.level_m
                 and self._deserve_offload(server, levels_left)
@@ -810,6 +1018,7 @@ class Simulator:
                 self._window_fetched[server].add(nid)
             if self._cacheable(nid):
                 cache.admit(nid)
+            self._gobs(nid, False)
             visited.append((nid, False))
         return visited, False
 
@@ -854,7 +1063,8 @@ class Simulator:
         cfg = self.cfg
         cache = self.caches[server]
         c = self.counters[server]
-        visited, offloaded = self._traverse(server, key, for_write=True)
+        visited, offloaded = self._traverse(server, key, for_write=True,
+                                            is_insert=True)
         if (
             cfg.onmesh_smo
             and not offloaded
@@ -939,10 +1149,13 @@ class Simulator:
         first = True
         for leaf, _ks in hops:
             # each hop is a fresh root-to-leaf traversal; offloading disabled
+            # and no group-EMA observations (scans leave the mesh EMA alone)
             save = self.cfg.offloading
             self.cfg.offloading = False
+            self._group_obs_off = True
             self._traverse(server, int(self.tree.K[leaf, 0]) if not first else key,
                            for_write=False)
+            self._group_obs_off = False
             self.cfg.offloading = save
             first = False
             self.op_clock[server] += cfg.t_local_search
@@ -963,6 +1176,8 @@ class Simulator:
             out.offload_fallbacks += c.offload_fallbacks
             out.coherence_invalidations += c.coherence_invalidations
             out.smo_inserts += c.smo_inserts
+            out.offload_groups += c.offload_groups
+            out.fetch_groups += c.fetch_groups
         return out
 
     def cache_stats(self):

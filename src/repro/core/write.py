@@ -1,19 +1,22 @@
 """Batched writes on the TPU mesh (Plane B): the paper's update/insert
 protocols (§7) as SPMD collectives.
 
-Two operations share one dataflow skeleton with the lookup/scan descent
-(core/routing.py, ``cached_fetch_level``):
+Two operations share the unified mixed-op engine's dataflow
+(:mod:`repro.core.engine`: one route round, one version-checked cached
+descent, one fused tagged ``all_to_all`` round); this module holds the thin
+single-opcode builders, the owner-side apply (``_apply_leaf_writes``,
+called from the engine's fused round) and the host-side SMO drain:
 
-* ``make_dex_update`` — in-place value overwrite.  Route each ``(key,
-  value)`` to the partition owning the key, descend through the per-chip
-  cache to the target leaf, then issue **one request/response all_to_all
-  round over the memory axis** carrying ``(leaf_gid, slot, key, value,
-  prio)`` records.  The owning memory column applies them CAS-style: the
-  write lands only if ``key`` still sits at ``slot`` (the RDMA-CAS
-  analogue), conflicting writers to one slot are resolved by batch priority
-  (last-in-batch wins, matching sequential replay), and the response carries
-  the leaf's merged post-batch value row.
-* ``make_dex_insert`` — append into leaf slack slots.  Same route + descent
+* ``make_dex_update`` — in-place value overwrite.  The engine routes each
+  ``(key, value)`` to the partition owning the key, descends through the
+  per-chip cache to the target leaf, and ships a tagged ``(leaf_gid, key,
+  value, prio)`` record in the fused round.  The owning memory column
+  applies it CAS-style — the authoritative leaf row is re-searched at
+  apply time and the write lands at the key's current slot — conflicting
+  writers of one key are resolved by batch priority (updates replay before
+  inserts, last-in-batch wins within a phase, matching sequential replay),
+  and the response carries the leaf's merged post-batch value row.
+* ``make_dex_insert`` — append into leaf slack slots.  Same engine descent
   (inner levels only); the owning memory column groups incoming keys by
   target leaf, converts duplicates of existing keys into value updates, and
   merges fresh keys into the leaf's slack via the ``leaf_write`` Pallas
@@ -21,10 +24,18 @@ Two operations share one dataflow skeleton with the lookup/scan descent
   overflow are shed**: none of their staged inserts apply, the lanes come
   back with status ``STATUS_SPLIT`` and are counted in ``STAT_SPLITS`` —
   mirroring the scan subsystem's load-shed discipline — and the caller
-  replays them through the host tree's true structural-modification path
-  between batches (:func:`drain_splits`).  This replaces the paper's
-  latch-based SMOs: an SPMD batch cannot take per-node latches, but it can
-  refuse the structural change and let the host replay it.
+  replays them through the on-mesh SMO engine or the host tree's true
+  structural-modification path between batches (:func:`drain_splits`).
+  This replaces the paper's latch-based SMOs: an SPMD batch cannot take
+  per-node latches, but it can refuse the structural change and let the
+  SMO ladder replay it.
+
+When a key's destination column's cost group picks the two-sided path
+(core/engine.py §6.1 refinement), the same records travel as *offloaded*
+tags: the owner walks its own block to the leaf first, then applies the
+identical CAS/merge — and an offloaded insert that would split sheds
+``STATUS_SPLIT`` exactly like a fetched-path one (the paper's rule that
+offloaded writes fall back to the normal path for SMOs).
 
 Cache coherence is **write-through-and-invalidate** with per-leaf versions:
 the writing chip refreshes (update) or drops (insert) its *own* cached row
@@ -51,28 +62,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core import routing
 from repro.core.dex import (
-    N_STATS,
     STAT_DRAINS,
-    STAT_DROPS,
-    STAT_FETCHES,
-    STAT_HITS,
-    STAT_OPS,
-    STAT_SPLITS,
-    STAT_WRITES,
-    DexCache,
     DexMeshConfig,
     DexState,
-    cached_fetch_level,
     init_state,
 )
 from repro.core.nodes import FANOUT, KEY_MAX
-from repro.core.pool import PoolMeta, SubtreePool, build_pool, top_walk
+from repro.core.pool import PoolMeta, build_pool
 from repro.kernels.leaf_write import leaf_write
-from repro.kernels.ops import use_interpret
 from repro.kernels.ref import leaf_write_ref
 
 STATUS_MISS = 0    # update of an absent key / inactive lane: no-op
@@ -97,21 +96,29 @@ def _apply_leaf_writes(
     meta: PoolMeta,
     cfg: DexMeshConfig,
     gid: jax.Array,          # [N] int64 leaf gids (KEY_MAX = inactive lane)
-    slot: jax.Array,         # [N] int64 claimed slot (update mode only)
     key: jax.Array,          # [N] int64
     value: jax.Array,        # [N] int64
     prio: jax.Array,         # [N] int64 globally unique batch priority
+    allow_insert: jax.Array,  # [N] bool: absent keys may claim a slack slot
     *,
-    is_insert: bool,
     use_kernel: bool,
     interpret: bool,
 ):
-    """Apply one flat batch of leaf-write requests to the local pool shard.
+    """Apply one flat *mixed* batch of leaf-write requests to the local pool
+    shard.  A lane whose key already sits in the leaf becomes an in-place
+    value write (CAS-style: the authoritative row is re-searched at apply
+    time); an absent key claims a slack slot when ``allow_insert`` (insert
+    lanes — fetched-path and offloaded alike) and is a ``STATUS_MISS``
+    no-op otherwise (update of an absent key).
 
     Every route-replica of this memory column calls this with identical
     inputs (see ``gather_route``), so the replicas stay consistent.  Returns
     ``(new_pool_keys, new_pool_values, new_occupancy, status [N] int32,
-    rows_v_out [N, F] post-batch value rows)``.
+    rows_v_out [N, F] post-batch value rows, ins_in_leaf [N] bool)`` —
+    ``ins_in_leaf`` marks lanes whose target leaf took at least one fresh
+    insert this batch (its key set shifted, so an updater's cached copy
+    must NOT be version-refreshed in place: the keys plane it holds is
+    stale even though the response's value row is authoritative).
     """
     n = gid.shape[0]
     s_per = meta.n_subtrees_padded // cfg.n_memory
@@ -120,17 +127,10 @@ def _apply_leaf_writes(
     lo = jnp.where(valid, gid % meta.subtree_cap, 0).astype(jnp.int32)
     row_k0 = pool_keys[st, lo]                              # [N, F] pre-batch
 
-    if is_insert:
-        eqk = row_k0 == key[:, None]
-        exists = jnp.any(eqk, axis=-1) & valid
-        slot32 = jnp.argmax(eqk, axis=-1).astype(jnp.int32)
-        live = valid
-    else:
-        # CAS: the key must still sit at the claimed slot
-        slot32 = jnp.clip(slot.astype(jnp.int32), 0, FANOUT - 1)
-        cur = jnp.take_along_axis(row_k0, slot32[:, None], axis=-1)[:, 0]
-        exists = valid & (cur == key)
-        live = exists
+    eqk = row_k0 == key[:, None]
+    exists = jnp.any(eqk, axis=-1) & valid
+    slot32 = jnp.argmax(eqk, axis=-1).astype(jnp.int32)
+    live = valid & (exists | allow_insert)
     is_upd = exists  # staged as in-place value write (vs slack-slot insert)
 
     # ---- conflict resolution: sort by (gid, key, prio); the last writer of
@@ -225,265 +225,69 @@ def _apply_leaf_writes(
     status = jnp.zeros((n,), jnp.int32).at[order].set(status_s)
 
     rows_v_out = out_pv[st, lo]                             # post-batch rows
-    return out_pk, out_pv, out_occ, status, rows_v_out
-
-
-def _make_dex_write(
-    meta: PoolMeta,
-    cfg: DexMeshConfig,
-    mesh,
-    *,
-    is_insert: bool,
-    use_kernel: bool = True,
-    interpret: "bool | None" = None,
-):
-    """Shared builder for the two write ops (see module docstring)."""
-    levels = meta.levels_in_subtree
-    if interpret is None:
-        interpret = use_interpret()
-
-    def local_fn(pool, occupancy, cache, boundaries, stats, demand, versions,
-                 keys, values):
-        b = keys.shape[0]
-        n_route = cfg.n_route
-        vers = versions[0]
-
-        # --- 1. route to the owning partition, carrying a globally unique
-        # batch priority so conflicting writers resolve as sequential replay
-        dev = routing.device_linear_index(cfg, mesh)
-        prio = dev.astype(jnp.int64) * b + jnp.arange(b, dtype=jnp.int64)
-        owner, dem = routing.route_owners(boundaries, keys, n_route)
-        new_demand = demand + dem
-        cap = routing.route_capacity(b, n_route, cfg.route_capacity_factor)
-        payload = jnp.stack([keys, values, prio], axis=-1)  # [B, 3]
-        buf, lane, dropped_r = routing.pack_by_dest(payload, owner, n_route, cap)
-        # inactive lanes share the OOB sentinel bucket; its overflow is
-        # meaningless (see routing.route_owners)
-        dropped_r = dropped_r & (keys != KEY_MAX)
-        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 3]
-        q = routed[..., 0].reshape(-1)                      # [Q]
-        val = routed[..., 1].reshape(-1)
-        pr = routed[..., 2].reshape(-1)
-        live = q != KEY_MAX
-
-        # --- 2. cached descent to the target leaf --------------------------
-        subtree = top_walk(pool, meta, q)
-        subtree = jnp.where(live, subtree, 0)
-        local = jnp.zeros(q.shape, jnp.int32)
-        new_cache = cache
-        n_fetch = jnp.int64(0)
-        n_hit = jnp.int64(0)
-        shed = jnp.zeros(q.shape, bool)
-        found = live
-        wslot = jnp.zeros(q.shape, jnp.int32)
-        descent_levels = levels if not is_insert else levels - 1
-        for lvl in range(descent_levels):
-            gid = meta.node_gid(subtree, local)
-            if not is_insert and lvl == levels - 1:
-                p_ok = routing.leaf_admit_dice(
-                    gid, cfg.p_admit_leaf_pct,
-                    salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
-                )
-            else:
-                p_ok = jnp.ones(q.shape, bool)
-            rows_k, rows_c, _rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                cached_fetch_level(
-                    pool, meta, cfg, new_cache, vers, gid, live, p_ok
-                )
-            )
-            shed = shed | f_drop
-            n_fetch = n_fetch + n_msgs
-            n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
-            if lvl < levels - 1:
-                cnt = jnp.sum(rows_k <= q[:, None], axis=-1)
-                slot = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
-                local = jnp.take_along_axis(rows_c, slot[:, None], axis=-1)[:, 0]
-            else:
-                # update: locate the slot for the CAS-style write
-                eq = rows_k == q[:, None]
-                found = jnp.any(eq, axis=-1) & live
-                wslot = jnp.argmax(eq, axis=-1).astype(jnp.int32)
-        leaf_gid = meta.node_gid(subtree, local)
-
-        # --- 3. one write round to the owning memory column ----------------
-        want_w = live & found & ~shed
-        s_per = meta.n_subtrees_padded // cfg.n_memory
-        w_owner = jnp.where(want_w, subtree // s_per, cfg.n_memory)
-        wcap = routing.route_capacity(
-            q.shape[0], cfg.n_memory, cfg.route_capacity_factor
-        )
-        wpayload = jnp.stack(
-            [
-                jnp.where(want_w, leaf_gid, KEY_MAX),
-                wslot.astype(jnp.int64),
-                q,
-                val,
-                pr,
-            ],
-            axis=-1,
-        )                                                   # [Q, 5]
-        wbuf, wlane, dropped_w = routing.pack_by_dest(
-            wpayload, w_owner.astype(jnp.int32), cfg.n_memory, wcap
-        )
-        req = routing.a2a(wbuf, cfg.memory_axis)            # [n_mem, wcap, 5]
-        # every route-replica of this column applies the identical batch
-        req_all = routing.gather_route(req, cfg)            # [R, n_mem, wcap, 5]
-        flat = req_all.reshape(-1, 5)
-        new_pk, new_pv, new_occ, status_all, rows_v_all = _apply_leaf_writes(
-            pool.pool_keys, pool.pool_values, occupancy, meta, cfg,
-            flat[:, 0], flat[:, 1], flat[:, 2], flat[:, 3], flat[:, 4],
-            is_insert=is_insert, use_kernel=use_kernel, interpret=interpret,
-        )
-        # respond to this device's own route row
-        r_lin = routing.route_linear_index(cfg, mesh)
-        status_own = jnp.take(
-            status_all.reshape(cfg.n_route, cfg.n_memory, wcap), r_lin, axis=0
-        )
-        rows_own = jnp.take(
-            rows_v_all.reshape(cfg.n_route, cfg.n_memory, wcap, FANOUT),
-            r_lin, axis=0,
-        )
-        resp = jnp.concatenate(
-            [status_own[..., None].astype(jnp.int64), rows_own], axis=-1
-        )                                                   # [n_mem, wcap, F+1]
-        resp = routing.a2a(resp, cfg.memory_axis)
-        back = routing.unpack_to_lanes(resp, wlane, q.shape[0], 0)
-        wstatus = back[..., 0].astype(jnp.int32)
-        wrow_v = back[..., 1:]
-        applied = want_w & ~dropped_w & (wstatus == STATUS_OK)
-
-        # --- 4. write-through-and-invalidate + version bump ----------------
-        nv = vers[leaf_gid] + 1
-        set_idx = (
-            routing.hash64(leaf_gid) % jnp.uint64(cfg.cache_sets)
-        ).astype(jnp.int32)
-        eqt = new_cache.tags[0, set_idx] == leaf_gid[:, None]
-        chit = jnp.any(eqt, axis=-1) & applied
-        way = jnp.argmax(eqt, axis=-1).astype(jnp.int32)
-        sidx = jnp.where(chit, set_idx, cfg.cache_sets)
-        if is_insert:
-            # drop the chip's own (now key-shifted) cached row
-            new_tags = new_cache.tags.at[0, sidx, way].set(-1, mode="drop")
-            new_cache = new_cache._replace(tags=new_tags)
-        else:
-            # refresh the chip's own cached row with the authoritative
-            # post-batch values and stamp it with the bumped version
-            cvals = new_cache.values.at[0, sidx, way].set(wrow_v, mode="drop")
-            cver = new_cache.ver.at[0, sidx, way].set(
-                jnp.where(chit, nv, 0), mode="drop"
-            )
-            new_cache = new_cache._replace(values=cvals, ver=cver)
-        gsafe = jnp.where(applied, leaf_gid, vers.shape[0])
-        vers2 = vers.at[gsafe].max(nv, mode="drop")
-        new_versions = jax.lax.pmax(vers2[None, :], cfg.all_axes)
-
-        # --- 5. stats + result codes back to the requesting lanes ----------
-        res = jnp.where(
-            applied,
-            STATUS_OK,
-            jnp.where(
-                shed | (want_w & dropped_w),
-                STATUS_SHED,
-                jnp.where(wstatus == STATUS_SPLIT, STATUS_SPLIT, STATUS_MISS),
-            ),
-        )
-        res = jnp.where(live, res, STATUS_MISS)
-        upd = jnp.zeros((1, N_STATS), jnp.int64)
-        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
-        upd = upd.at[0, STAT_HITS].set(n_hit)
-        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
-        upd = upd.at[0, STAT_WRITES].set(
-            jnp.sum(want_w & ~dropped_w).astype(jnp.int64)
-        )
-        upd = upd.at[0, STAT_DROPS].set(
-            (jnp.sum(dropped_r) + jnp.sum(shed & live)
-             + jnp.sum(want_w & dropped_w)).astype(jnp.int64)
-        )
-        upd = upd.at[0, STAT_SPLITS].set(
-            jnp.sum(res == STATUS_SPLIT).astype(jnp.int64)
-        )
-        new_stats = stats + upd
-
-        resp2 = res.astype(jnp.int64).reshape(n_route, cap, 1)
-        back2 = routing.route_exchange(resp2, cfg, mesh, reverse=True)
-        out = routing.unpack_to_lanes(back2, lane, b, 0)
-        out_res = jnp.where(
-            dropped_r, STATUS_SHED, out[..., 0].astype(jnp.int32)
-        )
-        return (new_pk, new_pv, new_occ, new_cache, new_versions, new_stats,
-                new_demand, out_res)
-
-    dev = P(cfg.all_axes)
-    pool_specs = SubtreePool(
-        top_keys=P(),
-        top_children=P(),
-        pool_keys=P(cfg.memory_axis),
-        pool_children=P(cfg.memory_axis),
-        pool_values=P(cfg.memory_axis),
-    )
-    cache_specs = DexCache(tags=dev, keys=dev, children=dev, values=dev,
-                           fifo=dev, ver=dev)
-    mem = P(cfg.memory_axis)
-
-    sharded = routing.shard_map_compat(
-        local_fn,
-        mesh=mesh,
-        in_specs=(pool_specs, mem, cache_specs, P(), dev, dev, dev,
-                  P(cfg.all_axes), P(cfg.all_axes)),
-        out_specs=(mem, mem, mem, cache_specs, dev, dev, dev,
-                   P(cfg.all_axes)),
-    )
-
-    def write(state: DexState, keys: jax.Array, values: jax.Array):
-        (new_pk, new_pv, new_occ, new_cache, new_versions, new_stats,
-         new_demand, res) = (
-            sharded(
-                state.pool, state.occupancy, state.cache, state.boundaries,
-                state.stats, state.route_demand, state.versions,
-                keys.astype(jnp.int64), values.astype(jnp.int64),
-            )
-        )
-        new_pool = state.pool._replace(pool_keys=new_pk, pool_values=new_pv)
-        new_state = state._replace(
-            pool=new_pool,
-            occupancy=new_occ,
-            cache=new_cache,
-            versions=new_versions,
-            stats=new_stats,
-            route_demand=new_demand,
-        )
-        return new_state, res
-
-    return write
+    # per-lane: did the lane's target leaf take any fresh insert this batch?
+    seg_ins = jnp.zeros((n,), bool).at[seg_id].max(ins_apply)
+    ins_lane_s = jnp.where(live_s, seg_ins[seg_id], False)
+    ins_in_leaf = jnp.zeros((n,), bool).at[order].set(ins_lane_s)
+    return out_pk, out_pv, out_occ, status, rows_v_out, ins_in_leaf
 
 
 def make_dex_update(meta, cfg, mesh, *, use_kernel=True, interpret=None):
     """Build the sharded in-place update:
     ``(state, keys, values) -> (state, status)``.
 
-    ``keys``/``values`` are [B] globally sharded over all mesh axes;
-    ``status`` comes back in the caller's lane order (``STATUS_OK`` /
-    ``STATUS_MISS`` / ``STATUS_SHED``).  ``keys == KEY_MAX`` lanes are
-    inactive no-ops (useful for op-type-masked mixed batches).  Wrap with
-    ``jax.jit``."""
-    return _make_dex_write(
-        meta, cfg, mesh, is_insert=False,
+    A thin single-opcode wrapper over the unified mixed-op engine
+    (:func:`repro.core.engine.make_dex_engine`): route + cached descent are
+    shared machinery, and the CAS-style write records travel as tagged
+    messages in the engine's one fused request/response ``all_to_all``
+    round (offloaded when the key's column's cost group picks the
+    two-sided path).  ``keys``/``values`` are [B] globally sharded over all
+    mesh axes; ``status`` comes back in the caller's lane order
+    (``STATUS_OK`` / ``STATUS_MISS`` / ``STATUS_SHED``).  ``keys ==
+    KEY_MAX`` lanes are inactive no-ops (useful for op-type-masked mixed
+    batches).  Wrap with ``jax.jit``."""
+    from repro.core import engine as engine_mod  # deferred: engine imports us
+
+    eng = engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("update",),
         use_kernel=use_kernel, interpret=interpret,
     )
+
+    def update(state, keys, values):
+        keys = keys.astype(jnp.int64)
+        opcodes = jnp.full(keys.shape, engine_mod.OP_UPDATE, jnp.int32)
+        new_state, r = eng(state, opcodes, keys, values.astype(jnp.int64))
+        return new_state, r.status
+
+    return update
 
 
 def make_dex_insert(meta, cfg, mesh, *, use_kernel=True, interpret=None):
     """Build the sharded insert: ``(state, keys, values) -> (state, status)``.
 
-    Fresh keys append into their leaf's slack slots (occupancy-tracked);
-    keys that already exist become value updates; leaves that would overflow
-    shed their inserts with ``STATUS_SPLIT`` (counted in ``STAT_SPLITS``) —
-    replay them with :func:`drain_splits` between batches.  ``keys ==
-    KEY_MAX`` lanes are inactive no-ops.  Wrap with ``jax.jit``."""
-    return _make_dex_write(
-        meta, cfg, mesh, is_insert=True,
+    A thin single-opcode wrapper over the unified mixed-op engine (see
+    :func:`make_dex_update`).  Fresh keys append into their leaf's slack
+    slots (occupancy-tracked); keys that already exist become value
+    updates; leaves that would overflow shed their inserts with
+    ``STATUS_SPLIT`` (counted in ``STAT_SPLITS``) — resolve them with
+    :func:`repro.core.smo.settle_splits` (or :func:`drain_splits`) between
+    batches; offloaded inserts that would split shed exactly the same way
+    (the paper's SMO fallback rule).  ``keys == KEY_MAX`` lanes are
+    inactive no-ops.  Wrap with ``jax.jit``."""
+    from repro.core import engine as engine_mod  # deferred: engine imports us
+
+    eng = engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("insert",),
         use_kernel=use_kernel, interpret=interpret,
     )
+
+    def insert(state, keys, values):
+        keys = keys.astype(jnp.int64)
+        opcodes = jnp.full(keys.shape, engine_mod.OP_INSERT, jnp.int32)
+        new_state, r = eng(state, opcodes, keys, values.astype(jnp.int64))
+        return new_state, r.status
+
+    return insert
 
 
 # ---------------------------------------------------------------------------

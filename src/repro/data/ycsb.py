@@ -109,6 +109,40 @@ class Workload:
     scan_lens: "np.ndarray | None" = None
 
 
+def engine_lanes(
+    wl: Workload,
+    lo: int = 0,
+    hi: "int | None" = None,
+    *,
+    update_xor: int = 0x5A5A,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice ``[lo, hi)`` of a workload as one *interleaved mixed-op batch*
+    for the unified engine (core/engine.py): the per-lane opcode plane (the
+    ``OP_*`` codes are shared between this module and the engine), the key
+    plane, and the overloaded value plane — update lanes carry ``key ^
+    update_xor`` (the convention the mesh benchmarks and ``Simulator``
+    replay), insert lanes carry the key itself, scan lanes carry their
+    record count (``Workload.scan_lens`` when per-op lengths were drawn,
+    the fixed ``scan_len`` otherwise), lookup lanes carry 0.  This replaces
+    the per-op-type masked splits the pre-engine benchmarks performed: one
+    stream, opcodes instead of three KEY_MAX-masked sub-batches.
+    """
+    hi = wl.ops.size if hi is None else hi
+    ops = wl.ops[lo:hi].astype(np.int32)
+    keys = wl.keys[lo:hi].astype(np.int64)
+    vals = np.zeros(ops.shape, np.int64)
+    upd = ops == OP_UPDATE
+    vals[upd] = keys[upd] ^ update_xor
+    ins = ops == OP_INSERT
+    vals[ins] = keys[ins]
+    scn = ops == OP_SCAN
+    if wl.scan_lens is not None:
+        vals[scn] = wl.scan_lens[lo:hi][scn]
+    else:
+        vals[scn] = wl.scan_len
+    return ops, keys, vals
+
+
 def make_dataset(n_keys: int, *, key_space: int = None, seed: int = 0,
                  key_size_bytes: int = 8) -> np.ndarray:
     """Sorted unique int64 keys to bulk-load (paper: 200M records; benches

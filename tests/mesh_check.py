@@ -373,6 +373,182 @@ def main() -> None:
         for j, kk in enumerate(expect):
             assert int(sv_m[i, j]) == host_m.get(int(kk)), (i, j)
 
+    # ---- mixed-batch coherence (core/engine.py): an update and an insert
+    # of the SAME leaf land in ONE engine batch from different source
+    # chips.  The updater's chip must not keep a version-fresh cached row
+    # whose keys plane misses the insert — the engine skips the
+    # write-through refresh for leaves that took same-batch inserts, so
+    # the stale row fails the version check and refetches.
+    from repro.core import engine as engine_mod  # noqa: E402
+
+    cfg_e = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=256,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=100,   # the warm lookup must cache the leaf
+        route_capacity_factor=4.0,
+    )
+    host_e = HostBTree(keys, vals, fill=0.7)
+    state = dex_mod.init_state(pool, meta, cfg_e, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg_e)
+    )
+    eng_e = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg_e, mesh, ops=("lookup", "update", "insert"), max_count=1
+    ))
+    lk_e = jax.jit(dex_mod.make_dex_lookup(meta, cfg_e, mesh))
+
+    def put_e(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    # an existing key and a fresh key guaranteed to share its leaf
+    j = 5000
+    while keys[j] + 1 >= keys[j + 1]:  # need a gap right above keys[j]
+        j += 1
+    k_upd = int(keys[j])
+    k_ins = k_upd + 1
+    # warm: every chip serves (and caches, P_A=100%) the target leaf
+    warm_e = np.full(512, k_upd, np.int64)
+    state, f_w, _, _ = lk_e(state, put_e(warm_e))
+    assert bool(np.asarray(f_w).all())
+    # one mixed batch: the update sources on chip 0, the insert on the
+    # last chip (lane // 64 is the source device on the 8-device mesh)
+    opc_e = np.zeros(512, np.int32)
+    kk_e = np.full(512, KEY_MAX, np.int64)
+    vv_e = np.zeros(512, np.int64)
+    opc_e[3], kk_e[3], vv_e[3] = engine_mod.OP_UPDATE, k_upd, 777
+    opc_e[460], kk_e[460], vv_e[460] = engine_mod.OP_INSERT, k_ins, 999
+    state, r_e = eng_e(state, put_e(opc_e), put_e(kk_e), put_e(vv_e))
+    st_e = np.asarray(r_e.status)
+    assert st_e[3] == write_mod.STATUS_OK, st_e[3]
+    assert st_e[460] == write_mod.STATUS_OK, st_e[460]
+    host_e.update(k_upd, 777)
+    host_e.insert(k_ins, 999)
+    # lookups of both keys from EVERY chip must match the host: a chip
+    # still serving a version-fresh pre-insert keys plane would miss k_ins
+    probe_e = np.tile(np.array([k_upd, k_ins], np.int64), 256)
+    state, f_e, v_e, _ = lk_e(state, put_e(probe_e))
+    f_e, v_e = np.asarray(f_e), np.asarray(v_e)
+    assert f_e.all(), "mixed-batch insert invisible on some chip"
+    for i in range(512):
+        assert int(v_e[i]) == host_e.get(int(probe_e[i])), (
+            f"mixed-batch stale cached row served at lane {i}"
+        )
+
+    # ---- forced-offload round trip (policy="offload"): ALL op types ------
+    # through the two-sided path on 8 devices — every lookup/update/insert
+    # lane ships a tagged message in the engine's fused round and the
+    # owning memory column walks its own block; scans stay one-sided (§7:
+    # scans never offload).  Results must match a HostBTree replay and the
+    # offloaded writes must be visible to offloaded lookups (version bumps
+    # travel back through the fused responses).
+    cfg_o = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=256,
+        cache_ways=4,
+        policy="offload",
+        route_capacity_factor=4.0,
+    )
+    host_o = HostBTree(keys, vals, fill=0.7)
+    state = dex_mod.init_state(pool, meta, cfg_o, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg_o)
+    )
+    lk_o = jax.jit(dex_mod.make_dex_lookup(meta, cfg_o, mesh))
+    up_o = jax.jit(write_mod.make_dex_update(meta, cfg_o, mesh))
+    ins_o = jax.jit(write_mod.make_dex_insert(meta, cfg_o, mesh))
+    scan_o = jax.jit(scan_mod.make_dex_scan(meta, cfg_o, mesh, max_count=MC))
+
+    def put_o(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    BO = 512
+    qo = rng.choice(keys, size=BO).astype(np.int64)
+    qo[::11] = qo[::11] + 1                     # misses through the RPC too
+    state, f_o, v_o, sh_o = lk_o(state, put_o(qo))
+    f_o, v_o, sh_o = np.asarray(f_o), np.asarray(v_o), np.asarray(sh_o)
+    assert not sh_o.any()
+    exp_o = np.isin(qo, keys)
+    assert (f_o == exp_o).all(), "offloaded lookup found mismatch"
+    assert (v_o[exp_o] == qo[exp_o] * 7).all(), "offloaded lookup values"
+
+    uk_o = rng.choice(keys, size=BO).astype(np.int64)
+    uk_o[: BO // 4] = uk_o[BO // 4 : BO // 2]   # cross-chip duplicate writers
+    uv_o = rng.integers(0, 1 << 40, size=BO).astype(np.int64)
+    state, ru_o = up_o(state, put_o(uk_o), put_o(uv_o))
+    ru_o = np.asarray(ru_o)
+    assert (ru_o == write_mod.STATUS_OK).all(), "offloaded updates failed"
+    for k, v in zip(uk_o, uv_o):
+        host_o.update(int(k), int(v))
+    state, f_u, v_u, _ = lk_o(state, put_o(uk_o))
+    f_u, v_u = np.asarray(f_u), np.asarray(v_u)
+    assert f_u.all()
+    for i in range(BO):
+        assert int(v_u[i]) == host_o.get(int(uk_o[i])), (
+            f"offloaded update not visible at {i}"
+        )
+
+    io = (rng.choice(keys[:-1], size=BO) + 1).astype(np.int64)
+    io = np.unique(io[~np.isin(io, keys)])
+    io = io[: (io.size // 8) * 8]
+    state, ri_o = ins_o(state, put_o(io), put_o(io * 13))
+    ri_o = np.asarray(ri_o)
+    assert (ri_o != write_mod.STATUS_SHED).all()
+    for k, r in zip(io, ri_o):
+        if r == write_mod.STATUS_OK:
+            host_o.insert(int(k), int(k) * 13)
+    # the SMO fallback rule: an offloaded insert that would split sheds
+    # STATUS_SPLIT exactly like a fetched-path one (settled between batches)
+    meta_o = meta
+    shed_o = ri_o == write_mod.STATUS_SPLIT
+    if shed_o.any():
+        state, meta_o = write_mod.drain_splits(
+            state, meta, cfg_o, host_o, io[shed_o], io[shed_o] * 13, bounds
+        )
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state,
+            dex_mod.state_shardings(mesh, cfg_o)
+        )
+        lk_o = jax.jit(dex_mod.make_dex_lookup(meta_o, cfg_o, mesh))
+        scan_o = jax.jit(
+            scan_mod.make_dex_scan(meta_o, cfg_o, mesh, max_count=MC)
+        )
+    state, f_i, v_i, _ = lk_o(state, put_o(io))
+    f_i, v_i = np.asarray(f_i), np.asarray(v_i)
+    for i in range(io.size):
+        hv = host_o.get(int(io[i]))
+        assert bool(f_i[i]) == (hv is not None), f"offloaded insert at {i}"
+        if hv is not None:
+            assert int(v_i[i]) == hv, f"offloaded insert value at {i}"
+
+    # scans under the offload policy still run the one-sided path
+    so = rng.choice(keys, size=BO).astype(np.int64)
+    sc = np.full(BO, 24, np.int64)
+    state, sk_o, sv_o, tk_o = scan_o(state, put_o(so), put_o(sc))
+    sk_o, sv_o, tk_o = np.asarray(sk_o), np.asarray(sv_o), np.asarray(tk_o)
+    for i in range(BO):
+        if tk_o[i] < 0:
+            continue
+        exp = [kk for _, ks in host_o.scan(int(so[i]), 24) for kk in ks][:24]
+        got = sk_o[i][sk_o[i] != KEY_MAX].tolist()
+        assert got == exp, f"offload-policy scan diverges at {i}"
+    stats_o = np.asarray(state.stats).sum(axis=0)
+    n_off = int(stats_o[dex_mod.STAT_OFFLOADS])
+    assert n_off > 0, "forced-offload must count offloaded messages"
+    # every live lookup/update/insert lane went two-sided
+    assert n_off >= BO + BO + io.size, (n_off, BO, io.size)
+    assert int(stats_o[dex_mod.STAT_OFFLOAD_GROUPS]) > 0
+    assert int(stats_o[dex_mod.STAT_FETCH_GROUPS]) == 0
+
     # ---- live logical repartitioning round trip (core/repartition.py) ----
     # a skewed batch sheds load under tight buckets; the controller moves
     # the boundary, results stay identical, drops strictly fall, and

@@ -3,8 +3,9 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# optional-hypothesis shim: property tests skip individually when
+# hypothesis is absent, plain tests keep running (tests/_hypothesis_compat)
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import btree
 from repro.core.nodes import FANOUT, KEY_MAX
