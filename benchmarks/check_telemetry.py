@@ -1,0 +1,125 @@
+"""CI guard for the telemetry plane: validate bench_results.json + traces.
+
+Fails (exit 1) when:
+
+* a mesh benchmark module that is expected to emit telemetry stopped doing
+  so (its ``telemetry`` block is missing or empty),
+* any registered mesh/derived metric disappeared from a timeline's counter
+  snapshot schema (the registry is the source of truth — a renamed or
+  dropped counter must show up here, not in a dashboard weeks later),
+* a timeline named in the results has no ``{name}.metrics_timeline.json``
+  or ``{name}.trace.json`` in the trace dir, or the trace file is not
+  trace-event JSON.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_telemetry \
+        bench_results.json traces/
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.obs import registry
+
+#: modules whose run() must register at least one timeline
+MESH_MODULES = ("fig15mesh", "fig6mesh", "fig10meshrep", "fig14meshload",
+                "fig13engine")
+
+#: every timeline counter snapshot must carry these names
+EXPECTED_METRICS = frozenset(
+    [m.name for m in registry.MESH_SLOTS]
+    + [m.name for m in registry.METRICS if m.kind == "derived"]
+)
+
+
+def _fail(problems):
+    print("telemetry guard: FAIL")
+    for p in problems:
+        print(f"  - {p}")
+    return 1
+
+
+def check(results_path: str, trace_dir: str) -> int:
+    problems = []
+    with open(results_path) as f:
+        results = json.load(f)["results"]
+    tdir = pathlib.Path(trace_dir)
+
+    timelines = {}
+    for key in MESH_MODULES:
+        mod = results.get(key)
+        if mod is None:
+            continue  # module not in this run's --only subset
+        if "error" in mod:
+            problems.append(f"{key}: module errored: {mod['error']}")
+            continue
+        tel = mod.get("telemetry") or {}
+        if not tel:
+            problems.append(f"{key}: no telemetry block — timelines lost")
+        timelines.update(tel)
+
+    for name, summary in sorted(timelines.items()):
+        counters = summary.get("counters") or {}
+        missing = EXPECTED_METRICS - set(counters)
+        if missing:
+            problems.append(
+                f"{name}: registered metrics missing from snapshot schema: "
+                f"{sorted(missing)}"
+            )
+        if not summary.get("n_batches"):
+            problems.append(f"{name}: timeline recorded zero batches")
+
+        tl_file = tdir / f"{name}.metrics_timeline.json"
+        tr_file = tdir / f"{name}.trace.json"
+        for path in (tl_file, tr_file):
+            if not path.is_file():
+                problems.append(f"{name}: missing export {path}")
+        if tr_file.is_file():
+            try:
+                doc = json.loads(tr_file.read_text())
+                if not doc.get("traceEvents"):
+                    problems.append(f"{name}: {tr_file} has no traceEvents")
+            except json.JSONDecodeError as e:
+                problems.append(f"{name}: {tr_file} is not JSON: {e}")
+        if tl_file.is_file():
+            batches = json.loads(tl_file.read_text()).get("batches") or []
+            with_counters = [b for b in batches if b.get("counters")]
+            if not with_counters:
+                problems.append(
+                    f"{name}: no batch in {tl_file} carries counters"
+                )
+            for b in with_counters:
+                missing = EXPECTED_METRICS - set(b["counters"])
+                if missing:
+                    problems.append(
+                        f"{name}: batch {b['index']} counters missing "
+                        f"{sorted(missing)}"
+                    )
+                    break
+
+    if not timelines:
+        problems.append("no timelines found in any mesh module")
+    if problems:
+        return _fail(problems)
+    print(
+        f"telemetry guard: OK — {len(timelines)} timeline(s), "
+        f"{len(EXPECTED_METRICS)} registered metrics each, exports in "
+        f"{trace_dir}"
+    )
+    return 0
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(check(argv[0], argv[1]))
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,22 @@ N_WARM = 60_000
 N_OPS = 40_000
 DEFAULT_CACHE_RATIO = 0.08  # paper: 256MB / 3.2GB
 
+#: set by ``benchmarks/run.py --trace-dir``: when non-None, every mesh
+#: benchmark's timeline is exported here as ``{name}.metrics_timeline.json``
+#: plus a Perfetto-viewable ``{name}.trace.json``
+TRACE_DIR: Optional[str] = None
+
+#: finished-timeline summaries accumulated since the last drain; run.py
+#: folds these into the module's bench_results.json entry
+TELEMETRY: Dict[str, dict] = {}
+
+
+def drain_telemetry() -> Dict[str, dict]:
+    """Return and clear the summaries accumulated by :func:`finish_timeline`."""
+    out = dict(TELEMETRY)
+    TELEMETRY.clear()
+    return out
+
 
 @dataclasses.dataclass
 class BenchResult:
@@ -152,71 +168,165 @@ def sweep_threads(system: str, workload: str, thread_counts, **kw):
 
 
 # ---------------------------------------------------------------------------
+# Telemetry plumbing (repro/obs): every mesh benchmark accumulates one
+# BatchTimeline per measured run and hands it to finish_timeline, which
+# embeds the summary in the benchmark's results dict and — when run.py was
+# given --trace-dir — exports the per-batch metrics timeline and the
+# Chrome/Perfetto trace file
+# ---------------------------------------------------------------------------
+
+
+def timed_batch(fn, *args, **kwargs):
+    """Run one mesh dispatch and fence its FULL result tree (not just
+    ``state.stats``) before reading the clock; returns ``(result, secs)``.
+    Shared timing hygiene for every mesh benchmark — async dispatch cannot
+    leak work past the timer."""
+    from repro.obs.timeline import timed_call
+
+    return timed_call(fn, *args, **kwargs)
+
+
+def new_timeline(name: str, **meta):
+    """One :class:`repro.obs.timeline.BatchTimeline` for a measured run."""
+    from repro.obs.timeline import BatchTimeline
+
+    return BatchTimeline(name, meta=meta)
+
+
+def finish_timeline(tl, results: Optional[dict] = None) -> dict:
+    """Register a finished timeline: its summary lands in
+    :data:`TELEMETRY` (drained into bench_results.json by run.py) and, when
+    :data:`TRACE_DIR` is set, the per-batch metrics timeline plus the
+    Chrome/Perfetto trace are exported there.  Returns the summary dict."""
+    import json
+    import os
+
+    summary = tl.summary()
+    TELEMETRY[tl.name] = summary
+    if results is not None:
+        results.setdefault("telemetry", {})[tl.name] = summary
+    if TRACE_DIR:
+        from repro.obs import trace as obs_trace
+
+        os.makedirs(TRACE_DIR, exist_ok=True)
+        path = os.path.join(TRACE_DIR, f"{tl.name}.metrics_timeline.json")
+        with open(path, "w") as f:
+            json.dump(tl.to_json(), f)
+        obs_trace.write_trace(
+            tl, os.path.join(TRACE_DIR, f"{tl.name}.trace.json")
+        )
+    return summary
+
+
+#: opcode -> op-class label for shed-lane retry-latency accounting
+_OP_CLASS = {0: "lookup", 1: "update", 2: "insert", 3: "scan", 4: "delete"}
+
+
+def _record_retries(obs, opc, kk, completed_round, done) -> None:
+    """Record batches-to-completion per op class on the telemetry batch."""
+    import numpy as np
+
+    from repro.core.nodes import KEY_MAX
+
+    live = kk != KEY_MAX
+    opc = np.asarray(opc)
+    for code, name in _OP_CLASS.items():
+        m = live & (opc == code) & done
+        if m.any():
+            obs.retry(name, int(completed_round[m].max()))
+
+
+# ---------------------------------------------------------------------------
 # Mesh-plane (Plane B) shed replay, shared by the mesh benchmarks: lanes a
 # routing bucket load-sheds are retried (bounded), never silently dropped
 # from the op count (fig6_mesh_mixed, fig10_mesh_repartition)
 # ---------------------------------------------------------------------------
 
 
-def lookup_with_retries(lookup, state, put, lk, *, max_retries=4):
+def lookup_with_retries(lookup, state, put, lk, *, max_retries=4, obs=None):
     """Run a masked mesh lookup batch, replaying load-shed lanes up to
     ``max_retries`` times.  Returns ``(state, found, vals, completed)`` —
     ``completed`` is False only for lanes still shed after the bounded
-    replay (inactive KEY_MAX lanes count as completed)."""
+    replay (inactive KEY_MAX lanes count as completed).  ``obs`` is an
+    optional telemetry batch (repro/obs/timeline.py): dispatches become
+    fenced phases and retry latency is recorded per op class."""
     import numpy as np
     from repro.core.nodes import KEY_MAX
+    from repro.obs.timeline import obs_phase
 
     done = lk == KEY_MAX
     found = np.zeros(lk.shape, bool)
     vals = np.zeros(lk.shape, np.int64)
-    for _ in range(max_retries):
+    completed_round = np.zeros(lk.shape, np.int32)
+    for i in range(max_retries):
         if done.all():
             break
-        state, f, v, sh = lookup(state, put(np.where(done, KEY_MAX, lk)))
+        with obs_phase(obs, "lookup" if i == 0 else f"retry/r{i}") as ph:
+            state, f, v, sh = lookup(state, put(np.where(done, KEY_MAX, lk)))
+            if ph is not None:
+                ph.fence((state, f, v, sh))
         f, v, sh = np.asarray(f), np.asarray(v), np.asarray(sh)
         ok = ~done & ~sh
         found[ok] = f[ok]
         vals[ok] = v[ok]
+        completed_round[ok] = i + 1
         done |= ok
+    if obs is not None:
+        _record_retries(obs, np.zeros(lk.shape, np.int32), lk,
+                        completed_round, done)
     return state, found, vals, done
 
 
-def write_with_retries(write, state, put, wk, wv, *, max_retries=4):
+def write_with_retries(write, state, put, wk, wv, *, max_retries=4,
+                       obs=None, op_class="update"):
     """Run a masked mesh update/insert batch, replaying STATUS_SHED lanes
     up to ``max_retries`` times.  Returns ``(state, status)`` with the
     final per-lane status (still STATUS_SHED only if retries ran out)."""
     import numpy as np
     from repro.core.nodes import KEY_MAX
     from repro.core.write import STATUS_MISS, STATUS_SHED
+    from repro.obs.timeline import obs_phase
 
     status = np.full(wk.shape, STATUS_MISS, np.int32)
     pending = wk != KEY_MAX
-    for _ in range(max_retries):
+    rounds = 0
+    for i in range(max_retries):
         if not pending.any():
             break
-        state, r = write(
-            state,
-            put(np.where(pending, wk, KEY_MAX)),
-            put(np.where(pending, wv, 0)),
-        )
+        with obs_phase(obs, op_class if i == 0 else f"retry/r{i}") as ph:
+            state, r = write(
+                state,
+                put(np.where(pending, wk, KEY_MAX)),
+                put(np.where(pending, wv, 0)),
+            )
+            if ph is not None:
+                ph.fence((state, r))
         r = np.asarray(r)
         settled = pending & (r != STATUS_SHED)
         status[settled] = r[settled]
         pending = pending & (r == STATUS_SHED)
+        rounds = i + 1
     status[pending] = STATUS_SHED
+    if obs is not None and rounds:
+        obs.retry(op_class, rounds)
     return state, status
 
 
-def engine_with_retries(engine, state, put, opc, kk, vv, *, max_retries=4):
+def engine_with_retries(engine, state, put, opc, kk, vv, *, max_retries=4,
+                        obs=None):
     """Run one mixed-op engine batch (core/engine.py), replaying load-shed
     lanes (``EngineResult.shed``) up to ``max_retries`` times.  Returns
     ``(state, found, vals, status, scan_k, scan_v, taken, completed)`` —
     ``completed`` is False only for lanes still shed after the bounded
     replay; ``scan_k``/``scan_v`` are None for engines built without
-    ``"scan"``.  Lanes never silently vanish from the op count."""
+    ``"scan"``.  Lanes never silently vanish from the op count.  ``obs``
+    is an optional telemetry batch (repro/obs/timeline.py): the first
+    dispatch becomes a fenced "engine" phase, replays become "retry/rN"
+    phases, and batches-to-completion is recorded per op class."""
     import numpy as np
     from repro.core.nodes import KEY_MAX
     from repro.core.write import STATUS_MISS, STATUS_SHED
+    from repro.obs.timeline import obs_phase
 
     done = kk == KEY_MAX
     found = np.zeros(kk.shape, bool)
@@ -224,15 +334,19 @@ def engine_with_retries(engine, state, put, opc, kk, vv, *, max_retries=4):
     status = np.full(kk.shape, STATUS_MISS, np.int32)
     sk = sv = None
     taken = np.zeros(kk.shape, np.int32)
-    for _ in range(max_retries):
+    completed_round = np.zeros(kk.shape, np.int32)
+    for i in range(max_retries):
         if done.all():
             break
-        state, r = engine(
-            state,
-            put(np.where(done, 0, opc).astype(np.int32)),
-            put(np.where(done, KEY_MAX, kk)),
-            put(np.where(done, 0, vv)),
-        )
+        with obs_phase(obs, "engine" if i == 0 else f"retry/r{i}") as ph:
+            state, r = engine(
+                state,
+                put(np.where(done, 0, opc).astype(np.int32)),
+                put(np.where(done, KEY_MAX, kk)),
+                put(np.where(done, 0, vv)),
+            )
+            if ph is not None:
+                ph.fence((state, r))
         sh = np.asarray(r.shed)
         ok = ~done & ~sh
         found[ok] = np.asarray(r.found)[ok]
@@ -245,33 +359,44 @@ def engine_with_retries(engine, state, put, opc, kk, vv, *, max_retries=4):
             sk[ok] = np.asarray(r.scan_keys)[ok]
             sv[ok] = np.asarray(r.scan_values)[ok]
             taken[ok] = np.asarray(r.taken)[ok]
+        completed_round[ok] = i + 1
         done |= ok
     status[~done] = STATUS_SHED
+    if obs is not None:
+        _record_retries(obs, opc, kk, completed_round, done)
     return state, found, vals, status, sk, sv, taken, done
 
 
 def scan_with_retries(scan, state, put, starts, cnts, *, max_count,
-                      max_retries=4):
+                      max_retries=4, obs=None):
     """Run a masked mesh scan batch, replaying shed lanes (taken == -1) up
     to ``max_retries`` times.  Returns ``(state, keys, vals, taken,
     completed)``."""
     import numpy as np
     from repro.core.nodes import KEY_MAX
+    from repro.obs.timeline import obs_phase
 
     done = starts == KEY_MAX
     out_k = np.full((starts.size, max_count), KEY_MAX, np.int64)
     out_v = np.zeros((starts.size, max_count), np.int64)
     taken = np.zeros(starts.size, np.int32)
-    for _ in range(max_retries):
+    rounds = 0
+    for i in range(max_retries):
         if done.all():
             break
-        state, kk, vv, tk = scan(
-            state, put(np.where(done, KEY_MAX, starts)), put(cnts)
-        )
+        with obs_phase(obs, "scan" if i == 0 else f"retry/r{i}") as ph:
+            state, kk, vv, tk = scan(
+                state, put(np.where(done, KEY_MAX, starts)), put(cnts)
+            )
+            if ph is not None:
+                ph.fence((state, kk, vv, tk))
         kk, vv, tk = np.asarray(kk), np.asarray(vv), np.asarray(tk)
         ok = ~done & (tk >= 0)
         out_k[ok] = kk[ok]
         out_v[ok] = vv[ok]
         taken[ok] = tk[ok]
         done |= ok
+        rounds = i + 1
+    if obs is not None and rounds:
+        obs.retry("scan", rounds)
     return state, out_k, out_v, taken, done

@@ -59,7 +59,9 @@ from repro.core.repartition import (  # noqa: E402
 from repro.compat import make_mesh_compat  # noqa: E402
 from repro.core.sim import HostBTree, Simulator  # noqa: E402
 from repro.data import ycsb  # noqa: E402
+from repro.obs import drift  # noqa: E402
 
+from benchmarks import common  # noqa: E402
 from benchmarks.common import (  # noqa: E402
     lookup_with_retries,
     scan_with_retries,
@@ -142,7 +144,11 @@ def _run_trace(dataset, ops, keys, shift_batch, *, adaptive):
     n_batches = ops.size // BATCH
     drops_series = []
     repart_batches = []
-    last_drops = 0
+    tl = common.new_timeline(
+        f"fig10meshrep_{'live' if adaptive else 'static'}",
+        devices=len(jax.devices()), batch=BATCH, adaptive=adaptive,
+    )
+    tl.prime(state.stats)
     t_start = time.perf_counter()
     for b in range(n_batches):
         bo = ops[b * BATCH : (b + 1) * BATCH]
@@ -150,8 +156,14 @@ def _run_trace(dataset, ops, keys, shift_batch, *, adaptive):
         lk = np.where(bo == ycsb.OP_LOOKUP, bk, KEY_MAX)
         uk = np.where(bo == ycsb.OP_UPDATE, bk, KEY_MAX)
         uv = uk ^ (UPDATE_XOR + b)
-        state, found, got_v, shed_l = lookup(state, put(lk))
-        state, ru = update(state, put(uk), put(uv))
+        ob = tl.batch(f"b{b}")
+        ob.__enter__()
+        with ob.phase("lookup") as ph:
+            state, found, got_v, shed_l = lookup(state, put(lk))
+            ph.fence((state, found, got_v, shed_l))
+        with ob.phase("update") as ph:
+            state, ru = update(state, put(uk), put(uv))
+            ph.fence((state, ru))
         ru = np.asarray(ru)
         # host mirror replays exactly what the mesh applied (shed update
         # lanes were refused by the bucket, so the mirror skips them too)
@@ -171,18 +183,21 @@ def _run_trace(dataset, ops, keys, shift_batch, *, adaptive):
         if b % SCAN_EVERY == 0:
             sk = bk[:BATCH].copy()            # scans over the same hot keys
             cnt = np.full(BATCH, MAX_SCAN, np.int64)
-            state, _, _, _tk = scan(state, put(sk), put(cnt))
+            with ob.phase("scan") as ph:
+                state, _, _, _tk = scan(state, put(sk), put(cnt))
+                ph.fence((state, _tk))
         if ctl is not None:
             ctl.observe(np.asarray(state.stats), bk,
                         demand=np.asarray(state.route_demand))
-            state, report = ctl.maybe_repartition(state, meta)
+            state, report = ctl.maybe_repartition(state, meta, obs=ob)
             if report is not None:
                 repart_batches.append((b, report))
-        total_drops = int(np.asarray(state.stats)[:, dex_mod.STAT_DROPS].sum())
-        drops_series.append(total_drops - last_drops)
-        last_drops = total_drops
-    jax.block_until_ready(state.stats)
+        dstats = ob.counters(state.stats)
+        ob.__exit__(None, None, None)
+        drops_series.append(int(dstats.fleet["drops"]))
+    jax.block_until_ready(state)
     dt = time.perf_counter() - t_start
+    common.finish_timeline(tl)
 
     stats = np.asarray(state.stats).sum(axis=0)
     return {
@@ -286,9 +301,11 @@ def _simulator_cross_check(dataset, ops, keys, res):
                         != sim.partitions.owner_of(dataset))
             )
             # fence snapping shifts each boundary by at most one leaf span
-            assert abs(mesh_frac - sim_frac) < 0.10, (
-                f"repartition @batch {b}: mesh moved {mesh_frac:.3f} of "
-                f"the dataset, simulator {sim_frac:.3f}"
+            drift.assert_plane_agreement(
+                {"moved_fraction": mesh_frac},
+                {"moved_fraction": sim_frac},
+                {"moved_fraction": drift.absolute(0.10)},
+                label=f"fig10meshrep install@batch{b}",
             )
             n_checked += 1
     if cursor < ops.size:

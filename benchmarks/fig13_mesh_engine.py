@@ -36,7 +36,6 @@ from __future__ import annotations
 import os
 import pathlib
 import sys
-import time
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -62,10 +61,13 @@ from repro.compat import make_mesh_compat  # noqa: E402
 from repro.core.sim import HostBTree, SimConfig, Simulator  # noqa: E402
 from repro.data import ycsb  # noqa: E402
 
+from repro.obs import drift, registry  # noqa: E402
+from benchmarks import common  # noqa: E402
 from benchmarks.common import (  # noqa: E402
     engine_with_retries,
     lookup_with_retries,
     scan_with_retries,
+    timed_batch,
     write_with_retries,
 )
 
@@ -144,9 +146,12 @@ def _phased_host_replay(host, rng, opc, kk, vv, found, vals, status,
 
 
 def _run_engine_path(name, ops_set, dataset, n_batches, n_warm, rng,
-                     batch):
+                     batch, tl=None):
     """Drive the mixed trace through the unified engine, with host-replay
-    validation and the SMO settle ladder for shed inserts."""
+    validation and the SMO settle ladder for shed inserts.  ``tl`` is an
+    optional :class:`BatchTimeline` — when given, every measured batch is
+    recorded with fenced phases, counter deltas and retry latency (the
+    telemetry path); when None the run is bare (the overhead baseline)."""
     _pool, meta, mesh, cfg, bounds, state, sharding = _mesh_setup(dataset)
     host = HostBTree(dataset, dataset * 7, fill=0.7)
     eng_fn = engine_mod.make_dex_engine(meta, cfg, mesh, ops=ops_set,
@@ -161,42 +166,69 @@ def _run_engine_path(name, ops_set, dataset, n_batches, n_warm, rng,
     def put(x):
         return jax.device_put(jnp.asarray(x), sharding)
 
-    # static communication plan + traced collective counts (first batch)
+    # static communication plan + traced collective counts (first batch).
+    # This traces eng_fn itself — the exact program the steady-state batch
+    # dispatches whether or not telemetry wraps the call (the obs layer is
+    # pure host code around the jitted callable), so these counts ARE the
+    # telemetered batch's collective counts.
     opc0, kk0, vv0 = ycsb.engine_lanes(wl, 0, batch, update_xor=UPDATE_XOR)
     counts = routing.trace_collective_counts(
         eng_fn, state, jnp.asarray(opc0), jnp.asarray(kk0), jnp.asarray(vv0)
     )
     plan = eng_fn.plan
+    if tl is not None:
+        tl.meta["collectives_per_batch"] = dict(counts)
+        tl.meta["plan"] = {k: v for k, v in plan.items() if k != "phases"}
 
     completed = 0
     batch_dts = []
     stats_warm = None
     for b in range(n_warm + n_batches):
+        measured = b >= n_warm
         if b == n_warm:
             jax.block_until_ready(state.stats)
             stats_warm = np.asarray(state.stats).sum(axis=0)
             completed = 0
             batch_dts = []
+            if tl is not None:
+                tl.prime(state.stats)
         opc, kk, vv = ycsb.engine_lanes(
             wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR
         )
-        # the clock covers mesh execution only (engine_with_retries blocks
-        # on every output); host-replay validation and the SMO settle
-        # ladder run off the clock on both paths, and the throughput
-        # figure uses the median per-batch duration (robust to GC /
-        # host-contention spikes on the emulated mesh)
-        t0 = time.perf_counter()
-        state, found, vals, status, sk, sv, tk, done = engine_with_retries(
-            eng, state, put, opc, kk, vv, max_retries=MAX_RETRIES
-        )
-        batch_dts.append(time.perf_counter() - t0)
+        # the clock covers mesh execution only, fencing the FULL result
+        # tree (state included) before reading it; host-replay validation
+        # and the SMO settle ladder run off the clock on both paths, and
+        # the throughput figure uses the median per-batch duration (robust
+        # to GC / host-contention spikes on the emulated mesh)
+        ob = None
+        if tl is not None and measured:
+            ob = tl.batch(name)
+            with ob:
+                state, found, vals, status, sk, sv, tk, done = (
+                    engine_with_retries(eng, state, put, opc, kk, vv,
+                                        max_retries=MAX_RETRIES, obs=ob)
+                )
+                ob.counters(state.stats)
+            # dispatch phases only (engine + shed-lane replays), matching
+            # the bare path's clock
+            dt = sum(p.dur for p in ob.record.phases
+                     if p.name == "engine" or p.name.startswith("retry/"))
+        else:
+            (state, found, vals, status, sk, sv, tk, done), dt = timed_batch(
+                engine_with_retries, eng, state, put, opc, kk, vv,
+                max_retries=MAX_RETRIES,
+            )
+        batch_dts.append(dt)
         completed += int((done & (kk != KEY_MAX)).sum())
         shed = _phased_host_replay(host, rng, opc, kk, vv, found, vals,
                                    status, sk, sv, tk, done)
         if shed.any():
+            # SMO settlement runs off the clock but its rounds still show
+            # up as smo/* phases in the trace (core/smo.py phase hooks)
             state, meta2, info = smo_mod.settle_splits(
                 state, meta, cfg, smo, host,
                 np.where(shed, kk, KEY_MAX), np.where(shed, vv, 0), bounds,
+                obs=ob,
             )
             if info["drained"]:
                 meta = meta2
@@ -279,19 +311,18 @@ def _run_split_path(name, ops_set, dataset, n_batches, n_warm, rng,
         # the engine path's
         if "lookup" in progs:
             lk = np.where(opc == ycsb.OP_LOOKUP, kk, KEY_MAX)
-            t0 = time.perf_counter()
-            state, _f, _v, done_l = lookup_with_retries(
-                progs["lookup"], state, put, lk, max_retries=MAX_RETRIES)
-            dt += time.perf_counter() - t0
+            (state, _f, _v, done_l), d = timed_batch(
+                lookup_with_retries, progs["lookup"], state, put, lk,
+                max_retries=MAX_RETRIES)
+            dt += d
             completed += int((done_l & (lk != KEY_MAX)).sum())
         if "update" in progs:
             uk = np.where(opc == ycsb.OP_UPDATE, kk, KEY_MAX)
-            t0 = time.perf_counter()
-            state, ru = write_with_retries(
-                progs["update"], state, put, uk,
+            (state, ru), d = timed_batch(
+                write_with_retries, progs["update"], state, put, uk,
                 np.where(opc == ycsb.OP_UPDATE, vv, 0),
                 max_retries=MAX_RETRIES)
-            dt += time.perf_counter() - t0
+            dt += d
             completed += int(
                 ((uk != KEY_MAX) & (ru != write_mod.STATUS_SHED)).sum())
             # mirror applied updates: a drain_splits rebuild reconstructs
@@ -301,12 +332,11 @@ def _run_split_path(name, ops_set, dataset, n_batches, n_warm, rng,
                 host.update(int(k), int(v))
         if "insert" in progs:
             ik = np.where(opc == ycsb.OP_INSERT, kk, KEY_MAX)
-            t0 = time.perf_counter()
-            state, ri = write_with_retries(
-                progs["insert"], state, put, ik,
+            (state, ri), d = timed_batch(
+                write_with_retries, progs["insert"], state, put, ik,
                 np.where(opc == ycsb.OP_INSERT, vv, 0),
                 max_retries=MAX_RETRIES)
-            dt += time.perf_counter() - t0
+            dt += d
             completed += int(
                 ((ik != KEY_MAX) & (ri != write_mod.STATUS_SHED)).sum())
             for k in ik[(ik != KEY_MAX) & (ri == write_mod.STATUS_OK)]:
@@ -330,11 +360,10 @@ def _run_split_path(name, ops_set, dataset, n_batches, n_warm, rng,
         if "scan" in progs:
             sk_in = np.where(opc == ycsb.OP_SCAN, kk, KEY_MAX)
             cnts = np.where(opc == ycsb.OP_SCAN, vv, 0)
-            t0 = time.perf_counter()
-            state, _k, _v, _t, done_s = scan_with_retries(
-                progs["scan"], state, put, sk_in, cnts, max_count=MC,
-                max_retries=MAX_RETRIES)
-            dt += time.perf_counter() - t0
+            (state, _k, _v, _t, done_s), d = timed_batch(
+                scan_with_retries, progs["scan"], state, put, sk_in, cnts,
+                max_count=MC, max_retries=MAX_RETRIES)
+            dt += d
             completed += int((done_s & (sk_in != KEY_MAX)).sum())
         batch_dts.append(dt)
     jax.block_until_ready(state.stats)
@@ -462,6 +491,7 @@ def _run_group_offload(dataset, n_warm, n_batches, rng, batch):
         sim_offload_groups=t.offload_groups, sim_fetch_groups=t.fetch_groups,
         both_in_one_batch=both_in_one_batch,
         mesh_offload_msgs=int(stats[dex_mod.STAT_OFFLOADS]),
+        _stats=stats, _sim=t,
     )
 
 
@@ -476,9 +506,14 @@ def run(quick: bool = False, seed: "int | None" = None):
     rows = ["plane,workload,metric,value"]
     summary = {}
 
+    tel_tputs = {}
     for name, ops_set in MIXES:
+        tl = common.new_timeline(f"fig13engine_{name}",
+                                 devices=len(jax.devices()), batch=batch)
         eng = _run_engine_path(name, ops_set, dataset, n_batches, n_warm,
-                               rng, batch)
+                               rng, batch, tl=tl)
+        tel_tputs[name] = eng["tput"]
+        common.finish_timeline(tl)
         split = _run_split_path(name, ops_set, dataset, n_batches, n_warm,
                                 rng, batch)
         # ONE route round + ONE fused pair per mixed batch, vs one route
@@ -510,6 +545,33 @@ def run(quick: bool = False, seed: "int | None" = None):
         summary[f"{name}_split_a2a"] = split["counts"]["all_to_all"]
         summary[f"{name}_speedup"] = eng["tput"] / max(split["tput"], 1e-9)
 
+    # telemetry overhead + zero-added-collectives proof: re-run the first
+    # mix bare (no timeline).  The obs layer is host-side only, so the
+    # traced collective counts of the steady-state batch must be identical
+    # — and the telemetered throughput must stay within 5% of bare.
+    ov_name, ov_ops = MIXES[0]
+    bare = _run_engine_path(ov_name, ov_ops, dataset, n_batches, n_warm,
+                            rng, batch, tl=None)
+    tel_ratio = tel_tputs[ov_name] / max(bare["tput"], 1e-9)
+    rows.append(f"engine,{ov_name},telemetry_tput_ratio,{tel_ratio:.3f}")
+    summary["telemetry_tput_ratio"] = tel_ratio
+    assert tel_ratio >= 0.95, (
+        f"telemetry overhead too high: {tel_tputs[ov_name]:.0f} ops/s "
+        f"telemetered vs {bare['tput']:.0f} ops/s bare"
+    )
+    # the telemetered run recorded its traced counts in the timeline meta
+    tel_counts = (
+        common.TELEMETRY[f"fig13engine_{ov_name}"]["meta"]
+        ["collectives_per_batch"]
+    )
+    assert tel_counts == dict(bare["counts"]), (
+        f"instrumentation changed the traced program: {tel_counts} vs "
+        f"{bare['counts']}"
+    )
+    summary["telemetry_added_collectives"] = float(
+        sum(tel_counts.values()) - sum(bare["counts"].values())
+    )
+
     g = _run_group_offload(dataset, 10 if quick else 14,
                            4 if quick else 8, rng, batch)
     rows += [
@@ -519,18 +581,22 @@ def run(quick: bool = False, seed: "int | None" = None):
         f"sim,group,fetch_groups,{g['sim_fetch_groups']}",
         f"engine,group,both_groups_in_one_batch,{int(g['both_in_one_batch'])}",
     ]
-    summary.update({k: float(v) for k, v in g.items()})
+    summary.update(
+        {k: float(v) for k, v in g.items() if not k.startswith("_")}
+    )
     if len(jax.devices()) >= 8:
         # a cold column offloads while the warm one fetches, in ONE batch
         assert g["both_in_one_batch"], g
         assert g["mesh_offload_groups"] > 0 and g["mesh_fetch_groups"] > 0, g
         assert g["sim_offload_groups"] > 0 and g["sim_fetch_groups"] > 0, g
         # both planes priced the identical trace with the identical rule:
-        # the per-group offload counts must agree
-        ratio = g["mesh_offload_groups"] / max(g["sim_offload_groups"], 1)
-        assert 0.66 <= ratio <= 1.5, (
-            f"group counts diverge: mesh {g['mesh_offload_groups']} vs "
-            f"sim {g['sim_offload_groups']}"
+        # the per-group offload counts must agree (registry-named snapshot
+        # vs sim Counters through the shared drift helper)
+        drift.assert_plane_agreement(
+            registry.snapshot(g["_stats"][None, :]),
+            g["_sim"],
+            {"offload_groups": drift.ratio(0.66, 1.5)},
+            label="fig13engine group offload",
         )
     return rows, summary
 

@@ -43,6 +43,7 @@ from repro.compat import make_mesh_compat  # noqa: E402
 from repro.core.sim import HostBTree  # noqa: E402
 from repro.data import ycsb  # noqa: E402
 
+from benchmarks import common  # noqa: E402
 from benchmarks.common import run_one  # noqa: E402
 
 MAX_SCAN = 100
@@ -118,7 +119,6 @@ def run(quick: bool = False, seed: "int | None" = None):
         got = k0[i][k0[i] != KEY_MAX].tolist()
         assert got == expect, f"mesh scan diverges from HostBTree.scan at {i}"
 
-    stats_before = np.asarray(state.stats).sum(axis=0)
     # stage inputs and keep results on device inside the timed loop — one
     # sync at the end, so dt measures scan dispatch, not per-batch transfers
     batches = [
@@ -127,6 +127,21 @@ def run(quick: bool = False, seed: "int | None" = None):
         for b in range(n_full // BATCH)
     ]
     jax.block_until_ready(batches)
+
+    # per-batch telemetry pass (repro/obs): the throughput loop below
+    # deliberately streams batches with ONE end fence, so the fenced
+    # per-batch timeline runs the same staged batches separately — counter
+    # deltas and phase times per batch without perturbing the async
+    # throughput measurement
+    tl = common.new_timeline("fig15mesh_ycsb_e",
+                             devices=len(jax.devices()), batch=BATCH)
+    tl.prime(state.stats)
+    scan_obs = tl.instrument(scan, label="scan")
+    for bs, bl in batches:
+        state, _k, _v, _t = scan_obs(state, bs, bl)
+    common.finish_timeline(tl)
+
+    stats_before = np.asarray(state.stats).sum(axis=0)
     takens = []
     t_start = time.perf_counter()
     for bs, bl in batches:

@@ -50,6 +50,9 @@ from repro.compat import make_mesh_compat  # noqa: E402
 from repro.core.sim import HostBTree, Simulator  # noqa: E402
 from repro.data import ycsb  # noqa: E402
 
+from repro.obs import drift, registry  # noqa: E402
+from repro.obs.timeline import obs_phase  # noqa: E402
+from benchmarks import common  # noqa: E402
 from benchmarks.common import (  # noqa: E402
     lookup_with_retries,
     write_with_retries,
@@ -103,16 +106,20 @@ def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
     def put(x):
         return jax.device_put(jnp.asarray(x), sharding)
 
+    tl = common.new_timeline(f"fig6mesh_{name}",
+                             devices=len(jax.devices()), batch=BATCH)
     n_drains = 0
     stats_warm = None
     completed = 0        # measured-phase ops that finished (not load-shed)
     shed_residual = 0    # lanes still shed after MAX_RETRIES
     t_start = time.perf_counter()
     for b in range(n_total):
+        measured = b >= n_warm_batches
         if b == n_warm_batches:
             # warm phase over (paper §8.1): snapshot counters, restart clock
             jax.block_until_ready(state.stats)
             stats_warm = np.asarray(state.stats).sum(axis=0)
+            tl.prime(state.stats)
             completed = 0
             shed_residual = 0
             t_start = time.perf_counter()
@@ -122,15 +129,23 @@ def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
         uk = np.where(bo == ycsb.OP_UPDATE, bk, KEY_MAX)
         ik = np.where(bo == ycsb.OP_INSERT, bk, KEY_MAX)
         uv = uk ^ UPDATE_XOR
+        ob = tl.batch(name) if measured else None
+        if ob is not None:
+            ob.__enter__()
         # shed lanes are replayed (bounded), never silently dropped from
         # the op count — only completed ops enter the throughput figure
         state, found, got_v, lk_done = lookup_with_retries(
-            lookup, state, put, lk, max_retries=MAX_RETRIES
+            lookup, state, put, lk, max_retries=MAX_RETRIES, obs=ob
         )
         state, ru = write_with_retries(update, state, put, uk, uv,
-                                       max_retries=MAX_RETRIES)
+                                       max_retries=MAX_RETRIES, obs=ob,
+                                       op_class="update")
         state, ri = write_with_retries(insert, state, put, ik, ik,
-                                       max_retries=MAX_RETRIES)
+                                       max_retries=MAX_RETRIES, obs=ob,
+                                       op_class="insert")
+        if ob is not None:
+            ob.counters(state.stats)
+            ob.__exit__(None, None, None)
         completed += int(
             (lk_done & (lk != KEY_MAX)).sum()
             + ((uk != KEY_MAX) & (ru != write_mod.STATUS_SHED)).sum()
@@ -160,16 +175,18 @@ def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
         shed = ins_mask & (ri == write_mod.STATUS_SPLIT)
         if shed.any():
             n_drains += 1
-            state, meta = write_mod.drain_splits(
-                state, meta, cfg, host, bk[shed], bk[shed], bounds
-            )
+            with obs_phase(ob, "smo/drain"):
+                state, meta = write_mod.drain_splits(
+                    state, meta, cfg, host, bk[shed], bk[shed], bounds
+                )
             state = jax.tree.map(
                 lambda x, s: jax.device_put(x, s),
                 state, dex_mod.state_shardings(mesh, cfg),
             )
             lookup, update, insert = _build_ops(meta, cfg, mesh)
-    jax.block_until_ready(state.stats)
+    jax.block_until_ready(state)  # full tree: the clock may not leak work
     dt = time.perf_counter() - t_start
+    common.finish_timeline(tl)
 
     stats = np.asarray(state.stats).sum(axis=0) - stats_warm
     meas = slice(n_warm_batches * BATCH, None)
@@ -227,16 +244,14 @@ def _run_mix(name, dataset, n_batches, n_warm_batches, rng):
     }
     # both planes price the identical protocol on the identical trace with
     # matched cache topology: the per-op remote verb counters must agree
+    # (registry-named mesh snapshot vs sim Counters, per-op relative
+    # tolerance, via the shared drift helper)
+    tolerances = {"fetches": drift.rel(0.10, per_op=True)}
     if n_write_ops:
-        rel_w = abs(mesh_writes - sim_writes) / max(sim_writes, 1e-9)
-        assert rel_w < 0.10, (
-            f"{name}: mesh writes/op {mesh_writes:.4f} vs sim "
-            f"{sim_writes:.4f} ({rel_w:.1%} apart)"
-        )
-    rel_r = abs(mesh_reads - sim_reads) / max(sim_reads, 1e-9)
-    assert rel_r < 0.10, (
-        f"{name}: mesh reads/op {mesh_reads:.4f} vs sim "
-        f"{sim_reads:.4f} ({rel_r:.1%} apart)"
+        tolerances["writes"] = drift.rel(0.10, per_op=True)
+    drift.assert_plane_agreement(
+        registry.snapshot(stats[None, :]), sim.totals(), tolerances,
+        label=f"fig6mesh {name}",
     )
     return rows, summary
 

@@ -57,7 +57,17 @@ def main(argv=None) -> None:
                          "dataset/workload generation, so bench_results.json "
                          "is reproducible across runs (default: each "
                          "module's built-in seed)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export every mesh benchmark's per-batch metrics "
+                         "timeline ({name}.metrics_timeline.json) and "
+                         "Perfetto-viewable Chrome trace ({name}.trace.json) "
+                         "into DIR")
     args = ap.parse_args(argv)
+
+    from benchmarks import common
+
+    if args.trace_dir:
+        common.TRACE_DIR = args.trace_dir
 
     only = set(args.only.split(",")) if args.only else None
     failures = []
@@ -78,9 +88,13 @@ def main(argv=None) -> None:
                 "summary": {k: float(v) for k, v in summary.items()},
                 "seconds": round(time.time() - t0, 2),
             }
+            telemetry = common.drain_telemetry()
+            if telemetry:
+                results[key]["telemetry"] = telemetry
         except Exception as e:
             failures.append((key, e))
             results[key] = {"error": repr(e)}
+            common.drain_telemetry()  # don't leak into the next module
             traceback.print_exc()
         print(f"# [{key}] took {time.time() - t0:.1f}s")
     if args.json:

@@ -50,23 +50,26 @@ NODE_ROW_BYTES = FANOUT * 8 * 3  # keys + children + values on the wire
 OFFLOAD_REQ_BYTES = 16
 OFFLOAD_RESP_BYTES = 16
 
-# stat counter indices
-(
-    STAT_OPS,
-    STAT_HITS,
-    STAT_FETCHES,
-    STAT_OFFLOADS,
-    STAT_DROPS,
-    STAT_SPLITS,      # inserts shed by an overflowing leaf (core/write.py);
-    #                   resolved on-mesh by core/smo.py or drained to host
-    STAT_WRITES,      # remote leaf-write messages (RDMA WRITE analogue)
-    STAT_SMO_SPLITS,  # structural splits executed device-side (core/smo.py)
-    STAT_DRAINS,      # host pool rebuilds (drain_splits fallback ladder)
-    STAT_OFFLOAD_GROUPS,  # per-batch (destination-column) groups that chose
-    #                       the two-sided path (core/engine.py cost model)
-    STAT_FETCH_GROUPS,    # per-batch groups that chose one-sided fetches
-    N_STATS,
-) = range(12)
+# stat counter indices — derived from the declarative metric registry
+# (repro/obs/registry.py), which owns slot order, units, sim-plane mapping
+# and paper provenance.  Adding a counter means adding a Metric there; the
+# constants below follow automatically and can never alias an old slot.
+from repro.obs import registry as _metric_registry
+
+_stat_consts = _metric_registry.stat_constants()
+STAT_OPS = _stat_consts["STAT_OPS"]
+STAT_HITS = _stat_consts["STAT_HITS"]
+STAT_FETCHES = _stat_consts["STAT_FETCHES"]
+STAT_OFFLOADS = _stat_consts["STAT_OFFLOADS"]
+STAT_DROPS = _stat_consts["STAT_DROPS"]
+STAT_SPLITS = _stat_consts["STAT_SPLITS"]
+STAT_WRITES = _stat_consts["STAT_WRITES"]
+STAT_SMO_SPLITS = _stat_consts["STAT_SMO_SPLITS"]
+STAT_DRAINS = _stat_consts["STAT_DRAINS"]
+STAT_OFFLOAD_GROUPS = _stat_consts["STAT_OFFLOAD_GROUPS"]
+STAT_FETCH_GROUPS = _stat_consts["STAT_FETCH_GROUPS"]
+N_STATS = _metric_registry.N_STATS
+del _stat_consts
 
 
 @dataclasses.dataclass(frozen=True)

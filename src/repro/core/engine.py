@@ -246,7 +246,8 @@ def make_dex_engine(
         # inactive lanes share the OOB sentinel bucket; its overflow is
         # meaningless (see routing.route_owners)
         dropped_r = dropped_r & (keys != KEY_MAX)
-        routed = routing.route_exchange(buf, cfg, mesh)     # [n_route, cap, 4]
+        with jax.named_scope("dex/route"):
+            routed = routing.route_exchange(buf, cfg, mesh)  # [n_route, cap, 4]
         q = routed[..., 0].reshape(-1)                      # [Q]
         val = routed[..., 1].reshape(-1)
         opc = routed[..., 2].reshape(-1).astype(jnp.int32)
@@ -325,11 +326,11 @@ def make_dex_engine(
                     want = fetchable
                     p_ok = jnp.ones(q.shape, bool)
                 gid = meta.node_gid(subtree, local)
-                rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                    cached_fetch_level(
-                        pool, meta, cfg, new_cache, vers, gid, want, p_ok
-                    )
-                )
+                with jax.named_scope(f"dex/descent/l{lvl}"):
+                    rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, \
+                        new_cache = cached_fetch_level(
+                            pool, meta, cfg, new_cache, vers, gid, want, p_ok
+                        )
                 shed = shed | f_drop
                 n_fetch = n_fetch + n_msgs
                 n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
@@ -376,11 +377,12 @@ def make_dex_engine(
                     gid, cfg.p_admit_leaf_pct,
                     salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
                 )
-                rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, new_cache = (
-                    cached_fetch_level(
-                        pool, meta, cfg, new_cache, vers, gid, in_range, p_ok
-                    )
-                )
+                with jax.named_scope(f"dex/scan/h{h}"):
+                    rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, \
+                        new_cache = cached_fetch_level(
+                            pool, meta, cfg, new_cache, vers, gid, in_range,
+                            p_ok,
+                        )
                 shed = shed | f_drop
                 n_fetch = n_fetch + n_msgs
                 n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
@@ -469,7 +471,8 @@ def make_dex_engine(
                 wpayload, dest, cfg.n_memory, wcap
             )
             dropped_w = dropped_w & send
-            req = routing.a2a(wbuf, cfg.memory_axis)     # [n_mem, wcap, RF]
+            with jax.named_scope("dex/fused_a2a/request"):
+                req = routing.a2a(wbuf, cfg.memory_axis)  # [n_mem, wcap, RF]
             if has_writes:
                 # every route-replica of this memory column must apply the
                 # identical write batch (pool replicas stay consistent)
@@ -515,12 +518,13 @@ def make_dex_engine(
                 allow_ins = tagf == MSG_INSERT
                 if may_offload:
                     allow_ins = allow_ins | (tagf == MSG_OFF_INSERT)
-                (new_pk, new_pv, new_occ, wstat, rows_v_all,
-                 ins_in_leaf) = _apply_leaf_writes(
-                    pool.pool_keys, pool.pool_values, occupancy, meta, cfg,
-                    wgid, kf, vf, prf, allow_ins,
-                    use_kernel=use_kernel, interpret=interpret,
-                )
+                with jax.named_scope("dex/apply"):
+                    (new_pk, new_pv, new_occ, wstat, rows_v_all,
+                     ins_in_leaf) = _apply_leaf_writes(
+                        pool.pool_keys, pool.pool_values, occupancy, meta,
+                        cfg, wgid, kf, vf, prf, allow_ins,
+                        use_kernel=use_kernel, interpret=interpret,
+                    )
             else:
                 wstat = jnp.zeros(kf.shape, jnp.int32)
                 rows_v_all = jnp.zeros(kf.shape + (FANOUT,), jnp.int64)
@@ -552,7 +556,8 @@ def make_dex_engine(
                 )
             else:
                 resp = resp.reshape(cfg.n_memory, wcap, RESP_HEAD + FANOUT)
-            resp = routing.a2a(resp, cfg.memory_axis)
+            with jax.named_scope("dex/fused_a2a/response"):
+                resp = routing.a2a(resp, cfg.memory_axis)
             back = routing.unpack_to_lanes(resp, wlane, q.shape[0], 0)
             rstat = back[..., 0].astype(jnp.int32)
             rval = back[..., 1]
@@ -675,7 +680,8 @@ def make_dex_engine(
         resp_b = jnp.concatenate(fields, axis=-1)
         width = resp_b.shape[-1]
         resp_b = resp_b.reshape(n_route, cap, width)
-        back_b = routing.route_exchange(resp_b, cfg, mesh, reverse=True)
+        with jax.named_scope("dex/route_back"):
+            back_b = routing.route_exchange(resp_b, cfg, mesh, reverse=True)
         out = routing.unpack_to_lanes(back_b, lane, b, 0)
         res_found = (out[..., 0] != 0) & ~dropped_r
         res_val = jnp.where(dropped_r, 0, out[..., 1])
@@ -790,5 +796,10 @@ def make_dex_engine(
         "descent_levels": (levels if do_leaf else levels - 1)
         if do_descent else 0,
         "scan_hops": hops,
+        # jax.named_scope labels annotating the jitted program for profiler
+        # traces (repro/obs/trace.py profiler_annotations); metadata only —
+        # they add no ops and no collectives
+        "phases": ("dex/route", "dex/descent", "dex/scan", "dex/fused_a2a",
+                   "dex/apply", "dex/route_back"),
     }
     return engine

@@ -324,13 +324,15 @@ class RepartitionController:
         return self.parts.rebalance(self._loads, key_range=key_range)
 
     def maybe_repartition(
-        self, state: DexState, meta: PoolMeta
+        self, state: DexState, meta: PoolMeta, *, obs=None
     ) -> Tuple[DexState, Optional[RepartitionReport]]:
         """Repartition if the trigger fires; returns the (possibly new)
         state and a report when boundaries actually moved.  The first
         ``cooldown_batches`` calls after an install are skipped (and spend
         the cooldown), so ``cooldown_batches=1`` skips exactly one
-        decision."""
+        decision.  ``obs`` is an optional telemetry batch
+        (repro/obs/timeline.py); the boundary install becomes a fenced
+        phase in the trace."""
         if self._cooldown > 0:
             self._cooldown -= 1
             return state, None
@@ -340,9 +342,14 @@ class RepartitionController:
         if np.array_equal(new_parts.boundaries, self.parts.boundaries):
             self._reset_window()
             return state, None
-        new_state, n_inval, sh_before, sh_after = install_boundaries(
-            state, meta, self.parts, new_parts
-        )
+        from repro.obs.timeline import obs_phase
+
+        with obs_phase(obs, "repartition/install") as _ph:
+            new_state, n_inval, sh_before, sh_after = install_boundaries(
+                state, meta, self.parts, new_parts
+            )
+            if _ph is not None and hasattr(_ph, "fence"):
+                _ph.fence(new_state.boundaries)
         report = RepartitionReport(
             old_boundaries=self.parts.boundaries.copy(),
             new_boundaries=new_parts.boundaries.copy(),

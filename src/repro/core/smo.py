@@ -568,6 +568,7 @@ def run_smo(
     *,
     max_rounds: "int | None" = None,
     levels: int = 2,
+    obs=None,
 ):
     """Drive bounded SMO rounds until every live lane settles or the pending
     set stops shrinking (exhausted free-list / subtree-root split).
@@ -594,14 +595,19 @@ def run_smo(
     def splits_done(st):
         return int(np.asarray(st.stats)[:, STAT_SMO_SPLITS].sum())
 
+    from repro.obs.timeline import obs_phase
+
     while pending.any() and rounds < max_rounds:
         before = splits_done(state)
-        state, st_r = smo(
-            state,
-            jnp.asarray(np.where(pending, keys, KEY_MAX)),
-            jnp.asarray(np.where(pending, values, 0)),
-        )
-        st_np = np.asarray(st_r)
+        # obs is an optional telemetry batch (repro/obs/timeline.py); each
+        # SMO round is a separate fenced host phase in the trace
+        with obs_phase(obs, f"smo/round{rounds}"):
+            state, st_r = smo(
+                state,
+                jnp.asarray(np.where(pending, keys, KEY_MAX)),
+                jnp.asarray(np.where(pending, values, 0)),
+            )
+            st_np = np.asarray(st_r)
         rounds += 1
         settled = pending & (st_np != STATUS_SPLIT)
         status[settled] = st_np[settled]
@@ -628,6 +634,7 @@ def settle_splits(
     boundaries: np.ndarray,
     *,
     max_rounds: "int | None" = None,
+    obs=None,
 ):
     """Resolve one batch of ``STATUS_SPLIT`` lanes: bounded on-mesh SMO
     rounds first, host ``drain_splits`` rebuild only for the residue.
@@ -645,9 +652,11 @@ def settle_splits(
         return state, meta, {
             "onmesh": 0, "residual": 0, "rounds": 0, "drained": False,
         }
+    from repro.obs.timeline import obs_phase
+
     state, status, rounds = run_smo(
         smo, state, shed_keys, shed_values,
-        max_rounds=max_rounds, levels=meta.levels_in_subtree,
+        max_rounds=max_rounds, levels=meta.levels_in_subtree, obs=obs,
     )
     ok = status == STATUS_OK
     for kk, vv in zip(shed_keys[ok], shed_values[ok]):
@@ -655,10 +664,11 @@ def settle_splits(
     residual = status == STATUS_SPLIT
     drained = bool(residual.any())
     if drained:
-        state, meta = drain_splits(
-            state, meta, cfg, host,
-            shed_keys[residual], shed_values[residual], boundaries,
-        )
+        with obs_phase(obs, "smo/drain"):
+            state, meta = drain_splits(
+                state, meta, cfg, host,
+                shed_keys[residual], shed_values[residual], boundaries,
+            )
     return state, meta, {
         "onmesh": int(ok.sum()),
         "residual": int(residual.sum()),

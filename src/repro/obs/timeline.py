@@ -1,0 +1,273 @@
+"""Per-batch phase-segmented wall-time instrumentation for the mesh plane.
+
+The mesh engine is ONE jitted ``shard_map`` program — its internal phases
+(route, descent, fused all_to_all, apply) cannot be host-fenced without
+splitting the program and destroying the fusion the benchmarks exist to
+measure.  So the timeline works at two resolutions:
+
+* **Host phases** — whole dispatches the driver already separates (engine
+  call, shed-lane retry rounds, SMO settlement rounds, repartition install,
+  scan probes).  Each is fenced with ``jax.block_until_ready`` on the FULL
+  result tree, so async dispatch cannot leak work past the timer.
+* **Device counters** — after each batch's fence we copy the ``[Dev,
+  N_STATS]`` stats array to host and diff it against the previous batch
+  (:func:`repro.obs.registry.delta`).  The counters are maintained by the
+  engine's existing psums; reading them adds a host transfer, never a
+  collective.  ``fig13engine`` proves this with trace-time collective
+  counts (instrumented == bare).
+
+Inside the jitted program, ``jax.named_scope`` annotations (added in
+``core/engine.py``) label the phases for ``jax.profiler`` traces; they are
+metadata only and cost nothing at run time.
+
+Shed-lane retry latency is tracked per op class as *batches to completion*:
+``record_retry("insert", rounds)`` after a retry loop.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.obs import registry
+
+
+def fence(tree: Any) -> Any:
+    """Block until every array in ``tree`` is ready; returns ``tree``."""
+    import jax
+
+    jax.block_until_ready(tree)
+    return tree
+
+
+def timed_call(fn: Callable, *args, **kwargs) -> Tuple[Any, float]:
+    """Run ``fn`` and fence its FULL result tree; returns ``(result, secs)``."""
+    t0 = time.perf_counter()
+    out = fence(fn(*args, **kwargs))
+    return out, time.perf_counter() - t0
+
+
+@dataclasses.dataclass
+class PhaseSpan:
+    name: str
+    t0: float  # seconds since the timeline epoch
+    dur: float  # seconds
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    index: int
+    label: str  # op class / workload label for this batch
+    t0: float
+    dur: float
+    phases: List[PhaseSpan] = dataclasses.field(default_factory=list)
+    #: per-batch counter increments (named; per-device + fleet)
+    counters: Optional[registry.Snapshot] = None
+    #: op class -> shed-lane rounds-to-completion observed this batch
+    retries: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def phase_seconds(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for p in self.phases:
+            out[p.name] = out.get(p.name, 0.0) + p.dur
+        return out
+
+
+class _Phase:
+    """Context manager for one fenced phase inside a batch."""
+
+    def __init__(self, batch: "_Batch", name: str):
+        self._batch = batch
+        self._name = name
+        self._pending: Any = None
+
+    def fence(self, tree: Any) -> Any:
+        """Register ``tree`` to be fenced when the phase closes (and fence it
+        now if the phase is being timed eagerly).  Returns ``tree``."""
+        self._pending = tree
+        return tree
+
+    def __enter__(self) -> "_Phase":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None and self._pending is not None:
+            fence(self._pending)
+        dur = time.perf_counter() - self._t0
+        if exc_type is None:
+            self._batch.record.phases.append(
+                PhaseSpan(self._name, self._t0 - self._batch.timeline.epoch, dur)
+            )
+
+
+class _Batch:
+    """Context manager for one batch; hands out phases and counter capture."""
+
+    def __init__(self, timeline: "BatchTimeline", label: str):
+        self.timeline = timeline
+        self.record = BatchRecord(
+            index=len(timeline.batches), label=label, t0=0.0, dur=0.0
+        )
+
+    def phase(self, name: str) -> _Phase:
+        return _Phase(self, name)
+
+    def counters(self, state_or_stats: Any) -> registry.Snapshot:
+        """Capture this batch's counter delta from a fenced ``DexState`` (or
+        raw stats array).  Uses the timeline's running snapshot so repeated
+        captures across batches yield per-batch increments.
+        """
+        snap = registry.snapshot(state_or_stats)
+        prev = self.timeline._last_snap
+        self.record.counters = registry.delta(snap, prev) if prev else snap
+        self.timeline._last_snap = snap
+        return self.record.counters
+
+    def retry(self, op_class: str, rounds: int) -> None:
+        self.record.retries[op_class] = int(rounds)
+
+    def __enter__(self) -> "_Batch":
+        self._t0 = time.perf_counter()
+        self.record.t0 = self._t0 - self.timeline.epoch
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.record.dur = time.perf_counter() - self._t0
+        if exc_type is None:
+            self.timeline.batches.append(self.record)
+
+
+class BatchTimeline:
+    """Accumulates per-batch :class:`BatchRecord`\\ s for one benchmark run."""
+
+    def __init__(self, name: str, meta: Optional[Mapping[str, Any]] = None):
+        self.name = name
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self.epoch = time.perf_counter()
+        self.batches: List[BatchRecord] = []
+        self._last_snap: Optional[registry.Snapshot] = None
+
+    # -- recording --------------------------------------------------------
+
+    def batch(self, label: str = "batch") -> _Batch:
+        return _Batch(self, label)
+
+    def prime(self, state_or_stats: Any) -> None:
+        """Set the counter baseline (e.g. after warmup) so the first measured
+        batch reports increments, not lifetime totals."""
+        self._last_snap = registry.snapshot(state_or_stats)
+
+    def instrument(
+        self, engine: Callable, *, label: str = "engine"
+    ) -> Callable:
+        """Wrap a mesh engine (or any dispatch whose first result is a
+        ``DexState``): every call becomes one recorded batch with a single
+        fenced phase plus a counter-delta capture.  The wrapper is a plain
+        host-side shim around the already-jitted callable — it cannot change
+        the traced program, so collective counts are identical by
+        construction (fig13engine asserts this anyway).
+        """
+
+        def wrapped(*args, **kwargs):
+            with self.batch(label) as b:
+                with b.phase(label) as ph:
+                    out = engine(*args, **kwargs)
+                    ph.fence(out)
+                head = out[0] if isinstance(out, tuple) else out
+                if hasattr(head, "stats"):
+                    b.counters(head)
+            return out
+
+        if hasattr(engine, "plan"):
+            wrapped.plan = engine.plan  # type: ignore[attr-defined]
+        return wrapped
+
+    # -- aggregation ------------------------------------------------------
+
+    def phase_totals(self) -> Dict[str, Dict[str, float]]:
+        acc: Dict[str, List[float]] = {}
+        for rec in self.batches:
+            for name, secs in rec.phase_seconds().items():
+                acc.setdefault(name, []).append(secs)
+        return {
+            name: {
+                "count": len(vals),
+                "total_s": sum(vals),
+                "mean_s": sum(vals) / len(vals),
+                "max_s": max(vals),
+            }
+            for name, vals in acc.items()
+        }
+
+    def counter_totals(self) -> Dict[str, float]:
+        fleet: Dict[str, int] = {}
+        for rec in self.batches:
+            if rec.counters is None:
+                continue
+            for name, val in rec.counters.fleet.items():
+                fleet[name] = fleet.get(name, 0) + val
+        named: Dict[str, float] = dict(fleet)
+        for m in registry.METRICS:
+            if m.kind == "derived":
+                named[m.name] = float(m.compute(fleet))
+        return named
+
+    def retry_latency(self) -> Dict[str, Dict[str, float]]:
+        """Shed-lane batches-to-completion per op class."""
+        acc: Dict[str, List[int]] = {}
+        for rec in self.batches:
+            for opc, rounds in rec.retries.items():
+                acc.setdefault(opc, []).append(rounds)
+        return {
+            opc: {
+                "count": len(vals),
+                "mean_rounds": sum(vals) / len(vals),
+                "max_rounds": max(vals),
+            }
+            for opc, vals in acc.items()
+        }
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "meta": self.meta,
+            "n_batches": len(self.batches),
+            "wall_s": sum(r.dur for r in self.batches),
+            "phases": self.phase_totals(),
+            "counters": self.counter_totals(),
+            "retry_latency": self.retry_latency(),
+        }
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serialisable dump (``metrics_timeline.json`` payload)."""
+        return {
+            **self.summary(),
+            "batches": [
+                {
+                    "index": r.index,
+                    "label": r.label,
+                    "t0_s": r.t0,
+                    "dur_s": r.dur,
+                    "phases": [
+                        {"name": p.name, "t0_s": p.t0, "dur_s": p.dur}
+                        for p in r.phases
+                    ],
+                    "counters": (
+                        r.counters.as_dict() if r.counters is not None else None
+                    ),
+                    "retries": r.retries,
+                }
+                for r in self.batches
+            ],
+        }
+
+
+def obs_phase(obs: Optional[Any], name: str):
+    """Phase hook used by core/smo.py and core/repartition.py: ``obs`` is a
+    :class:`_Batch` (or anything with ``.phase``), or None for a no-op."""
+    if obs is None:
+        return contextlib.nullcontext()
+    return obs.phase(name)

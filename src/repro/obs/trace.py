@@ -1,0 +1,169 @@
+"""Chrome trace-event export for :class:`repro.obs.timeline.BatchTimeline`.
+
+Emits the JSON-object flavour of the Trace Event Format (``{"traceEvents":
+[...]}``) viewable in Perfetto (ui.perfetto.dev) or chrome://tracing:
+
+* pid 0, one tid per phase name — "X" (complete) events for every fenced
+  host phase, batch-level "X" events on tid 0.
+* one pid per mesh device — "C" (counter) tracks for per-batch hit rate,
+  drops and ops, sampled at each batch's start time.
+* fleet-level "C" tracks (hit_rate, drops_per_op, offload_fraction) on the
+  host process.
+* "M" metadata events naming every process/thread.
+
+Timestamps are microseconds from the timeline epoch, as the format requires.
+
+Also provides :func:`profiler_annotations`, the optional ``jax.profiler``
+hook: a context manager that opens a ``TraceAnnotation`` so the engine's
+``jax.named_scope`` phase labels land in a profiler trace alongside the
+host-side batches.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs.timeline import BatchTimeline
+
+_US = 1e6  # trace-event timestamps are microseconds
+
+#: per-device counter tracks emitted for each batch
+_DEVICE_COUNTERS = ("ops", "hits", "drops")
+#: fleet-level derived counter tracks
+_FLEET_COUNTERS = ("hit_rate", "drops_per_op", "offload_fraction")
+
+_HOST_PID = 0
+_BATCH_TID = 0
+
+
+def to_trace_events(timeline: BatchTimeline) -> Dict[str, Any]:
+    """Render a timeline as a Chrome trace-event JSON object."""
+    events: List[Dict[str, Any]] = []
+
+    def meta(pid: int, tid: int, name: str, what: str = "thread_name") -> None:
+        events.append(
+            {
+                "ph": "M",
+                "name": what,
+                "pid": pid,
+                "tid": tid,
+                "args": {"name": name},
+            }
+        )
+
+    meta(_HOST_PID, 0, f"host:{timeline.name}", "process_name")
+    meta(_HOST_PID, _BATCH_TID, "batches")
+
+    # one tid per distinct phase name, stable order of first appearance
+    phase_tids: Dict[str, int] = {}
+    for rec in timeline.batches:
+        for span in rec.phases:
+            if span.name not in phase_tids:
+                tid = len(phase_tids) + 1
+                phase_tids[span.name] = tid
+                meta(_HOST_PID, tid, f"phase:{span.name}")
+
+    n_dev = 0
+    for rec in timeline.batches:
+        if rec.counters is not None:
+            n_dev = max(n_dev, rec.counters.n_devices)
+    for d in range(n_dev):
+        meta(d + 1, 0, f"device {d}", "process_name")
+        meta(d + 1, 0, "counters")
+
+    for rec in timeline.batches:
+        ts = rec.t0 * _US
+        events.append(
+            {
+                "ph": "X",
+                "name": f"batch[{rec.index}] {rec.label}",
+                "cat": "batch",
+                "pid": _HOST_PID,
+                "tid": _BATCH_TID,
+                "ts": ts,
+                "dur": rec.dur * _US,
+                "args": {
+                    "label": rec.label,
+                    **({"retries": rec.retries} if rec.retries else {}),
+                },
+            }
+        )
+        for span in rec.phases:
+            events.append(
+                {
+                    "ph": "X",
+                    "name": span.name,
+                    "cat": "phase",
+                    "pid": _HOST_PID,
+                    "tid": phase_tids[span.name],
+                    "ts": span.t0 * _US,
+                    "dur": span.dur * _US,
+                    "args": {"batch": rec.index},
+                }
+            )
+        if rec.counters is None:
+            continue
+        for name in _FLEET_COUNTERS:
+            events.append(
+                {
+                    "ph": "C",
+                    "name": name,
+                    "cat": "fleet",
+                    "pid": _HOST_PID,
+                    "tid": 0,
+                    "ts": ts,
+                    "args": {name: float(rec.counters.derived[name])},
+                }
+            )
+        for d in range(rec.counters.n_devices):
+            for name in _DEVICE_COUNTERS:
+                events.append(
+                    {
+                        "ph": "C",
+                        "name": name,
+                        "cat": "device",
+                        "pid": d + 1,
+                        "tid": 0,
+                        "ts": ts,
+                        "args": {name: int(rec.counters.per_device[name][d])},
+                    }
+                )
+
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "timeline": timeline.name,
+            **{str(k): str(v) for k, v in timeline.meta.items()},
+        },
+    }
+
+
+def write_trace(timeline: BatchTimeline, path: str) -> str:
+    """Write the Perfetto-viewable trace JSON to ``path``; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(to_trace_events(timeline), f)
+    return path
+
+
+@contextlib.contextmanager
+def profiler_annotations(label: str, enabled: bool = True):
+    """Optional ``jax.profiler`` hook: annotate the enclosed dispatches so
+    the engine's ``jax.named_scope`` phase labels show up under ``label`` in
+    a profiler trace.  No-op (and jax-import-free) when disabled or when the
+    profiler API is unavailable.
+    """
+    if not enabled:
+        yield
+        return
+    try:
+        import jax.profiler as _prof
+
+        ctx = _prof.TraceAnnotation(label)
+    except Exception:  # pragma: no cover - profiler backend missing
+        yield
+        return
+    with ctx:
+        yield

@@ -5,6 +5,14 @@ hypothesis API when it is installed, and inert stand-ins otherwise: the
 ``given``-decorated tests skip individually while every plain test in the
 module keeps running — a module-level ``pytest.importorskip`` would hide
 them all on the no-hypothesis CI leg.
+
+Skip audit (2026-08): every tier-1 skip (9 as of this writing — 4 in
+test_btree.py, 2 in test_partition_cache_sim.py, and one each in
+test_engine.py / test_smo.py / test_write.py) routes through this shim or
+the matching ``pytest.importorskip("hypothesis")`` guards.  None is a
+disabled-because-broken test: hypothesis is an optional ``[test]`` extra
+that CI's hyp-installed tier-1 legs do install and run; environments
+without it (like CI's deliberate hyp-absent leg) exercise the skip path.
 """
 
 import pytest
@@ -26,5 +34,6 @@ except ImportError:  # pragma: no cover - exercised by the no-hypothesis leg
 
     def given(*a, **k):
         return lambda f: pytest.mark.skip(
-            reason="property tests need hypothesis"
+            reason="property tests need hypothesis "
+                   "(optional [test] dep; CI's hyp-installed legs run them)"
         )(f)

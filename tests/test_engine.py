@@ -268,7 +268,9 @@ class TestMixedBatchPhasedReplay:
 class TestInterleavedPropertyHypothesis:
     def test_interleaved_mixed_batches_match_host_replay(self):
         pytest.importorskip(
-            "hypothesis", reason="property tests need hypothesis"
+            "hypothesis",
+            reason="property tests need hypothesis "
+                   "(optional [test] dep; CI's hyp-installed legs run them)",
         )
         from hypothesis import given, settings, strategies as st
 

@@ -1,0 +1,350 @@
+"""Unit tests for the telemetry plane (repro/obs): registry round-trip,
+snapshot/delta math, batch timelines, Chrome trace export, drift checks.
+
+These tests are deliberately mesh-free: the registry and drift modules are
+numpy-only, and the timeline is fed host arrays shaped like the forced
+8-device ``DexState.stats`` so the math is exact and fast.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import dex as dex_mod
+from repro.core.sim import Counters
+from repro.obs import drift, registry, trace
+from repro.obs.timeline import BatchTimeline, obs_phase, timed_call
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_every_stat_constant_derives_from_registry():
+    consts = registry.stat_constants()
+    assert len(consts) == registry.N_STATS
+    for const_name, slot in consts.items():
+        assert getattr(dex_mod, const_name) == slot
+    assert dex_mod.N_STATS == registry.N_STATS
+
+
+def test_mesh_slots_dense_and_unique():
+    slots = [m.slot for m in registry.MESH_SLOTS]
+    assert slots == list(range(registry.N_STATS))
+    names = [m.name for m in registry.METRICS]
+    assert len(names) == len(set(names))
+
+
+def test_every_sim_counters_field_mapped_exactly_once():
+    sim_fields = [m.sim_field for m in registry.METRICS if m.sim_field]
+    assert len(sim_fields) == len(set(sim_fields)), "sim field mapped twice"
+    counter_fields = {f.name for f in dataclasses.fields(Counters)}
+    assert set(sim_fields) == counter_fields, (
+        "registry sim_field set must cover sim.Counters exactly"
+    )
+
+
+def test_paired_metrics_live_on_both_planes():
+    for m in registry.PAIRED:
+        assert m.slot is not None and m.sim_field is not None
+    # mesh-only metrics are the SPMD artifacts called out in the docstring
+    mesh_only = {m.name for m in registry.MESH_SLOTS if m.sim_field is None}
+    assert mesh_only == {"drops", "splits", "drains"}
+
+
+def test_registry_validation_rejects_bad_metrics():
+    with pytest.raises(ValueError):
+        registry.Metric("x", "events", "nonsense")
+    with pytest.raises(ValueError):
+        registry.Metric("x", "ratio", "derived")  # derived without compute
+    with pytest.raises(ValueError):
+        registry.Metric("x", "events", "counter")  # maps to neither plane
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / delta math on forced-8-device-shaped arrays
+# ---------------------------------------------------------------------------
+
+
+def _stats(n_dev=8, **named):
+    arr = np.zeros((n_dev, registry.N_STATS), np.int64)
+    for name, vec in named.items():
+        arr[:, registry.SLOT_OF[name]] = vec
+    return arr
+
+
+def test_snapshot_fleet_and_derived():
+    arr = _stats(ops=np.arange(8) * 100, hits=np.arange(8) * 50,
+                 drops=np.full(8, 7))
+    snap = registry.snapshot(arr)
+    assert snap.n_devices == 8
+    assert snap.fleet["ops"] == 2800
+    assert snap.fleet["hits"] == 1400
+    assert snap.derived["hit_rate"] == pytest.approx(0.5)
+    assert snap.derived["drops_per_op"] == pytest.approx(56 / 2800)
+    assert np.array_equal(snap.per_device["drops"], np.full(8, 7))
+    # __getitem__ resolves counters and derived alike
+    assert snap["ops"] == 2800
+    assert snap["hit_rate"] == pytest.approx(0.5)
+
+
+def test_snapshot_accepts_state_like_and_1d():
+    class FakeState:
+        stats = _stats(ops=np.full(8, 10))
+
+    assert registry.snapshot(FakeState()).fleet["ops"] == 80
+    one = registry.snapshot(np.zeros(registry.N_STATS, np.int64))
+    assert one.n_devices == 1
+    with pytest.raises(ValueError):
+        registry.snapshot(np.zeros((8, registry.N_STATS + 3), np.int64))
+
+
+def test_delta_recomputes_derived():
+    before = registry.snapshot(_stats(ops=np.full(8, 100), hits=np.full(8, 90)))
+    after = registry.snapshot(_stats(ops=np.full(8, 200), hits=np.full(8, 120)))
+    d = registry.delta(after, before)
+    assert d.fleet["ops"] == 800
+    assert d.fleet["hits"] == 240
+    assert d.derived["hit_rate"] == pytest.approx(240 / 800)
+
+
+def test_sim_view_reads_counters_and_partial_fakes():
+    c = Counters(ops=100, rdma_read=40, local_accesses=55, bytes=4096)
+    named = registry.sim_view(c)
+    assert named["ops"] == 100
+    assert named["fetches"] == 40
+    assert named["hits"] == 55
+    assert named["bytes_per_op"] == pytest.approx(40.96)
+
+    class Partial:
+        rdma_write = 9
+
+    assert registry.sim_view(Partial())["writes"] == 9
+
+
+# ---------------------------------------------------------------------------
+# Timeline
+# ---------------------------------------------------------------------------
+
+
+def _timeline_with_batches():
+    tl = BatchTimeline("unit", meta={"devices": 8})
+    tl.prime(_stats())
+    for i in range(3):
+        ob = tl.batch(f"b{i}")
+        with ob:
+            with ob.phase("engine") as ph:
+                ph.fence(np.arange(4))
+            with ob.phase("retry/r1"):
+                pass
+            ob.counters(_stats(ops=np.full(8, 100 * (i + 1)),
+                               hits=np.full(8, 40 * (i + 1))))
+            ob.retry("insert", i + 1)
+    return tl
+
+
+def test_timeline_counter_and_phase_totals():
+    tl = _timeline_with_batches()
+    assert len(tl.batches) == 3
+    # per-batch deltas: 800, 800, 800 fleet ops
+    for rec in tl.batches:
+        assert rec.counters.fleet["ops"] == 800
+        assert rec.counters.fleet["hits"] == 320
+    totals = tl.counter_totals()
+    assert totals["ops"] == 2400
+    assert totals["hit_rate"] == pytest.approx(0.4)
+    phases = tl.phase_totals()
+    assert phases["engine"]["count"] == 3
+    assert phases["retry/r1"]["count"] == 3
+    rl = tl.retry_latency()
+    assert rl["insert"]["count"] == 3
+    assert rl["insert"]["mean_rounds"] == pytest.approx(2.0)
+    assert rl["insert"]["max_rounds"] == 3
+
+
+def test_timeline_json_roundtrip():
+    tl = _timeline_with_batches()
+    payload = json.loads(json.dumps(tl.to_json()))
+    assert payload["name"] == "unit"
+    assert payload["n_batches"] == 3
+    assert len(payload["batches"]) == 3
+    b0 = payload["batches"][0]
+    assert b0["counters"]["ops"] == 800
+    assert {p["name"] for p in b0["phases"]} == {"engine", "retry/r1"}
+    assert b0["retries"] == {"insert": 1}
+
+
+def test_instrument_wraps_state_returning_callable():
+    tl = BatchTimeline("wrap")
+    tl.prime(_stats())
+
+    class FakeState:
+        def __init__(self, n):
+            self.stats = _stats(ops=np.full(8, n))
+
+    def engine(state, n):
+        return FakeState(n), "aux"
+
+    engine.plan = {"phases": ("dex/route",)}
+    wrapped = tl.instrument(engine, label="engine")
+    assert wrapped.plan == {"phases": ("dex/route",)}
+    out = wrapped(None, 50)
+    assert out[1] == "aux"
+    assert tl.batches[0].counters.fleet["ops"] == 400
+    wrapped(None, 75)
+    assert tl.batches[1].counters.fleet["ops"] == 200  # delta, not total
+
+
+def test_timed_call_and_obs_phase_nullcontext():
+    out, secs = timed_call(lambda x: x + 1, 41)
+    assert out == 42 and secs >= 0.0
+    with obs_phase(None, "anything"):
+        pass  # no-op without an observer
+    tl = BatchTimeline("hook")
+    ob = tl.batch("b")
+    with ob:
+        with obs_phase(ob, "smo/drain"):
+            pass
+    assert tl.batches[0].phase_seconds().keys() == {"smo/drain"}
+
+
+# ---------------------------------------------------------------------------
+# Trace export
+# ---------------------------------------------------------------------------
+
+
+def test_trace_events_schema(tmp_path):
+    tl = _timeline_with_batches()
+    doc = trace.to_trace_events(tl)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert events, "no events emitted"
+    kinds = {e["ph"] for e in events}
+    assert {"M", "X", "C"} <= kinds
+    for e in events:
+        assert isinstance(e["name"], str) and "pid" in e
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0 and "tid" in e
+        if e["ph"] == "C":
+            assert isinstance(e["args"], dict) and e["args"]
+    # every batch contributes one top-level X span plus its phases
+    batch_spans = [e for e in events
+                   if e["ph"] == "X" and e.get("cat") == "batch"]
+    assert len(batch_spans) == 3
+    phase_spans = {e["name"] for e in events
+                   if e["ph"] == "X" and e.get("cat") == "phase"}
+    assert phase_spans == {"engine", "retry/r1"}
+    # counter tracks cover the fleet-derived metrics
+    counter_names = {e["name"] for e in events if e["ph"] == "C"}
+    assert "hit_rate" in counter_names
+
+    path = tmp_path / "unit.trace.json"
+    trace.write_trace(tl, str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk["traceEvents"]
+
+
+def test_profiler_annotations_is_reentrant_noop_when_disabled():
+    with trace.profiler_annotations("x", enabled=False):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Drift
+# ---------------------------------------------------------------------------
+
+
+def test_drift_pass_and_fail_and_report_format(capsys):
+    mesh = {"ops": 1000, "fetches": 410, "writes": 300}
+    sim = {"ops": 1000, "fetches": 400, "writes": 300}
+    rep = drift.assert_plane_agreement(
+        mesh, sim,
+        {"fetches": drift.rel(0.05), "writes": drift.rel(0.01)},
+        label="unit",
+    )
+    assert rep.ok and not rep.failures
+    out = capsys.readouterr().out
+    assert "plane agreement [unit]: OK" in out
+    assert "[ok  ]" in out
+
+    with pytest.raises(drift.PlaneDriftError) as ei:
+        drift.assert_plane_agreement(
+            mesh, sim, {"fetches": drift.rel(0.01)}, label="unit",
+            verbose=False,
+        )
+    report = ei.value.report
+    assert not report.ok and len(report.failures) == 1
+    assert "DRIFT" in report.format()
+    assert "fetches" in str(ei.value)
+
+
+def test_drift_per_op_normalisation():
+    # 0.41 vs 0.40 fetches/op: 2.5% relative error despite 10x more mesh ops
+    mesh = {"ops": 10_000, "fetches": 4100}
+    sim = {"ops": 1_000, "fetches": 400}
+    rep = drift.compare(mesh, sim, {"fetches": drift.rel(0.05, per_op=True)})
+    assert rep.ok
+    assert rep.entries[0].measured == pytest.approx(0.025)
+    assert not drift.compare(
+        mesh, sim, {"fetches": drift.rel(0.05)}
+    ).ok, "without per_op the raw counts disagree 10x"
+
+
+def test_drift_ratio_band_and_min_count_skip():
+    rep = drift.compare({"smo_splits": 30}, {"smo_splits": 20},
+                        {"smo_splits": drift.ratio(0.4, 2.5)})
+    assert rep.ok and rep.entries[0].measured == pytest.approx(1.5)
+    skipped = drift.compare({"smo_splits": 3}, {"smo_splits": 0},
+                            {"smo_splits": drift.ratio(0.4, 2.5, min_count=10)})
+    assert skipped.ok and skipped.entries[0].skipped
+    assert "SKIP" in skipped.format()
+
+
+def test_drift_absolute_gauge():
+    rep = drift.compare({"moved_fraction": 0.31}, {"moved_fraction": 0.27},
+                        {"moved_fraction": drift.absolute(0.10)})
+    assert rep.ok and rep.entries[0].measured == pytest.approx(0.04)
+    assert not drift.compare(
+        {"moved_fraction": 0.31}, {"moved_fraction": 0.05},
+        {"moved_fraction": drift.absolute(0.10)},
+    ).ok
+
+
+def test_drift_rejects_unregistered_metric():
+    with pytest.raises(KeyError):
+        drift.compare({"ops": 1}, {"ops": 1}, {"tpyo": drift.rel(0.1)})
+
+
+def test_drift_coerces_all_counter_carriers():
+    snap = registry.snapshot(_stats(ops=np.full(8, 50), hits=np.full(8, 25)))
+    counters = Counters(ops=400, local_accesses=200)
+    rep = drift.compare(snap, counters, {"hits": drift.rel(0.0, per_op=True)})
+    assert rep.ok, rep.format()
+    tl = _timeline_with_batches()
+    rep2 = drift.compare(tl, {"ops": 2400}, {"ops": drift.rel(0.0)})
+    assert rep2.ok
+
+    class FakeState:
+        stats = _stats(ops=np.full(8, 50))
+
+    assert drift.compare(FakeState(), {"ops": 400},
+                         {"ops": drift.rel(0.0)}).ok
+    with pytest.raises(TypeError):
+        drift._named(object())
+
+
+# ---------------------------------------------------------------------------
+# Docs can't rot: DESIGN.md embeds the generated counter table
+# ---------------------------------------------------------------------------
+
+
+def test_design_md_counter_table_matches_registry():
+    import pathlib
+
+    design = pathlib.Path(__file__).resolve().parent.parent / "DESIGN.md"
+    text = design.read_text()
+    for line in registry.markdown_table().splitlines():
+        assert line in text, f"DESIGN.md counter table is stale: {line!r}"

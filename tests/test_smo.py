@@ -256,7 +256,9 @@ class TestOnMeshLeafSplit:
 class TestInterleavedSmoPropertyHypothesis:
     def test_interleaved_batches_with_onmesh_splits_match_host(self):
         pytest.importorskip(
-            "hypothesis", reason="property tests need hypothesis"
+            "hypothesis",
+            reason="property tests need hypothesis "
+                   "(optional [test] dep; CI's hyp-installed legs run them)",
         )
         from hypothesis import given, settings, strategies as st
 
