@@ -1,0 +1,280 @@
+"""CI perf-regression gate: bench_results.json vs committed baselines.
+
+``benchmarks/baselines.json`` commits, per run mode (``quick``/``full``)
+and per benchmark module, a band for every gated summary metric.  This
+script re-reads a fresh ``bench_results.json`` (the artifact bench-smoke
+already uploads) and fails (exit 1) with a readable delta table when any
+gated metric leaves its band — a throughput regression, a modeled-speedup
+claim going soft, or a structural count (collective rounds per batch)
+changing at all.
+
+Band forms, chosen per metric by the ``GATES`` table below:
+
+* ``{"value": V, "rel_band": [lo, hi]}`` — pass iff ``lo*V <= x <= hi*V``.
+  Wall-clock throughputs get wide bands (CI machines vary); simulator-
+  modeled numbers are deterministic for a fixed ``--seed`` and get tight
+  ones.
+* ``{"min": V}`` — absolute floor, independent of any measured baseline
+  (e.g. the pipelined engine's modeled speedup must stay >= 1.15x).
+* ``{"value": V, "exact": true}`` — structural invariants such as
+  collective rounds per engine batch: any drift is a protocol change and
+  must be re-committed deliberately.
+
+Refresh workflow (after an intentional perf/protocol change)::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --seed 0 \
+        --only fig15mesh,fig6mesh,fig10meshrep,fig14meshload,fig13engine \
+        --json bench_results.json --trace-dir traces
+    PYTHONPATH=src python -m benchmarks.check_perf bench_results.json \
+        --update-baselines
+    git diff benchmarks/baselines.json   # review, then commit
+
+``--self-test`` proves the gate trips: it perturbs an in-memory copy of
+the passing results below each band kind and asserts the check fails —
+CI runs this dry-run so a silently toothless gate is itself a failure.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_perf bench_results.json
+    PYTHONPATH=src python -m benchmarks.check_perf bench_results.json \
+        [--baselines PATH] [--update-baselines] [--self-test]
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINES = pathlib.Path(__file__).parent / "baselines.json"
+
+#: wall-clock throughput on shared CI runners: wide
+WALL = ("rel", 0.25, 4.0)
+#: simulator/cost-model output, deterministic for a fixed seed: tight
+MODELED = ("rel", 0.95, 1.05)
+#: mesh-side event counters, deterministic trace but jax-version drift
+#: tolerated: medium
+COUNTER = ("rel", 0.5, 2.0)
+#: static collective structure: any change is a protocol change
+EXACT = ("exact",)
+
+#: module -> gated summary metric -> band template used by
+#: ``--update-baselines`` (the committed baselines.json is what the check
+#: itself reads)
+GATES = {
+    "fig15mesh": {
+        "mesh_scans_per_s": WALL,
+        "sim_node_reads_per_op": MODELED,
+    },
+    "fig6mesh": {
+        "ycsb-a_mesh_writes_per_op": MODELED,
+        "ycsb-a_sim_writes_per_op": MODELED,
+    },
+    "fig10meshrep": {
+        "live_ops_per_s": WALL,
+        "n_repartitions": ("min", 1.0),
+        "live_drops": COUNTER,
+    },
+    "fig14meshload": {
+        "smo_ops_per_s": WALL,
+        "onmesh_frac": ("min", 0.90),
+        "smo_splits": COUNTER,
+    },
+    "fig13engine": {
+        "ycsb-a_engine_ops_per_s": WALL,
+        "ycsb-a_engine_a2a": EXACT,
+        "ycsb-a_sync_sustained_ops_per_s": WALL,
+        "ycsb-a_pipeline_sustained_ops_per_s": WALL,
+        "pipeline_wall_ratio": ("min", 0.5),
+        "pipeline_stall_lanes": ("min", 1.0),
+        "pipeline_modeled_speedup": ("min", 1.15),
+        "pipeline_modeled_mops": MODELED,
+    },
+}
+
+
+def _band_of(template, measured):
+    kind = template[0]
+    if kind == "rel":
+        return {"value": measured, "rel_band": [template[1], template[2]]}
+    if kind == "min":
+        return {"min": template[1]}
+    if kind == "exact":
+        return {"value": measured, "exact": True}
+    raise ValueError(f"unknown band template {template!r}")
+
+
+def _evaluate(band, x):
+    """-> (ok, expectation string)."""
+    if band.get("exact"):
+        v = band["value"]
+        tol = 1e-9 * max(abs(v), 1.0)
+        return abs(x - v) <= tol, f"== {v:g}"
+    if "rel_band" in band:
+        v, (lo, hi) = band["value"], band["rel_band"]
+        return (lo * v <= x <= hi * v), f"[{lo * v:g}, {hi * v:g}]"
+    if "min" in band:
+        return x >= band["min"], f">= {band['min']:g}"
+    raise ValueError(f"malformed band {band!r}")
+
+
+def _delta(band, x):
+    v = band.get("value")
+    if not v:
+        return "-"
+    return f"{(x / v - 1.0) * 100.0:+.1f}%"
+
+
+def check(results_doc, baselines_doc, *, out=print):
+    """Validate one results file against the committed bands.
+
+    Returns the number of failures; prints the full delta table either
+    way so a green run still leaves a perf breadcrumb in the CI log.
+    """
+    mode = "quick" if results_doc.get("quick") else "full"
+    results = results_doc["results"]
+    bands = baselines_doc.get(mode)
+    if bands is None:
+        out(f"perf gate: no '{mode}' section in baselines — run "
+            f"--update-baselines on a {mode} results file first")
+        return 1
+
+    failures = 0
+    table = []
+    for module, metrics in sorted(bands.items()):
+        mod = results.get(module)
+        if mod is None:
+            table.append((module, "(module)", "-", "-", "-", "MISSING"))
+            failures += 1
+            continue
+        if "error" in mod:
+            table.append((module, "(module)", "-", "-", "-", "ERROR"))
+            failures += 1
+            continue
+        summary = mod.get("summary", {})
+        for metric, band in sorted(metrics.items()):
+            if metric not in summary:
+                table.append((module, metric, "-", "-", "-", "MISSING"))
+                failures += 1
+                continue
+            x = float(summary[metric])
+            ok, expect = _evaluate(band, x)
+            table.append((
+                module, metric, f"{x:g}", expect, _delta(band, x),
+                "ok" if ok else "FAIL",
+            ))
+            failures += 0 if ok else 1
+
+    widths = [max(len(r[i]) for r in table + [_HEADER]) for i in range(6)]
+    for row in [_HEADER] + table:
+        out("  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip())
+    if failures:
+        out(f"perf gate: FAIL — {failures} gated metric(s) out of band "
+            f"(mode={mode}); if intentional, refresh via --update-baselines "
+            f"and commit benchmarks/baselines.json")
+    else:
+        out(f"perf gate: OK — {sum(len(m) for m in bands.values())} gated "
+            f"metric(s) in band (mode={mode})")
+    return failures
+
+
+_HEADER = ("module", "metric", "measured", "band", "delta", "status")
+
+
+def update_baselines(results_doc, baselines_path):
+    mode = "quick" if results_doc.get("quick") else "full"
+    results = results_doc["results"]
+    path = pathlib.Path(baselines_path)
+    doc = json.loads(path.read_text()) if path.is_file() else {}
+    section = {}
+    missing = []
+    for module, metrics in GATES.items():
+        mod = results.get(module)
+        if mod is None or "error" in mod:
+            missing.append(module)
+            continue
+        summary = mod.get("summary", {})
+        section[module] = {}
+        for metric, template in metrics.items():
+            if metric not in summary:
+                missing.append(f"{module}.{metric}")
+                continue
+            section[module][metric] = _band_of(
+                template, float(summary[metric])
+            )
+    if missing:
+        print(f"perf gate: cannot update baselines — results file lacks: "
+              f"{missing}")
+        return 1
+    doc[mode] = section
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"perf gate: wrote {path} ({mode} section, "
+          f"{sum(len(m) for m in section.values())} metrics)")
+    return 0
+
+
+def self_test(results_doc, baselines_doc):
+    """Prove the gate trips: the pristine results must pass, and a copy
+    perturbed below each band kind must fail."""
+    sink = []
+    if check(results_doc, baselines_doc, out=sink.append):
+        print("\n".join(sink))
+        print("perf gate self-test: FAIL — pristine results do not pass; "
+              "refresh baselines first")
+        return 1
+
+    mode = "quick" if results_doc.get("quick") else "full"
+    tripped, tested = 0, 0
+    for module, metrics in baselines_doc[mode].items():
+        for metric, band in metrics.items():
+            broken = copy.deepcopy(results_doc)
+            summary = broken["results"][module]["summary"]
+            if "rel_band" in band:
+                summary[metric] = band["value"] * band["rel_band"][0] * 0.5
+            elif "min" in band:
+                summary[metric] = band["min"] * 0.5
+            else:  # exact
+                summary[metric] = band["value"] + 1.0
+            tested += 1
+            if check(broken, baselines_doc, out=lambda _s: None):
+                tripped += 1
+            else:
+                print(f"perf gate self-test: {module}.{metric} perturbed "
+                      f"out of band but the gate did NOT trip")
+    if tripped != tested:
+        print(f"perf gate self-test: FAIL — only {tripped}/{tested} "
+              f"perturbations tripped the gate")
+        return 1
+    print(f"perf gate self-test: OK — pristine results pass and all "
+          f"{tested} single-metric perturbations trip the gate")
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="perf-regression gate over bench_results.json")
+    ap.add_argument("results", help="bench_results.json from benchmarks.run")
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES))
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="rewrite the baselines section for this results "
+                         "file's mode from its measured values")
+    ap.add_argument("--self-test", action="store_true",
+                    help="dry-run: assert the gate passes on these results "
+                         "and demonstrably fails on perturbed copies")
+    args = ap.parse_args(argv)
+
+    with open(args.results) as f:
+        results_doc = json.load(f)
+    if args.update_baselines:
+        sys.exit(update_baselines(results_doc, args.baselines))
+    with open(args.baselines) as f:
+        baselines_doc = json.load(f)
+    if args.self_test:
+        sys.exit(self_test(results_doc, baselines_doc))
+    sys.exit(1 if check(results_doc, baselines_doc) else 0)
+
+
+if __name__ == "__main__":
+    main()

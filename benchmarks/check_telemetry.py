@@ -35,6 +35,63 @@ EXPECTED_METRICS = frozenset(
     + [m.name for m in registry.METRICS if m.kind == "derived"]
 )
 
+#: the pipelined engine's timeline and its two overlap-phase tracks
+PIPELINE_TIMELINE = "fig13engine_pipeline"
+OVERLAP_PHASES = ("pipe/front", "pipe/back")
+
+
+def _check_pipeline(results, timelines, tdir, problems):
+    """The double-buffered service must keep exporting its overlap story:
+    both phase tracks in the timeline AND the trace, plus collective
+    parity — a pipelined step issues exactly the synchronous engine's
+    per-batch collectives (pipelining buys overlap, not extra rounds)."""
+    mod = results.get("fig13engine")
+    if mod is None or "error" in mod:
+        return  # module absent from this subset / already reported
+    tl = timelines.get(PIPELINE_TIMELINE)
+    if tl is None:
+        problems.append(
+            f"fig13engine: pipelined timeline '{PIPELINE_TIMELINE}' missing"
+        )
+        return
+    phases = tl.get("phases") or {}
+    for ph in OVERLAP_PHASES:
+        if not (phases.get(ph) or {}).get("count"):
+            problems.append(
+                f"{PIPELINE_TIMELINE}: overlap phase track '{ph}' missing"
+            )
+    meta = tl.get("meta") or {}
+    if not (meta.get("plan") or {}).get("pipeline"):
+        problems.append(f"{PIPELINE_TIMELINE}: meta.plan.pipeline unset")
+    by_phase = meta.get("collectives_by_phase") or {}
+    if set(by_phase) != set(OVERLAP_PHASES):
+        problems.append(
+            f"{PIPELINE_TIMELINE}: collectives_by_phase tracks "
+            f"{sorted(by_phase)} != {sorted(OVERLAP_PHASES)}"
+        )
+    sync = timelines.get("fig13engine_ycsb-a")
+    if sync is not None:
+        sync_counts = (sync.get("meta") or {}).get("collectives_per_batch")
+        pipe_counts = meta.get("collectives_per_batch")
+        if sync_counts != pipe_counts:
+            problems.append(
+                f"pipelining changed the per-batch collective structure: "
+                f"sync {sync_counts} vs pipelined {pipe_counts}"
+            )
+    tr_file = tdir / f"{PIPELINE_TIMELINE}.trace.json"
+    if tr_file.is_file():
+        try:
+            events = json.loads(tr_file.read_text()).get("traceEvents") or []
+        except json.JSONDecodeError:
+            events = []  # the generic loop already reports non-JSON traces
+        names = {e.get("name") for e in events}
+        missing = set(OVERLAP_PHASES) - names
+        if missing:
+            problems.append(
+                f"{PIPELINE_TIMELINE}: trace export lacks overlap span(s) "
+                f"{sorted(missing)}"
+            )
+
 
 def _fail(problems):
     print("telemetry guard: FAIL")
@@ -100,6 +157,8 @@ def check(results_path: str, trace_dir: str) -> int:
                         f"{sorted(missing)}"
                     )
                     break
+
+    _check_pipeline(results, timelines, tdir, problems)
 
     if not timelines:
         problems.append("no timelines found in any mesh module")

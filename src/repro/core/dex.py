@@ -68,6 +68,7 @@ STAT_SMO_SPLITS = _stat_consts["STAT_SMO_SPLITS"]
 STAT_DRAINS = _stat_consts["STAT_DRAINS"]
 STAT_OFFLOAD_GROUPS = _stat_consts["STAT_OFFLOAD_GROUPS"]
 STAT_FETCH_GROUPS = _stat_consts["STAT_FETCH_GROUPS"]
+STAT_PIPE_STALLS = _stat_consts["STAT_PIPE_STALLS"]
 N_STATS = _metric_registry.N_STATS
 del _stat_consts
 

@@ -55,6 +55,54 @@ Batch semantics match the phased sequential replay the benchmarks and
 tests use: reads (lookups, scans) observe the pre-batch index, then
 updates apply, then inserts — enforced by a phase-offset batch priority in
 the conflict resolution.
+
+Continuous-service pipelining (``pipeline=True``)
+-------------------------------------------------
+The batch-synchronous program above is one blocking round trip: the mesh
+idles through the fused ``all_to_all`` pair and the leaf apply of batch N
+before batch N+1's route round may start.  Outback's observation — that
+communication rounds, not compute, bound disaggregated-memory throughput —
+says exactly this gap is the throughput ceiling.  ``make_dex_engine(...,
+pipeline=True)`` therefore returns an :class:`EnginePipeline`: a two-stage
+software pipeline over a batch queue in which **step s executes batch
+B_s's front half (route round + version-checked cached descent + scan
+hops) fused with batch B_{s-1}'s back half (fused request/response
+``all_to_all`` + leaf apply + result return)** inside one jitted dispatch.
+The collectives of B_{s-1}'s write round are hidden under B_s's descent.
+
+Correctness over the one-batch overlap window:
+
+* **Navigation is static within a pipeline run.**  The leaf apply mutates
+  only leaf key/value rows and occupancy; splits shed ``STATUS_SPLIT`` to
+  the SMO path (settled between pipeline flushes), so inner nodes, the top
+  tree and leaf *identity* never move while batches are in flight.  A
+  front-half descent therefore always lands on the correct leaf gid — only
+  the leaf's *contents* can be one batch stale.
+* **Version stamps detect the overlap.**  The front half stamps the leaf
+  version (and each scan hop's version) it descended through into the
+  carry.  When the back half runs one step later it re-reads the version
+  table — which by then includes the overlapped batch's bumps — and any
+  mismatch marks the lane *stale-forced*: lookups and updates are forced
+  onto the two-sided offload tags (``MSG_OFF_LOOKUP``/``MSG_OFF_UPDATE``),
+  so the owning memory column re-resolves them against the authoritative
+  post-overlap pool.  Inserts never need forcing: ``MSG_INSERT`` carries
+  only the (stable) leaf gid and the apply re-searches the leaf anyway.
+* **Writers stay ordered.**  The phase-offset batch priorities already
+  order conflicting writers *within* a batch; across the overlap window
+  batches apply strictly in order (step s applies B_{s-1} before step s+1
+  applies B_s), so the sequential batch order is preserved exactly.
+* **Conservative conflict stall.**  Scan lanes whose window crossed a leaf
+  whose version moved are stall-shed (``taken = -1``, ``shed``) onto the
+  repo's standard shed-and-retry lane — the conservative fallback for the
+  one shape whose partial window cannot be patched cheaply.
+
+Stale-forced lanes and stall-shed scans are counted in
+``STAT_PIPE_STALLS`` (always 0 in batch-synchronous mode).  Results, pool,
+occupancy and version evolution are bit-identical to the synchronous
+engine run batch-by-batch on the same inputs (modulo shed-and-retry lanes,
+which both modes surface through ``EngineResult.shed``); per-chip cache
+contents and hit/fetch counters may diverge inside the overlap window —
+a performance artifact, not a correctness one.
 """
 
 from __future__ import annotations
@@ -63,7 +111,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import routing
 from repro.core.dex import (
@@ -78,6 +126,7 @@ from repro.core.dex import (
     STAT_OFFLOAD_GROUPS,
     STAT_OFFLOADS,
     STAT_OPS,
+    STAT_PIPE_STALLS,
     STAT_SPLITS,
     STAT_WRITES,
     DexCache,
@@ -157,6 +206,100 @@ def _empty_result(b, mc, has_scan):
     )
 
 
+class EnginePipeline:
+    """Two-stage software pipeline over a batch queue (prologue /
+    steady-state / drain).
+
+    ``push(opcodes, keys, values)`` dispatches one fused step — the new
+    batch's front half overlapped with the previous batch's back half —
+    and returns the **previous** batch's :class:`EngineResult` (device
+    futures; ``np.asarray`` them to block).  The first push primes the
+    pipeline and returns ``None``; ``drain()`` pushes an inactive batch to
+    flush the last in-flight back half and returns the final result.
+    Every pushed batch must share one lane width.
+
+    ``step_fn`` (the unjitted step) and ``init_carry(b)`` are exposed so
+    benchmarks can run ``routing.trace_collective_counts`` over one steady
+    -state step; ``plan`` carries the static collective structure like the
+    synchronous engine's.
+    """
+
+    def __init__(self, step, init_carry, plan):
+        self.step_fn = step
+        self.init_carry = init_carry
+        self.plan = plan
+        self._step = jax.jit(step)
+        self._state = None
+        self._carry = None
+        self._width = None
+        self._primed = False
+
+    @property
+    def state(self):
+        """Index state as of the last completed back half."""
+        return self._state
+
+    def start(self, state: DexState) -> "EnginePipeline":
+        """Begin a pipeline run from ``state``; resets any prior carry."""
+        self._state = state
+        self._carry = None
+        self._primed = False
+        return self
+
+    def push(self, opcodes, keys, values) -> Optional[EngineResult]:
+        if self._state is None:
+            raise RuntimeError("EnginePipeline.push before start(state)")
+        b = int(keys.shape[0])
+        if b == 0:
+            raise ValueError("pipeline batches must be non-empty")
+        if self._carry is None:
+            self._width = b
+            self._carry = self.init_carry(b)
+        elif b != self._width:
+            raise ValueError(
+                f"pipeline batches must share one width: {b} != {self._width}"
+            )
+        was_primed = self._primed
+        self._state, self._carry, result = self._step(
+            self._state, self._carry, opcodes, keys, values
+        )
+        self._primed = True
+        # the result lanes of the very first step answer the all-inactive
+        # prologue carry, not a caller batch
+        return result if was_primed else None
+
+    def drain(self) -> Optional[EngineResult]:
+        """Flush the in-flight batch; afterwards the next push re-primes."""
+        if self._state is None or not self._primed:
+            return None
+        b = self._width
+        self._state, self._carry, result = self._step(
+            self._state,
+            self._carry,
+            jnp.zeros((b,), jnp.int32),
+            jnp.full((b,), KEY_MAX, jnp.int64),
+            jnp.zeros((b,), jnp.int64),
+        )
+        self._carry = None
+        self._primed = False
+        return result
+
+    def run(self, state: DexState, batches):
+        """Convenience: stream ``batches`` (an iterable of ``(opcodes,
+        keys, values)``) through a full prologue/steady-state/drain cycle;
+        returns ``(state, [EngineResult per batch, in order])``."""
+        self.start(state)
+        results = []
+        for opc, kk, vv in batches:
+            r = self.push(opc, kk, vv)
+            if r is not None:
+                results.append(r)
+        r = self.drain()
+        if r is not None:
+            results.append(r)
+        return self._state, results
+
+
 def make_dex_engine(
     meta: PoolMeta,
     cfg: DexMeshConfig,
@@ -166,6 +309,7 @@ def make_dex_engine(
     max_count: int = DEFAULT_MAX_COUNT,
     use_kernel: bool = True,
     interpret: "bool | None" = None,
+    pipeline: bool = False,
 ):
     """Build the unified mixed-op program:
     ``(state, opcodes, keys, values) -> (state, EngineResult)``.
@@ -179,6 +323,12 @@ def make_dex_engine(
     e.g. a ``("lookup",)`` engine contains no write round or scan hops —
     this is how the thin per-op wrappers stay as lean as the programs they
     replaced.  Wrap with ``jax.jit``.
+
+    With ``pipeline=True`` the same front/back machinery is recomposed as
+    one fused *pipeline step* — batch N+1's front half next to batch N's
+    back half — and an :class:`EnginePipeline` driver is returned instead
+    of the synchronous callable (see the module docstring for the overlap
+    -window correctness argument).
 
     The returned function carries a ``plan`` attribute — the static
     collective structure ``{"route_rounds", "fused_pairs",
@@ -195,9 +345,13 @@ def make_dex_engine(
     has_writes = has_update or has_insert
     # lanes that can offload (scans never do, §7)
     has_offloadable = has_lookup or has_writes
+    # the pipelined overlap window resolves stale lookup/update lanes by
+    # forcing them onto the two-sided tags, so those branches must be
+    # compiled even under policy="fetch" whenever forcing can occur
+    needs_force = bool(pipeline) and has_writes and (has_lookup or has_update)
     # policy="fetch" statically prunes every two-sided branch: no offload
     # tags, no owner-side block walk inside the fused round
-    may_offload = has_offloadable and cfg.policy != "fetch"
+    may_offload = has_offloadable and (cfg.policy != "fetch" or needs_force)
     # the one-sided descent is dead weight only when every offloadable lane
     # is forced two-sided and no scan lanes exist
     do_descent = has_scan or (cfg.policy != "offload") or not has_offloadable
@@ -218,9 +372,22 @@ def make_dex_engine(
         float(s_per * min(meta.per_node**lvl, meta.leaves_per_subtree))
         for lvl in range(levels)
     ]
+    # carry leaves crossing a pipeline step, in fixed order (all lane-plane
+    # sharded): the front half's routed batch, descent answers and version
+    # stamps, consumed by the matching back half one step later
+    carry_keys = [
+        "q", "val", "opc", "pr", "subtree", "offl", "gid", "found", "vleaf",
+        "shed", "vseen", "lane", "dropr",
+    ]
+    if has_scan:
+        carry_keys += ["sck", "scv", "taken", "hgid", "hver"]
 
-    def local_fn(pool, occupancy, cache, boundaries, miss_ema, stats, demand,
-                 versions, succ, opcodes, keys, values):
+    def _run_front(pool, cache, boundaries, miss_ema, stats, demand,
+                   versions, succ, opcodes, keys, values, *, stamp):
+        """Front half: route round, top walk + per-group offload decision,
+        version-checked cached descent and scan hops.  ``stamp=True``
+        (pipeline mode) records the version of every leaf (and scan hop)
+        the descent observed, for the back half's overlap-window check."""
         b = keys.shape[0]
         n_route = cfg.n_route
         vers = versions[0]
@@ -355,6 +522,8 @@ def make_dex_engine(
         leaf_gid = meta.node_gid(subtree, local)
 
         # --- 4. scan lanes: successor-chain sibling hops -------------------
+        hop_gids = []
+        hop_vers = []
         if has_scan:
             cnt_s = jnp.clip(
                 jnp.where(is_scan, val, 0), 0, mc
@@ -373,6 +542,11 @@ def make_dex_engine(
                 in_range = in_range & (collected < cnt_s) & (nxt >= 0)
                 gid_h = jnp.where(in_range, nxt, gid_h)
                 gid = jnp.where(in_range, gid_h, 0)
+                if stamp:
+                    hop_gids.append(
+                        jnp.where(in_range, gid_h, -1).astype(jnp.int64)
+                    )
+                    hop_vers.append(jnp.where(in_range, vers[gid], 0))
                 p_ok = routing.leaf_admit_dice(
                     gid, cfg.p_admit_leaf_pct,
                     salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
@@ -410,6 +584,107 @@ def make_dex_engine(
                 ok_scan, taken, jnp.where(is_scan & shed, -1, 0)
             ).astype(jnp.int32)
 
+        # --- front-half EMA + stats ----------------------------------------
+        g_miss = jax.lax.psum(miss_cl, cfg.all_axes)
+        g_want = jax.lax.psum(want_cl, cfg.all_axes)
+        rates = g_miss / jnp.maximum(g_want, 1.0)
+        new_ema = jnp.where(
+            g_want[None, :, :] > 0,
+            cfg.ema_decay * miss_ema + (1 - cfg.ema_decay) * rates[None, :, :],
+            miss_ema,
+        )
+        f_upd = jnp.zeros((1, N_STATS), jnp.int64)
+        f_upd = f_upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
+        f_upd = f_upd.at[0, STAT_HITS].set(n_hit)
+        f_upd = f_upd.at[0, STAT_FETCHES].set(n_fetch)
+        f_upd = f_upd.at[0, STAT_DROPS].set(
+            jnp.sum(dropped_r).astype(jnp.int64)
+        )
+        if has_offloadable:
+            # group decisions are mesh-global: count them once, on the
+            # first device
+            first = (dev == 0).astype(jnp.int64)
+            f_upd = f_upd.at[0, STAT_OFFLOAD_GROUPS].set(first * n_off_groups)
+            f_upd = f_upd.at[0, STAT_FETCH_GROUPS].set(first * n_fetch_groups)
+
+        carry = {
+            "q": q, "val": val, "opc": opc, "pr": pr, "subtree": subtree,
+            "offl": offl, "gid": leaf_gid, "found": found_leaf,
+            "vleaf": vals_leaf, "shed": shed, "lane": lane,
+            "dropr": dropped_r,
+        }
+        if stamp:
+            gsafe = jnp.clip(leaf_gid, 0, n_nodes_total - 1)
+            carry["vseen"] = jnp.where(live, vers[gsafe], 0)
+        if has_scan:
+            carry.update(sck=sc_k, scv=sc_v, taken=taken)
+            if stamp:
+                if hop_gids:
+                    carry["hgid"] = jnp.stack(hop_gids, axis=-1)
+                    carry["hver"] = jnp.stack(hop_vers, axis=-1)
+                else:
+                    carry["hgid"] = jnp.full(q.shape + (0,), -1, jnp.int64)
+                    carry["hver"] = jnp.zeros(q.shape + (0,), vers.dtype)
+        return carry, new_cache, new_ema, new_demand, f_upd
+
+    def _run_back(pool, occupancy, cache, versions, carry, b, *, check_stale):
+        """Back half: overlap-window stale check (pipeline mode), the fused
+        tagged request/response all_to_all pair, the conflict-resolved leaf
+        apply, version bumps + cache write-through, and the reverse route
+        exchange returning per-lane results."""
+        n_route = cfg.n_route
+        vers = versions[0]
+        n_nodes_total = vers.shape[0]
+        q = carry["q"]
+        val = carry["val"]
+        opc = carry["opc"]
+        pr = carry["pr"]
+        subtree = carry["subtree"]
+        offl = carry["offl"]
+        leaf_gid = carry["gid"]
+        found_leaf = carry["found"]
+        vals_leaf = carry["vleaf"]
+        shed = carry["shed"]
+        lane = carry["lane"]
+        dropped_r = carry["dropr"]
+        cap = lane.shape[1]
+        live = q != KEY_MAX
+        is_scan = live & (opc == OP_SCAN) if has_scan else jnp.zeros(q.shape, bool)
+        col = (subtree // s_per).astype(jnp.int32)
+        if has_scan:
+            sc_k, sc_v, taken = carry["sck"], carry["scv"], carry["taken"]
+
+        # --- overlap-window stale check (pipeline back half only) ----------
+        n_stalls = jnp.int64(0)
+        if check_stale:
+            gsafe = jnp.clip(leaf_gid, 0, n_nodes_total - 1)
+            stale = live & (vers[gsafe] != carry["vseen"])
+            # lookups/updates whose leaf the overlapped batch wrote re-run
+            # two-sided against the authoritative post-overlap pool; inserts
+            # never need forcing (the apply re-searches the leaf); already
+            # -offloaded lanes are authoritative as-is
+            force_off = (
+                stale & ~offl & ~shed & ~is_scan
+                & ((opc == OP_LOOKUP) | (opc == OP_UPDATE))
+            ) if (has_lookup or has_update) else jnp.zeros(q.shape, bool)
+            n_stalls = n_stalls + jnp.sum(force_off).astype(jnp.int64)
+            if has_scan:
+                # conservative conflict stall: a scan whose window crossed
+                # any written leaf sheds to the retry lane
+                hg, hv = carry["hgid"], carry["hver"]
+                hvalid = hg >= 0
+                hsafe = jnp.clip(hg, 0, n_nodes_total - 1)
+                hstale = jnp.any(hvalid & (vers[hsafe] != hv), axis=-1)
+                sc_stale = is_scan & ~shed & (stale | hstale)
+                n_stalls = n_stalls + jnp.sum(sc_stale).astype(jnp.int64)
+                sc_k = jnp.where(sc_stale[:, None], KEY_MAX, sc_k)
+                sc_v = jnp.where(sc_stale[:, None], 0, sc_v)
+                taken = jnp.where(sc_stale, -1, taken).astype(jnp.int32)
+                shed = shed | sc_stale
+            offl_eff = offl | force_off
+        else:
+            offl_eff = offl
+
         # --- 5. ONE fused tagged request/response all_to_all pair ----------
         rstat = jnp.zeros(q.shape, jnp.int32)
         rval = jnp.zeros(q.shape, jnp.int64)
@@ -422,31 +697,33 @@ def make_dex_engine(
         new_pk, new_pv, new_occ = (
             pool.pool_keys, pool.pool_values, occupancy
         )
+        new_cache = cache
         if do_fused:
             tag = jnp.zeros(q.shape, jnp.int64)
             ok_lane = live & ~shed
             if has_lookup and may_offload:
                 tag = jnp.where(
-                    ok_lane & (opc == OP_LOOKUP) & offl, MSG_OFF_LOOKUP, tag
+                    ok_lane & (opc == OP_LOOKUP) & offl_eff, MSG_OFF_LOOKUP,
+                    tag,
                 )
             if has_update:
                 if may_offload:
                     tag = jnp.where(
-                        ok_lane & (opc == OP_UPDATE) & offl,
+                        ok_lane & (opc == OP_UPDATE) & offl_eff,
                         MSG_OFF_UPDATE, tag,
                     )
                 tag = jnp.where(
-                    ok_lane & (opc == OP_UPDATE) & ~offl & found_leaf,
+                    ok_lane & (opc == OP_UPDATE) & ~offl_eff & found_leaf,
                     MSG_UPDATE, tag,
                 )
             if has_insert:
                 if may_offload:
                     tag = jnp.where(
-                        ok_lane & (opc == OP_INSERT) & offl,
+                        ok_lane & (opc == OP_INSERT) & offl_eff,
                         MSG_OFF_INSERT, tag,
                     )
                 tag = jnp.where(
-                    ok_lane & (opc == OP_INSERT) & ~offl, MSG_INSERT, tag
+                    ok_lane & (opc == OP_INSERT) & ~offl_eff, MSG_INSERT, tag
                 )
             send = tag != MSG_NONE
             dest = jnp.where(send, col, cfg.n_memory)
@@ -565,7 +842,7 @@ def make_dex_engine(
             r_ins = back[..., 3] != 0
             rrow_v = back[..., RESP_HEAD:]
             delivered = send & ~dropped_w
-            is_off_lane = offl & send
+            is_off_lane = offl_eff & send
             n_off_msgs = jnp.sum(delivered & is_off_lane).astype(jnp.int64)
             n_write_msgs = jnp.sum(
                 delivered & ~is_off_lane & (opc != OP_LOOKUP)
@@ -599,6 +876,14 @@ def make_dex_engine(
                 # under a current version stamp; leaving the old stamp makes
                 # the version check refetch the whole row instead
                 u_hit = chit & (opc == OP_UPDATE) & ~r_ins
+                if check_stale:
+                    # a stale-forced update resolved two-sided against a
+                    # leaf the overlapped batch moved: the chip's cached
+                    # keys plane is one batch behind the response's value
+                    # row, so an in-place refresh would stitch a misaligned
+                    # pair under a current version stamp.  Leave the old
+                    # stamp; the bumped version forces a clean refetch.
+                    u_hit = u_hit & ~force_off
                 sidx = jnp.where(u_hit, set_idx, cfg.cache_sets)
                 cvals = new_cache.values.at[0, sidx, way].set(
                     rrow_v, mode="drop"
@@ -620,12 +905,12 @@ def make_dex_engine(
         if has_lookup:
             is_lk = live & (opc == OP_LOOKUP)
             out_found = jnp.where(
-                offl,
+                offl_eff,
                 (rstat == STATUS_OK) & send & ~dropped_w,
                 found_leaf & ~shed,
             ) & is_lk
             out_val = jnp.where(
-                out_found, jnp.where(offl, rval, vals_leaf), 0
+                out_found, jnp.where(offl_eff, rval, vals_leaf), 0
             )
         status = jnp.full(q.shape, STATUS_MISS, jnp.int32)
         if has_writes:
@@ -638,35 +923,16 @@ def make_dex_engine(
             )
         lane_shed = shed | (send & dropped_w)
 
-        # --- 8. EMA + stats -------------------------------------------------
-        g_miss = jax.lax.psum(miss_cl, cfg.all_axes)
-        g_want = jax.lax.psum(want_cl, cfg.all_axes)
-        rates = g_miss / jnp.maximum(g_want, 1.0)
-        new_ema = jnp.where(
-            g_want[None, :, :] > 0,
-            cfg.ema_decay * miss_ema + (1 - cfg.ema_decay) * rates[None, :, :],
-            miss_ema,
-        )
+        # --- 8. back-half stats --------------------------------------------
         n_shed = jnp.sum(lane_shed & live).astype(jnp.int64)
-        upd = jnp.zeros((1, N_STATS), jnp.int64)
-        upd = upd.at[0, STAT_OPS].set(jnp.sum(live).astype(jnp.int64))
-        upd = upd.at[0, STAT_HITS].set(n_hit)
-        upd = upd.at[0, STAT_FETCHES].set(n_fetch)
-        upd = upd.at[0, STAT_OFFLOADS].set(n_off_msgs)
-        upd = upd.at[0, STAT_WRITES].set(n_write_msgs)
-        upd = upd.at[0, STAT_DROPS].set(
-            jnp.sum(dropped_r).astype(jnp.int64) + n_shed
-        )
-        upd = upd.at[0, STAT_SPLITS].set(
+        b_upd = jnp.zeros((1, N_STATS), jnp.int64)
+        b_upd = b_upd.at[0, STAT_OFFLOADS].set(n_off_msgs)
+        b_upd = b_upd.at[0, STAT_WRITES].set(n_write_msgs)
+        b_upd = b_upd.at[0, STAT_DROPS].set(n_shed)
+        b_upd = b_upd.at[0, STAT_SPLITS].set(
             jnp.sum(status == STATUS_SPLIT).astype(jnp.int64)
         )
-        if has_offloadable:
-            # group decisions are mesh-global: count them once, on the
-            # first device
-            first = (dev == 0).astype(jnp.int64)
-            upd = upd.at[0, STAT_OFFLOAD_GROUPS].set(first * n_off_groups)
-            upd = upd.at[0, STAT_FETCH_GROUPS].set(first * n_fetch_groups)
-        new_stats = stats + upd
+        b_upd = b_upd.at[0, STAT_PIPE_STALLS].set(n_stalls)
 
         # --- 9. results back to the requesting lanes ------------------------
         fields = [
@@ -690,14 +956,10 @@ def make_dex_engine(
         )
         if not has_writes:
             res_status = jnp.where(
-                dropped_r & (keys != KEY_MAX), STATUS_SHED, STATUS_MISS
+                dropped_r & (q.shape[0] > 0), STATUS_SHED, STATUS_MISS
             ).astype(jnp.int32)
         res_shed = (out[..., 3] != 0) | dropped_r
-
-        outs = [new_cache, new_ema, new_stats, new_demand,
-                res_found, res_val, res_status, res_shed]
-        if has_writes:
-            outs = [new_pk, new_pv, new_occ, new_versions] + outs
+        lane_out = [res_found, res_val, res_status, res_shed]
         if has_scan:
             res_taken = jnp.where(
                 dropped_r, -1, out[..., 4]
@@ -708,7 +970,53 @@ def make_dex_engine(
             res_v = jnp.where(
                 dropped_r[:, None], 0, out[..., 5 + mc : 5 + 2 * mc]
             )
-            outs += [res_k, res_v, res_taken]
+            lane_out += [res_k, res_v, res_taken]
+        return (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
+                lane_out)
+
+    def local_fn(pool, occupancy, cache, boundaries, miss_ema, stats, demand,
+                 versions, succ, opcodes, keys, values):
+        b = keys.shape[0]
+        carry, new_cache, new_ema, new_demand, f_upd = _run_front(
+            pool, cache, boundaries, miss_ema, stats, demand, versions, succ,
+            opcodes, keys, values, stamp=False,
+        )
+        (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
+         lane_out) = _run_back(
+            pool, occupancy, new_cache, versions, carry, b, check_stale=False,
+        )
+        new_stats = stats + f_upd + b_upd
+        outs = [new_cache, new_ema, new_stats, new_demand] + lane_out
+        if has_writes:
+            outs = [new_pk, new_pv, new_occ, new_versions] + outs
+        return tuple(outs)
+
+    def local_pipe(pool, occupancy, cache, boundaries, miss_ema, stats,
+                   demand, versions, succ, carry_in, opcodes, keys, values):
+        # one pipeline step: the NEW batch's front half next to the CARRIED
+        # batch's back half.  The back half probes the cache as returned by
+        # this step's front (an elementwise composition — the two halves
+        # share no collective data dependency, so XLA is free to overlap
+        # the back half's all_to_all with the front half's fetch rounds).
+        b = keys.shape[0]
+        with jax.named_scope("pipe/front"), routing.trace_phase("pipe/front"):
+            carry_out, cache_f, new_ema, new_demand, f_upd = _run_front(
+                pool, cache, boundaries, miss_ema, stats, demand, versions,
+                succ, opcodes, keys, values, stamp=True,
+            )
+        carried = dict(zip(carry_keys, carry_in))
+        with jax.named_scope("pipe/back"), routing.trace_phase("pipe/back"):
+            (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
+             lane_out) = _run_back(
+                pool, occupancy, cache_f, versions, carried, b,
+                check_stale=True,
+            )
+        new_stats = stats + f_upd + b_upd
+        outs = [new_cache, new_ema, new_stats, new_demand]
+        outs += [carry_out[k] for k in carry_keys]
+        outs += lane_out
+        if has_writes:
+            outs = [new_pk, new_pv, new_occ, new_versions] + outs
         return tuple(outs)
 
     dev_spec = P(cfg.all_axes)
@@ -726,20 +1034,105 @@ def make_dex_engine(
     mem = P(cfg.memory_axis)
     lanes = P(cfg.all_axes)
 
-    out_specs = []
-    if has_writes:
-        out_specs += [mem, mem, mem, dev_spec]
-    out_specs += [cache_specs, dev_spec, dev_spec, dev_spec,
-                  lanes, lanes, lanes, lanes]
-    if has_scan:
-        out_specs += [lanes, lanes, lanes]
+    plan = {
+        "route_rounds": 1,
+        "fused_pairs": 1 if do_fused else 0,
+        "descent_levels": (levels if do_leaf else levels - 1)
+        if do_descent else 0,
+        "scan_hops": hops,
+        "pipeline": bool(pipeline),
+        # jax.named_scope labels annotating the jitted program for profiler
+        # traces (repro/obs/trace.py profiler_annotations); metadata only —
+        # they add no ops and no collectives
+        "phases": ("dex/route", "dex/descent", "dex/scan", "dex/fused_a2a",
+                   "dex/apply", "dex/route_back"),
+    }
 
-    sharded = routing.shard_map_compat(
-        local_fn,
+    if not pipeline:
+        sharded = routing.shard_map_compat(
+            local_fn,
+            mesh=mesh,
+            in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
+                      dev_spec, dev_spec, dev_spec, lanes, lanes, lanes),
+            out_specs=tuple(
+                ([mem, mem, mem, dev_spec] if has_writes else [])
+                + [cache_specs, dev_spec, dev_spec, dev_spec,
+                   lanes, lanes, lanes, lanes]
+                + ([lanes, lanes, lanes] if has_scan else [])
+            ),
+        )
+
+        enabled_codes = [
+            code for flag, code in [
+                (has_lookup, OP_LOOKUP), (has_update, OP_UPDATE),
+                (has_insert, OP_INSERT), (has_scan, OP_SCAN),
+            ] if flag
+        ]
+
+        def engine(state: DexState, opcodes: jax.Array, keys: jax.Array,
+                   values: jax.Array):
+            if keys.shape[0] == 0:
+                return state, _empty_result(0, mc, has_scan)
+            opcodes = opcodes.astype(jnp.int32)
+            keys = keys.astype(jnp.int64)
+            # opcodes outside the static ``ops`` set are true no-ops: their
+            # keys are masked before routing, so they consume no bucket
+            # capacity, mint no demand/stats and return inactive results
+            allowed = jnp.zeros(opcodes.shape, bool)
+            for code in enabled_codes:
+                allowed = allowed | (opcodes == code)
+            keys = jnp.where(allowed, keys, KEY_MAX)
+            res = sharded(
+                state.pool, state.occupancy, state.cache, state.boundaries,
+                state.miss_ema, state.stats, state.route_demand,
+                state.versions, state.succ, opcodes, keys,
+                values.astype(jnp.int64),
+            )
+            res = list(res)
+            new_state = state
+            if has_writes:
+                new_pk, new_pv, new_occ, new_versions = res[:4]
+                res = res[4:]
+                new_state = new_state._replace(
+                    pool=state.pool._replace(
+                        pool_keys=new_pk, pool_values=new_pv
+                    ),
+                    occupancy=new_occ,
+                    versions=new_versions,
+                )
+            new_cache, new_ema, new_stats, new_demand = res[:4]
+            found, vals, status, shed = res[4:8]
+            new_state = new_state._replace(
+                cache=new_cache, miss_ema=new_ema, stats=new_stats,
+                route_demand=new_demand,
+            )
+            result = EngineResult(found=found, values=vals, status=status,
+                                  shed=shed)
+            if has_scan:
+                sk, sv, tk = res[8:11]
+                result = result._replace(
+                    scan_keys=sk, scan_values=sv, taken=tk
+                )
+            return new_state, result
+
+        engine.plan = plan
+        return engine
+
+    # ---- pipeline=True: the fused two-stage step + host-side driver -------
+    carry_specs = tuple(lanes for _ in carry_keys)
+    sharded_pipe = routing.shard_map_compat(
+        local_pipe,
         mesh=mesh,
         in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
-                  dev_spec, dev_spec, dev_spec, lanes, lanes, lanes),
-        out_specs=tuple(out_specs),
+                  dev_spec, dev_spec, dev_spec, carry_specs,
+                  lanes, lanes, lanes),
+        out_specs=tuple(
+            ([mem, mem, mem, dev_spec] if has_writes else [])
+            + [cache_specs, dev_spec, dev_spec, dev_spec]
+            + list(carry_specs)
+            + [lanes, lanes, lanes, lanes]
+            + ([lanes, lanes, lanes] if has_scan else [])
+        ),
     )
 
     enabled_codes = [
@@ -748,24 +1141,62 @@ def make_dex_engine(
             (has_insert, OP_INSERT), (has_scan, OP_SCAN),
         ] if flag
     ]
+    lane_sharding = NamedSharding(mesh, lanes)
 
-    def engine(state: DexState, opcodes: jax.Array, keys: jax.Array,
-               values: jax.Array):
-        if keys.shape[0] == 0:
-            return state, _empty_result(0, mc, has_scan)
+    def init_carry(b_global: int):
+        """The all-inactive prologue carry for a global batch width: every
+        routed slot holds the KEY_MAX sentinel, so the first step's back
+        half is a structural no-op (no sends, no writes, no results)."""
+        n_dev = cfg.n_devices
+        if b_global % n_dev:
+            raise ValueError(
+                f"batch width {b_global} must divide over {n_dev} devices"
+            )
+        b_loc = b_global // n_dev
+        cap0 = routing.route_capacity(
+            b_loc, cfg.n_route, cfg.route_capacity_factor
+        )
+        q_g = n_dev * cfg.n_route * cap0
+        h = max(hops - 1, 0)
+        carry = {
+            "q": jnp.full((q_g,), KEY_MAX, jnp.int64),
+            "val": jnp.zeros((q_g,), jnp.int64),
+            "opc": jnp.zeros((q_g,), jnp.int32),
+            "pr": jnp.zeros((q_g,), jnp.int64),
+            "subtree": jnp.zeros((q_g,), jnp.int32),
+            "offl": jnp.zeros((q_g,), bool),
+            "gid": jnp.zeros((q_g,), jnp.int64),
+            "found": jnp.zeros((q_g,), bool),
+            "vleaf": jnp.zeros((q_g,), jnp.int64),
+            "shed": jnp.zeros((q_g,), bool),
+            "vseen": jnp.zeros((q_g,), jnp.int32),
+            "lane": jnp.zeros((n_dev * cfg.n_route, cap0), jnp.int32),
+            "dropr": jnp.zeros((b_global,), bool),
+        }
+        if has_scan:
+            carry.update(
+                sck=jnp.full((q_g, mc), KEY_MAX, jnp.int64),
+                scv=jnp.zeros((q_g, mc), jnp.int64),
+                taken=jnp.zeros((q_g,), jnp.int32),
+                hgid=jnp.full((q_g, h), -1, jnp.int64),
+                hver=jnp.zeros((q_g, h), jnp.int32),
+            )
+        return tuple(
+            jax.device_put(carry[k], lane_sharding) for k in carry_keys
+        )
+
+    def pipe_step(state: DexState, carry, opcodes, keys, values):
         opcodes = opcodes.astype(jnp.int32)
         keys = keys.astype(jnp.int64)
-        # opcodes outside the static ``ops`` set are true no-ops: their
-        # keys are masked before routing, so they consume no bucket
-        # capacity, mint no demand/stats and return inactive results
         allowed = jnp.zeros(opcodes.shape, bool)
         for code in enabled_codes:
             allowed = allowed | (opcodes == code)
         keys = jnp.where(allowed, keys, KEY_MAX)
-        res = sharded(
+        res = sharded_pipe(
             state.pool, state.occupancy, state.cache, state.boundaries,
             state.miss_ema, state.stats, state.route_demand, state.versions,
-            state.succ, opcodes, keys, values.astype(jnp.int64),
+            state.succ, tuple(carry), opcodes, keys,
+            values.astype(jnp.int64),
         )
         res = list(res)
         new_state = state
@@ -778,28 +1209,25 @@ def make_dex_engine(
                 versions=new_versions,
             )
         new_cache, new_ema, new_stats, new_demand = res[:4]
-        found, vals, status, shed = res[4:8]
+        res = res[4:]
         new_state = new_state._replace(
             cache=new_cache, miss_ema=new_ema, stats=new_stats,
             route_demand=new_demand,
         )
+        carry_out = tuple(res[: len(carry_keys)])
+        res = res[len(carry_keys):]
+        found, vals, status, shed = res[:4]
         result = EngineResult(found=found, values=vals, status=status,
                               shed=shed)
         if has_scan:
-            sk, sv, tk = res[8:11]
+            sk, sv, tk = res[4:7]
             result = result._replace(scan_keys=sk, scan_values=sv, taken=tk)
-        return new_state, result
+        return new_state, carry_out, result
 
-    engine.plan = {
-        "route_rounds": 1,
-        "fused_pairs": 1 if do_fused else 0,
-        "descent_levels": (levels if do_leaf else levels - 1)
-        if do_descent else 0,
-        "scan_hops": hops,
-        # jax.named_scope labels annotating the jitted program for profiler
-        # traces (repro/obs/trace.py profiler_annotations); metadata only —
-        # they add no ops and no collectives
-        "phases": ("dex/route", "dex/descent", "dex/scan", "dex/fused_a2a",
-                   "dex/apply", "dex/route_back"),
-    }
-    return engine
+    plan = dict(plan)
+    plan.update(
+        pipeline=True,
+        stages=("front", "back"),
+        overlap_phases=("pipe/front", "pipe/back"),
+    )
+    return EnginePipeline(pipe_step, init_carry, plan)

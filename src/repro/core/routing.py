@@ -23,6 +23,8 @@ duck-typed to keep this module import-light.
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -122,23 +124,65 @@ def unpack_to_lanes(resp: jax.Array, lane_of_slot: jax.Array, b: int, fill):
 # trace-time collective bookkeeping: every ``all_to_all`` issued while
 # tracing a mesh program bumps these, so a benchmark can count the
 # collective rounds of a jitted op without parsing HLO
-# (:func:`trace_collective_counts`)
+# (:func:`trace_collective_counts`).  When a :func:`trace_phase` label is
+# active the bump is also attributed to that phase — the pipelined engine
+# labels its two stages so benchmarks can assert WHICH half of the step
+# carries each collective (the overlap story: the fused write round rides
+# in the back half, hidden under the next batch's descent).
 _TRACE_COUNTS = {"all_to_all": 0, "route_exchange": 0}
+_TRACE_PHASE: list = [None]
+_TRACE_BY_PHASE: dict = {}
 
 
-def trace_collective_counts(fn, *args, **kwargs):
+@contextlib.contextmanager
+def trace_phase(label: str):
+    """Attribute collectives issued inside this block to ``label`` during
+    abstract tracing (metadata only — adds nothing to the program)."""
+    prev = _TRACE_PHASE[0]
+    _TRACE_PHASE[0] = label
+    try:
+        yield
+    finally:
+        _TRACE_PHASE[0] = prev
+
+
+def _count_collective(kind: str) -> None:
+    _TRACE_COUNTS[kind] += 1
+    label = _TRACE_PHASE[0]
+    if label is not None:
+        per = _TRACE_BY_PHASE.setdefault(
+            label, {"all_to_all": 0, "route_exchange": 0}
+        )
+        per[kind] += 1
+
+
+def trace_collective_counts(fn, *args, by_phase: bool = False, **kwargs):
     """Abstractly trace ``fn(*args, **kwargs)`` and return how many
     ``all_to_all`` collectives and ``route_exchange`` invocations the traced
     program contains — the honest "communication rounds per batch" metric
-    the engine benchmark asserts on (benchmarks/fig13_mesh_engine.py)."""
+    the engine benchmark asserts on (benchmarks/fig13_mesh_engine.py).
+
+    With ``by_phase=True`` the result gains a ``"phases"`` entry splitting
+    the counts by the :func:`trace_phase` labels active when each collective
+    was issued (the pipelined engine labels ``pipe/front``/``pipe/back``)."""
     before = dict(_TRACE_COUNTS)
+    before_phase = {k: dict(v) for k, v in _TRACE_BY_PHASE.items()}
     jax.eval_shape(fn, *args, **kwargs)
-    return {k: _TRACE_COUNTS[k] - before[k] for k in _TRACE_COUNTS}
+    out = {k: _TRACE_COUNTS[k] - before[k] for k in _TRACE_COUNTS}
+    if by_phase:
+        phases = {}
+        for label, per in _TRACE_BY_PHASE.items():
+            prev = before_phase.get(label, {})
+            diff = {k: per[k] - prev.get(k, 0) for k in per}
+            if any(diff.values()):
+                phases[label] = diff
+        out["phases"] = phases
+    return out
 
 
 def a2a(x: jax.Array, axis: str) -> jax.Array:
     """[n_axis, ...] per-destination buffers -> per-source buffers."""
-    _TRACE_COUNTS["all_to_all"] += 1
+    _count_collective("all_to_all")
     return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
 
 
@@ -150,7 +194,7 @@ def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.A
     permutation (and must be applied in the opposite order on the way back,
     ``reverse=True``).
     """
-    _TRACE_COUNTS["route_exchange"] += 1
+    _count_collective("route_exchange")
     if len(cfg.route_axes) == 1:
         return a2a(buf, cfg.route_axes[0])
     a0, a1 = cfg.route_axes
@@ -158,11 +202,11 @@ def route_exchange(buf: jax.Array, cfg, mesh, *, reverse: bool = False) -> jax.A
     r = buf.reshape((buf.shape[0] // s1, s1) + buf.shape[1:])
 
     def x0(r):
-        _TRACE_COUNTS["all_to_all"] += 1
+        _count_collective("all_to_all")
         return jax.lax.all_to_all(r, a0, split_axis=0, concat_axis=0)
 
     def x1(r):
-        _TRACE_COUNTS["all_to_all"] += 1
+        _count_collective("all_to_all")
         r = jnp.swapaxes(r, 0, 1)
         r = jax.lax.all_to_all(r, a1, split_axis=0, concat_axis=0)
         return jnp.swapaxes(r, 0, 1)

@@ -387,6 +387,11 @@ class Counters:
     #                               mesh's STAT_OFFLOAD_GROUPS)
     fetch_groups: int = 0         # groups that stayed one-sided
     #                               (STAT_FETCH_GROUPS analogue)
+    pipeline_stalls: int = 0      # pipelined overlap window: lanes whose
+    #                               leaf the previous window wrote — the
+    #                               version check catches the stale descent
+    #                               and the lane re-resolves two-sided
+    #                               (STAT_PIPE_STALLS analogue)
 
     def add_read(self, nbytes: int = NODE_BYTES) -> None:
         self.rdma_read += 1
@@ -458,6 +463,17 @@ class SimConfig:
                                             # write-staleness marks flush at
                                             # window boundaries (the pmax
                                             # version sync)
+    pipeline_overlap: bool = False          # two-stage pipelined engine
+                                            # (engine.py pipeline=True):
+                                            # window N+1's descents overlap
+                                            # window N's write round, so a
+                                            # descent into a leaf the
+                                            # previous window wrote is one
+                                            # window stale — priced as a
+                                            # forced two-sided re-resolution
+                                            # (the conservative conflict
+                                            # fallback; needs
+                                            # coherence_batch > 1)
 
     # --- cache behaviour (Fig. 9) ---
     cache_leaves: bool = True               # False for Sherman/SMART-like
@@ -593,6 +609,9 @@ class Simulator:
         # to the next window boundary
         self._window_fetched = [set() for _ in range(cfg.n_compute)]
         self._pending_writes = []           # (writer server, leaf)
+        # leaves written by the immediately-preceding window — the
+        # pipelined overlap set (pipeline_overlap pricing)
+        self._prev_window_writes = set()
         self._ops_in_window = 0
         self.mem_busy = np.zeros((cfg.n_mem_servers,), dtype=np.float64)
         self.mem_reqs = np.zeros((cfg.n_mem_servers,), dtype=np.int64)
@@ -700,6 +719,9 @@ class Simulator:
                 if s not in ws and nid in self.caches[s]:
                     self.stale[s].add(nid)
                     self.counters[s].coherence_invalidations += 1
+        # rotate the overlap set: the next window's descents overlap THIS
+        # window's write round (pipeline_overlap pricing)
+        self._prev_window_writes = {nid for _, nid in self._pending_writes}
         self._pending_writes.clear()
         for w in self._window_fetched:
             w.clear()
@@ -938,6 +960,21 @@ class Simulator:
         for depth, nid in enumerate(path):
             lvl = int(self.tree.LV[nid])
             if (
+                cfg.pipeline_overlap
+                and lvl == 0
+                and nid in self._prev_window_writes
+            ):
+                # pipelined overlap window: this leaf was written by the
+                # immediately-preceding window, so a descent that overlapped
+                # that window's write round read it one batch stale.  The
+                # version check catches it in the back half and the lane
+                # re-resolves two-sided against the owning memory server —
+                # the conservative conflict fallback (scans stall-shed and
+                # retry at the same price)
+                c.pipeline_stalls += 1
+                self._offload(server, nid, 1)
+                return visited, True
+            if (
                 self._group_active
                 and cfg.offloading
                 and not group_tried
@@ -1047,7 +1084,13 @@ class Simulator:
         if cfg.logical_partitioning and not shared:
             if cfg.write_through:
                 c.add_write()                # write-through: always go home
-                self.op_clock[server] += cfg.t_rdma_write
+                # pipelined engine: the leaf write-back rides the fused
+                # round that overlaps the NEXT window's descents — the verb
+                # still crosses the NIC (bandwidth / message-rate caps
+                # unchanged) but its latency leaves the op's critical path
+                # (cost_model thread cap)
+                if not cfg.pipeline_overlap:
+                    self.op_clock[server] += cfg.t_rdma_write
                 self._write_coherence(server, leaf)
             elif was_cached or (self.cfg.caching and leaf in cache):
                 cache.mark_dirty(leaf)       # deferred write-back
@@ -1118,7 +1161,11 @@ class Simulator:
                 cache.mark_dirty(leaf)
             else:
                 c.add_write()
-                self.op_clock[server] += cfg.t_rdma_write
+                # write-through + pipelined: the insert's leaf write rides
+                # the overlapped fused round like an update's (latency off
+                # the critical path, verb still counted)
+                if not (cfg.write_through and cfg.pipeline_overlap):
+                    self.op_clock[server] += cfg.t_rdma_write
                 if cfg.write_through:
                     # an insert shifts the leaf's key set: the writer drops
                     # its own copy, siblings' copies go stale
@@ -1178,6 +1225,7 @@ class Simulator:
             out.smo_inserts += c.smo_inserts
             out.offload_groups += c.offload_groups
             out.fetch_groups += c.fetch_groups
+            out.pipeline_stalls += c.pipeline_stalls
         return out
 
     def cache_stats(self):

@@ -131,6 +131,12 @@ _MESH = (
            stat_const="STAT_FETCH_GROUPS", sim_field="fetch_groups",
            provenance="Fig. 12 (grouped fetch)",
            doc="contiguous same-leaf op groups coalesced into one fetch"),
+    Metric("pipeline_stalls", "events", "counter", slot=11,
+           stat_const="STAT_PIPE_STALLS", sim_field="pipeline_stalls",
+           provenance="§7 coherence under the pipelined overlap window",
+           doc="lanes whose leaf version moved inside the overlap window: "
+               "lookups/updates stale-forced two-sided, scans stall-shed "
+               "(always 0 in batch-synchronous mode)"),
 )
 
 _SIM_ONLY = (

@@ -129,10 +129,34 @@ class _Batch:
     def retry(self, op_class: str, rounds: int) -> None:
         self.record.retries[op_class] = int(rounds)
 
-    def __enter__(self) -> "_Batch":
+    # -- pipelined (cross-step) recording ---------------------------------
+    # A pipelined batch's lifetime spans two engine steps (front half in
+    # step s, back half in step s+1), so it cannot be a ``with`` block
+    # around one dispatch: open it at push time, attach externally measured
+    # spans, close it when its result lands.
+
+    def open(self) -> "_Batch":
+        """Begin the batch without a ``with`` block (see ``close``)."""
         self._t0 = time.perf_counter()
         self.record.t0 = self._t0 - self.timeline.epoch
         return self
+
+    def add_span(self, name: str, t0: float, dur: float) -> None:
+        """Attach a phase span measured externally — ``t0`` is an absolute
+        ``time.perf_counter()`` stamp (it may predate ``open``; overlap
+        windows legitimately interleave batches)."""
+        self.record.phases.append(
+            PhaseSpan(name, t0 - self.timeline.epoch, dur)
+        )
+
+    def close(self) -> BatchRecord:
+        """Finalize an ``open``\\ ed batch and append it to the timeline."""
+        self.record.dur = time.perf_counter() - self._t0
+        self.timeline.batches.append(self.record)
+        return self.record
+
+    def __enter__(self) -> "_Batch":
+        return self.open()
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.record.dur = time.perf_counter() - self._t0
@@ -154,6 +178,12 @@ class BatchTimeline:
 
     def batch(self, label: str = "batch") -> _Batch:
         return _Batch(self, label)
+
+    def open_batch(self, label: str = "batch") -> _Batch:
+        """A batch whose lifetime the caller manages explicitly (pipelined
+        execution: front and back halves land in different engine steps).
+        Call ``close()`` on the returned batch to record it."""
+        return _Batch(self, label).open()
 
     def prime(self, state_or_stats: Any) -> None:
         """Set the counter baseline (e.g. after warmup) so the first measured

@@ -440,6 +440,118 @@ def main() -> None:
             f"mixed-batch stale cached row served at lane {i}"
         )
 
+    # ---- pipelined round trip (core/engine.py, pipeline=True) -----------
+    # the same mixed traffic streamed through the continuous double-
+    # buffered service on the 8-device mesh must be lane-for-lane
+    # identical to the batch-synchronous engine AND to a phased HostBTree
+    # replay — including deliberate cross-batch same-leaf conflicts
+    # (even batches update the hot keys that odd batches read), which the
+    # version check turns into counted two-sided stalls, never stale
+    # answers.
+    def fresh_state_e():
+        st = dex_mod.init_state(pool, meta, cfg_e, bounds)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), st,
+            dex_mod.state_shardings(mesh, cfg_e)
+        )
+
+    NB, BP = 4, 512
+    hot_p = keys[1000:1008].astype(np.int64)
+    hot_lanes = np.arange(8) * (BP // 8) + 7    # one hot lane per chip
+    fresh_p = np.unique(
+        (rng.choice(keys[:-1], size=8 * NB * BP) + 1).astype(np.int64)
+    )
+    fresh_p = fresh_p[~np.isin(fresh_p, keys)]
+    batches_p, fi = [], 0
+    for bi in range(NB):
+        pick = rng.integers(0, 3, size=BP)
+        opc = np.where(
+            pick == 0, engine_mod.OP_LOOKUP,
+            np.where(pick == 1, engine_mod.OP_UPDATE, engine_mod.OP_INSERT),
+        ).astype(np.int32)
+        kk = np.empty(BP, np.int64)
+        # disjoint key regions keep the host replay order-free: a lookup
+        # never races a same-batch write and write keys are batch-unique
+        kk[pick == 0] = rng.choice(
+            keys[12_000:16_000], size=int((pick == 0).sum())
+        )
+        kk[pick == 1] = rng.choice(
+            keys[8_000:12_000], size=int((pick == 1).sum()), replace=False
+        )
+        n_ins = int((pick == 2).sum())
+        kk[pick == 2] = fresh_p[fi : fi + n_ins]
+        fi += n_ins
+        vv = rng.integers(1, 1 << 40, size=BP).astype(np.int64)
+        if bi % 2 == 0:
+            opc[hot_lanes] = engine_mod.OP_UPDATE
+            kk[hot_lanes] = hot_p
+            vv[hot_lanes] = hot_p ^ (1000 + bi)
+        else:
+            opc[hot_lanes] = engine_mod.OP_LOOKUP
+            kk[hot_lanes] = hot_p
+        batches_p.append((opc, kk, vv))
+
+    st_s = fresh_state_e()
+    res_s = []
+    for opc, kk, vv in batches_p:
+        st_s, r = eng_e(st_s, put_e(opc), put_e(kk), put_e(vv))
+        res_s.append(jax.tree.map(np.asarray, r))
+
+    pipe_m = engine_mod.make_dex_engine(
+        meta, cfg_e, mesh, ops=("lookup", "update", "insert"), max_count=1,
+        pipeline=True,
+    )
+    assert pipe_m.plan["pipeline"] is True
+    assert pipe_m.plan["overlap_phases"] == ("pipe/front", "pipe/back")
+    st_p, res_p = pipe_m.run(
+        fresh_state_e(),
+        [(put_e(o), put_e(k), put_e(v)) for o, k, v in batches_p],
+    )
+    assert len(res_p) == NB
+    res_p = [jax.tree.map(np.asarray, r) for r in res_p]
+
+    host_p = HostBTree(keys, vals, fill=0.7)
+    for bi, ((opc, kk, vv), rs, rp) in enumerate(
+        zip(batches_p, res_s, res_p)
+    ):
+        for name in ("found", "values", "status", "shed"):
+            np.testing.assert_array_equal(
+                getattr(rs, name), getattr(rp, name),
+                err_msg=f"pipelined batch {bi} diverges on {name}",
+            )
+        assert not rs.shed.any(), f"batch {bi} shed under factor-4 capacity"
+        for i in np.where(opc == engine_mod.OP_LOOKUP)[0]:
+            hv = host_p.get(int(kk[i]))
+            assert bool(rs.found[i]) == (hv is not None), (bi, i)
+            if hv is not None:
+                assert int(rs.values[i]) == hv, (
+                    f"stale value served at batch {bi} lane {i}"
+                )
+        for i in np.where(opc == engine_mod.OP_UPDATE)[0]:
+            assert rs.status[i] == write_mod.STATUS_OK, (bi, i)
+            host_p.update(int(kk[i]), int(vv[i]))
+        for i in np.where(opc == engine_mod.OP_INSERT)[0]:
+            assert rs.status[i] != write_mod.STATUS_SHED, (bi, i)
+            if rs.status[i] == write_mod.STATUS_OK:
+                host_p.insert(int(kk[i]), int(vv[i]))
+    # the drained pipeline index IS the synchronous one, bit for bit
+    np.testing.assert_array_equal(
+        np.asarray(st_s.pool.pool_keys), np.asarray(st_p.pool.pool_keys)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_s.pool.pool_values), np.asarray(st_p.pool.pool_values)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_s.versions), np.asarray(st_p.versions)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_s.occupancy), np.asarray(st_p.occupancy)
+    )
+    stalls_p = int(np.asarray(st_p.stats)[:, dex_mod.STAT_PIPE_STALLS].sum())
+    stalls_s = int(np.asarray(st_s.stats)[:, dex_mod.STAT_PIPE_STALLS].sum())
+    assert stalls_s == 0, "synchronous engine must never count pipe stalls"
+    assert stalls_p > 0, "hot cross-batch writers must stall in the window"
+
     # ---- forced-offload round trip (policy="offload"): ALL op types ------
     # through the two-sided path on 8 devices — every lookup/update/insert
     # lane ships a tagged message in the engine's fused round and the

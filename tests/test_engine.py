@@ -265,6 +265,169 @@ class TestMixedBatchPhasedReplay:
         assert host.get(int(keys[100])) == 222
 
 
+def _mixed_batches(keys, rng, n, b, *, with_scan=False, hot=None):
+    """Interleaved mixed-op batches; ``hot`` keys are woven into every
+    batch (writes on even batches, reads on odd) so adjacent batches
+    conflict on the same leaves — the overlap window's hard case."""
+    out = []
+    hi = 4 if with_scan else 3
+    for bi in range(n):
+        opc = rng.integers(0, hi, size=b).astype(np.int32)
+        kk = rng.choice(keys, size=b).astype(np.int64)
+        ins = opc == engine_mod.OP_INSERT
+        fresh = kk + rng.integers(1, 4, size=b)
+        ok_f = ~np.isin(fresh, keys)
+        kk[ins & ok_f] = fresh[ins & ok_f]
+        vals = np.zeros(b, np.int64)
+        upd = opc == engine_mod.OP_UPDATE
+        vals[upd] = kk[upd] ^ 0x5A5A
+        vals[ins] = kk[ins] * 7
+        if with_scan:
+            scn = opc == engine_mod.OP_SCAN
+            vals[scn] = rng.integers(1, MC + 1, size=int(scn.sum()))
+        if hot is not None:
+            h = len(hot)
+            if bi % 2 == 0:
+                opc[:h] = engine_mod.OP_UPDATE
+                kk[:h] = hot
+                vals[:h] = (hot ^ (100 + bi)).astype(np.int64)
+            else:
+                opc[:h] = (engine_mod.OP_SCAN if with_scan
+                           else engine_mod.OP_LOOKUP)
+                kk[:h] = hot
+                vals[:h] = 8 if with_scan else 0
+        out.append((opc, kk, vals))
+    return out
+
+
+class TestPipelinedEngine:
+    """``pipeline=True``: the two-stage software pipeline must be
+    bit-identical to the synchronous engine on interleaved mixed-op
+    batches — including same-key cross-batch update/lookup conflicts
+    (resolved by the version-check + forced two-sided fallback) and the
+    drain tail — while scans stall-shed conservatively."""
+
+    OPS = ("lookup", "update", "insert")
+
+    def test_pipelined_matches_synchronous_mixed(self):
+        keys = _dataset(4000, seed=21)
+        state, meta, cfg, mesh, _, _ = _setup(keys)
+        sync = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=self.OPS, max_count=1))
+        pipe = engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=self.OPS, max_count=1, pipeline=True)
+        rng = np.random.default_rng(22)
+        batches = _mixed_batches(keys, rng, 5, 128, hot=keys[40:48])
+
+        s_sync = state
+        sync_res = []
+        for opc, kk, vals in batches:
+            s_sync, r = sync(s_sync, jnp.asarray(opc), jnp.asarray(kk),
+                             jnp.asarray(vals))
+            sync_res.append(r)
+        s_pipe, pipe_res = pipe.run(
+            state,
+            [(jnp.asarray(o), jnp.asarray(k), jnp.asarray(v))
+             for o, k, v in batches],
+        )
+        assert len(pipe_res) == len(batches)
+        for b, (rs, rp) in enumerate(zip(sync_res, pipe_res)):
+            for field in ("found", "values", "status", "shed"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(rs, field)),
+                    np.asarray(getattr(rp, field)),
+                    err_msg=f"batch {b} {field}",
+                )
+        # the drained index is the synchronous one, bit for bit
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.pool.pool_keys),
+            np.asarray(s_pipe.pool.pool_keys))
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.pool.pool_values),
+            np.asarray(s_pipe.pool.pool_values))
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.versions), np.asarray(s_pipe.versions))
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.occupancy), np.asarray(s_pipe.occupancy))
+        # the hot-key conflicts stalled lanes in the overlap window; the
+        # synchronous engine never stalls
+        st_p = np.asarray(s_pipe.stats).sum(axis=0)
+        st_s = np.asarray(s_sync.stats).sum(axis=0)
+        assert int(st_p[dex_mod.STAT_PIPE_STALLS]) > 0
+        assert int(st_s[dex_mod.STAT_PIPE_STALLS]) == 0
+
+    def test_pipelined_scans_stall_shed_conservatively(self):
+        keys = _dataset(4000, seed=23)
+        state, meta, cfg, mesh, _, _ = _setup(keys)
+        sync = _full_engine(meta, cfg, mesh)
+        pipe = engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=engine_mod.ALL_OPS, max_count=MC,
+            pipeline=True)
+        rng = np.random.default_rng(24)
+        batches = _mixed_batches(keys, rng, 4, 128, with_scan=True,
+                                 hot=keys[40:48])
+        s_sync = state
+        sync_res = []
+        for opc, kk, vals in batches:
+            s_sync, r = sync(s_sync, jnp.asarray(opc), jnp.asarray(kk),
+                             jnp.asarray(vals))
+            sync_res.append(r)
+        s_pipe, pipe_res = pipe.run(
+            state,
+            [(jnp.asarray(o), jnp.asarray(k), jnp.asarray(v))
+             for o, k, v in batches],
+        )
+        any_scan_shed = False
+        for b, (rs, rp) in enumerate(zip(sync_res, pipe_res)):
+            shed_s = np.asarray(rs.shed)
+            shed_p = np.asarray(rp.shed)
+            # pipelining only ADDS sheds (stall-shed scans), never loses one
+            assert not (shed_s & ~shed_p).any(), b
+            stalled = shed_p & ~shed_s
+            any_scan_shed = any_scan_shed or stalled.any()
+            assert (np.asarray(rp.taken)[stalled] == -1).all(), b
+            ok = ~shed_p
+            for field in ("found", "values", "status",
+                          "scan_keys", "scan_values", "taken"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(rs, field))[ok],
+                    np.asarray(getattr(rp, field))[ok],
+                    err_msg=f"batch {b} {field}",
+                )
+        # writes still applied identically despite the stall-shed scans
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.pool.pool_values),
+            np.asarray(s_pipe.pool.pool_values))
+        np.testing.assert_array_equal(
+            np.asarray(s_sync.versions), np.asarray(s_pipe.versions))
+        assert any_scan_shed  # the hot write->scan weave must conflict
+
+    def test_pipeline_protocol(self):
+        keys = _dataset(2000, seed=25)
+        state, meta, cfg, mesh, _, _ = _setup(keys)
+        pipe = engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=self.OPS, max_count=1, pipeline=True)
+        b = 64
+        opc = jnp.full((b,), engine_mod.OP_LOOKUP, jnp.int32)
+        kk = jnp.asarray(keys[:b])
+        vv = jnp.zeros((b,), jnp.int64)
+        with pytest.raises(RuntimeError):
+            pipe.push(opc, kk, vv)
+        pipe.start(state)
+        assert pipe.drain() is None          # nothing in flight
+        assert pipe.push(opc, kk, vv) is None  # prologue primes
+        with pytest.raises(ValueError):
+            pipe.push(opc[: b // 2], kk[: b // 2], vv[: b // 2])
+        r1 = pipe.push(opc, kk, vv)          # steady state: lag-one result
+        assert r1 is not None and np.asarray(r1.found).all()
+        rd = pipe.drain()                    # drain flushes the tail
+        assert rd is not None and np.asarray(rd.found).all()
+        assert pipe.drain() is None
+        assert pipe.push(opc, kk, vv) is None  # re-primes after drain
+        assert pipe.plan["pipeline"] is True
+        assert pipe.plan["overlap_phases"] == ("pipe/front", "pipe/back")
+
+
 class TestInterleavedPropertyHypothesis:
     def test_interleaved_mixed_batches_match_host_replay(self):
         pytest.importorskip(
