@@ -23,7 +23,7 @@ Band forms, chosen per metric by the ``GATES`` table below:
 Refresh workflow (after an intentional perf/protocol change)::
 
     PYTHONPATH=src python -m benchmarks.run --quick --seed 0 \
-        --only fig15mesh,fig6mesh,fig10meshrep,fig14meshload,fig13engine \
+        --only fig15mesh,fig6mesh,fig10meshrep,fig14meshload,fig13engine,fig12fleet \
         --json bench_results.json --trace-dir traces
     PYTHONPATH=src python -m benchmarks.check_perf bench_results.json \
         --update-baselines
@@ -81,6 +81,13 @@ GATES = {
         "smo_ops_per_s": WALL,
         "onmesh_frac": ("min", 0.90),
         "smo_splits": COUNTER,
+    },
+    "fig12fleet": {
+        "fleet_hit_rate_uniform": COUNTER,
+        "fleet_hit_rate_divergent": COUNTER,
+        "divergent_gain": ("min", 1.01),
+        "peer_hit_fraction": COUNTER,
+        "peek_extra_collectives": EXACT,
     },
     "fig13engine": {
         "ycsb-a_engine_ops_per_s": WALL,

@@ -1,0 +1,308 @@
+"""Fig. 12 (mesh arm): cooperative fleet caching at equal cache bytes.
+
+``fig12_cache_size`` sweeps the priced Plane-A cache-ratio curves; this
+module adds the mesh arm on the forced-8-device mesh (2 route partitions x
+4 memory columns).  Two engines run the IDENTICAL hot-set trace at equal
+per-chip cache bytes:
+
+* **uniform** — ``cache_policy=None``: every chip admits leaves with the
+  same ``p_admit_leaf_pct`` dice, exactly the pre-policy-layer behaviour
+  (core/fleet_cache.py keeps this path bit-identical).
+* **divergent+peek** — ``fleet_cache.divergent_policy``: each chip skews
+  leaf admission toward its own memory column's subtrees (so the four
+  siblings of a route row specialise on disjoint quarters of the hot set)
+  and, on a local leaf miss for a foreign column, first peeks the sibling
+  specialist's cache via a ``MSG_PEEK`` lane piggybacked on the engine's
+  existing fused ``all_to_all`` — before paying a remote fetch.
+
+Asserted (8-device mesh):
+
+  * the divergent arm's *effective fleet hit rate* — row needs served
+    without a remote row fetch, ``(hits + peer_hits) / (hits + peer_hits
+    + peer_misses + fetches)`` — strictly beats the uniform arm's at every
+    equal-bytes point where the fleet's aggregate capacity covers the hot
+    set (the headline sweep point);
+  * peer peeks add ZERO extra collectives per batch: the traced programs
+    of both arms hold identical collective counts
+    (``routing.trace_collective_counts``) — the peek rides the fused pair
+    the write path already pays for;
+  * ``STAT_PEER_HITS`` moves on the mesh, the poisonable version check
+    notwithstanding (tests/mesh_check.py owns the staleness round trip);
+  * the simulator (core/sim.py) pricing the identical trace with the
+    mirrored knobs (``fleet_col_affinity``, ``fleet_peek_budget``) agrees
+    with the mesh's peer-hit count within the drift band, and its
+    divergent arm beats its uniform arm too.
+
+Run with ``PYTHONPATH=src python benchmarks/fig12_fleet_cache.py
+[--quick]`` or via the suite: ``python -m benchmarks.run --only
+fig12fleet``.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import engine as engine_mod  # noqa: E402
+from repro.core import fleet_cache  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import routing  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, SimConfig, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+from repro.obs import drift, registry  # noqa: E402
+from benchmarks.common import engine_with_retries  # noqa: E402
+
+MAX_RETRIES = 4
+#: leaf admission dice for BOTH arms (the divergent arm's per-column bias
+#: multiplies this, clipped to [1, 100] by fleet_cache.leaf_admit)
+P_ADMIT = 50
+#: update fraction of the hot trace — enough writes that both arms pay the
+#: fused all_to_all pair every batch (the round the peek piggybacks on)
+UPDATE_FRAC = 0.03
+#: hot-set shape: RUNS strided runs of RUN_LEN consecutive keys, sized so
+#: the hot leaves exceed ONE chip's rows at the headline sweep point but
+#: fit the four-sibling fleet (FANOUT=64, fill=0.7 -> ~45 keys/leaf)
+RUNS, RUN_LEN = 480, 16
+#: cache_sets sweep (x cache_ways=4 rows/chip); last entry is the headline
+#: point where the fleet holds the hot set
+SWEEP_QUICK = (16, 64)
+SWEEP_FULL = (16, 32, 64)
+
+
+def _hot_trace(dataset, n_ops, rng):
+    """Hot-subset trace: keys drawn uniformly from strided runs spread over
+    the whole keyspace (so blocked placement spreads the hot leaves evenly
+    across all four memory columns), 3% updates / 97% lookups.  Update
+    values rewrite ``key * 7`` so every lookup's expected value stays
+    ``key * 7`` for the in-loop spot check."""
+    step = max((dataset.size - RUN_LEN) // max(RUNS - 1, 1), 1)
+    starts = np.arange(RUNS) * step
+    hot = np.unique(
+        np.concatenate([dataset[s : s + RUN_LEN] for s in starts])
+    ).astype(np.int64)
+    kk = rng.choice(hot, size=n_ops).astype(np.int64)
+    opc = np.where(
+        rng.random(n_ops) < UPDATE_FRAC, ycsb.OP_UPDATE, ycsb.OP_LOOKUP
+    ).astype(np.int32)
+    return hot, opc, kk
+
+
+def _setup(dataset, cache_sets):
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(
+        dataset, vals, level_m=1, fill=0.7, n_shards=4
+    )
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=n_route,
+        n_memory=n_memory,
+        cache_sets=cache_sets,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=P_ADMIT,
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    return pool, meta, mesh, cfg, bounds, sharding
+
+
+def _mesh_arm(pool, meta, mesh, cfg, bounds, sharding, policy, opc, kk,
+              n_warm, n_meas, batch):
+    """One engine arm over the shared trace; returns the measured-window
+    counter deltas, the effective fleet hit rate and the traced collective
+    counts of the steady-state batch."""
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg),
+    )
+    eng_fn = engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("lookup", "update"), max_count=1,
+        cache_policy=policy,
+    )
+    eng = jax.jit(eng_fn)
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    vv = kk * 7
+    counts = routing.trace_collective_counts(
+        eng_fn, state,
+        jnp.asarray(opc[:batch]), jnp.asarray(kk[:batch]),
+        jnp.asarray(vv[:batch]),
+    )
+
+    stats_warm = None
+    for b in range(n_warm + n_meas):
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+        sl = slice(b * batch, (b + 1) * batch)
+        state, found, vals, status, _sk, _sv, _tk, done = engine_with_retries(
+            eng, state, put, opc[sl], kk[sl], vv[sl],
+            max_retries=MAX_RETRIES,
+        )
+        # spot check: values are invariant under the trace's updates, so
+        # every completed lookup must find key * 7 — a peer-served lane
+        # returning a wrong or stale row would fail here
+        lk = done & (opc[sl] == ycsb.OP_LOOKUP) & (kk[sl] != KEY_MAX)
+        assert found[lk].all(), "hot-set lookup missed"
+        assert (vals[lk] == kk[sl][lk] * 7).all(), "wrong value served"
+    jax.block_until_ready(state.stats)
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+
+    hits = float(stats[dex_mod.STAT_HITS])
+    fetches = float(stats[dex_mod.STAT_FETCHES])
+    ph = float(stats[dex_mod.STAT_PEER_HITS])
+    pm = float(stats[dex_mod.STAT_PEER_MISSES])
+    rate = (hits + ph) / max(hits + ph + pm + fetches, 1.0)
+    return dict(rate=rate, stats=stats, counts=dict(counts),
+                peer_hits=int(ph), peer_misses=int(pm))
+
+
+def _sim_arm(dataset, meta, cfg, opc, kk, n_warm_ops, *, affinity,
+             peek_budget, batch):
+    """Plane-A mirror on the identical trace: blocked subtree placement so
+    both planes agree on column ownership, per-server admission bias via
+    ``fleet_col_affinity`` and the peer-peek hop via
+    ``fleet_peek_budget``."""
+    tree = HostBTree(
+        dataset, dataset * 7, fill=0.7, level_m=1,
+        n_mem_servers=cfg.n_memory, placement="blocked",
+        subtrees_per_server=meta.n_subtrees_padded // cfg.n_memory,
+    )
+    sim_cfg = SimConfig(
+        name="dex-fleet", n_compute=cfg.n_devices,
+        n_mem_servers=cfg.n_memory, level_m=1,
+        write_through=True, offloading=False,
+        coherence_batch=batch, route_dispersion=cfg.n_memory,
+        p_admit_leaf=cfg.p_admit_leaf_pct / 100.0,
+        cache_bytes=cfg.cache_sets * cfg.cache_ways * 1024,
+        fleet_col_affinity=affinity,
+        fleet_peek_budget=peek_budget,
+    )
+    sim = Simulator(tree, sim_cfg, seed=3)
+    sim.run(opc[:n_warm_ops], kk[:n_warm_ops])
+    sim.reset_counters()
+    sim.run(opc[n_warm_ops:], kk[n_warm_ops:])
+    t = sim.totals()
+    served = t.local_accesses + t.peer_hits
+    denom = served + t.rdma_read + t.peer_misses
+    return dict(rate=served / max(denom, 1.0), totals=t)
+
+
+def run(quick: bool = False, seed: "int | None" = None):
+    base_seed = 0 if seed is None else int(seed)
+    n_keys = 30_000 if quick else 60_000
+    n_warm = 5 if quick else 8
+    n_meas = 4 if quick else 6
+    batch = 512 if quick else 1024
+    sweep = SWEEP_QUICK if quick else SWEEP_FULL
+    rng = np.random.default_rng(base_seed + 12)
+    dataset = ycsb.make_dataset(n_keys, seed=base_seed)
+    hot, opc, kk = _hot_trace(dataset, (n_warm + n_meas) * batch, rng)
+
+    on_mesh = len(jax.devices()) >= 8
+    rows = ["plane,arm,cache_sets,metric,value"]
+    summary = {}
+    headline = sweep[-1]
+    for cache_sets in sweep:
+        pool, meta, mesh, cfg, bounds, sharding = _setup(dataset, cache_sets)
+        div_pol = fleet_cache.divergent_policy(cfg, peek_budget=batch)
+        uni = _mesh_arm(pool, meta, mesh, cfg, bounds, sharding, None,
+                        opc, kk, n_warm, n_meas, batch)
+        div = _mesh_arm(pool, meta, mesh, cfg, bounds, sharding, div_pol,
+                        opc, kk, n_warm, n_meas, batch)
+        # the peek rides the fused pair the write path already pays for:
+        # the two arms' traced programs are collective-for-collective
+        # identical — peeking adds NOTHING to the communication plan
+        assert div["counts"] == uni["counts"], (div["counts"], uni["counts"])
+        assert uni["peer_hits"] == 0 and uni["peer_misses"] == 0, uni
+
+        s_uni = _sim_arm(dataset, meta, cfg, opc, kk, n_warm * batch,
+                         affinity=1.0, peek_budget=0, batch=batch)
+        s_div = _sim_arm(dataset, meta, cfg, opc, kk, n_warm * batch,
+                         affinity=4.0, peek_budget=batch, batch=batch)
+
+        for arm, m, s in (("uniform", uni, s_uni), ("divergent", div, s_div)):
+            rows += [
+                f"mesh,{arm},{cache_sets},fleet_hit_rate,{m['rate']:.4f}",
+                f"mesh,{arm},{cache_sets},peer_hits,{m['peer_hits']}",
+                f"mesh,{arm},{cache_sets},peer_misses,{m['peer_misses']}",
+                f"sim,{arm},{cache_sets},fleet_hit_rate,{s['rate']:.4f}",
+                f"sim,{arm},{cache_sets},peer_hits,"
+                f"{int(s['totals'].peer_hits)}",
+            ]
+
+        if on_mesh and cache_sets == headline:
+            # equal per-chip bytes, strictly better fleet-wide service:
+            # the specialised siblings + peek beat every-chip-caches-the-
+            # same once the fleet's aggregate capacity covers the hot set
+            assert div["rate"] > uni["rate"], (div["rate"], uni["rate"])
+            assert s_div["rate"] > s_uni["rate"], (s_div["rate"],
+                                                   s_uni["rate"])
+            assert div["peer_hits"] > 0, "no peer peeks landed"
+            # both planes price the same sibling-specialist rule on the
+            # identical trace: peer-hit counts must agree within the band
+            drift.assert_plane_agreement(
+                registry.snapshot(div["stats"][None, :]),
+                s_div["totals"],
+                {"peer_hits": drift.ratio(0.25, 4.0)},
+                label="fig12fleet peer peeks",
+            )
+
+        if cache_sets == headline:
+            ph, pm = div["peer_hits"], div["peer_misses"]
+            summary["fleet_hit_rate_uniform"] = uni["rate"]
+            summary["fleet_hit_rate_divergent"] = div["rate"]
+            summary["divergent_gain"] = div["rate"] / max(uni["rate"], 1e-9)
+            summary["peer_hit_fraction"] = ph / max(ph + pm, 1)
+            summary["peek_extra_collectives"] = float(
+                sum(div["counts"].values()) - sum(uni["counts"].values())
+            )
+            summary["mesh_peer_hits"] = float(ph)
+            summary["sim_peer_hits"] = float(s_div["totals"].peer_hits)
+            summary["sim_fleet_hit_rate_uniform"] = s_uni["rate"]
+            summary["sim_fleet_hit_rate_divergent"] = s_div["rate"]
+            summary["sim_divergent_gain"] = s_div["rate"] / max(
+                s_uni["rate"], 1e-9
+            )
+    summary["hot_keys"] = float(hot.size)
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     ("fig10", "benchmarks.fig10_repartition"),
     ("fig10meshrep", "benchmarks.fig10_mesh_repartition"),
     ("fig12", "benchmarks.fig12_cache_size"),
+    ("fig12fleet", "benchmarks.fig12_fleet_cache"),
     ("fig13", "benchmarks.fig13_offload_threads"),
     ("fig13engine", "benchmarks.fig13_mesh_engine"),
     ("fig14meshload", "benchmarks.fig14_mesh_load"),

@@ -13,8 +13,13 @@ for RDMA accounting and for the contention cost model:
     and a child is only admitted if its parent is cached (§5.4)
   * second chance: touching a COOLING node restores it to HOT (§5.1)
 
-The TPU-plane cache (core/dex.py) keeps the same *idea* — hash-distributed
-FIFO buckets == set-associative FIFO ways — in vectorized form.
+The TPU-plane cache (core/fleet_cache.py) keeps the same *idea* —
+hash-distributed FIFO buckets == set-associative FIFO ways — in vectorized
+form, and derives its integer admission percent from this module's
+``DEFAULT_P_ADMIT_LEAF`` (the single source of truth for the paper's P_A).
+Per-server divergent admission (``admit_bias``) mirrors that module's
+``CachePolicy.admit_bias`` so the two planes' fleet-cache counters stay
+drift-comparable.
 """
 
 from __future__ import annotations
@@ -137,12 +142,17 @@ class ComputeCache:
         cooling_slots: int = BUCKET_SLOTS,
         eager_admission: bool = False,
         rng: Optional[np.random.Generator] = None,
+        admit_bias: Optional[Callable[[int], float]] = None,
     ):
         assert capacity >= 4
         self.capacity = capacity
         self.parent_of = parent_of
         self.is_leaf = is_leaf
         self.p_admit_leaf = 1.0 if eager_admission else p_admit_leaf
+        # divergent fleet policy (core/fleet_cache.py CachePolicy.admit_bias
+        # mirror): per-node multiplier on the leaf-admission probability;
+        # None keeps the uniform §5.4 dice exactly
+        self.admit_bias = admit_bias
         if n_cooling_buckets is None:
             n_cooling_buckets = max(
                 1, int(capacity * COOLING_FRACTION / cooling_slots)
@@ -212,9 +222,13 @@ class ComputeCache:
         if parent >= 0 and parent not in self:
             self.stats.rejected_admissions += 1
             return False
-        if self.is_leaf(node) and self.rng.random() > self.p_admit_leaf:
-            self.stats.rejected_admissions += 1
-            return False
+        if self.is_leaf(node):
+            p = self.p_admit_leaf
+            if self.admit_bias is not None:
+                p = min(1.0, p * self.admit_bias(node))
+            if self.rng.random() > p:
+                self.stats.rejected_admissions += 1
+                return False
 
         if self.free <= 0 and not self._provision_free_page():
             self.stats.rejected_admissions += 1

@@ -25,10 +25,11 @@ memory column** by the unified engine: ``DexState.miss_ema`` tracks one
 EMA per (column, level) and each batch's per-column lane groups choose
 fetch or offload independently (core/engine.py, DESIGN.md §7).
 
-This module holds the mesh plane's shared state (config, cache, state
-pytree, stat indices), the cache probe/admit machinery of the shared
-descent (``cached_fetch_level``), and the thin lookup wrapper; the
-execution dataflow for all four ops lives in core/engine.py.
+This module holds the mesh plane's shared state (config, state pytree,
+stat indices) and the thin lookup wrapper; the per-chip cache machinery
+(``DexCache``, probe/admit, ``cached_fetch_level`` and the pluggable
+``CachePolicy`` layer) lives in core/fleet_cache.py, and the execution
+dataflow for all four ops in core/engine.py.
 """
 
 from __future__ import annotations
@@ -41,10 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import routing
+from repro.core.fleet_cache import (  # noqa: F401  (re-exported compat names)
+    P_ADMIT_LEAF_PCT,
+    DexCache,
+    cached_fetch_level,
+    init_cache,
+)
 from repro.core.nodes import FANOUT, KEY_MAX
 from repro.core.pool import PoolMeta, SubtreePool, initial_succ
-from repro.core.routing import hash64 as _hash64
 
 NODE_ROW_BYTES = FANOUT * 8 * 3  # keys + children + values on the wire
 OFFLOAD_REQ_BYTES = 16
@@ -69,6 +74,8 @@ STAT_DRAINS = _stat_consts["STAT_DRAINS"]
 STAT_OFFLOAD_GROUPS = _stat_consts["STAT_OFFLOAD_GROUPS"]
 STAT_FETCH_GROUPS = _stat_consts["STAT_FETCH_GROUPS"]
 STAT_PIPE_STALLS = _stat_consts["STAT_PIPE_STALLS"]
+STAT_PEER_HITS = _stat_consts["STAT_PEER_HITS"]
+STAT_PEER_MISSES = _stat_consts["STAT_PEER_MISSES"]
 N_STATS = _metric_registry.N_STATS
 del _stat_consts
 
@@ -83,7 +90,9 @@ class DexMeshConfig:
     n_memory: int = 1                         # memory axis size
     cache_sets: int = 256
     cache_ways: int = 4
-    p_admit_leaf_pct: int = 10                # paper §5.4: P_A = 0.1
+    # paper §5.4: P_A — derived from Plane A's DEFAULT_P_ADMIT_LEAF via
+    # core/fleet_cache.py so the two planes can never silently diverge
+    p_admit_leaf_pct: int = P_ADMIT_LEAF_PCT
     route_capacity_factor: float = 2.0        # all_to_all bucket slack
     policy: str = "auto"                      # fetch | offload | auto
     offload_c: float = 1.3                    # cost coefficient (§6.1)
@@ -96,17 +105,6 @@ class DexMeshConfig:
     @property
     def all_axes(self) -> Tuple[str, ...]:
         return self.route_axes + (self.memory_axis,)
-
-
-class DexCache(NamedTuple):
-    """Per-chip set-associative node cache; axis 0 is the device axis."""
-
-    tags: jax.Array      # [Dev, sets, ways] int64, -1 empty
-    keys: jax.Array      # [Dev, sets, ways, FANOUT] int64
-    children: jax.Array  # [Dev, sets, ways, FANOUT] int32
-    values: jax.Array    # [Dev, sets, ways, FANOUT] int64
-    fifo: jax.Array      # [Dev, sets] int32 (FIFO-within-set pointer)
-    ver: jax.Array       # [Dev, sets, ways] int32 node version at admit time
 
 
 class DexState(NamedTuple):
@@ -135,18 +133,6 @@ class DexState(NamedTuple):
     #                        (pool-aligned shard): next free local node id;
     #                        subtree_cap means the block is out of headroom
     #                        and its splits drain through the host path
-
-
-def init_cache(cfg: DexMeshConfig) -> DexCache:
-    d, s, w = cfg.n_devices, cfg.cache_sets, cfg.cache_ways
-    return DexCache(
-        tags=jnp.full((d, s, w), -1, jnp.int64),
-        keys=jnp.full((d, s, w, FANOUT), KEY_MAX, jnp.int64),
-        children=jnp.zeros((d, s, w, FANOUT), jnp.int32),
-        values=jnp.zeros((d, s, w, FANOUT), jnp.int64),
-        fifo=jnp.zeros((d, s), jnp.int32),
-        ver=jnp.zeros((d, s, w), jnp.int32),
-    )
 
 
 def init_state(
@@ -207,104 +193,9 @@ def state_shardings(mesh, cfg: DexMeshConfig):
 
 # ---------------------------------------------------------------------------
 # the sharded lookup (routing helpers shared with core/scan.py live in
-# core/routing.py)
+# core/routing.py; the cache probe/admit/fetch machinery in
+# core/fleet_cache.py)
 # ---------------------------------------------------------------------------
-
-
-def _cache_probe(cache: DexCache, cfg: DexMeshConfig, versions: jax.Array,
-                 gid: jax.Array):
-    """Probe the per-chip cache.  A tag match only counts as a hit when the
-    entry's admit-time version still equals the node's current version
-    (``versions`` is this chip's replicated per-node version table) — rows
-    made stale by another chip's write are rejected and re-fetched.  Returns
-    ``(hit, keys_row, children_row, values_row, set_idx, present)`` where
-    ``present`` marks a tag match regardless of version (a stale copy that
-    ``_cache_admit`` will refresh in place)."""
-    set_idx = (_hash64(gid) % jnp.uint64(cfg.cache_sets)).astype(jnp.int32)
-    tags = cache.tags[0, set_idx]                        # [B, W]
-    tagged = tags == gid[:, None]
-    fresh = cache.ver[0, set_idx] == versions[gid][:, None]
-    eq = tagged & fresh
-    hit = jnp.any(eq, axis=-1)
-    present = jnp.any(tagged, axis=-1)  # tag match, possibly version-stale
-    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
-    k = cache.keys[0, set_idx, way]
-    c = cache.children[0, set_idx, way]
-    v = cache.values[0, set_idx, way]
-    return hit, k, c, v, set_idx, present
-
-
-def _cache_admit(
-    cache: DexCache,
-    cfg: DexMeshConfig,
-    versions: jax.Array,
-    gid: jax.Array,
-    set_idx: jax.Array,
-    admit: jax.Array,
-    rows_k: jax.Array,
-    rows_c: jax.Array,
-    rows_v: jax.Array,
-) -> DexCache:
-    """FIFO-within-set insertion of fetched rows (cooling-map analogue).
-    Admitted rows are stamped with the node's current version.  A row whose
-    tag is already present (a version-stale copy being refetched) is
-    *refreshed in place* — same way, no FIFO advance — so staleness heals
-    without re-rolling the admission dice."""
-    tagged = cache.tags[0, set_idx] == gid[:, None]
-    present = jnp.any(tagged, axis=-1)
-    pway = jnp.argmax(tagged, axis=-1).astype(jnp.int32)
-    fway = (cache.fifo[0, set_idx] % cfg.cache_ways).astype(jnp.int32)
-    way = jnp.where(present, pway, fway)
-    # non-admitting lanes scatter out of bounds (dropped)
-    sidx = jnp.where(admit, set_idx, cfg.cache_sets)
-    tags = cache.tags.at[0, sidx, way].set(gid, mode="drop")
-    keys = cache.keys.at[0, sidx, way].set(rows_k, mode="drop")
-    children = cache.children.at[0, sidx, way].set(rows_c, mode="drop")
-    values = cache.values.at[0, sidx, way].set(rows_v, mode="drop")
-    fifo = cache.fifo.at[0, jnp.where(present, cfg.cache_sets, sidx)].add(
-        1, mode="drop"
-    )
-    ver = cache.ver.at[0, sidx, way].set(versions[gid], mode="drop")
-    return DexCache(tags=tags, keys=keys, children=children, values=values,
-                    fifo=fifo, ver=ver)
-
-
-_fetch_rows = routing.fetch_rows  # re-export; shared with core/scan.py
-
-
-def cached_fetch_level(
-    pool: SubtreePool,
-    meta: PoolMeta,
-    cfg: DexMeshConfig,
-    cache: DexCache,
-    versions: jax.Array,
-    gid: jax.Array,
-    want: jax.Array,
-    admit_ok: jax.Array,
-):
-    """One level of the cached traversal, shared by lookup, scan and the
-    write path: probe the per-chip cache for ``gid`` rows (rejecting entries
-    whose admit-time version is stale against ``versions``), remote-fetch
-    the misses, and admit fetched rows where ``admit_ok`` (a load-shed
-    fetch's placeholder row is never admitted).  Returns ``(rows_k, rows_c,
-    rows_v, hit, miss, shed, n_msgs, new_cache)`` with ``hit``/``miss`` already
-    masked by ``want``; ``n_msgs`` counts the coalesced remote-read messages
-    (duplicate same-node misses in a batch share one message)."""
-    hit, ck, cc, cv, set_idx, present = _cache_probe(cache, cfg, versions, gid)
-    hit = hit & want
-    miss = want & ~hit
-    fk, fc, fv, shed, n_msgs = _fetch_rows(pool, meta, cfg, gid, miss)
-    rows_k = jnp.where(hit[:, None], ck, fk)
-    rows_c = jnp.where(hit[:, None], cc, fc)
-    rows_v = jnp.where(hit[:, None], cv, fv)
-    # version-stale tagged rows always refresh in place; the admission dice
-    # only gates brand-new entries
-    new_cache = _cache_admit(
-        cache, cfg, versions, gid, set_idx,
-        miss & (admit_ok | present) & ~shed,
-        rows_k, rows_c, rows_v,
-    )
-    return rows_k, rows_c, rows_v, hit, miss, shed, n_msgs, new_cache
 
 
 def make_dex_lookup(meta: PoolMeta, cfg: DexMeshConfig, mesh):

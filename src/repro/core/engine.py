@@ -113,6 +113,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import fleet_cache
 from repro.core import routing
 from repro.core.dex import (
     NODE_ROW_BYTES,
@@ -126,14 +127,15 @@ from repro.core.dex import (
     STAT_OFFLOAD_GROUPS,
     STAT_OFFLOADS,
     STAT_OPS,
+    STAT_PEER_HITS,
+    STAT_PEER_MISSES,
     STAT_PIPE_STALLS,
     STAT_SPLITS,
     STAT_WRITES,
-    DexCache,
     DexMeshConfig,
     DexState,
-    cached_fetch_level,
 )
+from repro.core.fleet_cache import DexCache, cached_fetch_level
 from repro.core.nodes import FANOUT, KEY_MAX
 from repro.core.pool import PoolMeta, SubtreePool, top_walk
 from repro.core.write import (
@@ -161,9 +163,12 @@ MSG_INSERT = 2        # fetched-path slack-slot insert: gid from the descent
 MSG_OFF_LOOKUP = 3    # offloaded lookup: owner walks its block
 MSG_OFF_UPDATE = 4    # offloaded update: owner walks, then CAS
 MSG_OFF_INSERT = 5    # offloaded insert: owner walks, then slack merge
+MSG_PEEK = 6          # peer peek: owner answers a sibling's leaf miss from
+#                       its own version-checked cache, else its block walk
 REQ_FIELDS = 6        # (tag, gid, subtree, key, value, prio)
-RESP_HEAD = 4         # (status, value, gid, leaf-took-inserts flag) ahead
-#                       of the merged value row
+RESP_HEAD = 4         # (status, value, gid, leaf-took-inserts flag — the
+#                       flag doubles as the peer-cache-hit bit for MSG_PEEK
+#                       lanes) ahead of the merged value row
 
 
 def scan_hops(meta: PoolMeta, max_count: int) -> int:
@@ -310,6 +315,7 @@ def make_dex_engine(
     use_kernel: bool = True,
     interpret: "bool | None" = None,
     pipeline: bool = False,
+    cache_policy: "fleet_cache.CachePolicy | None" = None,
 ):
     """Build the unified mixed-op program:
     ``(state, opcodes, keys, values) -> (state, EngineResult)``.
@@ -334,6 +340,13 @@ def make_dex_engine(
     collective structure ``{"route_rounds", "fused_pairs",
     "descent_levels", "scan_hops"}`` — which benchmarks print next to the
     traced collective counts (``routing.trace_collective_counts``).
+
+    ``cache_policy`` selects the per-chip fleet-cache policy
+    (:mod:`repro.core.fleet_cache`).  ``None`` or a
+    :func:`fleet_cache.uniform_policy` compiles the verbatim pre-policy
+    program — bit-identical outputs; a :func:`fleet_cache.divergent_policy`
+    enables column-affinity/demand-biased admission and peer peeks
+    (``MSG_PEEK`` riding the existing fused round: zero extra collectives).
     """
     for o in ops:
         if o not in ALL_OPS:
@@ -358,7 +371,13 @@ def make_dex_engine(
     # the leaf level of the descent serves lookup/update answers and scan
     # hop 0; insert lanes stop above it
     do_leaf = has_lookup or has_update or has_scan
-    do_fused = has_writes or may_offload
+    # peer peeks (MSG_PEEK) only exist for descent lookup lanes under a
+    # policy with peek budget — statically pruned otherwise
+    may_peek = (
+        has_lookup and do_descent and do_leaf
+        and fleet_cache.peeks_enabled(cache_policy)
+    )
+    do_fused = has_writes or may_offload or may_peek
     levels = meta.levels_in_subtree
     hops = scan_hops(meta, max_count) if has_scan else 0
     mc = max_count
@@ -379,6 +398,8 @@ def make_dex_engine(
         "q", "val", "opc", "pr", "subtree", "offl", "gid", "found", "vleaf",
         "shed", "vseen", "lane", "dropr",
     ]
+    if may_peek:
+        carry_keys += ["peek"]
     if has_scan:
         carry_keys += ["sck", "scv", "taken", "hgid", "hver"]
 
@@ -477,27 +498,49 @@ def make_dex_engine(
         rows_v_leaf = jnp.zeros(q.shape + (FANOUT,), jnp.int64)
         miss_cl = jnp.zeros((cfg.n_memory, levels), jnp.float32)
         want_cl = jnp.zeros((cfg.n_memory, levels), jnp.float32)
+        peeked_leaf = jnp.zeros(q.shape, bool)
+        # divergent policies scale the admission dice by the chip's share of
+        # its own measured route demand (chip-local; no collective)
+        dboost = fleet_cache.demand_boost(
+            cache_policy, cfg, demand, routing.route_linear_index(cfg, mesh)
+        )
         if do_descent:
             descent_levels = levels if do_leaf else levels - 1
             for lvl in range(descent_levels):
                 leaf_lvl = lvl == levels - 1
+                peek_elig = peek_budget = None
                 if leaf_lvl:
                     want = fetchable & (
                         (opc == OP_LOOKUP) | (opc == OP_UPDATE) | is_scan
                     )
-                    p_ok = routing.leaf_admit_dice(
-                        meta.node_gid(subtree, local), cfg.p_admit_leaf_pct,
-                        salt=stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
+                    p_ok = fleet_cache.leaf_admit(
+                        meta, cfg, cache_policy,
+                        meta.node_gid(subtree, local),
+                        stats[0, STAT_OPS] + jnp.arange(q.shape[0]),
+                        dev=dev, boost=dboost,
                     )
+                    if may_peek:
+                        # a leaf miss whose subtree another column owns may
+                        # ask that column's cache instead of row-fetching
+                        my_col = jax.lax.axis_index(cfg.memory_axis)
+                        peek_elig = (
+                            want & (opc == OP_LOOKUP) & (col != my_col)
+                        )
+                        peek_budget = fleet_cache.device_peek_budget(
+                            cache_policy, dev
+                        )
                 else:
                     want = fetchable
                     p_ok = jnp.ones(q.shape, bool)
                 gid = meta.node_gid(subtree, local)
                 with jax.named_scope(f"dex/descent/l{lvl}"):
                     rows_k, rows_c, rows_v, hit, miss, f_drop, n_msgs, \
-                        new_cache = cached_fetch_level(
-                            pool, meta, cfg, new_cache, vers, gid, want, p_ok
+                        new_cache, peeked = cached_fetch_level(
+                            pool, meta, cfg, new_cache, vers, gid, want, p_ok,
+                            peek_elig, peek_budget,
                         )
+                if leaf_lvl and may_peek:
+                    peeked_leaf = peeked
                 shed = shed | f_drop
                 n_fetch = n_fetch + n_msgs
                 n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
@@ -547,13 +590,14 @@ def make_dex_engine(
                         jnp.where(in_range, gid_h, -1).astype(jnp.int64)
                     )
                     hop_vers.append(jnp.where(in_range, vers[gid], 0))
-                p_ok = routing.leaf_admit_dice(
-                    gid, cfg.p_admit_leaf_pct,
-                    salt=stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
+                p_ok = fleet_cache.leaf_admit(
+                    meta, cfg, cache_policy, gid,
+                    stats[0, STAT_OPS] + h + jnp.arange(q.shape[0]),
+                    dev=dev, boost=dboost,
                 )
                 with jax.named_scope(f"dex/scan/h{h}"):
                     rows_k, _rows_c, rows_v, hit, miss, f_drop, n_msgs, \
-                        new_cache = cached_fetch_level(
+                        new_cache, _peeked = cached_fetch_level(
                             pool, meta, cfg, new_cache, vers, gid, in_range,
                             p_ok,
                         )
@@ -613,6 +657,8 @@ def make_dex_engine(
             "vleaf": vals_leaf, "shed": shed, "lane": lane,
             "dropr": dropped_r,
         }
+        if may_peek:
+            carry["peek"] = peeked_leaf
         if stamp:
             gsafe = jnp.clip(leaf_gid, 0, n_nodes_total - 1)
             carry["vseen"] = jnp.where(live, vers[gsafe], 0)
@@ -647,6 +693,7 @@ def make_dex_engine(
         shed = carry["shed"]
         lane = carry["lane"]
         dropped_r = carry["dropr"]
+        peek_c = carry["peek"] if may_peek else None
         cap = lane.shape[1]
         live = q != KEY_MAX
         is_scan = live & (opc == OP_SCAN) if has_scan else jnp.zeros(q.shape, bool)
@@ -692,8 +739,11 @@ def make_dex_engine(
         rrow_v = jnp.zeros(q.shape + (FANOUT,), jnp.int64)
         send = jnp.zeros(q.shape, bool)
         dropped_w = jnp.zeros(q.shape, bool)
+        sent_peek = jnp.zeros(q.shape, bool)
         n_off_msgs = jnp.int64(0)
         n_write_msgs = jnp.int64(0)
+        n_peer_hits = jnp.int64(0)
+        n_peer_misses = jnp.int64(0)
         new_pk, new_pv, new_occ = (
             pool.pool_keys, pool.pool_values, occupancy
         )
@@ -705,6 +755,13 @@ def make_dex_engine(
                 tag = jnp.where(
                     ok_lane & (opc == OP_LOOKUP) & offl_eff, MSG_OFF_LOOKUP,
                     tag,
+                )
+            if may_peek:
+                # a peeked leaf miss resolves two-sided at the owning column
+                # (a stale-forced lane keeps its MSG_OFF_LOOKUP instead)
+                tag = jnp.where(
+                    ok_lane & (opc == OP_LOOKUP) & peek_c & ~offl_eff,
+                    MSG_PEEK, tag,
                 )
             if has_update:
                 if may_offload:
@@ -725,6 +782,8 @@ def make_dex_engine(
                 tag = jnp.where(
                     ok_lane & (opc == OP_INSERT) & ~offl_eff, MSG_INSERT, tag
                 )
+            if may_peek:
+                sent_peek = tag == MSG_PEEK
             send = tag != MSG_NONE
             dest = jnp.where(send, col, cfg.n_memory)
             wcap = routing.route_capacity(
@@ -734,7 +793,8 @@ def make_dex_engine(
                 [
                     tag,
                     jnp.where(
-                        (tag == MSG_UPDATE) | (tag == MSG_INSERT),
+                        (tag == MSG_UPDATE) | (tag == MSG_INSERT)
+                        | (tag == MSG_PEEK),
                         leaf_gid, KEY_MAX,
                     ),
                     subtree.astype(jnp.int64),
@@ -766,11 +826,19 @@ def make_dex_engine(
             )
             resp_val = jnp.zeros(kf.shape, jnp.int64)
             o_found = jnp.zeros(kf.shape, bool)
-            if may_offload:
-                offf = (tagf >= MSG_OFF_LOOKUP) & (tagf <= MSG_OFF_INSERT)
-                # owner-side block walk for offloaded lanes (§6): the whole
-                # remaining traversal runs next to the data
-                stl = jnp.where(offf, stf % s_per, 0).astype(jnp.int32)
+            peekf = jnp.zeros(kf.shape, bool)
+            if may_offload or may_peek:
+                offf = (
+                    (tagf >= MSG_OFF_LOOKUP) & (tagf <= MSG_OFF_INSERT)
+                    if may_offload else jnp.zeros(kf.shape, bool)
+                )
+                if may_peek:
+                    peekf = tagf == MSG_PEEK
+                walkf = offf | peekf
+                # owner-side block walk for offloaded (and peer-missed
+                # peeked) lanes (§6): the whole remaining traversal runs
+                # next to the data
+                stl = jnp.where(walkf, stf % s_per, 0).astype(jnp.int32)
                 loc = jnp.zeros(kf.shape, jnp.int32)
                 for _ in range(levels - 1):
                     rows = pool.pool_keys[stl, loc]
@@ -781,16 +849,31 @@ def make_dex_engine(
                     )[:, 0]
                 o_rows_k = pool.pool_keys[stl, loc]
                 o_eq = o_rows_k == kf[:, None]
-                o_found = jnp.any(o_eq, axis=-1) & offf
+                o_found = jnp.any(o_eq, axis=-1) & walkf
                 o_val = jnp.sum(
                     jnp.where(o_eq, pool.pool_values[stl, loc], 0), axis=-1
                 )
-                gid_eff = meta.node_gid(stf, loc.astype(jnp.int64))
-                wgid = jnp.where(
-                    (tagf == MSG_OFF_UPDATE) | (tagf == MSG_OFF_INSERT),
-                    gid_eff, wgid,
+                if may_offload:
+                    gid_eff = meta.node_gid(stf, loc.astype(jnp.int64))
+                    wgid = jnp.where(
+                        (tagf == MSG_OFF_UPDATE) | (tagf == MSG_OFF_INSERT),
+                        gid_eff, wgid,
+                    )
+                peer_hit = jnp.zeros(kf.shape, bool)
+                if may_peek:
+                    # sibling-cache overlay: if this chip's own cache holds a
+                    # version-fresh copy of the peeked leaf, answer from it —
+                    # a stale or absent row falls back to the walk above
+                    peer_hit, p_found, p_val = fleet_cache.peer_answer(
+                        cache, cfg, vers, gidf, kf, peekf
+                    )
+                    o_found = jnp.where(peer_hit, p_found, o_found)
+                    o_val = jnp.where(peer_hit, p_val, o_val)
+                lk_tags = (
+                    (tagf == MSG_OFF_LOOKUP) | peekf
+                    if may_offload else peekf
                 )
-                resp_val = jnp.where(tagf == MSG_OFF_LOOKUP, o_val, 0)
+                resp_val = jnp.where(lk_tags, o_val, 0)
             if has_writes:
                 allow_ins = tagf == MSG_INSERT
                 if may_offload:
@@ -806,18 +889,24 @@ def make_dex_engine(
                 wstat = jnp.zeros(kf.shape, jnp.int32)
                 rows_v_all = jnp.zeros(kf.shape + (FANOUT,), jnp.int64)
                 ins_in_leaf = jnp.zeros(kf.shape, bool)
-            if may_offload:
+            if may_offload or may_peek:
                 wstat = jnp.where(
-                    tagf == MSG_OFF_LOOKUP,
+                    lk_tags,
                     jnp.where(o_found, STATUS_OK, STATUS_MISS),
                     wstat,
                 )
+            # field 3 doubles as the peer-cache-hit bit for MSG_PEEK lanes
+            # (they are lookups, so the insert-path consumers never read it)
+            ins_flag = (
+                jnp.where(peekf, peer_hit, ins_in_leaf)
+                if may_peek else ins_in_leaf
+            )
             resp = jnp.concatenate(
                 [
                     wstat[:, None].astype(jnp.int64),
                     resp_val[:, None],
                     wgid[:, None],
-                    ins_in_leaf[:, None].astype(jnp.int64),
+                    ins_flag[:, None].astype(jnp.int64),
                     rows_v_all,
                 ],
                 axis=-1,
@@ -847,6 +936,13 @@ def make_dex_engine(
             n_write_msgs = jnp.sum(
                 delivered & ~is_off_lane & (opc != OP_LOOKUP)
             ).astype(jnp.int64)
+            if may_peek:
+                n_peer_hits = jnp.sum(
+                    delivered & sent_peek & r_ins
+                ).astype(jnp.int64)
+                n_peer_misses = jnp.sum(
+                    delivered & sent_peek & ~r_ins
+                ).astype(jnp.int64)
 
         # --- 6. write-through-and-invalidate + version bump ----------------
         new_versions = versions
@@ -904,13 +1000,17 @@ def make_dex_engine(
         out_val = jnp.zeros(q.shape, jnp.int64)
         if has_lookup:
             is_lk = live & (opc == OP_LOOKUP)
+            # a lane resolved two-sided (offloaded, stale-forced, or peeked)
+            # takes the owning column's answer; the rest keep the local
+            # cached-descent result
+            two_sided = (offl_eff | sent_peek) if may_peek else offl_eff
             out_found = jnp.where(
-                offl_eff,
+                two_sided,
                 (rstat == STATUS_OK) & send & ~dropped_w,
                 found_leaf & ~shed,
             ) & is_lk
             out_val = jnp.where(
-                out_found, jnp.where(offl_eff, rval, vals_leaf), 0
+                out_found, jnp.where(two_sided, rval, vals_leaf), 0
             )
         status = jnp.full(q.shape, STATUS_MISS, jnp.int32)
         if has_writes:
@@ -933,6 +1033,8 @@ def make_dex_engine(
             jnp.sum(status == STATUS_SPLIT).astype(jnp.int64)
         )
         b_upd = b_upd.at[0, STAT_PIPE_STALLS].set(n_stalls)
+        b_upd = b_upd.at[0, STAT_PEER_HITS].set(n_peer_hits)
+        b_upd = b_upd.at[0, STAT_PEER_MISSES].set(n_peer_misses)
 
         # --- 9. results back to the requesting lanes ------------------------
         fields = [
@@ -1173,6 +1275,8 @@ def make_dex_engine(
             "lane": jnp.zeros((n_dev * cfg.n_route, cap0), jnp.int32),
             "dropr": jnp.zeros((b_global,), bool),
         }
+        if may_peek:
+            carry["peek"] = jnp.zeros((q_g,), bool)
         if has_scan:
             carry.update(
                 sck=jnp.full((q_g, mc), KEY_MAX, jnp.int64),

@@ -1,0 +1,374 @@
+"""Fleet cache-policy layer for the mesh plane (Plane B).
+
+Every per-chip caching decision of the TPU mesh lives here: the
+set-associative cache pytree (:class:`DexCache`), the version-checked
+probe/admit machinery of the shared descent (:func:`cached_fetch_level`),
+the single leaf-admission dice entry point (:func:`leaf_admit`), and the
+:class:`CachePolicy` pytree that makes all of it *per-chip tunable*.
+Before this module the same machinery was smeared across ``core/dex.py``
+(probe/admit/fetch), ``core/engine.py`` (two inline admission-dice call
+sites) and ``core/repartition.py`` (ad-hoc version-bump invalidation);
+those duplicates are gone — ``engine.py``, the thin op wrappers and the
+repartition install path all call through here.
+
+Uniform vs. divergent policies
+------------------------------
+The default :func:`uniform_policy` reproduces the paper's §5.4 behaviour
+bit-for-bit: every chip rolls the same ``p_admit_leaf_pct`` admission dice
+(:func:`repro.core.routing.leaf_admit_dice`), so under broad traffic all
+sibling caches converge on the same hot set and the fleet's aggregate
+cache is barely bigger than one chip's.  :func:`divergent_policy` applies
+the extend-dist observation ("Unlocking the Power of Diversity in Index
+Tuning", PAPERS.md) to the cache layer:
+
+* **column-affinity admission bias** — each chip multiplies its
+  leaf-admission probability by ``admit_bias[dev, col]`` where ``col`` is
+  the memory column owning the leaf's subtree.  The divergent constructor
+  boosts the chip's *own* column coordinate and damps the others, so the
+  ``n_memory`` siblings sharing one route partition specialize on disjoint
+  subtree slices instead of converging.
+* **demand bias** — the multiplier is further scaled by the chip's share
+  of its own measured ``DexState.route_demand`` (clipped to
+  ``[1/beta, beta]``): chips serving demand-hot partitions cache more
+  aggressively.  Computed from the chip-local demand vector only — no
+  extra collective.
+* **eviction salt** — a per-chip constant folded into the dice salt so
+  sibling chips stop rolling *correlated* admission dice for the same
+  node.
+* **peer peek** — a per-chip budget of ``MSG_PEEK`` messages: on a local
+  leaf miss whose subtree another column owns, the engine skips the
+  remote row fetch and instead asks the owning column's chip (the
+  specialist for that slice under the affinity bias) to answer from *its*
+  cache, version-checked like any cached row, falling back to that chip's
+  local block walk.  The peek rides the engine's existing fused tagged
+  ``all_to_all`` pair — zero extra collectives per batch.
+
+Plane A mirrors the same two behaviours (``core/cache.py`` per-server
+admission bias, ``core/sim.py`` peer-peek hop priced as a
+compute-to-compute message) so ``obs/drift.py`` can assert mesh-vs-sim
+agreement on the ``peer_hits`` / ``peer_misses`` registry slots.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import routing
+from repro.core.cache import DEFAULT_P_ADMIT_LEAF
+from repro.core.nodes import FANOUT, KEY_MAX
+from repro.core.pool import PoolMeta, SubtreePool
+
+#: Single source of truth for the paper's §5.4 leaf-admission probability
+#: P_A: Plane A owns the fraction (``core/cache.py`` ``DEFAULT_P_ADMIT_LEAF``)
+#: and the mesh plane's integer percent is derived from it here — the two
+#: literals can no longer silently diverge (tests/test_engine.py asserts
+#: the agreement).
+P_ADMIT_LEAF_PCT: int = int(round(DEFAULT_P_ADMIT_LEAF * 100))
+
+
+class DexCache(NamedTuple):
+    """Per-chip set-associative node cache; axis 0 is the device axis."""
+
+    tags: jax.Array      # [Dev, sets, ways] int64, -1 empty
+    keys: jax.Array      # [Dev, sets, ways, FANOUT] int64
+    children: jax.Array  # [Dev, sets, ways, FANOUT] int32
+    values: jax.Array    # [Dev, sets, ways, FANOUT] int64
+    fifo: jax.Array      # [Dev, sets] int32 (FIFO-within-set pointer)
+    ver: jax.Array       # [Dev, sets, ways] int32 node version at admit time
+
+
+def init_cache(cfg) -> DexCache:
+    d, s, w = cfg.n_devices, cfg.cache_sets, cfg.cache_ways
+    return DexCache(
+        tags=jnp.full((d, s, w), -1, jnp.int64),
+        keys=jnp.full((d, s, w, FANOUT), KEY_MAX, jnp.int64),
+        children=jnp.zeros((d, s, w, FANOUT), jnp.int32),
+        values=jnp.zeros((d, s, w, FANOUT), jnp.int64),
+        fifo=jnp.zeros((d, s), jnp.int32),
+        ver=jnp.zeros((d, s, w), jnp.int32),
+    )
+
+
+class CachePolicy(NamedTuple):
+    """Per-chip cache-policy pytree consumed by the engine at build time.
+
+    The arrays are tiny host-side constants (closed over inside the jitted
+    program; each device indexes its own row by its linear device index),
+    not sharded state — a policy is a *configuration*, chosen once when the
+    engine is built.
+
+    Attributes
+    ----------
+    admit_bias:  ``[Dev, n_memory]`` float — per-chip multiplier on the
+                 leaf-admission probability, indexed by the memory column
+                 owning the leaf's subtree (1.0 everywhere = uniform).
+    evict_salt:  ``[Dev]`` int64 — per-chip constant folded into the
+                 admission-dice salt (0 everywhere = uniform dice).
+    peek_budget: ``[Dev]`` int32 — max peer peeks one chip may issue per
+                 batch (0 everywhere disables the peek path entirely; the
+                 engine then compiles no ``MSG_PEEK`` machinery).
+    demand_beta: float — cap for the route-demand admission boost
+                 (1.0 disables it).
+    """
+
+    admit_bias: np.ndarray
+    evict_salt: np.ndarray
+    peek_budget: np.ndarray
+    demand_beta: float = 1.0
+
+
+def uniform_policy(cfg) -> CachePolicy:
+    """The pre-refactor behaviour: every chip rolls the same dice, nobody
+    peeks.  An engine built with this policy (or ``cache_policy=None``) is
+    bit-identical to the pre-policy-layer engine."""
+    d = cfg.n_devices
+    return CachePolicy(
+        admit_bias=np.ones((d, cfg.n_memory), np.float32),
+        evict_salt=np.zeros((d,), np.int64),
+        peek_budget=np.zeros((d,), np.int32),
+        demand_beta=1.0,
+    )
+
+
+def divergent_policy(cfg, *, col_affinity: float = 4.0,
+                     demand_beta: float = 2.0,
+                     peek_budget: int = 64) -> CachePolicy:
+    """Cooperative fleet caching: the ``n_memory`` siblings sharing a route
+    partition specialize on disjoint memory-column slices.
+
+    Chip ``dev`` (device-linear, route-major: ``dev = r * n_memory + m``)
+    boosts admission for leaves owned by its own column coordinate ``m`` by
+    ``col_affinity`` and damps the others by ``1/col_affinity``; a per-chip
+    salt decorrelates the dice; up to ``peek_budget`` missing leaves per
+    batch are peeked from the owning column's cache instead of row-fetched.
+    """
+    d = cfg.n_devices
+    bias = np.full((d, cfg.n_memory), 1.0 / col_affinity, np.float32)
+    for dev in range(d):
+        bias[dev, dev % cfg.n_memory] = col_affinity
+    return CachePolicy(
+        admit_bias=bias,
+        evict_salt=np.arange(1, d + 1, dtype=np.int64),
+        peek_budget=np.full((d,), peek_budget, np.int32),
+        demand_beta=float(demand_beta),
+    )
+
+
+def is_uniform(policy: Optional[CachePolicy]) -> bool:
+    """Host-side static check: does ``policy`` degenerate to the uniform
+    dice?  Decided at engine-build time so the uniform program contains the
+    *verbatim* pre-refactor dice call (bit-identity guarantee)."""
+    if policy is None:
+        return True
+    return (
+        bool(np.all(np.asarray(policy.admit_bias) == 1.0))
+        and bool(np.all(np.asarray(policy.evict_salt) == 0))
+        and float(policy.demand_beta) == 1.0
+    )
+
+
+def peeks_enabled(policy: Optional[CachePolicy]) -> bool:
+    """Host-side static check: does any chip hold peek budget?"""
+    return policy is not None and bool(
+        np.any(np.asarray(policy.peek_budget) > 0)
+    )
+
+
+def demand_boost(policy: Optional[CachePolicy], cfg, demand: jax.Array,
+                 r_lin: jax.Array) -> Optional[jax.Array]:
+    """Per-chip scalar admission boost from this chip's *local* view of
+    route demand: ``clip(n_route * share(own partition), 1/beta, beta)``.
+    Chip-local by construction — adds no collective.  ``None`` when the
+    policy does not use demand biasing."""
+    if policy is None or float(policy.demand_beta) == 1.0:
+        return None
+    dem = demand[0].astype(jnp.float32)                  # [n_route]
+    share = dem[r_lin] / jnp.maximum(jnp.sum(dem), 1.0)
+    beta = float(policy.demand_beta)
+    return jnp.clip(cfg.n_route * share, 1.0 / beta, beta)
+
+
+def device_peek_budget(policy: CachePolicy, dev: jax.Array) -> jax.Array:
+    """This chip's per-batch peek budget (int32 scalar)."""
+    return jnp.asarray(np.asarray(policy.peek_budget), jnp.int32)[dev]
+
+
+def leaf_admit(meta: PoolMeta, cfg, policy: Optional[CachePolicy],
+               gid: jax.Array, salt, *, dev: jax.Array,
+               boost: Optional[jax.Array] = None) -> jax.Array:
+    """THE leaf-admission entry point — the only place the mesh plane rolls
+    the §5.4 admission dice.  ``salt`` is the caller's access salt (op
+    counter + lane index, re-rolled per access exactly like the inline
+    call sites this replaced).
+
+    Uniform policies take the verbatim pre-refactor path
+    ``routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct, salt=salt)``.
+    Divergent policies scale the percent by the chip's column-affinity
+    bias for the leaf's owning column (and the optional demand ``boost``)
+    and fold the chip's eviction salt into the dice salt.
+    """
+    if is_uniform(policy):
+        return routing.leaf_admit_dice(gid, cfg.p_admit_leaf_pct, salt=salt)
+    s_per = meta.n_subtrees_padded // cfg.n_memory
+    col = ((gid // meta.subtree_cap) // s_per).astype(jnp.int32)
+    bias = jnp.asarray(np.asarray(policy.admit_bias), jnp.float32)
+    pct = jnp.float32(cfg.p_admit_leaf_pct) * bias[dev, col]
+    if boost is not None:
+        pct = pct * boost
+    pct_i = jnp.clip(jnp.round(pct), 1, 100).astype(jnp.int32)
+    esalt = jnp.asarray(np.asarray(policy.evict_salt), jnp.int64)[dev]
+    # golden-ratio odd constant, wrapped to signed int64 (two's complement)
+    phi64 = jnp.int64(np.uint64(0x9E3779B97F4A7C15).astype(np.int64))
+    salt = jnp.int64(salt) + esalt * phi64
+    return routing.leaf_admit_dice(gid, pct_i, salt=salt)
+
+
+def cache_probe(cache: DexCache, cfg, versions: jax.Array, gid: jax.Array):
+    """Probe the per-chip cache.  A tag match only counts as a hit when the
+    entry's admit-time version still equals the node's current version
+    (``versions`` is this chip's replicated per-node version table) — rows
+    made stale by another chip's write are rejected and re-fetched.  Returns
+    ``(hit, keys_row, children_row, values_row, set_idx, present)`` where
+    ``present`` marks a tag match regardless of version (a stale copy that
+    ``cache_admit`` will refresh in place)."""
+    set_idx = (
+        routing.hash64(gid) % jnp.uint64(cfg.cache_sets)
+    ).astype(jnp.int32)
+    tags = cache.tags[0, set_idx]                        # [B, W]
+    tagged = tags == gid[:, None]
+    fresh = cache.ver[0, set_idx] == versions[gid][:, None]
+    eq = tagged & fresh
+    hit = jnp.any(eq, axis=-1)
+    present = jnp.any(tagged, axis=-1)  # tag match, possibly version-stale
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    k = cache.keys[0, set_idx, way]
+    c = cache.children[0, set_idx, way]
+    v = cache.values[0, set_idx, way]
+    return hit, k, c, v, set_idx, present
+
+
+def cache_admit(
+    cache: DexCache,
+    cfg,
+    versions: jax.Array,
+    gid: jax.Array,
+    set_idx: jax.Array,
+    admit: jax.Array,
+    rows_k: jax.Array,
+    rows_c: jax.Array,
+    rows_v: jax.Array,
+) -> DexCache:
+    """FIFO-within-set insertion of fetched rows (cooling-map analogue).
+    Admitted rows are stamped with the node's current version.  A row whose
+    tag is already present (a version-stale copy being refetched) is
+    *refreshed in place* — same way, no FIFO advance — so staleness heals
+    without re-rolling the admission dice."""
+    tagged = cache.tags[0, set_idx] == gid[:, None]
+    present = jnp.any(tagged, axis=-1)
+    pway = jnp.argmax(tagged, axis=-1).astype(jnp.int32)
+    fway = (cache.fifo[0, set_idx] % cfg.cache_ways).astype(jnp.int32)
+    way = jnp.where(present, pway, fway)
+    # non-admitting lanes scatter out of bounds (dropped)
+    sidx = jnp.where(admit, set_idx, cfg.cache_sets)
+    tags = cache.tags.at[0, sidx, way].set(gid, mode="drop")
+    keys = cache.keys.at[0, sidx, way].set(rows_k, mode="drop")
+    children = cache.children.at[0, sidx, way].set(rows_c, mode="drop")
+    values = cache.values.at[0, sidx, way].set(rows_v, mode="drop")
+    fifo = cache.fifo.at[0, jnp.where(present, cfg.cache_sets, sidx)].add(
+        1, mode="drop"
+    )
+    ver = cache.ver.at[0, sidx, way].set(versions[gid], mode="drop")
+    return DexCache(tags=tags, keys=keys, children=children, values=values,
+                    fifo=fifo, ver=ver)
+
+
+def cached_fetch_level(
+    pool: SubtreePool,
+    meta: PoolMeta,
+    cfg,
+    cache: DexCache,
+    versions: jax.Array,
+    gid: jax.Array,
+    want: jax.Array,
+    admit_ok: jax.Array,
+    peek_elig: Optional[jax.Array] = None,
+    peek_budget: Optional[jax.Array] = None,
+):
+    """One level of the cached traversal, shared by lookup, scan and the
+    write path: probe the per-chip cache for ``gid`` rows (rejecting entries
+    whose admit-time version is stale against ``versions``), remote-fetch
+    the misses, and admit fetched rows where ``admit_ok`` (a load-shed
+    fetch's placeholder row is never admitted).  Returns ``(rows_k, rows_c,
+    rows_v, hit, miss, shed, n_msgs, new_cache, peeked)`` with
+    ``hit``/``miss`` already masked by ``want``; ``n_msgs`` counts the
+    coalesced remote-read messages (duplicate same-node misses in a batch
+    share one message).
+
+    When the engine's policy enables peer peeks, ``peek_elig`` marks lanes
+    that should *defer* a local miss to the owning column's cache instead
+    of paying the remote row fetch here, and ``peek_budget`` caps how many
+    do per batch.  ``peeked`` lanes fetch nothing and admit nothing at this
+    level — the engine resolves them through a ``MSG_PEEK`` message in the
+    fused round.  With peeks disabled (``peek_elig=None``) the dataflow is
+    exactly the pre-refactor one and ``peeked`` is ``None``.
+    """
+    hit, ck, cc, cv, set_idx, present = cache_probe(cache, cfg, versions, gid)
+    hit = hit & want
+    miss = want & ~hit
+    if peek_elig is None:
+        peeked = None
+        fetch_miss = miss
+    else:
+        cand = miss & peek_elig
+        rank = jnp.cumsum(cand.astype(jnp.int32)) - 1
+        peeked = cand & (rank < peek_budget)
+        fetch_miss = miss & ~peeked
+    fk, fc, fv, shed, n_msgs = routing.fetch_rows(pool, meta, cfg, gid,
+                                                  fetch_miss)
+    rows_k = jnp.where(hit[:, None], ck, fk)
+    rows_c = jnp.where(hit[:, None], cc, fc)
+    rows_v = jnp.where(hit[:, None], cv, fv)
+    # version-stale tagged rows always refresh in place; the admission dice
+    # only gates brand-new entries
+    new_cache = cache_admit(
+        cache, cfg, versions, gid, set_idx,
+        fetch_miss & (admit_ok | present) & ~shed,
+        rows_k, rows_c, rows_v,
+    )
+    return rows_k, rows_c, rows_v, hit, miss, shed, n_msgs, new_cache, peeked
+
+
+def peer_answer(cache: DexCache, cfg, versions: jax.Array, gid: jax.Array,
+                key: jax.Array, want: jax.Array):
+    """Owner-side half of a ``MSG_PEEK``: probe *this* chip's cache for the
+    requested leaf on behalf of a peeking sibling.  Version-checked like
+    any probe — a stale (e.g. poisoned) row fails ``hit`` and the caller
+    falls back to its local block walk.  Returns ``(peer_hit, found,
+    value)`` where ``found``/``value`` are only meaningful under
+    ``peer_hit``."""
+    gsafe = jnp.where(want, gid, 0)
+    hit, rows_k, _rows_c, rows_v, _sidx, _present = cache_probe(
+        cache, cfg, versions, gsafe
+    )
+    peer_hit = hit & want
+    eq = (rows_k == key[:, None]) & peer_hit[:, None]
+    found = jnp.any(eq, axis=-1)
+    value = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
+    return peer_hit, found, value
+
+
+def invalidate_nodes(versions: jax.Array, gids: np.ndarray) -> jax.Array:
+    """Bump the per-node version of every gid in ``gids`` by one — the
+    fleet-wide cache-invalidation primitive.  Every chip's version-checked
+    probe (:func:`cache_probe`) rejects its cached copy of a bumped node on
+    the next access, mesh-wide, without touching any cache array.  Used by
+    ``core/repartition.py`` when a boundary install moves subtrees between
+    partitions (host-side ``gids``; returns the new replicated table)."""
+    n_nodes = versions.shape[-1]
+    bump = np.zeros((n_nodes,), np.int32)
+    bump[np.asarray(gids)] = 1
+    return versions + jnp.asarray(bump)[None, :]

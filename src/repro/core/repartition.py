@@ -47,6 +47,7 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fleet_cache
 from repro.core.dex import N_STATS, STAT_DROPS, STAT_OPS, DexState
 from repro.core.nodes import KEY_MAX, KEY_MIN
 from repro.core.partition import LogicalPartitions
@@ -191,14 +192,13 @@ def install_boundaries(
     affected = np.zeros(gids.shape, dtype=bool)
     for a, b in moved:
         affected |= (lo < b) & (hi > a)
-    n_nodes = state.versions.shape[-1]
-    bump = np.zeros((n_nodes,), dtype=np.int32)
-    bump[gids[affected]] = 1
     shared_before = int(np.sum(np.asarray(old.is_shared_range(lo, hi))))
     shared_after = int(np.sum(np.asarray(new.is_shared_range(lo, hi))))
     new_state = state._replace(
         boundaries=jnp.asarray(new.boundaries, jnp.int64),
-        versions=state.versions + jnp.asarray(bump)[None, :],
+        versions=fleet_cache.invalidate_nodes(
+            state.versions, gids[affected]
+        ),
     )
     return new_state, int(affected.sum()), shared_before, shared_after
 

@@ -392,6 +392,13 @@ class Counters:
     #                               version check catches the stale descent
     #                               and the lane re-resolves two-sided
     #                               (STAT_PIPE_STALLS analogue)
+    peer_hits: int = 0            # leaf misses answered from a sibling
+    #                               cache's version-fresh copy via a peer
+    #                               peek (STAT_PEER_HITS analogue)
+    peer_misses: int = 0          # peer peeks the sibling could not serve
+    #                               (stale/absent row; resolved by the
+    #                               owning server's walk —
+    #                               STAT_PEER_MISSES analogue)
 
     def add_read(self, nbytes: int = NODE_BYTES) -> None:
         self.rdma_read += 1
@@ -480,6 +487,26 @@ class SimConfig:
     cache_top_inner_only: bool = False      # Sherman: lowest inner + above
     p_admit_leaf: float = DEFAULT_P_ADMIT_LEAF
     eager_admission: bool = False
+    fleet_col_affinity: float = 1.0         # divergent fleet policy
+                                            # (core/fleet_cache.py
+                                            # divergent_policy mirror): each
+                                            # of a partition's
+                                            # route_dispersion sibling caches
+                                            # multiplies its leaf-admission
+                                            # probability by this for leaves
+                                            # whose memory server matches
+                                            # its own sibling coordinate
+                                            # (server % d == cache % d), and
+                                            # by the reciprocal otherwise;
+                                            # 1.0 keeps the uniform dice
+    fleet_peek_budget: int = 0              # peer peeks one cache may issue
+                                            # per coherence window: a leaf
+                                            # miss whose subtree another
+                                            # sibling specializes on asks
+                                            # that sibling's cache (one
+                                            # compute-to-compute message)
+                                            # before paying the remote read;
+                                            # 0 disables the peek path
     centralized_fifo: bool = False          # single-bucket cooling map baseline
     cooling_slots: int = 6
 
@@ -585,6 +612,22 @@ class Simulator:
         parts = LogicalPartitions.equal_width(n_parts, lo, hi + 1)
         self.partitions = self._snap_to_leaf_fences(parts)
         cap_nodes = max(8, cfg.cache_bytes // NODE_BYTES)
+
+        def _bias_for(i: int):
+            # divergent fleet policy: cache i specializes on the memory
+            # servers matching its sibling coordinate (i % d) — the Plane B
+            # CachePolicy.admit_bias column-affinity mirror
+            if cfg.fleet_col_affinity == 1.0:
+                return None
+            a = float(cfg.fleet_col_affinity)
+            d = max(cfg.route_dispersion, 1)
+
+            def bias(nid: int, _i=i, _a=a, _d=d) -> float:
+                ms = int(tree.server[tree.subtree_root_of(nid)])
+                return _a if ms % _d == _i % _d else 1.0 / _a
+
+            return bias
+
         self.caches = [
             ComputeCache(
                 cap_nodes,
@@ -597,6 +640,7 @@ class Simulator:
                     10**9 if cfg.centralized_fifo else cfg.cooling_slots
                 ),
                 rng=np.random.default_rng(seed + 17 * i + 1),
+                admit_bias=_bias_for(i),
             )
             for i in range(cfg.n_compute)
         ]
@@ -608,6 +652,9 @@ class Simulator:
         # already fetched this window, and write-staleness marks deferred
         # to the next window boundary
         self._window_fetched = [set() for _ in range(cfg.n_compute)]
+        # peer peeks already issued this window, per cache (budget mirror of
+        # the mesh's per-batch CachePolicy.peek_budget)
+        self._window_peeks = np.zeros((cfg.n_compute,), dtype=np.int64)
         self._pending_writes = []           # (writer server, leaf)
         # leaves written by the immediately-preceding window — the
         # pipelined overlap set (pipeline_overlap pricing)
@@ -725,6 +772,7 @@ class Simulator:
         self._pending_writes.clear()
         for w in self._window_fetched:
             w.clear()
+        self._window_peeks[:] = 0
 
     def _cacheable(self, nid: int) -> bool:
         cfg = self.cfg
@@ -949,7 +997,8 @@ class Simulator:
     # issuing remote verbs per the configured protocol.  Returns the list of
     # (node, was_cached) and whether the op was completed via offload.
     def _traverse(self, server: int, key: int, *, for_write: bool,
-                  is_insert: bool = False) -> Tuple[List[Tuple[int, bool]], bool]:
+                  is_insert: bool = False,
+                  peek_ok: bool = True) -> Tuple[List[Tuple[int, bool]], bool]:
         cfg = self.cfg
         cache = self.caches[server]
         c = self.counters[server]
@@ -1049,6 +1098,39 @@ class Simulator:
                 else:
                     self._offload(server, nid, levels_left)
                     return visited, True
+            if (
+                cfg.fleet_peek_budget > 0
+                and lvl == 0
+                and peek_ok
+                and not for_write
+                and self._window_peeks[server] < cfg.fleet_peek_budget
+            ):
+                # peer peek (core/fleet_cache.py MSG_PEEK mirror): instead of
+                # paying the remote row read, ask the sibling cache that
+                # specializes on this leaf's memory server — one compute-to-
+                # compute message riding the window's fused round.  A
+                # version-fresh sibling copy answers; a stale or absent one
+                # is a peer miss resolved by the owning server's walk next
+                # to the data.  Peeked lanes fetch and admit nothing here.
+                d = max(cfg.route_dispersion, 1)
+                ms = int(self.tree.server[nid]) % cfg.n_mem_servers
+                sib = (server // d) * d + ms % d
+                if sib != server:
+                    self._window_peeks[server] += 1
+                    c.bytes += RPC_BYTES
+                    self.op_clock[server] += cfg.t_rpc_base
+                    if nid in self.caches[sib] and nid not in self.stale[sib]:
+                        c.peer_hits += 1
+                        self.counters[sib].local_accesses += 1
+                        self.op_clock[sib] += cfg.t_cached_access
+                    else:
+                        c.peer_misses += 1
+                        service = (lvl + 1) * cfg.t_mem_search
+                        self.mem_busy[ms] += service
+                        self.mem_reqs[ms] += 1
+                    self._gobs(nid, False)
+                    visited.append((nid, False))
+                    continue
             lat = self._remote_read(server, nid, shared)
             self.op_clock[server] += lat
             if cfg.coherence_batch > 1:
@@ -1201,7 +1283,7 @@ class Simulator:
             self.cfg.offloading = False
             self._group_obs_off = True
             self._traverse(server, int(self.tree.K[leaf, 0]) if not first else key,
-                           for_write=False)
+                           for_write=False, peek_ok=False)
             self._group_obs_off = False
             self.cfg.offloading = save
             first = False
@@ -1226,6 +1308,8 @@ class Simulator:
             out.offload_groups += c.offload_groups
             out.fetch_groups += c.fetch_groups
             out.pipeline_stalls += c.pipeline_stalls
+            out.peer_hits += c.peer_hits
+            out.peer_misses += c.peer_misses
         return out
 
     def cache_stats(self):

@@ -137,6 +137,16 @@ _MESH = (
            doc="lanes whose leaf version moved inside the overlap window: "
                "lookups/updates stale-forced two-sided, scans stall-shed "
                "(always 0 in batch-synchronous mode)"),
+    Metric("peer_hits", "events", "counter", slot=12,
+           stat_const="STAT_PEER_HITS", sim_field="peer_hits",
+           provenance="§5.4 cooperative fleet caching (extend-dist, FlexKV)",
+           doc="peer peeks answered from a sibling chip's version-fresh "
+               "cached row (no memory-column walk needed)"),
+    Metric("peer_misses", "events", "counter", slot=13,
+           stat_const="STAT_PEER_MISSES", sim_field="peer_misses",
+           provenance="§5.4 cooperative fleet caching (extend-dist, FlexKV)",
+           doc="peer peeks the sibling could not serve from cache (stale or "
+               "absent row); resolved by the owning column's block walk"),
 )
 
 _SIM_ONLY = (

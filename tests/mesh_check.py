@@ -781,6 +781,130 @@ def main() -> None:
     np.testing.assert_array_equal(post_k[ok_scan], pre_k[ok_scan])
     np.testing.assert_array_equal(post_v[ok_scan], pre_v[ok_scan])
     np.testing.assert_array_equal(post_t[ok_scan], pre_t[ok_scan])
+
+    # ---- cooperative fleet caching (core/fleet_cache.py): 8-device -------
+    # peer-peek round trip.  Under the divergent policy each chip's leaf
+    # admission skews toward its own memory column's subtrees, so the four
+    # siblings of a route row specialise on disjoint quarters of the hot
+    # set; a local leaf miss for a foreign column is answered from the
+    # sibling specialist's cache via a MSG_PEEK lane riding the engine's
+    # existing fused all_to_all.  Then every cached row fleet-wide is
+    # poisoned and version-bumped: a stale peer row must FAIL the peek's
+    # version check (counted as a peer miss, answered by the owner's block
+    # walk) — never served.
+    from repro.core import fleet_cache  # noqa: E402
+
+    cfg_f = dex_mod.DexMeshConfig(
+        route_axes=("data",),
+        memory_axis="model",
+        n_route=2,
+        n_memory=4,
+        cache_sets=128,
+        cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=50,
+        route_capacity_factor=4.0,
+    )
+    pol_f = fleet_cache.divergent_policy(cfg_f, peek_budget=512)
+    shardings_f = dex_mod.state_shardings(mesh, cfg_f)
+    state = dex_mod.init_state(pool, meta, cfg_f, bounds)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings_f)
+    eng_f = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg_f, mesh, ops=("lookup", "update"), max_count=1,
+        cache_policy=pol_f,
+    ))
+
+    def put_f(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    def stat_sum(st):
+        return np.asarray(st.stats).sum(axis=0)
+
+    hot_f = keys[::40].astype(np.int64)          # spread over all 4 columns
+    rng_f = np.random.default_rng(77)
+
+    def lookup_batch(st):
+        qf = rng_f.choice(hot_f, size=512).astype(np.int64)
+        st, r = eng_f(st, put_f(np.zeros(512, np.int32)), put_f(qf),
+                      put_f(np.zeros(512, np.int64)))
+        assert not np.asarray(r.shed).any()
+        assert np.asarray(r.found).all(), "hot fleet-cache lookup missed"
+        assert (np.asarray(r.values) == qf * 7).all(), (
+            "wrong/stale value served through the fleet cache"
+        )
+        return st
+
+    for _ in range(5):                            # warm the specialists
+        state = lookup_batch(state)
+    before_f = stat_sum(state)
+    state = lookup_batch(state)
+    delta_f = stat_sum(state) - before_f
+    assert int(delta_f[dex_mod.STAT_PEER_HITS]) > 0, (
+        "warm divergent fleet must answer foreign-column misses via peeks"
+    )
+
+    # poison EVERY cached row on EVERY chip and bump EVERY node version:
+    # all cached copies (local and peer alike) are now stale garbage; the
+    # version check must reject each one.  Proven directly on the arrays
+    # with the same `peer_answer` the fused round runs: every tagged row of
+    # every chip answers freely before the poison and not at all after.
+    def fleet_probe(st):
+        cache_np = jax.tree.map(np.asarray, st.cache)
+        vers_np = jnp.asarray(np.asarray(st.versions)[0])
+        n_hits = n_rows = 0
+        for d in range(cache_np.tags.shape[0]):
+            cache_d = jax.tree.map(lambda a: jnp.asarray(a[d:d + 1]), cache_np)
+            gids = np.unique(cache_np.tags[d][cache_np.tags[d] >= 0])
+            if gids.size == 0:
+                continue
+            ph, _fnd, _val = fleet_cache.peer_answer(
+                cache_d, cfg_f, vers_np, jnp.asarray(gids.astype(np.int64)),
+                jnp.zeros(gids.size, jnp.int64), jnp.ones(gids.size, bool),
+            )
+            n_hits += int(np.asarray(ph).sum())
+            n_rows += int(gids.size)
+        return n_hits, n_rows
+
+    fresh_hits, fresh_rows = fleet_probe(state)
+    assert fresh_rows > 0 and fresh_hits > 0, (
+        "warm fleet caches must answer peer probes before the poison"
+    )
+    pois_f = np.asarray(state.cache.values).copy()
+    pois_f[:] = -777_777
+    state = state._replace(
+        cache=state.cache._replace(
+            values=jax.device_put(jnp.asarray(pois_f),
+                                  shardings_f.cache.values)
+        ),
+        versions=jax.device_put(jnp.asarray(state.versions) + 1,
+                                shardings_f.versions),
+    )
+    stale_hits, stale_rows = fleet_probe(state)
+    assert stale_rows >= fresh_rows and stale_hits == 0, (
+        "a version-stale poisoned peer row survived the peek version check"
+    )
+    # engine-level: the batch right after the poison still returns correct
+    # values everywhere (lookup_batch asserts them) and peeks the sibling
+    # could not serve from a fresh row land as peer misses.  Peer hits may
+    # legitimately reappear in the same batch: the fused round answers from
+    # the post-descent cache, so a specialist that re-fetched (and
+    # re-admitted) a hot leaf during this batch's own descent serves it
+    # fresh — never the poisoned copy, which the probe above rejects.
+    before_f = stat_sum(state)
+    state = lookup_batch(state)
+    delta_f = stat_sum(state) - before_f
+    assert int(delta_f[dex_mod.STAT_PEER_MISSES]) > 0, (
+        "stale-fleet peeks must be counted as peer misses"
+    )
+    # recovery: re-warmed specialists serve peeks again from fresh rows
+    for _ in range(4):
+        state = lookup_batch(state)
+    before_f = stat_sum(state)
+    state = lookup_batch(state)
+    delta_f = stat_sum(state) - before_f
+    assert int(delta_f[dex_mod.STAT_PEER_HITS]) > 0, (
+        "fleet must recover peer hits after re-warming fresh rows"
+    )
     print("MESH_CHECK_OK")
 
 

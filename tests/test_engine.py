@@ -508,3 +508,164 @@ class TestInterleavedPropertyHypothesis:
                         assert int(v3[i]) == hv
 
         scenario()
+
+
+# ---------------------------------------------------------------------------
+# Fleet-cache policy layer (core/fleet_cache.py): the refactor must be
+# invisible in uniform mode — golden digests captured from the pre-refactor
+# engine pin the results plane, the pool/version/occupancy planes and the
+# pre-existing stat slots bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _digest(*arrays):
+    import hashlib
+
+    m = hashlib.sha256()
+    for a in arrays:
+        a = np.asarray(a)
+        m.update(str(a.dtype).encode())
+        m.update(str(a.shape).encode())
+        m.update(np.ascontiguousarray(a).tobytes())
+    return m.hexdigest()[:16]
+
+
+#: digests captured from the pre-refactor engine (commit f10d0ee) on the
+#: exact traces below; ``stats`` covers the first 12 slots — the append-only
+#: registry grew STAT_PEER_HITS/STAT_PEER_MISSES behind them
+GOLDEN_SYNC = {
+    "results": "13a52c855d8bb34c",
+    "state": "c15d2578f7089877",
+    "stats12": "8360e212492d6683",
+}
+GOLDEN_PIPE = {
+    "results": "9a0530fdcd963a29",
+    "state": "94e5a79e074503c5",
+    "stats12": "368a753978770c50",
+}
+
+
+class TestFleetCachePolicyGoldens:
+    def _sync_digests(self, cache_policy):
+        keys = _dataset(4000, seed=31)
+        state, meta, cfg, mesh, _, _ = _setup(keys)
+        eng = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=engine_mod.ALL_OPS, max_count=MC,
+            cache_policy=cache_policy,
+        ))
+        rng = np.random.default_rng(32)
+        batches = _mixed_batches(keys, rng, 4, 256, with_scan=True,
+                                 hot=keys[40:48])
+        import hashlib
+
+        res_h = hashlib.sha256()
+        for opc, kk, vals in batches:
+            state, r = eng(state, jnp.asarray(opc), jnp.asarray(kk),
+                           jnp.asarray(vals))
+            res_h.update(_digest(r.found, r.values, r.status, r.shed,
+                                 r.scan_keys, r.scan_values, r.taken)
+                         .encode())
+        stats = np.asarray(state.stats)
+        return {
+            "results": res_h.hexdigest()[:16],
+            "state": _digest(state.pool.pool_keys, state.pool.pool_values,
+                             state.versions, state.occupancy),
+            "stats12": _digest(stats[:, :12]),
+        }, stats
+
+    def test_uniform_mode_bit_identical_to_pre_refactor(self):
+        """``cache_policy=None`` reproduces the pre-refactor goldens:
+        results lane-for-lane, pool/version/occupancy planes, and every
+        pre-existing stat slot; the two new peer slots stay zero.  Run
+        twice with the same trace+seed: bit-identical across runs."""
+        d1, stats = self._sync_digests(None)
+        assert d1 == GOLDEN_SYNC, d1
+        assert (stats[:, dex_mod.STAT_PEER_HITS] == 0).all()
+        assert (stats[:, dex_mod.STAT_PEER_MISSES] == 0).all()
+        d2, _ = self._sync_digests(None)
+        assert d2 == d1, "same trace+seed must be bit-identical across runs"
+
+    def test_explicit_uniform_policy_matches_none(self):
+        """An all-ones/zero-salt ``uniform_policy`` pytree is the SAME
+        program as ``cache_policy=None`` — the policy layer's uniform
+        branch defers to ``routing.leaf_admit_dice`` verbatim."""
+        from repro.core import fleet_cache
+
+        keys = _dataset(4000, seed=31)
+        _, _, cfg, _, _, _ = _setup(keys)
+        pol = fleet_cache.uniform_policy(cfg)
+        assert fleet_cache.is_uniform(pol)
+        assert not fleet_cache.peeks_enabled(pol)
+        d, _ = self._sync_digests(pol)
+        assert d == GOLDEN_SYNC, d
+
+    def test_pipelined_uniform_mode_matches_goldens(self):
+        keys = _dataset(4000, seed=33)
+        state, meta, cfg, mesh, _, _ = _setup(keys)
+        pipe = engine_mod.make_dex_engine(
+            meta, cfg, mesh, ops=("lookup", "update", "insert"),
+            max_count=1, pipeline=True,
+        )
+        rng = np.random.default_rng(34)
+        batches = _mixed_batches(keys, rng, 5, 128, hot=keys[40:48])
+        s_pipe, pipe_res = pipe.run(
+            state,
+            [(jnp.asarray(o), jnp.asarray(k), jnp.asarray(v))
+             for o, k, v in batches],
+        )
+        import hashlib
+
+        res_h = hashlib.sha256()
+        for r in pipe_res:
+            res_h.update(_digest(r.found, r.values, r.status, r.shed)
+                         .encode())
+        got = {
+            "results": res_h.hexdigest()[:16],
+            "state": _digest(s_pipe.pool.pool_keys, s_pipe.pool.pool_values,
+                             s_pipe.versions, s_pipe.occupancy),
+            "stats12": _digest(np.asarray(s_pipe.stats)[:, :12]),
+        }
+        assert got == GOLDEN_PIPE, got
+
+    def test_golden_trace_matches_host_replay(self):
+        """The golden trace itself replays against HostBTree — the pinned
+        digests encode *correct* behaviour, not just frozen behaviour."""
+        keys = _dataset(4000, seed=31)
+        state, meta, cfg, mesh, host, bounds = _setup(keys)
+        eng = _full_engine(meta, cfg, mesh)
+        rng = np.random.default_rng(32)
+        batches = _mixed_batches(keys, rng, 4, 256, with_scan=True,
+                                 hot=keys[40:48])
+        for opc, kk, vals in batches:
+            state, r = eng(state, jnp.asarray(opc), jnp.asarray(kk),
+                           jnp.asarray(vals))
+            found = np.asarray(r.found)
+            got_v = np.asarray(r.values)
+            status = np.asarray(r.status)
+            done = ~np.asarray(r.shed)
+            for i in np.where(done & (opc == engine_mod.OP_LOOKUP))[0]:
+                hv = host.get(int(kk[i]))
+                assert bool(found[i]) == (hv is not None), int(kk[i])
+                if hv is not None:
+                    assert int(got_v[i]) == hv, int(kk[i])
+            for i in np.where(done & (opc == engine_mod.OP_UPDATE))[0]:
+                applied = host.update(int(kk[i]), int(vals[i]))
+                assert (status[i] == write_mod.STATUS_OK) == applied
+            for i in np.where(done & (opc == engine_mod.OP_INSERT))[0]:
+                if status[i] == write_mod.STATUS_OK:
+                    host.insert(int(kk[i]), int(vals[i]))
+
+
+class TestSharedAdmissionConstant:
+    def test_one_definition_of_the_leaf_admission_dice(self):
+        """Both planes derive the leaf-admission probability from ONE
+        definition: cache.DEFAULT_P_ADMIT_LEAF is the source of truth,
+        fleet_cache.P_ADMIT_LEAF_PCT is its percent form, and the mesh
+        config default plus the dex re-export point at it."""
+        from repro.core import fleet_cache
+        from repro.core.cache import DEFAULT_P_ADMIT_LEAF
+
+        pct = int(round(DEFAULT_P_ADMIT_LEAF * 100))
+        assert fleet_cache.P_ADMIT_LEAF_PCT == pct
+        assert dex_mod.P_ADMIT_LEAF_PCT == pct
+        assert dex_mod.DexMeshConfig().p_admit_leaf_pct == pct
