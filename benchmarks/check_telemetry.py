@@ -9,7 +9,11 @@ Fails (exit 1) when:
   dropped counter must show up here, not in a dashboard weeks later),
 * a timeline named in the results has no ``{name}.metrics_timeline.json``
   or ``{name}.trace.json`` in the trace dir, or the trace file is not
-  trace-event JSON.
+  trace-event JSON,
+* a fig19 latency-ledger export breaks its schema: bucket edges not
+  strictly monotone, histogram counts not conserved against the summed
+  STAT_OPS deltas, an outcome-path label missing, or the gated arm's
+  cost audit absent.
 
 Usage::
 
@@ -23,11 +27,11 @@ import json
 import pathlib
 import sys
 
-from repro.obs import registry
+from repro.obs import latency, registry
 
 #: modules whose run() must register at least one timeline
 MESH_MODULES = ("fig15mesh", "fig6mesh", "fig10meshrep", "fig14meshload",
-                "fig13engine")
+                "fig13engine", "fig19tails")
 
 #: every timeline counter snapshot must carry these names
 EXPECTED_METRICS = frozenset(
@@ -93,6 +97,65 @@ def _check_pipeline(results, timelines, tdir, problems):
             )
 
 
+#: every fig19 timeline must carry the latency ledger; the gated YCSB-A
+#: arm must additionally carry the offload cost audit
+LATENCY_TIMELINE_PREFIX = "fig19tails_"
+AUDITED_TIMELINE = "fig19tails_ycsb-a"
+
+
+def _check_latency(name, summary, problems):
+    """Schema guard for one timeline's ``latency`` (and ``cost_audit``)
+    section: bucket monotonicity, label completeness, count conservation
+    against the timeline's own summed STAT_OPS deltas."""
+    lat = summary.get("latency")
+    if not lat:
+        problems.append(f"{name}: latency section missing from summary")
+        return
+    edges = lat.get("bucket_edges_s") or []
+    if len(edges) != latency.N_BUCKETS + 1:
+        problems.append(
+            f"{name}: {len(edges)} bucket edges != {latency.N_BUCKETS + 1}")
+    if any(b <= a for a, b in zip(edges, edges[1:])):
+        problems.append(f"{name}: bucket edges not strictly monotone")
+    if tuple(lat.get("paths") or ()) != latency.PATHS:
+        problems.append(
+            f"{name}: outcome paths {lat.get('paths')} != "
+            f"{list(latency.PATHS)}")
+    if tuple(lat.get("op_classes") or ()) != latency.OP_CLASSES:
+        problems.append(
+            f"{name}: op classes {lat.get('op_classes')} != "
+            f"{list(latency.OP_CLASSES)}")
+    hist = lat.get("hist") or []
+    try:
+        total = sum(sum(sum(cell) for cell in cls) for cls in hist)
+    except TypeError:
+        problems.append(f"{name}: histogram is not a 3-level nested list")
+        return
+    if total != lat.get("total"):
+        problems.append(
+            f"{name}: histogram self-total {total} != declared "
+            f"{lat.get('total')}")
+    # exact conservation: one binned lane per served op — the per-batch
+    # counter deltas sum to the measured window's STAT_OPS
+    ops = (summary.get("counters") or {}).get("ops")
+    if ops is not None and total != int(ops):
+        problems.append(
+            f"{name}: {total} binned lanes != {int(ops)} served ops — "
+            f"the ledger lost or double-binned lanes")
+    for cls, led in (lat.get("ledger") or {}).items():
+        for pname in latency.PATHS:
+            if pname not in (led.get("paths") or {}):
+                problems.append(
+                    f"{name}: ledger[{cls}] lacks path '{pname}'")
+                break
+    if name == AUDITED_TIMELINE:
+        audit = summary.get("cost_audit")
+        if not audit:
+            problems.append(f"{name}: cost_audit section missing")
+        elif not audit.get("cells"):
+            problems.append(f"{name}: cost_audit has no priced cells")
+
+
 def _fail(problems):
     print("telemetry guard: FAIL")
     for p in problems:
@@ -120,6 +183,8 @@ def check(results_path: str, trace_dir: str) -> int:
         timelines.update(tel)
 
     for name, summary in sorted(timelines.items()):
+        if name.startswith(LATENCY_TIMELINE_PREFIX):
+            _check_latency(name, summary, problems)
         counters = summary.get("counters") or {}
         missing = EXPECTED_METRICS - set(counters)
         if missing:

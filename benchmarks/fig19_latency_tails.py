@@ -1,0 +1,545 @@
+"""Fig. 19: per-lane latency tails on the forced-8-device mesh.
+
+The engine prices every lane's trip through a batch with the simulator's
+cost constants and bins it on-device into the shared log-bucket histogram
+(``DexState.lat_hist``, schema in obs/latency.py, DESIGN.md §12).  This
+benchmark drives YCSB-A/B/E through the instrumented engine and exercises
+the whole ledger:
+
+* **Path breakdown** — per (op class, outcome path) counts and p50/p99 for
+  cache-hit, remote-fetch, peer-peek, offload, stale-forced and shed lanes.
+  A peer-peek arm (fig12's divergent fleet policy) shows peeked lanes
+  costing more than pure cache hits but no more than the two-sided offload
+  walk; the pipelined arm shows the stale-forced re-execution tail that
+  batch-synchronous service never pays.
+* **Cross-plane percentile gates** — the YCSB-A arm warms one memory
+  column under a forced-fetch engine then measures under ``policy="auto"``
+  (fig13's part-2 contrast), while the ``Simulator`` samples per-op
+  latencies off ``op_clock`` into the identical schema on the identical
+  trace.  ``drift.assert_plane_agreement`` gates mesh-vs-sim p50 AND p99
+  per op class with one-bucket (2x) slack — percentiles are geometric
+  bucket midpoints, so agreement means landing within one bucket.
+* **Cost-model audit** — the offload decision's predicted fetch bytes
+  (EMA rule) vs realized fetch bytes per (column, level)
+  (``DexState.lat_audit``); the mispricing ratio is reported and banded by
+  benchmarks/check_perf.py.
+* **Zero added collectives** — the latency plane is pure per-device
+  arithmetic plus one scatter.  Its blocks are labelled with
+  ``routing.trace_phase("dex/lat")``, so the traced program proves it: no
+  collective may be attributed to the ``dex/lat`` phase, in the
+  synchronous engine or in either half of a pipelined step.
+* **Exact conservation** — every arm asserts the measured-window histogram
+  delta equals the STAT_OPS delta (each served lane is binned exactly
+  once; the pipelined histogram lags one batch and closes at drain).
+
+Run with ``PYTHONPATH=src python benchmarks/fig19_latency_tails.py
+[--quick]`` or via the suite: ``python -m benchmarks.run --only
+fig19tails``.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import engine as engine_mod  # noqa: E402
+from repro.core import fleet_cache  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import routing  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, SimConfig, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+from repro.obs import drift, latency  # noqa: E402
+from benchmarks import common  # noqa: E402
+from benchmarks.common import engine_with_retries  # noqa: E402
+
+BATCH = 1024
+UPDATE_XOR = 0x5A5A
+MAX_RETRIES = 4
+SCAN_LEN = 24
+MC = 32
+
+#: one-bucket slack on geometric-midpoint percentiles: adjacent buckets are
+#: exactly 2x apart, so agreement-within-one-bucket is a [0.5, 2] ratio
+#: (padded for float fuzz)
+LAT_BAND = drift.ratio(0.49, 2.05)
+
+#: the per-op-class percentile gates for the cross-plane YCSB-A arm; scans
+#: are excluded by design — the simulator re-traverses root-to-leaf per
+#: scan hop while the mesh follows the succ chain, so their modeled costs
+#: diverge structurally (the breakdown still reports them)
+GATED_CLASSES = ("lookup", "update")
+
+
+def _mesh_setup(dataset, *, policy="auto", cache_sets=512, ema_decay=0.98,
+                p_admit_leaf_pct=10):
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7,
+                                     n_shards=4)
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=cache_sets, cache_ways=4,
+        policy=policy, ema_decay=ema_decay,
+        p_admit_leaf_pct=p_admit_leaf_pct,
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg),
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    return pool, meta, mesh, cfg, bounds, state, sharding
+
+
+def _assert_no_lat_collectives(counts, label):
+    """The latency ledger's traced blocks must issue ZERO collectives."""
+    phases = counts.get("phases", {})
+    assert "dex/lat" not in phases, (
+        f"{label}: latency plane issued collectives: {phases['dex/lat']}"
+    )
+
+
+def _fleet_hist(state):
+    return np.asarray(state.lat_hist).sum(axis=0).astype(np.int64)
+
+
+def _fleet_audit(state):
+    return np.asarray(state.lat_audit, dtype=np.float64).sum(axis=0)
+
+
+def _run_arm(wl_name, ops_set, dataset, n_warm, n_meas, batch, *,
+             policy="auto", cache_sets=512, p_admit_leaf_pct=10,
+             cache_policy=None, tl=None, seed=11):
+    """One synchronous engine arm over a ``wl_name`` trace: warm, prime the
+    ledger at the measure fence, record each measured batch, capture the
+    histogram delta and assert exact conservation against STAT_OPS.
+    ``cache_policy`` may be a callable receiving the arm's ``cfg`` (so a
+    fleet policy is always built from the config it runs under)."""
+    _pool, meta, mesh, cfg, bounds, state, sharding = _mesh_setup(
+        dataset, policy=policy, cache_sets=cache_sets,
+        p_admit_leaf_pct=p_admit_leaf_pct)
+    if callable(cache_policy):
+        cache_policy = cache_policy(cfg)
+    eng_fn = engine_mod.make_dex_engine(meta, cfg, mesh, ops=ops_set,
+                                        max_count=MC,
+                                        cache_policy=cache_policy)
+    eng = jax.jit(eng_fn)
+    wl = ycsb.generate(wl_name, dataset, (n_warm + n_meas) * batch,
+                       theta=0.99, seed=seed, scan_len=SCAN_LEN,
+                       scan_len_dist="uniform")
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    opc0, kk0, vv0 = ycsb.engine_lanes(wl, 0, batch, update_xor=UPDATE_XOR)
+    counts = routing.trace_collective_counts(
+        eng_fn, state, jnp.asarray(opc0), jnp.asarray(kk0),
+        jnp.asarray(vv0), by_phase=True,
+    )
+    _assert_no_lat_collectives(counts, f"fig19 {wl_name}")
+    if tl is not None:
+        tl.meta["collectives_per_batch"] = {
+            k: v for k, v in counts.items() if k != "phases"
+        }
+
+    stats_warm = None
+    hist_warm = None
+    for b in range(n_warm + n_meas):
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+            hist_warm = _fleet_hist(state)
+            if tl is not None:
+                tl.prime(state.stats)
+                tl.prime_latency(state)
+        opc, kk, vv = ycsb.engine_lanes(
+            wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR)
+        ob = tl.batch(wl_name) if (tl is not None and b >= n_warm) else None
+        if ob is not None:
+            with ob:
+                state, *_rest = engine_with_retries(
+                    eng, state, put, opc, kk, vv,
+                    max_retries=MAX_RETRIES, obs=ob)
+                ob.counters(state.stats)
+        else:
+            state, *_rest = engine_with_retries(
+                eng, state, put, opc, kk, vv, max_retries=MAX_RETRIES)
+    jax.block_until_ready(state.stats)
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    hist = _fleet_hist(state) - hist_warm
+    if tl is not None:
+        tl.capture_latency(state)
+    served = int(stats[dex_mod.STAT_OPS])
+    assert int(hist.sum()) == served, (
+        f"{wl_name}: histogram not conserved — {int(hist.sum())} binned "
+        f"lanes vs {served} served ops"
+    )
+    return dict(hist=hist, audit=_fleet_audit(state), stats=stats,
+                counts=counts)
+
+
+def _run_gated_a(dataset, n_warm, n_meas, batch, tl=None):
+    """The cross-plane arm: fig13's warm-column contrast (forced-fetch warm
+    sweep, then ``policy="auto"``) so the measured window mixes cache-hit,
+    remote-fetch and offload lanes — then both planes' p50/p99 are gated on
+    the identical YCSB-A trace, and the offload audit has realized fetch
+    bytes to price against."""
+    _pool, meta, mesh, cfg_auto, bounds, state, sharding = _mesh_setup(
+        dataset, policy="auto", cache_sets=2048, ema_decay=0.5,
+        p_admit_leaf_pct=100,
+    )
+    cfg_fetch = dex_mod.DexMeshConfig(
+        **{**cfg_auto.__dict__, "policy": "fetch"})
+    eng_fetch = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg_fetch, mesh, ops=("lookup", "update"), max_count=1))
+    eng_auto_fn = engine_mod.make_dex_engine(
+        meta, cfg_auto, mesh, ops=("lookup", "update"), max_count=1)
+    eng_auto = jax.jit(eng_auto_fn)
+
+    wl = ycsb.generate("ycsb-a", dataset, n_meas * batch, theta=0.99,
+                       seed=11, hotspot=0.1)
+    # warm sweep over the hot column's key range (fig13 part 2): its per-
+    # (column, level) miss EMA drops below the cost crossover, so the auto
+    # phase serves it one-sided while cold columns offload
+    s_per = meta.n_subtrees_padded // cfg_auto.n_memory
+    hot_n = min(dataset.size,
+                -(-dataset.size * s_per // max(meta.n_subtrees, 1)))
+    rng_w = np.random.default_rng(23)
+    warm_keys = np.concatenate([
+        rng_w.permutation(
+            dataset[(np.arange(batch) * hot_n // batch + 17 * b) % hot_n]
+        )
+        for b in range(n_warm)
+    ]).astype(np.int64)
+    warm_ops = np.zeros(warm_keys.shape, np.int32)
+    wl_all = ycsb.Workload(
+        ops=np.concatenate([warm_ops, wl.ops]),
+        keys=np.concatenate([warm_keys, wl.keys]),
+        scan_len=wl.scan_len,
+    )
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    opc0, kk0, vv0 = ycsb.engine_lanes(wl_all, 0, batch,
+                                       update_xor=UPDATE_XOR)
+    counts = routing.trace_collective_counts(
+        eng_auto_fn, state, jnp.asarray(opc0), jnp.asarray(kk0),
+        jnp.asarray(vv0), by_phase=True,
+    )
+    _assert_no_lat_collectives(counts, "fig19 gated ycsb-a")
+    if tl is not None:
+        tl.meta["collectives_per_batch"] = {
+            k: v for k, v in counts.items() if k != "phases"
+        }
+
+    stats_warm = hist_warm = audit_warm = None
+    for b in range(n_warm + n_meas):
+        eng = eng_fetch if b < n_warm else eng_auto
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+            hist_warm = _fleet_hist(state)
+            audit_warm = _fleet_audit(state)
+            if tl is not None:
+                tl.prime(state.stats)
+                tl.prime_latency(state)
+        opc, kk, vv = ycsb.engine_lanes(
+            wl_all, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR)
+        ob = tl.batch("ycsb-a") if (tl is not None and b >= n_warm) else None
+        if ob is not None:
+            with ob:
+                state, *_rest = engine_with_retries(
+                    eng, state, put, opc, kk, vv,
+                    max_retries=MAX_RETRIES, obs=ob)
+                ob.counters(state.stats)
+        else:
+            state, *_rest = engine_with_retries(
+                eng, state, put, opc, kk, vv, max_retries=MAX_RETRIES)
+    jax.block_until_ready(state.stats)
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    hist = _fleet_hist(state) - hist_warm
+    audit = _fleet_audit(state) - audit_warm
+    if tl is not None:
+        tl.capture_latency(state)
+    served = int(stats[dex_mod.STAT_OPS])
+    assert int(hist.sum()) == served, (
+        f"gated ycsb-a: {int(hist.sum())} binned vs {served} served"
+    )
+
+    # Plane A on the identical trace, identical knobs (fig13 part 2), with
+    # per-op latency sampling into the identical bucket schema
+    sim_tree = HostBTree(
+        dataset, dataset * 7, fill=0.7, level_m=1,
+        n_mem_servers=cfg_auto.n_memory, placement="blocked",
+        subtrees_per_server=meta.n_subtrees_padded // cfg_auto.n_memory,
+    )
+    sim_cfg = SimConfig(
+        name="dex-engine", n_compute=cfg_auto.n_devices,
+        n_mem_servers=cfg_auto.n_memory, level_m=1,
+        write_through=True, offloading=True,
+        group_offload=True, group_ema_decay=cfg_auto.ema_decay,
+        coherence_batch=batch, route_dispersion=cfg_auto.n_memory,
+        p_admit_leaf=cfg_auto.p_admit_leaf_pct / 100.0,
+        cache_bytes=cfg_auto.cache_sets * cfg_auto.cache_ways * 1024,
+        offload_c=cfg_auto.offload_c,
+    )
+    sim = Simulator(sim_tree, sim_cfg, seed=3)
+    warm = slice(0, n_warm * batch)
+    meas = slice(n_warm * batch, (n_warm + n_meas) * batch)
+    sim.run(wl_all.ops[warm], wl_all.keys[warm], group_policy="fetch")
+    sim.reset_counters()
+    sim.run(wl_all.ops[meas], wl_all.keys[meas])
+    sim_hist = sim.lat_hist.copy()
+    assert int(sim_hist.sum()) == int(sim.totals().ops), (
+        int(sim_hist.sum()), int(sim.totals().ops))
+    return dict(hist=hist, audit=audit, stats=stats, sim_hist=sim_hist)
+
+
+def _run_pipe_a(dataset, n_warm, n_meas, batch, tl=None):
+    """The pipelined tail arm: the same YCSB-A trace through the
+    double-buffered engine.  The overlap window forces stale-caught lanes
+    onto the two-sided re-execution path, so the stale_forced bucket column
+    fills — a tail the batch-synchronous arm never pays.  Fetch policy (as
+    in fig13's sustained arm): under cold-start auto every lane offloads
+    and the overlap version check has no cached reads to catch."""
+    _pool, meta, mesh, cfg, bounds, state, sharding = _mesh_setup(
+        dataset, policy="fetch")
+    pipe = engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("lookup", "update", "insert"), max_count=1,
+        pipeline=True)
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    wl = ycsb.generate("ycsb-a", dataset, (n_warm + n_meas) * batch,
+                       theta=0.99, seed=11)
+
+    def lanes(b):
+        return ycsb.engine_lanes(wl, b * batch, (b + 1) * batch,
+                                 update_xor=UPDATE_XOR)
+
+    opc0, kk0, vv0 = lanes(0)
+    counts = routing.trace_collective_counts(
+        pipe.step_fn, state, pipe.init_carry(batch),
+        jnp.asarray(opc0), jnp.asarray(kk0), jnp.asarray(vv0),
+        by_phase=True,
+    )
+    _assert_no_lat_collectives(counts, "fig19 pipelined ycsb-a")
+    # the overlap phases carry every collective; the latency plane none
+    assert set(counts["phases"]) == {"pipe/front", "pipe/back"}, counts
+    if tl is not None:
+        tl.meta["collectives_per_batch"] = {
+            k: v for k, v in counts.items() if k != "phases"
+        }
+
+    pipe.start(state)
+    for b in range(n_warm):
+        opc, kk, vv = lanes(b)
+        pipe.push(put(opc.astype(np.int32)), put(kk), put(vv))
+    pipe.drain()
+    jax.block_until_ready(pipe.state.stats)
+    stats_warm = np.asarray(pipe.state.stats).sum(axis=0)
+    hist_warm = _fleet_hist(pipe.state)
+    if tl is not None:
+        tl.prime(pipe.state.stats)
+        tl.prime_latency(pipe.state)
+
+    for b in range(n_warm, n_warm + n_meas):
+        opc, kk, vv = lanes(b)
+        ob = tl.batch("ycsb-a") if tl is not None else None
+        if ob is not None:
+            with ob:
+                r = pipe.push(put(opc.astype(np.int32)), put(kk), put(vv))
+                with ob.phase("pipe/step") as ph:
+                    ph.fence(r if r is not None else pipe.state.stats)
+                ob.counters(pipe.state.stats)
+        else:
+            pipe.push(put(opc.astype(np.int32)), put(kk), put(vv))
+    pipe.drain()
+    jax.block_until_ready(pipe.state.stats)
+    stats = np.asarray(pipe.state.stats).sum(axis=0) - stats_warm
+    hist = _fleet_hist(pipe.state) - hist_warm
+    if tl is not None:
+        tl.capture_latency(pipe.state)
+    served = int(stats[dex_mod.STAT_OPS])
+    # the histogram lags one batch during steady state; drain closed it
+    assert int(hist.sum()) == served, (
+        f"pipelined ycsb-a: {int(hist.sum())} binned vs {served} served"
+    )
+    return dict(hist=hist, stats=stats)
+
+
+def _path_idx(name):
+    return latency.PATHS.index(name)
+
+
+def _rows_for(rows, arm, hist):
+    pct = latency.class_percentiles(hist)
+    led = latency.ledger(hist)
+    for cls in latency.OP_CLASSES:
+        if led[cls]["count"] == 0:
+            continue
+        rows.append(f"mesh,{arm},{cls},p50_s,{pct[cls]['p50']:.3e}")
+        rows.append(f"mesh,{arm},{cls},p99_s,{pct[cls]['p99']:.3e}")
+        for pname, cell in led[cls]["paths"].items():
+            if cell["count"]:
+                rows.append(
+                    f"mesh,{arm},{cls},share_{pname},{cell['share']:.4f}")
+    return rows
+
+
+def run(quick: bool = False, seed: "int | None" = None):
+    base_seed = 0 if seed is None else int(seed)
+    n_keys = 30_000 if quick else 60_000
+    batch = 512 if quick else BATCH
+    dataset = ycsb.make_dataset(n_keys, seed=base_seed)
+    on_mesh = len(jax.devices()) >= 8
+    rows = ["plane,arm,class,metric,value"]
+    summary = {}
+
+    # -- cross-plane gated YCSB-A arm ----------------------------------
+    tl_a = common.new_timeline("fig19tails_ycsb-a",
+                               devices=len(jax.devices()), batch=batch)
+    g = _run_gated_a(dataset, 10 if quick else 14, 4 if quick else 8,
+                     batch, tl=tl_a)
+    common.finish_timeline(tl_a)
+    rows = _rows_for(rows, "ycsb-a", g["hist"])
+    mesh_g = latency.percentile_gauges(g["hist"], classes=GATED_CLASSES)
+    sim_g = latency.percentile_gauges(g["sim_hist"], classes=GATED_CLASSES)
+    for k, v in mesh_g.items():
+        summary[f"ycsb-a_{k}"] = v
+    for k, v in sim_g.items():
+        rows.append(f"sim,ycsb-a,{k.split('_')[-1]},{k[:7]}_s,{v:.3e}")
+    if on_mesh:
+        # p50 AND p99 per gated op class, one-bucket slack, both planes on
+        # the identical trace with the identical pricing constants
+        tol = {k: LAT_BAND for k in mesh_g}
+        assert set(mesh_g) == set(sim_g), (sorted(mesh_g), sorted(sim_g))
+        drift.assert_plane_agreement(mesh_g, sim_g, tol,
+                                     label="fig19 latency percentiles")
+    audit = latency.audit_report(g["audit"][0], g["audit"][1])
+    summary["mispricing_ratio"] = audit["mispricing_ratio"]
+    summary["audit_predicted_bytes"] = audit["predicted_bytes"]
+    summary["audit_realized_bytes"] = audit["realized_bytes"]
+    rows.append(
+        f"mesh,ycsb-a,all,mispricing_ratio,{audit['mispricing_ratio']:.4f}")
+    if on_mesh:
+        # the warm column kept fetching under auto, so the audit must have
+        # priced real fetch-side decisions.  The ratio itself is committed
+        # to baselines.json (check_perf MODELED band): on this contrast arm
+        # the warm sweep drives the EMA near zero, so the zipfian measured
+        # phase realizes far more fetch bytes than the rule predicted —
+        # exactly the lag the audit exists to expose.  Here only sanity:
+        # non-degenerate and finite.
+        assert audit["realized_bytes"] > 0, audit
+        assert 0.0 < audit["mispricing_ratio"] < 1e3, audit
+
+    # -- breadth arms: YCSB-B (read-heavy), YCSB-E (scan-heavy) --------
+    for wl_name, ops_set, n_w, n_m in (
+        ("ycsb-b", ("lookup", "update", "insert"), 2, 3),
+        ("ycsb-e", ("insert", "scan"), 2, 3),
+    ):
+        tl = common.new_timeline(f"fig19tails_{wl_name}",
+                                 devices=len(jax.devices()), batch=batch)
+        arm = _run_arm(wl_name, ops_set, dataset, n_w, n_m, batch, tl=tl)
+        common.finish_timeline(tl)
+        rows = _rows_for(rows, wl_name, arm["hist"])
+        for k, v in latency.percentile_gauges(arm["hist"]).items():
+            summary[f"{wl_name}_{k}"] = v
+
+    # -- peer-peek arm: divergent fleet policy on the same trace -------
+    tl_pk = common.new_timeline("fig19tails_peek",
+                                devices=len(jax.devices()), batch=batch)
+    pk = _run_arm(
+        "ycsb-a", ("lookup", "update"), dataset, 4, 3, batch,
+        policy="fetch", cache_sets=2048, p_admit_leaf_pct=100,
+        cache_policy=lambda cfg: fleet_cache.divergent_policy(
+            cfg, peek_budget=batch),
+        tl=tl_pk)
+    common.finish_timeline(tl_pk)
+    rows = _rows_for(rows, "peek", pk["hist"])
+    peek_lanes = int(pk["hist"][:, _path_idx("peer_peek")].sum())
+    summary["peek_lanes"] = float(peek_lanes)
+    if on_mesh:
+        assert peek_lanes > 0, "divergent arm produced no peer-peek lanes"
+        lk = pk["hist"][latency.OP_CLASSES.index("lookup")]
+        p50_hit = latency.percentile(lk[_path_idx("cache_hit")], 50.0)
+        p50_peek = latency.percentile(lk[_path_idx("peer_peek")], 50.0)
+        p50_off = latency.percentile(lk[_path_idx("offload")], 50.0)
+        p50_fetch = latency.percentile(lk[_path_idx("remote_fetch")], 50.0)
+        slow = max(p50_off, p50_fetch)
+        # a peer peek pays a full sibling RPC (t_rpc_base) on top of the
+        # lookup, so under the cost model it is the dearest lane: above
+        # every direct path, yet within two buckets (4x) of the slowest —
+        # peeking relieves memory-server bandwidth, it does not cut latency
+        assert p50_hit < p50_peek, (p50_hit, p50_peek)
+        assert slow <= p50_peek <= 4.0 * slow, (p50_peek, slow)
+        summary["peek_p50_over_slowest"] = p50_peek / slow
+
+    # -- pipelined tail arm --------------------------------------------
+    tl_p = common.new_timeline("fig19tails_pipe",
+                               devices=len(jax.devices()), batch=batch,
+                               mode="pipelined")
+    pp = _run_pipe_a(dataset, 2, 6 if quick else 10, batch, tl=tl_p)
+    common.finish_timeline(tl_p)
+    rows = _rows_for(rows, "pipe", pp["hist"])
+    stale = int(pp["hist"][:, _path_idx("stale_forced")].sum())
+    stale_g = int(g["hist"][:, _path_idx("stale_forced")].sum())
+    summary["pipe_stale_lanes"] = float(stale)
+    summary["pipe_stale_share"] = stale / max(int(pp["hist"].sum()), 1)
+    rows.append(f"mesh,pipe,all,stale_lanes,{stale}")
+    if on_mesh:
+        # batch-synchronous service never re-executes a stale read; the
+        # overlap window must, under zipfian same-leaf conflicts — the
+        # throughput it buys is gated in fig13engine, the tail lives here
+        assert stale_g == 0, stale_g
+        assert stale > 0, "no stale-forced lanes in the pipelined arm"
+        upd = latency.OP_CLASSES.index("update")
+        p99_stale = latency.percentile(
+            pp["hist"][upd, _path_idx("stale_forced")], 99.0)
+        p99_rest = latency.percentile(
+            pp["hist"][upd].sum(axis=0)
+            - pp["hist"][upd, _path_idx("stale_forced")], 99.0)
+        assert p99_stale >= p99_rest, (p99_stale, p99_rest)
+        summary["pipe_stale_p99_s"] = p99_stale
+
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ MODULES = [
     ("fig16", "benchmarks.fig16_key_size"),
     ("fig17", "benchmarks.fig17_skewness"),
     ("fig18", "benchmarks.fig18_admission"),
+    ("fig19tails", "benchmarks.fig19_latency_tails"),
     ("micro", "benchmarks.index_microbench"),
     ("roofline", "benchmarks.lm_roofline"),
 ]

@@ -59,6 +59,7 @@ OFFLOAD_RESP_BYTES = 16
 # (repro/obs/registry.py), which owns slot order, units, sim-plane mapping
 # and paper provenance.  Adding a counter means adding a Metric there; the
 # constants below follow automatically and can never alias an old slot.
+from repro.obs import latency as _latency
 from repro.obs import registry as _metric_registry
 
 _stat_consts = _metric_registry.stat_constants()
@@ -133,6 +134,18 @@ class DexState(NamedTuple):
     #                        (pool-aligned shard): next free local node id;
     #                        subtree_cap means the block is out of headroom
     #                        and its splits drain through the host path
+    lat_hist: jax.Array    # [Dev, classes, paths, buckets] int64 per-lane
+    #                        modeled-latency histogram (obs/latency.py owns
+    #                        the schema).  Pure per-device scatter — no
+    #                        collective touches it; host-side readers sum
+    #                        over Dev like they do for ``stats``
+    lat_audit: jax.Array   # [Dev, 2, n_memory, levels] f32 offload
+    #                        cost-model audit: plane 0 = predicted fetch
+    #                        bytes (EMA rule, recorded on device 0 only —
+    #                        the decision is mesh-global), plane 1 =
+    #                        realized fetch bytes (per device, summed
+    #                        host-side).  obs/latency.audit_report turns
+    #                        the pair into a mispricing report
 
 
 def init_state(
@@ -156,6 +169,14 @@ def init_state(
         route_demand=jnp.zeros((cfg.n_devices, cfg.n_route), jnp.int64),
         succ=jnp.broadcast_to(succ0[None, :], (cfg.n_devices, n_nodes)),
         n_alloc=jnp.full((meta.n_subtrees_padded,), base, jnp.int32),
+        lat_hist=jnp.zeros(
+            (cfg.n_devices, _latency.N_CLASSES, _latency.N_PATHS,
+             _latency.N_BUCKETS),
+            jnp.int64,
+        ),
+        lat_audit=jnp.zeros(
+            (cfg.n_devices, 2, cfg.n_memory, levels), jnp.float32
+        ),
     )
 
 
@@ -188,6 +209,8 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         route_demand=ns(dev),
         succ=ns(dev),
         n_alloc=ns(P(cfg.memory_axis)),
+        lat_hist=ns(dev),
+        lat_audit=ns(dev),
     )
 
 

@@ -148,6 +148,7 @@ from repro.core.write import (
 from repro.kernels.leaf_scan import leaf_scan
 from repro.kernels.ops import use_interpret
 from repro.kernels.ref import leaf_scan_ref
+from repro.obs import latency as obs_latency
 
 # engine opcodes == the YCSB trace opcodes (data/ycsb.py), so a generated
 # mixed workload slice feeds the engine directly
@@ -396,7 +397,7 @@ def make_dex_engine(
     # stamps, consumed by the matching back half one step later
     carry_keys = [
         "q", "val", "opc", "pr", "subtree", "offl", "gid", "found", "vleaf",
-        "shed", "vseen", "lane", "dropr",
+        "shed", "vseen", "lane", "dropr", "cost", "fmiss",
     ]
     if may_peek:
         carry_keys += ["peek"]
@@ -485,6 +486,36 @@ def make_dex_engine(
         n_off_groups = jnp.sum(want_off_c & grp_live).astype(jnp.int64)
         n_fetch_groups = jnp.sum(~want_off_c & grp_live).astype(jnp.int64)
 
+        # --- per-lane cost ledger + offload cost-model audit ----------------
+        # (obs/latency.py, DESIGN.md §12).  ``cost`` accumulates the modeled
+        # seconds each lane spends — priced by the same constants the
+        # simulator's op_clock uses — and is binned on-device in the back
+        # half; ``fmiss`` remembers whether any level paid a remote fetch
+        # (the remote_fetch path bit).  The replicated top walk prices like
+        # the simulator's warm top-tree cache hits.
+        cost = live.astype(jnp.float32) * (
+            obs_latency.T_CACHED * float(meta.top_height)
+        )
+        fmiss = jnp.zeros(q.shape, bool)
+        audit = has_offloadable and cfg.policy == "auto"
+        a_upd = jnp.zeros((2, cfg.n_memory, levels), jnp.float32)
+        if audit:
+            # predicted fetch bytes per (column, level) under the EMA rule,
+            # recorded for the columns the model actually priced onto the
+            # fetch side; the decision is mesh-global (psum'd counts), so
+            # device 0 records it once
+            pred_cl = caps * ema * NODE_ROW_BYTES * cfg.offload_c
+            fetch_dec = (grp_live & ~want_off_c).astype(jnp.float32)
+            a_upd = a_upd.at[0].set(
+                (dev == 0).astype(jnp.float32) * fetch_dec[:, None] * pred_cl
+            )
+            # realized bytes count *distinct* fetched nodes per (column,
+            # level) — the mesh coalesces duplicate gids into one message —
+            # via a node bitmap reduced along the node -> column map
+            node_col = (
+                (jnp.arange(n_nodes_total) // meta.subtree_cap) // s_per
+            ).astype(jnp.int32)
+
         # --- 3. ONE shared version-checked cached descent ------------------
         fetchable = live & ~offl
         local = jnp.zeros(q.shape, jnp.int32)
@@ -541,6 +572,28 @@ def make_dex_engine(
                         )
                 if leaf_lvl and may_peek:
                     peeked_leaf = peeked
+                # ledger: a fresh cache hit prices one cached access, a
+                # served miss one remote read; peeked lanes fetch nothing
+                # here (their two-sided trip prices in the back half) and
+                # bucket-overflowed lanes got no row
+                fetched = miss & ~f_drop
+                if leaf_lvl and may_peek:
+                    fetched = fetched & ~peeked
+                cost = cost + (
+                    hit.astype(jnp.float32) * obs_latency.T_CACHED
+                    + fetched.astype(jnp.float32) * obs_latency.T_READ
+                )
+                fmiss = fmiss | fetched
+                if audit:
+                    nset = jnp.zeros((n_nodes_total,), jnp.float32).at[
+                        jnp.where(fetched & ~is_scan, gid, n_nodes_total)
+                    ].set(1.0, mode="drop")
+                    cnt_c = jnp.zeros((cfg.n_memory,), jnp.float32).at[
+                        node_col
+                    ].add(nset)
+                    a_upd = a_upd.at[1, :, lvl].add(
+                        cnt_c * float(NODE_ROW_BYTES)
+                    )
                 shed = shed | f_drop
                 n_fetch = n_fetch + n_msgs
                 n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
@@ -604,6 +657,15 @@ def make_dex_engine(
                 shed = shed | f_drop
                 n_fetch = n_fetch + n_msgs
                 n_hit = n_hit + jnp.sum(hit).astype(jnp.int64)
+                # ledger: each executed hop prices like one more leaf level
+                # plus the per-hop local search the simulator books
+                fetched_h = miss & ~f_drop
+                cost = cost + (
+                    hit.astype(jnp.float32) * obs_latency.T_CACHED
+                    + fetched_h.astype(jnp.float32) * obs_latency.T_READ
+                    + in_range.astype(jnp.float32) * obs_latency.T_LOCAL
+                )
+                fmiss = fmiss | fetched_h
                 rows_k = jnp.where(in_range[:, None], rows_k, KEY_MAX)
                 rows_v = jnp.where(in_range[:, None], rows_v, 0)
                 collected = collected + jnp.sum(
@@ -627,6 +689,15 @@ def make_dex_engine(
             taken = jnp.where(
                 ok_scan, taken, jnp.where(is_scan & shed, -1, 0)
             ).astype(jnp.int32)
+
+        # ledger: compute-side leaf search — lookups that stayed one-sided,
+        # plus a scan's first (descent) hop
+        if has_lookup:
+            cost = cost + (
+                live & (opc == OP_LOOKUP) & ~offl
+            ).astype(jnp.float32) * obs_latency.T_LOCAL
+        if has_scan:
+            cost = cost + is_scan.astype(jnp.float32) * obs_latency.T_LOCAL
 
         # --- front-half EMA + stats ----------------------------------------
         g_miss = jax.lax.psum(miss_cl, cfg.all_axes)
@@ -655,7 +726,7 @@ def make_dex_engine(
             "q": q, "val": val, "opc": opc, "pr": pr, "subtree": subtree,
             "offl": offl, "gid": leaf_gid, "found": found_leaf,
             "vleaf": vals_leaf, "shed": shed, "lane": lane,
-            "dropr": dropped_r,
+            "dropr": dropped_r, "cost": cost, "fmiss": fmiss,
         }
         if may_peek:
             carry["peek"] = peeked_leaf
@@ -671,7 +742,7 @@ def make_dex_engine(
                 else:
                     carry["hgid"] = jnp.full(q.shape + (0,), -1, jnp.int64)
                     carry["hver"] = jnp.zeros(q.shape + (0,), vers.dtype)
-        return carry, new_cache, new_ema, new_demand, f_upd
+        return carry, new_cache, new_ema, new_demand, f_upd, a_upd
 
     def _run_back(pool, occupancy, cache, versions, carry, b, *, check_stale):
         """Back half: overlap-window stale check (pipeline mode), the fused
@@ -693,6 +764,8 @@ def make_dex_engine(
         shed = carry["shed"]
         lane = carry["lane"]
         dropped_r = carry["dropr"]
+        cost = carry["cost"]
+        fmiss = carry["fmiss"]
         peek_c = carry["peek"] if may_peek else None
         cap = lane.shape[1]
         live = q != KEY_MAX
@@ -703,6 +776,7 @@ def make_dex_engine(
 
         # --- overlap-window stale check (pipeline back half only) ----------
         n_stalls = jnp.int64(0)
+        stalled = jnp.zeros(q.shape, bool)
         if check_stale:
             gsafe = jnp.clip(leaf_gid, 0, n_nodes_total - 1)
             stale = live & (vers[gsafe] != carry["vseen"])
@@ -728,6 +802,18 @@ def make_dex_engine(
                 sc_v = jnp.where(sc_stale[:, None], 0, sc_v)
                 taken = jnp.where(sc_stale, -1, taken).astype(jnp.int32)
                 shed = shed | sc_stale
+                stalled = stalled | sc_stale
+            stalled = stalled | force_off
+            with (
+                jax.named_scope("dex/lat/stale_forced"),
+                routing.trace_phase("dex/lat"),
+            ):
+                # a stale-caught lane re-resolves two-sided at the leaf: the
+                # simulator's stall site prices one RPC plus a single-level
+                # memory-side walk (``_offload(server, leaf, 1)``)
+                cost = cost + stalled.astype(jnp.float32) * (
+                    obs_latency.T_RPC + obs_latency.T_MEM
+                )
             offl_eff = offl | force_off
         else:
             offl_eff = offl
@@ -1023,6 +1109,57 @@ def make_dex_engine(
             )
         lane_shed = shed | (send & dropped_w)
 
+        # --- 7b. per-lane back-half pricing + latency histogram ------------
+        # (obs/latency.py).  Two-sided trips price the simulator's offload
+        # rule (one RPC + the owner's per-level memory-side walk); peer
+        # peeks the sibling's cached access (hit) or a one-level owner walk
+        # (miss); fetched-path writes one write-through WRITE — suppressed
+        # in pipelined mode, where the write rides the overlapped fused
+        # round off the critical path (the simulator's pipeline_overlap
+        # rule).  Each live routed lane then bins into exactly one
+        # (op class, outcome path, bucket) cell — a pure per-device
+        # scatter, so the plane adds zero collectives.
+        delivered_l = send & ~dropped_w
+        is_off = offl_eff & send
+        with jax.named_scope("dex/lat/offload"), routing.trace_phase("dex/lat"):
+            off_norm = delivered_l & is_off & ~stalled
+            cost = cost + off_norm.astype(jnp.float32) * (
+                obs_latency.T_RPC + float(levels) * obs_latency.T_MEM
+            )
+        if may_peek:
+            with jax.named_scope("dex/lat/peer_peek"), routing.trace_phase("dex/lat"):
+                pk = delivered_l & sent_peek
+                cost = cost + pk.astype(jnp.float32) * (
+                    obs_latency.T_RPC + jnp.where(
+                        r_ins, obs_latency.T_CACHED, obs_latency.T_MEM
+                    )
+                )
+        if has_writes and not check_stale:
+            with (
+                jax.named_scope("dex/lat/write_through"),
+                routing.trace_phase("dex/lat"),
+            ):
+                wl = delivered_l & ~is_off & (
+                    (opc == OP_UPDATE) | (opc == OP_INSERT)
+                )
+                cost = cost + wl.astype(jnp.float32) * obs_latency.T_WRITE
+        with jax.named_scope("dex/lat/bin"), routing.trace_phase("dex/lat"):
+            path = jnp.zeros(q.shape, jnp.int32)             # cache_hit
+            path = jnp.where(fmiss, 1, path)                 # remote_fetch
+            if may_peek:
+                path = jnp.where(delivered_l & sent_peek, 2, path)
+            path = jnp.where(delivered_l & is_off & ~stalled, 3, path)
+            path = jnp.where(lane_shed, 5, path)             # shed
+            if check_stale:
+                path = jnp.where(stalled, 4, path)           # stale_forced
+            cls = jnp.clip(opc, 0, obs_latency.N_CLASSES - 1)
+            bkt = obs_latency.bucket_index(cost, xp=jnp)
+            h_upd = jnp.zeros(
+                (obs_latency.N_CLASSES, obs_latency.N_PATHS,
+                 obs_latency.N_BUCKETS),
+                jnp.int64,
+            ).at[cls, path, bkt].add(live.astype(jnp.int64))
+
         # --- 8. back-half stats --------------------------------------------
         n_shed = jnp.sum(lane_shed & live).astype(jnp.int64)
         b_upd = jnp.zeros((1, N_STATS), jnp.int64)
@@ -1074,27 +1211,31 @@ def make_dex_engine(
             )
             lane_out += [res_k, res_v, res_taken]
         return (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
-                lane_out)
+                h_upd, lane_out)
 
     def local_fn(pool, occupancy, cache, boundaries, miss_ema, stats, demand,
-                 versions, succ, opcodes, keys, values):
+                 versions, succ, lat_hist, lat_audit, opcodes, keys, values):
         b = keys.shape[0]
-        carry, new_cache, new_ema, new_demand, f_upd = _run_front(
+        carry, new_cache, new_ema, new_demand, f_upd, a_upd = _run_front(
             pool, cache, boundaries, miss_ema, stats, demand, versions, succ,
             opcodes, keys, values, stamp=False,
         )
-        (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
+        (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd, h_upd,
          lane_out) = _run_back(
             pool, occupancy, new_cache, versions, carry, b, check_stale=False,
         )
         new_stats = stats + f_upd + b_upd
-        outs = [new_cache, new_ema, new_stats, new_demand] + lane_out
+        new_hist = lat_hist + h_upd[None]
+        new_audit = lat_audit + a_upd[None]
+        outs = [new_cache, new_ema, new_stats, new_demand, new_hist,
+                new_audit] + lane_out
         if has_writes:
             outs = [new_pk, new_pv, new_occ, new_versions] + outs
         return tuple(outs)
 
     def local_pipe(pool, occupancy, cache, boundaries, miss_ema, stats,
-                   demand, versions, succ, carry_in, opcodes, keys, values):
+                   demand, versions, succ, lat_hist, lat_audit, carry_in,
+                   opcodes, keys, values):
         # one pipeline step: the NEW batch's front half next to the CARRIED
         # batch's back half.  The back half probes the cache as returned by
         # this step's front (an elementwise composition — the two halves
@@ -1102,19 +1243,24 @@ def make_dex_engine(
         # the back half's all_to_all with the front half's fetch rounds).
         b = keys.shape[0]
         with jax.named_scope("pipe/front"), routing.trace_phase("pipe/front"):
-            carry_out, cache_f, new_ema, new_demand, f_upd = _run_front(
+            carry_out, cache_f, new_ema, new_demand, f_upd, a_upd = _run_front(
                 pool, cache, boundaries, miss_ema, stats, demand, versions,
                 succ, opcodes, keys, values, stamp=True,
             )
         carried = dict(zip(carry_keys, carry_in))
         with jax.named_scope("pipe/back"), routing.trace_phase("pipe/back"):
-            (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd,
+            (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd, h_upd,
              lane_out) = _run_back(
                 pool, occupancy, cache_f, versions, carried, b,
                 check_stale=True,
             )
         new_stats = stats + f_upd + b_upd
-        outs = [new_cache, new_ema, new_stats, new_demand]
+        # the histogram lags STAT_OPS by one batch here (a lane bins when
+        # its back half lands); the drain step closes the gap exactly
+        new_hist = lat_hist + h_upd[None]
+        new_audit = lat_audit + a_upd[None]
+        outs = [new_cache, new_ema, new_stats, new_demand, new_hist,
+                new_audit]
         outs += [carry_out[k] for k in carry_keys]
         outs += lane_out
         if has_writes:
@@ -1147,7 +1293,7 @@ def make_dex_engine(
         # traces (repro/obs/trace.py profiler_annotations); metadata only —
         # they add no ops and no collectives
         "phases": ("dex/route", "dex/descent", "dex/scan", "dex/fused_a2a",
-                   "dex/apply", "dex/route_back"),
+                   "dex/apply", "dex/lat", "dex/route_back"),
     }
 
     if not pipeline:
@@ -1155,11 +1301,12 @@ def make_dex_engine(
             local_fn,
             mesh=mesh,
             in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
-                      dev_spec, dev_spec, dev_spec, lanes, lanes, lanes),
+                      dev_spec, dev_spec, dev_spec, dev_spec, dev_spec,
+                      lanes, lanes, lanes),
             out_specs=tuple(
                 ([mem, mem, mem, dev_spec] if has_writes else [])
-                + [cache_specs, dev_spec, dev_spec, dev_spec,
-                   lanes, lanes, lanes, lanes]
+                + [cache_specs, dev_spec, dev_spec, dev_spec, dev_spec,
+                   dev_spec, lanes, lanes, lanes, lanes]
                 + ([lanes, lanes, lanes] if has_scan else [])
             ),
         )
@@ -1187,8 +1334,8 @@ def make_dex_engine(
             res = sharded(
                 state.pool, state.occupancy, state.cache, state.boundaries,
                 state.miss_ema, state.stats, state.route_demand,
-                state.versions, state.succ, opcodes, keys,
-                values.astype(jnp.int64),
+                state.versions, state.succ, state.lat_hist, state.lat_audit,
+                opcodes, keys, values.astype(jnp.int64),
             )
             res = list(res)
             new_state = state
@@ -1202,16 +1349,19 @@ def make_dex_engine(
                     occupancy=new_occ,
                     versions=new_versions,
                 )
-            new_cache, new_ema, new_stats, new_demand = res[:4]
-            found, vals, status, shed = res[4:8]
+            new_cache, new_ema, new_stats, new_demand, new_hist, new_audit = (
+                res[:6]
+            )
+            found, vals, status, shed = res[6:10]
             new_state = new_state._replace(
                 cache=new_cache, miss_ema=new_ema, stats=new_stats,
-                route_demand=new_demand,
+                route_demand=new_demand, lat_hist=new_hist,
+                lat_audit=new_audit,
             )
             result = EngineResult(found=found, values=vals, status=status,
                                   shed=shed)
             if has_scan:
-                sk, sv, tk = res[8:11]
+                sk, sv, tk = res[10:13]
                 result = result._replace(
                     scan_keys=sk, scan_values=sv, taken=tk
                 )
@@ -1226,11 +1376,11 @@ def make_dex_engine(
         local_pipe,
         mesh=mesh,
         in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
-                  dev_spec, dev_spec, dev_spec, carry_specs,
-                  lanes, lanes, lanes),
+                  dev_spec, dev_spec, dev_spec, dev_spec, dev_spec,
+                  carry_specs, lanes, lanes, lanes),
         out_specs=tuple(
             ([mem, mem, mem, dev_spec] if has_writes else [])
-            + [cache_specs, dev_spec, dev_spec, dev_spec]
+            + [cache_specs, dev_spec, dev_spec, dev_spec, dev_spec, dev_spec]
             + list(carry_specs)
             + [lanes, lanes, lanes, lanes]
             + ([lanes, lanes, lanes] if has_scan else [])
@@ -1274,6 +1424,8 @@ def make_dex_engine(
             "vseen": jnp.zeros((q_g,), jnp.int32),
             "lane": jnp.zeros((n_dev * cfg.n_route, cap0), jnp.int32),
             "dropr": jnp.zeros((b_global,), bool),
+            "cost": jnp.zeros((q_g,), jnp.float32),
+            "fmiss": jnp.zeros((q_g,), bool),
         }
         if may_peek:
             carry["peek"] = jnp.zeros((q_g,), bool)
@@ -1299,8 +1451,8 @@ def make_dex_engine(
         res = sharded_pipe(
             state.pool, state.occupancy, state.cache, state.boundaries,
             state.miss_ema, state.stats, state.route_demand, state.versions,
-            state.succ, tuple(carry), opcodes, keys,
-            values.astype(jnp.int64),
+            state.succ, state.lat_hist, state.lat_audit, tuple(carry),
+            opcodes, keys, values.astype(jnp.int64),
         )
         res = list(res)
         new_state = state
@@ -1312,11 +1464,13 @@ def make_dex_engine(
                 occupancy=new_occ,
                 versions=new_versions,
             )
-        new_cache, new_ema, new_stats, new_demand = res[:4]
-        res = res[4:]
+        new_cache, new_ema, new_stats, new_demand, new_hist, new_audit = (
+            res[:6]
+        )
+        res = res[6:]
         new_state = new_state._replace(
             cache=new_cache, miss_ema=new_ema, stats=new_stats,
-            route_demand=new_demand,
+            route_demand=new_demand, lat_hist=new_hist, lat_audit=new_audit,
         )
         carry_out = tuple(res[: len(carry_keys)])
         res = res[len(carry_keys):]

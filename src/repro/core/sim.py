@@ -37,6 +37,7 @@ from repro.core import btree as btree_mod
 from repro.core.cache import ComputeCache, DEFAULT_P_ADMIT_LEAF
 from repro.core.nodes import FANOUT, KEY_MAX, KEY_MIN, NULL
 from repro.core.partition import LogicalPartitions
+from repro.obs import latency as obs_latency
 
 NODE_BYTES = 1024          # paper: 1KB nodes
 SMALL_READ_BYTES = 8       # version word
@@ -668,6 +669,23 @@ class Simulator:
         ]
         self.op_clock = np.zeros((cfg.n_compute,), dtype=np.float64)  # cpu-side work time
         self._rr = 0
+        # per-op latency sampling into the mesh plane's bucket schema
+        # (obs/latency.py): ``_dispatch`` snapshots the owning server's
+        # op_clock around each op and adds ``_op_extra`` — the service
+        # components op_clock books elsewhere (offload RPC + memory-side
+        # walk, a peek sibling's access, a window-coalesced read repriced as
+        # the remote fetch the mesh's per-lane ledger charges) — then bins
+        # into (op class, outcome path, bucket)
+        self.lat_hist = np.zeros(
+            (obs_latency.N_CLASSES, obs_latency.N_PATHS,
+             obs_latency.N_BUCKETS),
+            dtype=np.int64,
+        )
+        self._op_extra = 0.0
+        self._op_offl = False
+        self._op_stall = False
+        self._op_peek = False
+        self._op_miss = False
         # per-group (mesh-engine) offload state: a per-(memory server, block
         # level) miss-rate EMA — the exact analogue of the mesh's
         # ``DexState.miss_ema`` — plus this window's observation
@@ -703,6 +721,7 @@ class Simulator:
         self.mem_busy[:] = 0.0
         self.mem_reqs[:] = 0
         self.op_clock[:] = 0.0
+        self.lat_hist[:] = 0
         for cache in self.caches:
             cache.stats.reset()
             cache.cooling.lock_acquires[:] = 0
@@ -816,6 +835,7 @@ class Simulator:
             c.add_read()
             lat = cfg.t_rdma_read
         self.estimators[server].observe_read(cfg.t_rdma_read)
+        self._op_miss = True
         return lat
 
     def _deserve_offload(self, server: int, levels_left: int) -> bool:
@@ -839,6 +859,10 @@ class Simulator:
         self.mem_busy[ms] += service
         self.mem_reqs[ms] += 1
         self.estimators[server].observe_rpc(cfg.t_rpc_base + service)
+        # the RPC round trip and the owner's walk never touch op_clock
+        # (they run memory-side); the per-op latency sample still pays them
+        self._op_extra += cfg.t_rpc_base + service
+        self._op_offl = True
 
     # -- operations --------------------------------------------------------------
 
@@ -892,6 +916,10 @@ class Simulator:
         key = int(key)
         server = self._owner(key)
         self.counters[server].ops += 1
+        t0 = self.op_clock[server]
+        self._op_extra = 0.0
+        self._op_offl = self._op_stall = False
+        self._op_peek = self._op_miss = False
         if op == 0:
             self._op_lookup(server, key)
         elif op == 1:
@@ -905,6 +933,23 @@ class Simulator:
             self._op_delete(server, key)
         else:
             raise ValueError(f"bad op {op}")
+        # latency sample: this server's clock delta plus the off-clock
+        # service components; path priority mirrors the mesh ledger's
+        # (stale_forced > offload > peer_peek > remote_fetch > cache_hit;
+        # the simulator has no shed lane).  Deletes share the update class.
+        lat = (self.op_clock[server] - t0) + self._op_extra
+        cls = 1 if op == 4 else min(int(op), obs_latency.N_CLASSES - 1)
+        if self._op_stall:
+            path = obs_latency.PATHS.index("stale_forced")
+        elif self._op_offl:
+            path = obs_latency.PATHS.index("offload")
+        elif self._op_peek:
+            path = obs_latency.PATHS.index("peer_peek")
+        elif self._op_miss:
+            path = obs_latency.PATHS.index("remote_fetch")
+        else:
+            path = obs_latency.PATHS.index("cache_hit")
+        self.lat_hist[cls, path, int(obs_latency.bucket_index(lat))] += 1
 
     # -- per-group offload machinery (SimConfig.group_offload) ----------------
 
@@ -1021,6 +1066,7 @@ class Simulator:
                 # the conservative conflict fallback (scans stall-shed and
                 # retry at the same price)
                 c.pipeline_stalls += 1
+                self._op_stall = True
                 self._offload(server, nid, 1)
                 return visited, True
             if (
@@ -1079,7 +1125,12 @@ class Simulator:
                     cache.admit(nid)
                 # a window-coalesced read is still a cache-probe miss on the
                 # mesh (duplicate lanes of one batch all miss, then share
-                # one coalesced message) — the EMA counts the probe
+                # one coalesced message) — the EMA counts the probe, and the
+                # latency sample re-prices it as the remote read the mesh's
+                # duplicate lane models (the clock above only paid a cached
+                # access, but the lane still waited on the coalesced fetch)
+                self._op_extra += cfg.t_rdma_read - cfg.t_cached_access
+                self._op_miss = True
                 self._gobs(nid, False)
                 visited.append((nid, cfg.caching and nid in cache))
                 continue
@@ -1117,17 +1168,21 @@ class Simulator:
                 sib = (server // d) * d + ms % d
                 if sib != server:
                     self._window_peeks[server] += 1
+                    self._op_peek = True
                     c.bytes += RPC_BYTES
                     self.op_clock[server] += cfg.t_rpc_base
                     if nid in self.caches[sib] and nid not in self.stale[sib]:
                         c.peer_hits += 1
                         self.counters[sib].local_accesses += 1
                         self.op_clock[sib] += cfg.t_cached_access
+                        # the sibling's lookup runs off this op's clock
+                        self._op_extra += cfg.t_cached_access
                     else:
                         c.peer_misses += 1
                         service = (lvl + 1) * cfg.t_mem_search
                         self.mem_busy[ms] += service
                         self.mem_reqs[ms] += 1
+                        self._op_extra += service
                     self._gobs(nid, False)
                     visited.append((nid, False))
                     continue

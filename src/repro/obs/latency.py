@@ -1,0 +1,231 @@
+"""Per-lane latency ledger: bucket schema, percentile estimation, and the
+offload cost-model audit (DESIGN.md §12).
+
+Both planes price a lane's trip through a batch with the *same* constants
+(the ``SimConfig`` defaults mirrored below) and bin the modeled cost into
+the *same* fixed log-scale histogram, so ``obs/drift.py`` can gate mesh
+p50/p99 against simulator p50/p99 per op class exactly like it gates the
+counter plane:
+
+* the mesh engine (core/engine.py) accumulates a per-lane cost as the lane
+  moves through route -> cached descent -> fused a2a -> apply, classifies
+  the lane into one outcome path, and scatters it on-device into a
+  ``[Dev, classes, paths, buckets]`` int64 plane (``DexState.lat_hist``) —
+  a pure per-device scatter, zero added collectives;
+* the simulator (core/sim.py) samples each op's ``op_clock`` delta (plus
+  the service components ``op_clock`` books elsewhere) into the identical
+  schema (``Simulator.lat_hist``).
+
+Buckets are base-2 log-scale: bucket ``i`` covers ``[T0*2**i, T0*2**(i+1))``
+seconds, with bucket 0 also catching anything below ``T0`` and the last
+bucket catching overflow.  With ``T0 = 200ns`` and 16 buckets the schema
+spans 200ns .. ~6.5ms — a cached lookup lands around bucket 1, a multi-level
+remote fetch around buckets 3-5, an offload RPC around buckets 4-6.
+
+Percentiles are estimated from the bucket CDF at the geometric midpoint of
+the crossing bucket (``edge_lo * sqrt(2)`` for base-2 buckets), so a
+mesh/sim percentile pair that lands in the same bucket compares exactly
+equal and the drift band only needs one-bucket (2x) slack.
+
+The cost-model audit compares, per (memory column, level), the offload
+decision's *predicted* fetch bytes (``caps * miss_ema * NODE_ROW_BYTES *
+offload_c`` — the per-group EMA rule in core/engine.py) against the
+*realized* bytes (distinct nodes actually fetched that batch times
+``NODE_ROW_BYTES``), and reports the mispricing ratio the perf gate bands.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# bucket schema
+# --------------------------------------------------------------------------
+
+#: number of log-scale buckets per (op class, path) cell
+N_BUCKETS = 16
+#: left edge of bucket 0 in seconds (also the underflow catch-all)
+T0 = 200e-9
+
+#: op classes, indexed by engine opcode (OP_LOOKUP..OP_SCAN = 0..3); the
+#: simulator maps its delete op onto the update class (same write path)
+OP_CLASSES = ("lookup", "update", "insert", "scan")
+#: outcome paths, mutually exclusive per lane, later entries win when a
+#: lane qualifies for several (a shed lane that also missed is "shed")
+PATHS = (
+    "cache_hit",      # served from this chip's fresh cache at every level
+    "remote_fetch",   # at least one level paid a remote node fetch
+    "peer_peek",      # leaf resolved by a sibling chip's cache (MSG_PEEK)
+    "offload",        # two-sided: shipped to the owning memory column
+    "stale_forced",   # pipelined overlap caught a stale read; re-executed
+    "shed",           # dropped by a routing/fused bucket; caller retries
+)
+N_CLASSES = len(OP_CLASSES)
+N_PATHS = len(PATHS)
+
+# --------------------------------------------------------------------------
+# pricing constants — literal mirrors of the SimConfig defaults
+# (core/sim.py).  Kept literal to avoid a sim <-> latency import cycle;
+# tests/test_obs.py asserts they match SimConfig so the planes can never
+# silently diverge.
+# --------------------------------------------------------------------------
+
+T_CACHED = 400e-9   # SimConfig.t_cached_access: 1KB cached page access
+T_READ = 2e-6       # SimConfig.t_rdma_read: one-sided remote node fetch
+T_WRITE = 2e-6      # SimConfig.t_rdma_write: write-through leaf write
+T_RPC = 4e-6        # SimConfig.t_rpc_base: two-sided round-trip floor
+T_MEM = 600e-9      # SimConfig.t_mem_search: per-node memory-side search
+T_LOCAL = 150e-9    # SimConfig.t_local_search: compute-side leaf search
+
+
+def bucket_edges() -> np.ndarray:
+    """``[N_BUCKETS + 1]`` bucket edges in seconds (monotone, base-2)."""
+    return T0 * np.exp2(np.arange(N_BUCKETS + 1, dtype=np.float64))
+
+
+def bucket_index(x, xp=np):
+    """Bucket index for cost(s) ``x`` in seconds; works for numpy scalars/
+    arrays (``xp=np``) and traced jax arrays (``xp=jnp``)."""
+    safe = xp.maximum(x, T0)
+    idx = xp.floor(xp.log2(safe / T0))
+    return xp.clip(idx, 0, N_BUCKETS - 1).astype(xp.int32 if xp is not np else np.int64)
+
+
+# --------------------------------------------------------------------------
+# percentile estimation from bucket CDFs
+# --------------------------------------------------------------------------
+
+
+def percentile(hist_1d: np.ndarray, q: float) -> float:
+    """Estimate the ``q``-th percentile (0..100) from a 1-D bucket count
+    vector: the geometric midpoint of the bucket where the CDF crosses the
+    rank.  Returns 0.0 for an empty histogram."""
+    h = np.asarray(hist_1d, dtype=np.float64)
+    total = h.sum()
+    if total <= 0:
+        return 0.0
+    rank = total * (q / 100.0)
+    cdf = np.cumsum(h)
+    i = int(np.searchsorted(cdf, rank, side="left"))
+    i = min(i, N_BUCKETS - 1)
+    return float(T0 * (2.0**i) * math.sqrt(2.0))
+
+
+def class_percentiles(
+    hist: np.ndarray, qs: Sequence[float] = (50.0, 95.0, 99.0)
+) -> Dict[str, Dict[str, float]]:
+    """Per-op-class percentiles from a ``[classes, paths, buckets]`` (or
+    already path-summed ``[classes, buckets]``) histogram."""
+    h = np.asarray(hist)
+    if h.ndim == 3:
+        h = h.sum(axis=1)
+    out: Dict[str, Dict[str, float]] = {}
+    for c, name in enumerate(OP_CLASSES):
+        out[name] = {f"p{q:g}": percentile(h[c], q) for q in qs}
+    return out
+
+
+def ledger(hist: np.ndarray) -> Dict[str, Dict[str, object]]:
+    """Per-(class, path) view of a ``[classes, paths, buckets]`` histogram:
+    lane counts, path share within the class, and p50/p99 of each cell."""
+    h = np.asarray(hist, dtype=np.int64)
+    out: Dict[str, Dict[str, object]] = {}
+    for c, cname in enumerate(OP_CLASSES):
+        cls_total = int(h[c].sum())
+        paths: Dict[str, object] = {}
+        for p, pname in enumerate(PATHS):
+            n = int(h[c, p].sum())
+            paths[pname] = {
+                "count": n,
+                "share": (n / cls_total) if cls_total else 0.0,
+                "p50_s": percentile(h[c, p], 50.0),
+                "p99_s": percentile(h[c, p], 99.0),
+            }
+        out[cname] = {"count": cls_total, "paths": paths}
+    return out
+
+
+def latency_section(hist: np.ndarray) -> Dict[str, object]:
+    """JSON-ready export of a fleet-summed ``[classes, paths, buckets]``
+    histogram: schema + raw counts + percentiles + per-path ledger.  This is
+    the shape ``BatchTimeline.summary()["latency"]`` carries and
+    benchmarks/check_telemetry.py validates."""
+    h = np.asarray(hist, dtype=np.int64)
+    return {
+        "bucket_edges_s": [float(e) for e in bucket_edges()],
+        "op_classes": list(OP_CLASSES),
+        "paths": list(PATHS),
+        "hist": h.tolist(),
+        "total": int(h.sum()),
+        "percentiles": class_percentiles(h),
+        "ledger": ledger(h),
+    }
+
+
+# --------------------------------------------------------------------------
+# offload cost-model audit
+# --------------------------------------------------------------------------
+
+
+def audit_report(predicted: np.ndarray, realized: np.ndarray) -> Dict[str, object]:
+    """Compare the offload rule's predicted fetch bytes against realized
+    fetch bytes, both ``[n_memory, levels]`` accumulated over a run.
+
+    ``mispricing_ratio`` is total predicted / total realized over the cells
+    where the model made a fetch-side decision (realized > 0) — >1 means the
+    EMA rule over-prices fetching (biasing toward offload), <1 under-prices
+    it.  Cells with zero realized bytes (fully cached levels) are reported
+    but excluded from the ratio."""
+    pred = np.asarray(predicted, dtype=np.float64)
+    real = np.asarray(realized, dtype=np.float64)
+    active = real > 0
+    tot_pred = float(pred[active].sum())
+    tot_real = float(real[active].sum())
+    ratio = (tot_pred / tot_real) if tot_real > 0 else 0.0
+    cells = []
+    n_mem, levels = pred.shape
+    for col in range(n_mem):
+        for lvl in range(levels):
+            if pred[col, lvl] == 0 and real[col, lvl] == 0:
+                continue
+            cells.append({
+                "column": col,
+                "level": lvl,
+                "predicted_bytes": float(pred[col, lvl]),
+                "realized_bytes": float(real[col, lvl]),
+                "ratio": (
+                    float(pred[col, lvl] / real[col, lvl])
+                    if real[col, lvl] > 0 else 0.0
+                ),
+            })
+    return {
+        "predicted_bytes": tot_pred,
+        "realized_bytes": tot_real,
+        "mispricing_ratio": ratio,
+        "cells": cells,
+    }
+
+
+# --------------------------------------------------------------------------
+# drift-gauge plumbing
+# --------------------------------------------------------------------------
+
+
+def percentile_gauges(hist: np.ndarray, classes: Sequence[str] = OP_CLASSES):
+    """Flat ``{"lat_p50_lookup": ..., "lat_p99_lookup": ...}`` mapping for
+    :func:`repro.obs.drift.assert_plane_agreement`; only classes with at
+    least one sample are emitted (a gauge at 0.0 would force the drift band
+    to special-case empties)."""
+    h = np.asarray(hist)
+    if h.ndim == 3:
+        h = h.sum(axis=1)
+    out: Dict[str, float] = {}
+    for c, name in enumerate(OP_CLASSES):
+        if name not in classes or h[c].sum() <= 0:
+            continue
+        out[f"lat_p50_{name}"] = percentile(h[c], 50.0)
+        out[f"lat_p99_{name}"] = percentile(h[c], 99.0)
+    return out

@@ -185,11 +185,34 @@ _DERIVED = (
            compute=_ratio("bytes", "ops")),
 )
 
+
+def _latency_gauges() -> Tuple[Metric, ...]:
+    """Per-op-class latency percentile gauges (DESIGN.md §12).  Both planes
+    estimate them from the shared bucket schema in ``repro.obs.latency``
+    (mesh: ``DexState.lat_hist``; sim: ``Simulator.lat_hist``), so drift
+    checks can gate p50/p99 per op class like any paired counter."""
+    out = []
+    for cls in ("lookup", "update", "insert", "scan"):
+        for q in (50, 99):
+            out.append(Metric(
+                f"lat_p{q}_{cls}", "seconds", "gauge",
+                provenance="§6 latency breakdown / Outback per-op rounds",
+                doc=f"modeled p{q} {cls} latency from the shared log-bucket "
+                    "histogram (geometric bucket midpoint)",
+            ))
+    return tuple(out)
+
+
 _GAUGES = (
     Metric("moved_fraction", "fraction", "gauge",
            provenance="Fig. 10 / §4 (live repartition)",
            doc="fraction of dataset keys whose owner a boundary install "
                "moved (both planes compute it from their own tables)"),
+) + _latency_gauges() + (
+    Metric("offload_mispricing", "ratio", "gauge",
+           provenance="§6.1 offload cost rule (audited)",
+           doc="predicted / realized fetch bytes over the offload decision's "
+               "fetch-side cells (obs/latency.py audit_report)"),
 )
 
 METRICS: Tuple[Metric, ...] = _MESH + _SIM_ONLY + _DERIVED + _GAUGES

@@ -22,6 +22,14 @@ metadata only and cost nothing at run time.
 
 Shed-lane retry latency is tracked per op class as *batches to completion*:
 ``record_retry("insert", rounds)`` after a retry loop.
+
+The modeled-latency ledger (DESIGN.md §12) rides the same measure fences:
+``prime_latency(state)`` after warmup snapshots the device histogram plane
+(``DexState.lat_hist`` / ``lat_audit``, or a simulator's ``lat_hist``), and
+``capture_latency(state)`` at the end of the measured window stores the
+delta — ``summary()`` then carries a ``"latency"`` section (bucket schema,
+counts, percentiles, per-path ledger) and, when the audit plane is present,
+a ``"cost_audit"`` section (obs/latency.audit_report).
 """
 
 from __future__ import annotations
@@ -31,7 +39,23 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
-from repro.obs import registry
+import numpy as np
+
+from repro.obs import latency, registry
+
+
+def _latency_arrays(state_or_hist: Any) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Fleet-summed ``[classes, paths, buckets]`` histogram plus the optional
+    ``[2, n_memory, levels]`` audit plane, from a ``DexState`` (mesh: sums the
+    device axis), a ``Simulator`` (already fleet-shaped), or a raw array."""
+    hist = getattr(state_or_hist, "lat_hist", state_or_hist)
+    hist = np.asarray(hist)
+    if hist.ndim == 4:
+        hist = hist.sum(axis=0)
+    audit = getattr(state_or_hist, "lat_audit", None)
+    if audit is not None:
+        audit = np.asarray(audit, dtype=np.float64).sum(axis=0)
+    return hist.astype(np.int64), audit
 
 
 def fence(tree: Any) -> Any:
@@ -173,6 +197,8 @@ class BatchTimeline:
         self.epoch = time.perf_counter()
         self.batches: List[BatchRecord] = []
         self._last_snap: Optional[registry.Snapshot] = None
+        self._lat_base: Optional[Tuple[np.ndarray, Optional[np.ndarray]]] = None
+        self._lat: Optional[Tuple[np.ndarray, Optional[np.ndarray]]] = None
 
     # -- recording --------------------------------------------------------
 
@@ -189,6 +215,30 @@ class BatchTimeline:
         """Set the counter baseline (e.g. after warmup) so the first measured
         batch reports increments, not lifetime totals."""
         self._last_snap = registry.snapshot(state_or_stats)
+
+    def prime_latency(self, state_or_hist: Any) -> None:
+        """Latency-ledger analogue of :meth:`prime`: snapshot the histogram
+        (and audit) plane at the measure fence so :meth:`capture_latency`
+        reports the measured window only."""
+        self._lat_base = _latency_arrays(state_or_hist)
+
+    def capture_latency(self, state_or_hist: Any) -> np.ndarray:
+        """Store the histogram/audit delta since :meth:`prime_latency` (or
+        lifetime totals when never primed); returns the fleet-summed
+        ``[classes, paths, buckets]`` histogram it recorded."""
+        hist, audit = _latency_arrays(state_or_hist)
+        if self._lat_base is not None:
+            base_h, base_a = self._lat_base
+            hist = hist - base_h
+            if audit is not None and base_a is not None:
+                audit = audit - base_a
+        self._lat = (hist, audit)
+        return hist
+
+    def latency_arrays(self) -> Optional[Tuple[np.ndarray, Optional[np.ndarray]]]:
+        """The captured ``(hist, audit)`` pair, or None before
+        :meth:`capture_latency` ran (used by obs/trace.py counter tracks)."""
+        return self._lat
 
     def instrument(
         self, engine: Callable, *, label: str = "engine"
@@ -261,7 +311,7 @@ class BatchTimeline:
         }
 
     def summary(self) -> Dict[str, Any]:
-        return {
+        out = {
             "name": self.name,
             "meta": self.meta,
             "n_batches": len(self.batches),
@@ -270,6 +320,12 @@ class BatchTimeline:
             "counters": self.counter_totals(),
             "retry_latency": self.retry_latency(),
         }
+        if self._lat is not None:
+            hist, audit = self._lat
+            out["latency"] = latency.latency_section(hist)
+            if audit is not None:
+                out["cost_audit"] = latency.audit_report(audit[0], audit[1])
+        return out
 
     def to_json(self) -> Dict[str, Any]:
         """JSON-serialisable dump (``metrics_timeline.json`` payload)."""

@@ -9,6 +9,10 @@ Emits the JSON-object flavour of the Trace Event Format (``{"traceEvents":
   drops and ops, sampled at each batch's start time.
 * fleet-level "C" tracks (hit_rate, drops_per_op, offload_fraction) on the
   host process.
+* when the timeline captured the latency ledger (DESIGN.md §12), one
+  session-level "C" sample per percentile gauge (``lat_p50_lookup`` ...)
+  plus ``offload_mispricing``, stamped at the end of the last batch (ts 0
+  on an empty timeline).
 * "M" metadata events naming every process/thread.
 
 Timestamps are microseconds from the timeline epoch, as the format requires.
@@ -25,6 +29,7 @@ import contextlib
 import json
 from typing import Any, Dict, List, Optional
 
+from repro.obs import latency
 from repro.obs.timeline import BatchTimeline
 
 _US = 1e6  # trace-event timestamps are microseconds
@@ -130,6 +135,27 @@ def to_trace_events(timeline: BatchTimeline) -> Dict[str, Any]:
                         "args": {name: int(rec.counters.per_device[name][d])},
                     }
                 )
+
+    lat = timeline.latency_arrays() if hasattr(timeline, "latency_arrays") else None
+    if lat is not None:
+        hist, audit = lat
+        ts_end = max((r.t0 + r.dur for r in timeline.batches), default=0.0) * _US
+        gauges: Dict[str, float] = dict(latency.percentile_gauges(hist))
+        if audit is not None:
+            rep = latency.audit_report(audit[0], audit[1])
+            gauges["offload_mispricing"] = float(rep["mispricing_ratio"])
+        for name, val in gauges.items():
+            events.append(
+                {
+                    "ph": "C",
+                    "name": name,
+                    "cat": "latency",
+                    "pid": _HOST_PID,
+                    "tid": 0,
+                    "ts": ts_end,
+                    "args": {name: float(val)},
+                }
+            )
 
     return {
         "traceEvents": events,

@@ -13,8 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core import dex as dex_mod
-from repro.core.sim import Counters
-from repro.obs import drift, registry, trace
+from repro.core.sim import Counters, SimConfig
+from repro.obs import drift, latency, registry, trace
 from repro.obs.timeline import BatchTimeline, obs_phase, timed_call
 
 
@@ -334,6 +334,198 @@ def test_drift_coerces_all_counter_carriers():
                          {"ops": drift.rel(0.0)}).ok
     with pytest.raises(TypeError):
         drift._named(object())
+
+
+# ---------------------------------------------------------------------------
+# Latency ledger (obs/latency): bucket schema, percentiles, audit, timeline
+# ---------------------------------------------------------------------------
+
+
+def test_latency_constants_mirror_sim_config():
+    # the ledger prices lanes with literal copies of the SimConfig defaults
+    # (no import cycle); if either side moves, the planes silently diverge —
+    # so this equality is load-bearing, not cosmetic
+    cfg = SimConfig(name="unit")
+    assert latency.T_CACHED == cfg.t_cached_access
+    assert latency.T_READ == cfg.t_rdma_read
+    assert latency.T_WRITE == cfg.t_rdma_write
+    assert latency.T_RPC == cfg.t_rpc_base
+    assert latency.T_MEM == cfg.t_mem_search
+    assert latency.T_LOCAL == cfg.t_local_search
+
+
+def test_latency_bucket_schema():
+    edges = latency.bucket_edges()
+    assert len(edges) == latency.N_BUCKETS + 1
+    assert np.all(np.diff(edges) > 0)
+    # underflow clamps to bucket 0, overflow to the last bucket
+    assert latency.bucket_index(0.0) == 0
+    assert latency.bucket_index(latency.T0 / 2) == 0
+    assert latency.bucket_index(1.0) == latency.N_BUCKETS - 1
+    # a bucket's left edge lands in that bucket (half-open intervals)
+    for i in (0, 1, 5, latency.N_BUCKETS - 1):
+        assert latency.bucket_index(float(edges[i])) == i
+    # vectorised form agrees with scalars
+    xs = np.array([0.0, latency.T0, 3e-6, 1.0])
+    assert list(latency.bucket_index(xs)) == [
+        int(latency.bucket_index(float(x))) for x in xs
+    ]
+
+
+def test_latency_percentile_from_bucket_cdf():
+    assert latency.percentile(np.zeros(latency.N_BUCKETS), 99.0) == 0.0
+    h = np.zeros(latency.N_BUCKETS)
+    h[3] = 10
+    mid = latency.T0 * 2.0**3 * 2.0**0.5
+    assert latency.percentile(h, 50.0) == pytest.approx(mid)
+    assert latency.percentile(h, 99.0) == pytest.approx(mid)
+    # 90 lanes in bucket 2, 10 in bucket 9: p50 low, p99 in the tail
+    h2 = np.zeros(latency.N_BUCKETS)
+    h2[2], h2[9] = 90, 10
+    assert latency.percentile(h2, 50.0) == pytest.approx(
+        latency.T0 * 4 * 2**0.5)
+    assert latency.percentile(h2, 99.0) == pytest.approx(
+        latency.T0 * 512 * 2**0.5)
+
+
+def test_latency_section_and_ledger_conservation():
+    rng = np.random.default_rng(0)
+    hist = rng.integers(
+        0, 50,
+        size=(latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS))
+    sec = latency.latency_section(hist)
+    assert sec["total"] == int(hist.sum())
+    assert sec["op_classes"] == list(latency.OP_CLASSES)
+    assert sec["paths"] == list(latency.PATHS)
+    nested = sum(sum(sum(cell) for cell in cls) for cls in sec["hist"])
+    assert nested == sec["total"]
+    for led in sec["ledger"].values():
+        assert led["count"] == sum(
+            led["paths"][p]["count"] for p in latency.PATHS)
+        shares = sum(led["paths"][p]["share"] for p in latency.PATHS)
+        assert shares == pytest.approx(1.0 if led["count"] else 0.0)
+
+
+def test_audit_report_excludes_unrealized_cells():
+    pred = np.array([[100.0, 50.0], [0.0, 7.0]])
+    real = np.array([[200.0, 0.0], [0.0, 7.0]])
+    rep = latency.audit_report(pred, real)
+    # the (0,1) cell predicted bytes but realized none: reported in cells,
+    # excluded from the fleet ratio (no fetch-side decision to audit)
+    assert rep["predicted_bytes"] == pytest.approx(107.0)
+    assert rep["realized_bytes"] == pytest.approx(207.0)
+    assert rep["mispricing_ratio"] == pytest.approx(107.0 / 207.0)
+    cells = {(c["column"], c["level"]) for c in rep["cells"]}
+    assert cells == {(0, 0), (0, 1), (1, 1)}  # all-zero (1,0) dropped
+    empty = latency.audit_report(np.zeros((1, 1)), np.zeros((1, 1)))
+    assert empty["mispricing_ratio"] == 0.0 and empty["cells"] == []
+
+
+def test_percentile_gauges_skip_empty_and_filter_classes():
+    hist = np.zeros(
+        (latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS), np.int64)
+    hist[0, 0, 2] = 5  # lookups only
+    g = latency.percentile_gauges(hist)
+    assert set(g) == {"lat_p50_lookup", "lat_p99_lookup"}
+    hist[3, 1, 8] = 2  # scans now sampled too, but filtered out
+    g2 = latency.percentile_gauges(hist, classes=("lookup",))
+    assert set(g2) == {"lat_p50_lookup", "lat_p99_lookup"}
+    # every gauge name must be drift-gateable
+    for name in latency.percentile_gauges(hist):
+        assert name in registry.BY_NAME
+
+
+class _LatState:
+    """Minimal DexState stand-in carrying the two latency planes."""
+
+    def __init__(self, dev=2):
+        self.lat_hist = np.zeros(
+            (dev, latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS),
+            np.int64)
+        self.lat_audit = np.zeros((dev, 2, 4, 3), np.float32)
+
+
+def test_timeline_latency_prime_capture_delta():
+    st = _LatState()
+    st.lat_hist[:, 0, 0, 1] = 7  # warmup lanes, fenced out by prime
+    st.lat_audit[:, 0, 0, 0] = 3.0
+    tl = BatchTimeline("lat")
+    tl.prime_latency(st)
+    st.lat_hist[0, 1, 3, 4] += 11  # measured window
+    st.lat_audit[1, 1, 2, 1] += 5.0
+    hist = tl.capture_latency(st)
+    assert hist.shape == (
+        latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS)
+    assert int(hist.sum()) == 11 and hist[1, 3, 4] == 11
+    summ = tl.summary()
+    assert summ["latency"]["total"] == 11
+    audit = summ["cost_audit"]
+    assert audit["realized_bytes"] == pytest.approx(5.0)
+    assert audit["predicted_bytes"] == pytest.approx(0.0)
+    # never primed -> lifetime totals
+    tl2 = BatchTimeline("lat2")
+    assert int(tl2.capture_latency(st).sum()) == int(st.lat_hist.sum())
+
+
+def test_timeline_capture_accepts_bare_histogram():
+    hist = np.zeros(
+        (latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS), np.int64)
+    hist[2, 1, 5] = 4
+    tl = BatchTimeline("raw")
+    assert int(tl.capture_latency(hist).sum()) == 4
+    summ = tl.summary()
+    assert summ["latency"]["total"] == 4
+    assert "cost_audit" not in summ  # no audit plane on a bare histogram
+
+
+def test_retry_latency_zero_retry_and_interleaving():
+    tl = BatchTimeline("retries")
+    tl.prime(_stats())
+    with tl.batch("b0") as ob:
+        ob.retry("insert", 3)
+    with tl.batch("b1"):
+        pass  # a batch where nothing shed
+    with tl.batch("b2") as ob:
+        ob.retry("insert", 1)
+        ob.retry("scan", 2)
+    rl = tl.retry_latency()
+    # a class that never sheds is absent, not zero-filled
+    assert "lookup" not in rl
+    assert rl["insert"] == {"count": 2, "mean_rounds": 2.0, "max_rounds": 3}
+    assert rl["scan"] == {"count": 1, "mean_rounds": 2.0, "max_rounds": 2}
+    assert tl.batches[1].retries == {}
+
+
+def test_trace_counter_tracks_on_empty_timeline():
+    tl = BatchTimeline("empty")
+    doc = trace.to_trace_events(tl)
+    assert all(e["ph"] != "C" for e in doc["traceEvents"])
+    # capturing a ledger on a zero-batch timeline anchors the latency
+    # counter tracks at t=0 instead of crashing on max() of no spans
+    hist = np.zeros(
+        (latency.N_CLASSES, latency.N_PATHS, latency.N_BUCKETS), np.int64)
+    hist[0, 1, 4] = 9
+    tl.capture_latency(hist)
+    tracks = [e for e in trace.to_trace_events(tl)["traceEvents"]
+              if e["ph"] == "C" and e.get("cat") == "latency"]
+    assert {e["name"] for e in tracks} == {"lat_p50_lookup",
+                                           "lat_p99_lookup"}
+    for e in tracks:
+        assert e["ts"] == 0.0
+        assert e["args"][e["name"]] > 0.0
+
+
+def test_trace_emits_mispricing_track_with_audit():
+    st = _LatState()
+    st.lat_hist[0, 0, 1, 2] = 3
+    st.lat_audit[0, 0, 0, 0] = 10.0  # predicted
+    st.lat_audit[0, 1, 0, 0] = 5.0   # realized
+    tl = BatchTimeline("aud")
+    tl.capture_latency(st)
+    ev = trace.to_trace_events(tl)["traceEvents"]
+    g = {e["name"]: e["args"] for e in ev if e["ph"] == "C"}
+    assert g["offload_mispricing"]["offload_mispricing"] == pytest.approx(
+        2.0)
 
 
 # ---------------------------------------------------------------------------
