@@ -23,7 +23,7 @@ Band forms, chosen per metric by the ``GATES`` table below:
 Refresh workflow (after an intentional perf/protocol change)::
 
     PYTHONPATH=src python -m benchmarks.run --quick --seed 0 \
-        --only fig15mesh,fig6mesh,fig10meshrep,fig14meshload,fig13engine,fig12fleet,fig19tails \
+        --only fig15mesh,fig6mesh,fig10meshrep,fig14meshload,fig13engine,fig12fleet,fig19tails,fig20leafdirect \
         --json bench_results.json --trace-dir traces
     PYTHONPATH=src python -m benchmarks.check_perf bench_results.json \
         --update-baselines
@@ -109,6 +109,18 @@ GATES = {
         "pipeline_stall_lanes": ("min", 1.0),
         "pipeline_modeled_speedup": ("min", 1.15),
         "pipeline_modeled_mops": MODELED,
+    },
+    "fig20leafdirect": {
+        # the leaf-direct claim itself: remote reads per op on YCSB-A must
+        # stay strictly below the descent-only arm (the benchmark asserts
+        # bit-identical results; this gate pins the margin from eroding)
+        "ycsb-a_read_reduction": ("min", 0.02),
+        "ycsb-a_descent_remote_reads_per_op": COUNTER,
+        "ycsb-a_leaf_direct_remote_reads_per_op": COUNTER,
+        "ycsb-a_rt_skips": COUNTER,
+        # the hotspot-shift cycle: a retrain must keep restoring accepted
+        # probes after the stale-table collapse
+        "hotspot_retrained_skips_per_op": ("min", 0.25),
     },
 }
 

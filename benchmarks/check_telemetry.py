@@ -31,7 +31,7 @@ from repro.obs import latency, registry
 
 #: modules whose run() must register at least one timeline
 MESH_MODULES = ("fig15mesh", "fig6mesh", "fig10meshrep", "fig14meshload",
-                "fig13engine", "fig19tails")
+                "fig13engine", "fig19tails", "fig20leafdirect")
 
 #: every timeline counter snapshot must carry these names
 EXPECTED_METRICS = frozenset(
@@ -156,6 +156,33 @@ def _check_latency(name, summary, problems):
             problems.append(f"{name}: cost_audit has no priced cells")
 
 
+#: fig20's leaf-direct arms export one timeline per mix; each must declare
+#: its table config and carry the route-table counters
+LEAF_DIRECT_TIMELINE_PREFIX = "fig20leafdirect_"
+LEAF_DIRECT_META_KEYS = ("slots", "entries", "poisoned")
+
+
+def _check_leaf_direct(name, summary, problems):
+    """Schema guard for one leaf-direct timeline: ``meta.leaf_direct``
+    declares the trained table (slot budget, live entries, poison flag) and
+    the counter snapshots carry the rt_skips/rt_mispredicts pair the
+    benchmark's reduction claim is audited against."""
+    meta = summary.get("meta") or {}
+    ld = meta.get("leaf_direct")
+    if not isinstance(ld, dict):
+        problems.append(f"{name}: meta.leaf_direct section missing")
+        return
+    missing = [k for k in LEAF_DIRECT_META_KEYS if k not in ld]
+    if missing:
+        problems.append(f"{name}: meta.leaf_direct lacks {missing}")
+    if not ld.get("entries"):
+        problems.append(f"{name}: route table trained zero live entries")
+    counters = summary.get("counters") or {}
+    for k in ("rt_skips", "rt_mispredicts"):
+        if k not in counters:
+            problems.append(f"{name}: counter '{k}' missing from snapshot")
+
+
 def _fail(problems):
     print("telemetry guard: FAIL")
     for p in problems:
@@ -185,6 +212,8 @@ def check(results_path: str, trace_dir: str) -> int:
     for name, summary in sorted(timelines.items()):
         if name.startswith(LATENCY_TIMELINE_PREFIX):
             _check_latency(name, summary, problems)
+        if name.startswith(LEAF_DIRECT_TIMELINE_PREFIX):
+            _check_leaf_direct(name, summary, problems)
         counters = summary.get("counters") or {}
         missing = EXPECTED_METRICS - set(counters)
         if missing:

@@ -3,13 +3,120 @@
 Larger keys shrink effective fanout, deepening the tree and stressing the
 fixed-size cache; the paper shows both DEX and SMART degrade but DEX keeps
 its advantage.  We model key size by reducing per-node fanout (64 keys at
-8B -> 8 keys at 64B) through a smaller bulk-load fill."""
+8B -> 8 keys at 64B) through a smaller bulk-load fill.
 
-from benchmarks.common import HEADER, N_KEYS, N_OPS, N_WARM
-from repro.core import baselines
-from repro.core.cost_model import analyze
-from repro.core.sim import HostBTree, Simulator
-from repro.data import ycsb
+Two planes per key size:
+
+* **Plane A (cost model)** — the original DEX-vs-SMART Mops comparison.
+* **Plane B (mesh)** — the same reduced-fill pool bulk-loaded onto the
+  forced-8-device mesh; a Zipfian lookup stream reports the *measured*
+  descent depth (pool levels) and remote reads per op (``fetches/ops``
+  via the registry's ``remote_reads_per_op`` derived metric).  Depth grows
+  as fill shrinks, and the remote reads per op grow with it — the
+  mechanism behind the paper's degradation curve.
+* **Compressed separators** (DESIGN.md §13) — ``pool.compress_separators``
+  on the same pool reports how much of the depth penalty the
+  shared-prefix + truncated-suffix layout wins back: per-row separator
+  bytes drop from ``8*F`` to ``8 + 4 + 4*F``, and the byte-equivalent
+  effective fanout feeds a modeled subtree depth at equal node budget.
+"""
+
+import os
+import pathlib
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from benchmarks.common import (  # noqa: E402
+    HEADER,
+    N_KEYS,
+    N_OPS,
+    N_WARM,
+    lookup_with_retries,
+)
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core import baselines  # noqa: E402
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core.cost_model import analyze  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.core.sim import HostBTree, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+from repro.obs import registry  # noqa: E402
+
+
+def _mesh_key_size(dataset, fill, *, batch, n_warm, n_meas, seed):
+    """One mesh lookup run at the reduced fill modeling this key size.
+    Returns measured descent depth, remote reads per op, and the
+    compressed-separator layout stats of the same pool."""
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=fill,
+                                     n_shards=4)
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=64, cache_ways=4, policy="fetch",
+        route_capacity_factor=float(max(2, n_memory)),
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg),
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    lookup = jax.jit(dex_mod.make_dex_lookup(meta, cfg, mesh))
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    zipf = ycsb.ZipfianGenerator(dataset.size, theta=0.99, seed=seed)
+    keys = dataset[ycsb.scramble(
+        zipf.draw_ranks((n_warm + n_meas) * batch), dataset.size)]
+    stats_warm = None
+    for b in range(n_warm + n_meas):
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+        kk = keys[b * batch: (b + 1) * batch]
+        state, found, vals_out, done = lookup_with_retries(
+            lookup, state, put, kk)
+        ok = done & (kk != KEY_MAX)
+        assert bool(np.asarray(found)[ok].all()), "bulk-loaded key not found"
+        assert (np.asarray(vals_out)[ok] == kk[ok] * 7).all()
+    jax.block_until_ready(state.stats)
+    snap = registry.snapshot(
+        (np.asarray(state.stats).sum(axis=0) - stats_warm)[None, :])
+
+    sep = pool_mod.compress_separators(pool, meta)
+    sep_stats = pool_mod.sep_compression_stats(sep, meta)
+    return dict(
+        # full descent depth: compute-local top-tree levels + the remote
+        # subtree walk (level_m inner levels + the leaf)
+        descent_depth=meta.top_height + meta.level_m + 1,
+        subtree_depth=meta.level_m + 1,
+        remote_reads_per_op=snap["remote_reads_per_op"],
+        per_node=meta.per_node,
+        n_leaves=meta.subtree_leaves * meta.n_subtrees,
+        sep=sep_stats,
+    )
 
 
 def run(quick: bool = False, seed: "int | None" = None):
@@ -17,6 +124,8 @@ def run(quick: bool = False, seed: "int | None" = None):
     rows = [HEADER]
     summary = {}
     key_sizes = [8, 16] if quick else [8, 16, 32, 64]
+    mesh_keys = 8_000 if quick else 24_000
+    batch = 256 if quick else 512
     for ks in key_sizes:
         fill = 0.7 * 8 / ks          # effective entries per 1KB node
         for system in ["dex", "smart"]:
@@ -38,6 +147,29 @@ def run(quick: bool = False, seed: "int | None" = None):
                 f"{rep.bottleneck},,,,,"
             )
             summary[f"{system}@{ks}B"] = rep.mops()
+        # Plane B: the same reduced-fill geometry, measured on the mesh
+        mesh_ds = ycsb.make_dataset(mesh_keys, seed=s)
+        m = _mesh_key_size(mesh_ds, max(fill, 0.06), batch=batch,
+                           n_warm=1, n_meas=2, seed=s + 13)
+        rows.append(
+            f"mesh-{ks}B,lookup,{len(jax.devices())},,"
+            f"depth={m['descent_depth']},"
+            f"{m['remote_reads_per_op']:.3f},,,,"
+        )
+        summary[f"mesh@{ks}B_descent_depth"] = float(m["descent_depth"])
+        summary[f"mesh@{ks}B_remote_reads_per_op"] = m["remote_reads_per_op"]
+        summary[f"mesh@{ks}B_compressible_frac"] = (
+            m["sep"]["compressible_frac"])
+        summary[f"mesh@{ks}B_effective_fanout"] = m["sep"]["effective_fanout"]
+        summary[f"mesh@{ks}B_modeled_subtree_depth"] = float(
+            m["sep"]["modeled_subtree_depth"])
+    # deeper trees must cost more remote reads per op, monotonically over
+    # the swept key sizes (the paper's Fig. 16 mechanism, measured)
+    rr = [summary[f"mesh@{ks}B_remote_reads_per_op"] for ks in key_sizes]
+    dd = [summary[f"mesh@{ks}B_descent_depth"] for ks in key_sizes]
+    assert all(b >= a for a, b in zip(dd, dd[1:])), dd
+    if dd[-1] > dd[0]:
+        assert rr[-1] > rr[0], (dd, rr)
     return rows, summary
 
 
@@ -45,7 +177,7 @@ def main():
     rows, summary = run()
     print("\n".join(rows))
     for k, v in summary.items():
-        print(f"# {k}: {v:.2f} Mops")
+        print(f"# {k}: {v:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,527 @@
+"""Leaf-direct routing (core/route_table.py + DESIGN.md §13): remote reads
+per op with and without the learned route table, end-to-end on the
+forced-8-device mesh.
+
+DEX's central claim is that fewer remote accesses win on disaggregated
+memory (paper §1).  The leaf-direct route table resolves a key's leaf
+compute-side (Outback-style, PAPERS.md) and probes it under the leaf
+version fence, skipping the within-subtree inner descent when the fence
+accepts.  This benchmark runs three arms over the SAME trace per mix:
+
+  * ``descent``     — ``route_table_slots=0``: the verbatim pre-route-table
+    engine program (statically pruned, bit-identical to the seed engine);
+  * ``leaf-direct`` — a trained table, retrained host-side between batches
+    (training is a between-batch host step, like repartition decisions);
+  * ``poisoned``    — the same table with every entry's version stamp
+    bumped (``route_table.poison_route_table``): the fence must reject
+    every guess, so results AND remote-read counts must be bit-identical
+    to the descent arm — correctness never depends on prediction quality.
+
+Asserted per mix (YCSB-A/B/E):
+
+  * all three arms' per-lane results are bit-identical to each other and
+    validated against the phased ``HostBTree`` replay;
+  * the leaf-direct arm books ``rt_skips`` > 0 and strictly fewer remote
+    reads per op than the descent arm on YCSB-A (<= on B/E — scans never
+    consult the table, so E's reduction rides on its 5% inserts);
+  * the poisoned arm books only ``rt_mispredicts`` (zero skips) and reads
+    exactly as much as the descent arm.
+
+Cross-plane: the ``Simulator`` (``SimConfig.route_table_slots``) prices the
+identical YCSB-A trace with the same train-between-batches schedule; the
+``remote_reads_per_op`` derived metric (obs/registry.py) must agree within
+the drift band for BOTH arms, and the sim must reproduce the reduction.
+
+Hotspot shift: a localized YCSB-B hotspot trains the table into the hot
+partition's leaves (``route_table_slots`` below the leaf count forces the
+demand-driven keep), then the hotspot jumps to the other end of the key
+space.  The stale table mispredicts (bounds reject — skips collapse);
+after ``DexState.route_demand`` accumulates the new skew, retraining
+restores the skip rate.  No correctness is lost at any point in between.
+
+Run with ``PYTHONPATH=src python benchmarks/fig20_leaf_direct.py
+[--quick]`` or via the suite: ``python -m benchmarks.run --only
+fig20leafdirect``.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dex as dex_mod  # noqa: E402
+from repro.core import engine as engine_mod  # noqa: E402
+from repro.core import pool as pool_mod  # noqa: E402
+from repro.core import route_table  # noqa: E402
+from repro.core import smo as smo_mod  # noqa: E402
+from repro.core import write as write_mod  # noqa: E402
+from repro.core.nodes import KEY_MAX, KEY_MIN  # noqa: E402
+from repro.compat import make_mesh_compat  # noqa: E402
+from repro.core.sim import HostBTree, SimConfig, Simulator  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+
+from repro.obs import drift, registry  # noqa: E402
+from benchmarks import common  # noqa: E402
+from benchmarks.common import engine_with_retries  # noqa: E402
+
+BATCH = 1024          # full-mode batch width (quick mode halves it)
+MC = 32               # scan max_count (E-mix scan lengths draw from [1, 24])
+SCAN_LEN = 24
+UPDATE_XOR = 0x5A5A
+MAX_RETRIES = 4
+#: small direct-mapped-ish cache (sets x 4 ways) so leaf churn keeps
+#: evicting the inner rows: the descent arm pays recurring inner-level
+#: fetches that the leaf-direct arm's accepted probes never issue.  Leaf
+#: admission runs at 100% for the same reason (churn, not retention).
+CACHE_SETS = 32
+P_ADMIT_LEAF_PCT = 100
+
+#: mixes and the opcode sets their engines need (scan lanes never consult
+#: the route table; E's reduction rides on its inserts)
+MIXES = (
+    ("ycsb-a", ("lookup", "update")),
+    ("ycsb-b", ("lookup", "update")),
+    ("ycsb-e", ("insert", "scan")),
+)
+
+
+def _mesh_setup(dataset, *, rt_slots=0):
+    vals = dataset * 7
+    pool, meta = pool_mod.build_pool(dataset, vals, level_m=1, fill=0.7,
+                                     n_shards=4)
+    if len(jax.devices()) >= 8:
+        shape, n_route, n_memory = (2, 4), 2, 4
+        mid = int(dataset[dataset.size // 2])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], dtype=np.int64)
+    else:
+        shape, n_route, n_memory = (1, 1), 1, 1
+        bounds = np.array([KEY_MIN, KEY_MAX], dtype=np.int64)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        route_axes=("data",), memory_axis="model",
+        n_route=n_route, n_memory=n_memory,
+        cache_sets=CACHE_SETS, cache_ways=4,
+        policy="fetch",
+        p_admit_leaf_pct=P_ADMIT_LEAF_PCT,
+        route_capacity_factor=float(max(2, n_memory)),
+        route_table_slots=rt_slots,
+    )
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state,
+        dex_mod.state_shardings(mesh, cfg),
+    )
+    sharding = NamedSharding(mesh, P(("data", "model")))
+    return meta, mesh, cfg, bounds, state, sharding
+
+
+def _phased_replay(host, rng, opc, kk, vv, found, vals, status, sk, tk,
+                   done):
+    """Validate one engine batch against the phased sequential replay
+    (reads see the pre-batch index, then updates, then inserts); returns
+    the insert lanes shed with STATUS_SPLIT for the SMO ladder."""
+    for i in np.where((opc == ycsb.OP_LOOKUP) & done)[0]:
+        hv = host.get(int(kk[i]))
+        assert bool(found[i]) == (hv is not None), int(kk[i])
+        if hv is not None:
+            assert int(vals[i]) == hv, int(kk[i])
+    sc_ok = np.where((opc == ycsb.OP_SCAN) & done)[0]
+    for i in rng.choice(sc_ok, size=min(8, sc_ok.size), replace=False):
+        exp = [k for _, ks in host.scan(int(kk[i]), int(vv[i]))
+               for k in ks][: int(vv[i])]
+        got = sk[i][sk[i] != KEY_MAX].tolist()
+        assert got == exp, (int(kk[i]), got[:4], exp[:4])
+        assert int(tk[i]) == len(exp)
+    for i in np.where((opc == ycsb.OP_UPDATE) & done)[0]:
+        applied = host.update(int(kk[i]), int(vv[i]))
+        assert (status[i] == write_mod.STATUS_OK) == applied, int(kk[i])
+    ins = (opc == ycsb.OP_INSERT) & done
+    for i in np.where(ins)[0]:
+        if status[i] == write_mod.STATUS_OK:
+            host.insert(int(kk[i]), int(vv[i]))
+    return ins & (status == write_mod.STATUS_SPLIT)
+
+
+def _run_arm(name, ops_set, dataset, wl, n_batches, n_warm, rng, batch, *,
+             rt_slots=0, poison=False, tl=None):
+    """One engine arm over the shared trace.  ``rt_slots`` > 0 trains the
+    route table after warmup and retrains host-side before every measured
+    batch (the write-heavy mixes version-fence entries out within one
+    batch; retraining between batches is the table's operating model).
+    ``poison`` re-poisons after every (re)train, so the fence rejects every
+    guess for the whole measured window."""
+    meta, mesh, cfg, bounds, state, sharding = _mesh_setup(
+        dataset, rt_slots=rt_slots)
+    host = HostBTree(dataset, dataset * 7, fill=0.7)
+    eng = jax.jit(engine_mod.make_dex_engine(meta, cfg, mesh, ops=ops_set,
+                                             max_count=MC))
+    smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    def retrain(state):
+        if rt_slots:
+            state = route_table.train_route_table(state, meta, mesh=mesh)
+            if poison:
+                state = route_table.poison_route_table(state)
+        return state
+
+    outs = []
+    stats_warm = None
+    n_entries = 0
+    for b in range(n_warm + n_batches):
+        if b >= n_warm:
+            # host-side between-batch (re)train — same cadence both planes
+            state = retrain(state)
+        if b == n_warm:
+            jax.block_until_ready(state.stats)
+            stats_warm = np.asarray(state.stats).sum(axis=0)
+            if rt_slots:
+                n_entries = int(
+                    (np.asarray(state.rt_ver) >= 0).sum())
+            if tl is not None:
+                tl.meta["leaf_direct"] = {
+                    "slots": rt_slots, "entries": n_entries,
+                    "poisoned": bool(poison),
+                }
+                tl.prime(state.stats)
+        opc, kk, vv = ycsb.engine_lanes(
+            wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR
+        )
+        ob = None
+        if tl is not None and b >= n_warm:
+            ob = tl.batch(name)
+            with ob:
+                state, found, vals, status, sk, sv, tk, done = (
+                    engine_with_retries(eng, state, put, opc, kk, vv,
+                                        max_retries=MAX_RETRIES, obs=ob)
+                )
+                ob.counters(state.stats)
+        else:
+            state, found, vals, status, sk, sv, tk, done = (
+                engine_with_retries(eng, state, put, opc, kk, vv,
+                                    max_retries=MAX_RETRIES)
+            )
+        if b >= n_warm:
+            outs.append((found, vals, status,
+                         sk if sk is not None else np.zeros(0),
+                         tk, done))
+        shed = _phased_replay(host, rng, opc, kk, vv, found, vals, status,
+                              sk, tk, done)
+        if shed.any():
+            state, meta2, info = smo_mod.settle_splits(
+                state, meta, cfg, smo, host,
+                np.where(shed, kk, KEY_MAX), np.where(shed, vv, 0), bounds,
+                obs=ob,
+            )
+            if info["drained"]:
+                meta = meta2
+                state = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), state,
+                    dex_mod.state_shardings(mesh, cfg),
+                )
+                eng = jax.jit(engine_mod.make_dex_engine(
+                    meta, cfg, mesh, ops=ops_set, max_count=MC))
+                smo = jax.jit(smo_mod.make_dex_smo(meta, cfg, mesh))
+    jax.block_until_ready(state.stats)
+    stats = np.asarray(state.stats).sum(axis=0) - stats_warm
+    return dict(stats=stats, outs=outs, entries=n_entries, meta=meta,
+                cfg=cfg)
+
+
+def _assert_bit_identical(a, b, label):
+    for i, (ta, tb) in enumerate(zip(a, b)):
+        for arr_a, arr_b in zip(ta, tb):
+            np.testing.assert_array_equal(
+                arr_a, arr_b, err_msg=f"{label}: batch {i}")
+
+
+def _sim_arm(dataset, wl, n_batches, n_warm, batch, cfg, meta, *,
+             rt_slots=0, poison=False):
+    """Plane A on the identical trace: same cache budget, same blocked
+    placement, same train-between-batches schedule (``offloading`` stays
+    off on both planes — the mesh arm runs ``policy="fetch"``)."""
+    sim_tree = HostBTree(
+        dataset, dataset * 7, fill=0.7, level_m=1,
+        n_mem_servers=cfg.n_memory, placement="blocked",
+        subtrees_per_server=meta.n_subtrees_padded // cfg.n_memory,
+    )
+    sim_cfg = SimConfig(
+        name="dex-engine", n_compute=cfg.n_devices,
+        n_mem_servers=cfg.n_memory, level_m=1,
+        write_through=True, offloading=False,
+        coherence_batch=batch, route_dispersion=cfg.n_memory,
+        p_admit_leaf=cfg.p_admit_leaf_pct / 100.0,
+        cache_bytes=cfg.cache_sets * cfg.cache_ways * 1024,
+        route_table_slots=rt_slots,
+    )
+    sim = Simulator(sim_tree, sim_cfg, seed=3)
+    sim.run(wl.ops[: n_warm * batch], wl.keys[: n_warm * batch])
+    sim.reset_counters()
+    for b in range(n_warm, n_warm + n_batches):
+        if rt_slots:
+            sim.train_route_table()
+            if poison:
+                sim.poison_route_table()
+        sl = slice(b * batch, (b + 1) * batch)
+        sim.run(wl.ops[sl], wl.keys[sl])
+    return sim.totals()
+
+
+def _run_hotspot(dataset, n_warm, batch, rng, *, slots, n_p1, n_stale,
+                 n_fresh):
+    """Hotspot-shift arm (YCSB-B, localized skew): the table is trained
+    once into the phase-1 hot partition, the hotspot jumps, the stale
+    table's skips collapse into bounds mispredicts, and a retrain off the
+    accumulated ``route_demand`` restores them.  Returns per-phase per-op
+    skip/mispredict rates; every batch is host-replay validated."""
+    meta, mesh, cfg, _bounds, state, sharding = _mesh_setup(
+        dataset, rt_slots=slots)
+    host = HostBTree(dataset, dataset * 7, fill=0.7)
+    eng = jax.jit(engine_mod.make_dex_engine(
+        meta, cfg, mesh, ops=("lookup", "update"), max_count=1))
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    # scrambled warm loads both partitions' demand evenly; phase 1 then
+    # tips it toward the low hotspot, so the demand-driven keep covers the
+    # phase-1 hot leaves.  After the shift, n_stale batches are enough for
+    # the cumulative demand to cross over to the other partition.
+    n_p2 = n_stale + n_fresh
+    wl_w = ycsb.generate("ycsb-b", dataset, n_warm * batch, theta=0.99,
+                         seed=11)
+    wl_1 = ycsb.generate("ycsb-b", dataset, (n_p1 + 1) * batch, theta=0.99,
+                         seed=12, hotspot=0.15)
+    wl_2 = ycsb.generate("ycsb-b", dataset, n_p2 * batch, theta=0.99,
+                         seed=13, hotspot=0.85)
+    wl = ycsb.Workload(
+        ops=np.concatenate([wl_w.ops, wl_1.ops, wl_2.ops]),
+        keys=np.concatenate([wl_w.keys, wl_1.keys, wl_2.keys]),
+    )
+
+    phases = {}
+
+    def span(label, lo, hi, retrain_first=False):
+        nonlocal state
+        if retrain_first:
+            state = route_table.train_route_table(state, meta, mesh=mesh)
+        jax.block_until_ready(state.stats)
+        before = np.asarray(state.stats).sum(axis=0)
+        for b in range(lo, hi):
+            opc, kk, vv = ycsb.engine_lanes(
+                wl, b * batch, (b + 1) * batch, update_xor=UPDATE_XOR)
+            state, found, vals, status, sk, sv, tk, done = (
+                engine_with_retries(eng, state, put, opc, kk, vv,
+                                    max_retries=MAX_RETRIES)
+            )
+            shed = _phased_replay(host, rng, opc, kk, vv, found, vals,
+                                  status, sk, tk, done)
+            assert not shed.any()
+        jax.block_until_ready(state.stats)
+        d = np.asarray(state.stats).sum(axis=0) - before
+        ops = max(int(d[dex_mod.STAT_OPS]), 1)
+        phases[label] = dict(
+            ops=int(d[dex_mod.STAT_OPS]),
+            skips_per_op=float(d[dex_mod.STAT_RT_SKIPS]) / ops,
+            mispredicts_per_op=float(d[dex_mod.STAT_RT_MISPREDICTS]) / ops,
+        )
+
+    # warm (no table), then one demand-priming phase-1 batch before the
+    # train so the keep targets the phase-1 hot partition
+    span("warm", 0, n_warm + 1)
+    span("phase1", n_warm + 1, n_warm + 1 + n_p1, retrain_first=True)
+    b2 = n_warm + 1 + n_p1
+    span("stale", b2, b2 + n_stale)
+    span("retrained", b2 + n_stale, b2 + n_p2, retrain_first=True)
+    n_leaves = route_table.leaf_ranges(state, meta)[0].size
+    phases["n_leaves"] = int(n_leaves)
+    phases["slots"] = int(slots)
+    return phases
+
+
+def run(quick: bool = False, seed: "int | None" = None):
+    base_seed = 0 if seed is None else int(seed)
+    n_keys = 30_000 if quick else 100_000
+    n_batches = 3 if quick else 5
+    n_warm = 2 if quick else 3
+    batch = 512 if quick else BATCH
+    rt_slots = 1024 if quick else 4096     # covers every leaf in the main arms
+    rng = np.random.default_rng(base_seed + 5)
+    dataset = ycsb.make_dataset(n_keys, seed=base_seed)
+    eight = len(jax.devices()) >= 8
+    rows = ["plane,workload,metric,value"]
+    summary = {}
+
+    sim_inputs = {}
+    for name, ops_set in MIXES:
+        wl = ycsb.generate(name, dataset, (n_warm + n_batches) * batch,
+                           theta=0.99, seed=11, scan_len=SCAN_LEN,
+                           scan_len_dist="uniform")
+        de = _run_arm(name, ops_set, dataset, wl, n_batches, n_warm, rng,
+                      batch, rt_slots=0)
+        tl = common.new_timeline(f"fig20leafdirect_{name}",
+                                 devices=len(jax.devices()), batch=batch)
+        ld = _run_arm(name, ops_set, dataset, wl, n_batches, n_warm, rng,
+                      batch, rt_slots=rt_slots, tl=tl)
+        common.finish_timeline(tl)
+        po = _run_arm(name, ops_set, dataset, wl, n_batches, n_warm, rng,
+                      batch, rt_slots=rt_slots, poison=True)
+
+        # equal correctness: all three arms are bit-identical, lane for
+        # lane, on every measured batch (each already host-replay checked)
+        _assert_bit_identical(de["outs"], ld["outs"], f"{name} leaf-direct")
+        _assert_bit_identical(de["outs"], po["outs"], f"{name} poisoned")
+
+        snap = {k: registry.snapshot(a["stats"][None, :])
+                for k, a in (("descent", de), ("leaf_direct", ld),
+                             ("poisoned", po))}
+        for arm, s in snap.items():
+            rows += [
+                f"engine,{name},{arm}_remote_reads_per_op,"
+                f"{s['remote_reads_per_op']:.4f}",
+                f"engine,{name},{arm}_fetches,{s['fetches']}",
+                f"engine,{name},{arm}_rt_skips,{s['rt_skips']}",
+                f"engine,{name},{arm}_rt_mispredicts,{s['rt_mispredicts']}",
+            ]
+            summary[f"{name}_{arm}_remote_reads_per_op"] = (
+                s["remote_reads_per_op"])
+        summary[f"{name}_rt_skips"] = float(snap["leaf_direct"]["rt_skips"])
+        summary[f"{name}_rt_mispredicts"] = float(
+            snap["leaf_direct"]["rt_mispredicts"])
+        summary[f"{name}_read_reduction"] = 1.0 - (
+            snap["leaf_direct"]["remote_reads_per_op"]
+            / max(snap["descent"]["remote_reads_per_op"], 1e-12))
+        summary[f"{name}_rt_entries"] = float(ld["entries"])
+
+        # descent-only arm: the statically-pruned program books no route-
+        # table counters at all (any-device, any-size invariant)
+        assert snap["descent"]["rt_skips"] == 0
+        assert snap["descent"]["rt_mispredicts"] == 0
+        if eight:
+            assert ld["entries"] > 0, name
+            # accepted probes skipped inner rounds; the fence rejected the
+            # rest (write-heavy mixes fence entries out mid-batch)
+            assert snap["leaf_direct"]["rt_skips"] > 0, name
+            # the poisoned table is all mispredicts, zero skips, and reads
+            # EXACTLY as much as descent-only: the fallback is the same
+            # cached descent, cache-decision for cache-decision
+            assert snap["poisoned"]["rt_skips"] == 0, name
+            assert snap["poisoned"]["rt_mispredicts"] > 0, name
+            assert snap["poisoned"]["fetches"] == snap["descent"]["fetches"], (
+                name, snap["poisoned"]["fetches"], snap["descent"]["fetches"])
+            # the paper's claim, per mix: strictly fewer remote reads per
+            # op on the update-heavy A mix; never more on B/E (scans skip
+            # the table, so E's margin is only its 5% insert lanes)
+            if name == "ycsb-a":
+                assert (snap["leaf_direct"]["remote_reads_per_op"]
+                        < snap["descent"]["remote_reads_per_op"]), (
+                    snap["leaf_direct"]["remote_reads_per_op"],
+                    snap["descent"]["remote_reads_per_op"])
+            else:
+                assert (snap["leaf_direct"]["remote_reads_per_op"]
+                        <= snap["descent"]["remote_reads_per_op"]), name
+        if name == "ycsb-a":
+            sim_inputs = dict(wl=wl, de=de, ld=ld, snap=snap)
+
+    # ------------------------------------------------------------------
+    # Plane A mirror on the YCSB-A trace: same trace, same cache budget,
+    # same between-batch train schedule; remote_reads_per_op must agree
+    # within the drift band for BOTH arms and reproduce the reduction
+    # ------------------------------------------------------------------
+    cfg, meta = sim_inputs["de"]["cfg"], sim_inputs["de"]["meta"]
+    sim_de = _sim_arm(dataset, sim_inputs["wl"], n_batches, n_warm, batch,
+                      cfg, meta, rt_slots=0)
+    sim_ld = _sim_arm(dataset, sim_inputs["wl"], n_batches, n_warm, batch,
+                      cfg, meta, rt_slots=rt_slots)
+    sim_named = {k: registry.sim_view(t)
+                 for k, t in (("descent", sim_de), ("leaf_direct", sim_ld))}
+    for arm in ("descent", "leaf_direct"):
+        s = sim_named[arm]
+        s["accesses_per_op"] = (s["hits"] + s["fetches"]) / max(s["ops"], 1)
+        rows.append(
+            f"sim,ycsb-a,{arm}_remote_reads_per_op,"
+            f"{s['remote_reads_per_op']:.4f}")
+        summary[f"sim_{arm}_remote_reads_per_op"] = s["remote_reads_per_op"]
+        summary[f"sim_{arm}_accesses_per_op"] = s["accesses_per_op"]
+    summary["sim_access_reduction"] = 1.0 - (
+        sim_named["leaf_direct"]["accesses_per_op"]
+        / max(sim_named["descent"]["accesses_per_op"], 1e-12))
+    # The sim's cooling-LRU keeps the handful of inner rows resident, so the
+    # modeled saving shows up as *node accesses eliminated* (each rt_skip is
+    # one within-subtree probe that never happens); it converts to remote
+    # reads only under conflict churn, which the mesh's set-associative
+    # cache exhibits and the strict mesh assert above pins.  Here: strictly
+    # fewer accesses per op, and never more remote reads than descent.
+    assert (sim_named["leaf_direct"]["accesses_per_op"]
+            < sim_named["descent"]["accesses_per_op"]), sim_named
+    assert (sim_named["leaf_direct"]["remote_reads_per_op"]
+            <= sim_named["descent"]["remote_reads_per_op"] * 1.05), sim_named
+    assert sim_ld.rt_skips > 0
+    if eight:
+        for arm, totals in (("descent", sim_de), ("leaf_direct", sim_ld)):
+            drift.assert_plane_agreement(
+                sim_inputs["snap"][arm], totals,
+                {"remote_reads_per_op": drift.ratio(0.5, 2.0),
+                 "rt_skips": drift.ratio(0.25, 4.0, min_count=64)},
+                label=f"fig20leafdirect ycsb-a {arm}",
+            )
+
+    # ------------------------------------------------------------------
+    # Hotspot shift: stale table -> bounds mispredicts, retrain recovers
+    # ------------------------------------------------------------------
+    hs = _run_hotspot(
+        dataset, n_warm, batch, rng,
+        slots=256 if quick else 768,
+        n_p1=2, n_stale=4 if quick else 5, n_fresh=2,
+    )
+    for ph in ("phase1", "stale", "retrained"):
+        rows += [
+            f"engine,hotspot,{ph}_skips_per_op,"
+            f"{hs[ph]['skips_per_op']:.4f}",
+            f"engine,hotspot,{ph}_mispredicts_per_op,"
+            f"{hs[ph]['mispredicts_per_op']:.4f}",
+        ]
+        summary[f"hotspot_{ph}_skips_per_op"] = hs[ph]["skips_per_op"]
+        summary[f"hotspot_{ph}_mispredicts_per_op"] = (
+            hs[ph]["mispredicts_per_op"])
+    if eight:
+        # the keep was forced to choose (slots < live leaves), the fresh
+        # table served phase 1, the shift broke it, the retrain fixed it
+        assert hs["slots"] < hs["n_leaves"], hs
+        assert hs["phase1"]["skips_per_op"] > 0.5, hs
+        assert (hs["stale"]["skips_per_op"]
+                < 0.5 * hs["phase1"]["skips_per_op"]), hs
+        assert (hs["stale"]["mispredicts_per_op"]
+                > hs["phase1"]["mispredicts_per_op"]), hs
+        assert (hs["retrained"]["skips_per_op"]
+                > 2.0 * hs["stale"]["skips_per_op"]), hs
+        assert (hs["retrained"]["mispredicts_per_op"]
+                < hs["stale"]["mispredicts_per_op"]), hs
+    return rows, summary
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, summary = run(quick=quick)
+    print("\n".join(rows))
+    for k, v in summary.items():
+        print(f"# {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

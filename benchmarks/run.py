@@ -41,6 +41,7 @@ MODULES = [
     ("fig17", "benchmarks.fig17_skewness"),
     ("fig18", "benchmarks.fig18_admission"),
     ("fig19tails", "benchmarks.fig19_latency_tails"),
+    ("fig20leafdirect", "benchmarks.fig20_leaf_direct"),
     ("micro", "benchmarks.index_microbench"),
     ("roofline", "benchmarks.lm_roofline"),
 ]

@@ -206,20 +206,26 @@ class ComputeCache:
 
     # -- admission (§5.4) ------------------------------------------------------
 
-    def admit(self, node: int, *, dirty: bool = False) -> bool:
+    def admit(self, node: int, *, dirty: bool = False,
+              ignore_parent: bool = False) -> bool:
         """Try to admit a freshly fetched node.  Returns True if cached.
 
         Applies (1) path-aware admission — parent must already be cached
         (root has no parent, always admissible); (2) lazy admission for
         leaves with probability P_A; (3) free-page provisioning through the
         cooling map.
+
+        ``ignore_parent`` waives check (1) for leaves reached through the
+        leaf-direct route table (core/sim.py): the table entry stands in
+        for the cached ancestor path, matching the mesh fleet cache's
+        dice-only leaf admission (core/fleet_cache.py ``leaf_admit``).
         """
         if node in self:
             if dirty:
                 self.dirty.add(node)
             return True
         parent = self.parent_of(node)
-        if parent >= 0 and parent not in self:
+        if not ignore_parent and parent >= 0 and parent not in self:
             self.stats.rejected_admissions += 1
             return False
         if self.is_leaf(node):

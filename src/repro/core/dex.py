@@ -77,6 +77,8 @@ STAT_FETCH_GROUPS = _stat_consts["STAT_FETCH_GROUPS"]
 STAT_PIPE_STALLS = _stat_consts["STAT_PIPE_STALLS"]
 STAT_PEER_HITS = _stat_consts["STAT_PEER_HITS"]
 STAT_PEER_MISSES = _stat_consts["STAT_PEER_MISSES"]
+STAT_RT_SKIPS = _stat_consts["STAT_RT_SKIPS"]
+STAT_RT_MISPREDICTS = _stat_consts["STAT_RT_MISPREDICTS"]
 N_STATS = _metric_registry.N_STATS
 del _stat_consts
 
@@ -98,6 +100,11 @@ class DexMeshConfig:
     policy: str = "auto"                      # fetch | offload | auto
     offload_c: float = 1.3                    # cost coefficient (§6.1)
     ema_decay: float = 0.98
+    # leaf-direct route table capacity (DESIGN.md §13).  0 statically prunes
+    # the predictor from the engine program — the compiled descent is the
+    # verbatim pre-route-table one.  >0 reserves that many fence-verified
+    # (key-range -> leaf) entries, trained host-side by core/route_table.py
+    route_table_slots: int = 0
 
     @property
     def n_devices(self) -> int:
@@ -146,6 +153,18 @@ class DexState(NamedTuple):
     #                        realized fetch bytes (per device, summed
     #                        host-side).  obs/latency.audit_report turns
     #                        the pair into a mispricing report
+    # leaf-direct route table (DESIGN.md §13): R = max(route_table_slots, 1)
+    # fence-verified entries, replicated like ``boundaries``.  Entry i says
+    # "keys in [rt_keys[i], rt_hi[i]) lived in leaf (rt_sub[i], rt_local[i])
+    # when versions[gid] was rt_ver[i]" — the engine accepts the guess only
+    # while both the bounds and that version still hold, so a stale or
+    # poisoned table degrades to full descent, never to wrong answers.
+    # rt_ver == -1 marks an inactive slot (rt_keys KEY_MAX sorts it last).
+    rt_keys: jax.Array     # [R] int64 sorted fence-low keys
+    rt_hi: jax.Array       # [R] int64 exclusive fence-high keys
+    rt_sub: jax.Array      # [R] int32 predicted subtree
+    rt_local: jax.Array    # [R] int32 predicted leaf local id
+    rt_ver: jax.Array      # [R] int32 leaf version at training time
 
 
 def init_state(
@@ -177,6 +196,11 @@ def init_state(
         lat_audit=jnp.zeros(
             (cfg.n_devices, 2, cfg.n_memory, levels), jnp.float32
         ),
+        rt_keys=jnp.full((max(cfg.route_table_slots, 1),), KEY_MAX, jnp.int64),
+        rt_hi=jnp.full((max(cfg.route_table_slots, 1),), KEY_MAX, jnp.int64),
+        rt_sub=jnp.zeros((max(cfg.route_table_slots, 1),), jnp.int32),
+        rt_local=jnp.zeros((max(cfg.route_table_slots, 1),), jnp.int32),
+        rt_ver=jnp.full((max(cfg.route_table_slots, 1),), -1, jnp.int32),
     )
 
 
@@ -211,6 +235,11 @@ def state_shardings(mesh, cfg: DexMeshConfig):
         n_alloc=ns(P(cfg.memory_axis)),
         lat_hist=ns(dev),
         lat_audit=ns(dev),
+        rt_keys=ns(P()),
+        rt_hi=ns(P()),
+        rt_sub=ns(P()),
+        rt_local=ns(P()),
+        rt_ver=ns(P()),
     )
 
 

@@ -130,6 +130,8 @@ from repro.core.dex import (
     STAT_PEER_HITS,
     STAT_PEER_MISSES,
     STAT_PIPE_STALLS,
+    STAT_RT_MISPREDICTS,
+    STAT_RT_SKIPS,
     STAT_SPLITS,
     STAT_WRITES,
     DexMeshConfig,
@@ -378,6 +380,10 @@ def make_dex_engine(
         has_lookup and do_descent and do_leaf
         and fleet_cache.peeks_enabled(cache_policy)
     )
+    # leaf-direct route table (DESIGN.md §13): statically pruned when the
+    # config reserves no slots, so the default program is the verbatim
+    # descent-only one (bit-identical outputs AND collective counts)
+    use_rt = cfg.route_table_slots > 0 and do_descent
     do_fused = has_writes or may_offload or may_peek
     levels = meta.levels_in_subtree
     hops = scan_hops(meta, max_count) if has_scan else 0
@@ -405,7 +411,8 @@ def make_dex_engine(
         carry_keys += ["sck", "scv", "taken", "hgid", "hver"]
 
     def _run_front(pool, cache, boundaries, miss_ema, stats, demand,
-                   versions, succ, opcodes, keys, values, *, stamp):
+                   versions, succ, rtk, rth, rts, rtl, rtv,
+                   opcodes, keys, values, *, stamp):
         """Front half: route round, top walk + per-group offload decision,
         version-checked cached descent and scan hops.  ``stamp=True``
         (pipeline mode) records the version of every leaf (and scan hop)
@@ -486,6 +493,29 @@ def make_dex_engine(
         n_off_groups = jnp.sum(want_off_c & grp_live).astype(jnp.int64)
         n_fetch_groups = jnp.sum(~want_off_c & grp_live).astype(jnp.int64)
 
+        # --- leaf-direct route-table probe (DESIGN.md §13) -----------------
+        # one searchsorted over the replicated trained table maps the key
+        # straight to a predicted leaf; the fence-key bounds + version fence
+        # accept or reject the guess BEFORE any descent level runs.  An
+        # accepted lane skips every inner-level fetch round and probes the
+        # predicted leaf directly (under the same version-checked cache
+        # machinery); a rejected lane falls back to the full cached descent
+        # — so a stale, partial or poisoned table costs mispredict counts,
+        # never answers.  Scans keep their full descent (their window
+        # machinery consumes the descent's leaf row anyway).
+        acc = jnp.zeros(q.shape, bool)
+        n_rt_skips = jnp.int64(0)
+        n_rt_mis = jnp.int64(0)
+        if use_rt:
+            ridx, p_sub, p_loc = routing.rt_predict(rtk, rts, rtl, q)
+            elig = live & ~is_scan & ~offl
+            rt_guess, acc, _pred_gid = fleet_cache.rt_accept(
+                meta, rtk, rth, rts, rtl, rtv, vers, ridx, subtree, q, elig,
+            )
+            n_rt_mis = jnp.sum(rt_guess & ~acc).astype(jnp.int64)
+            # an accepted lane skips all inner levels within the subtree
+            n_rt_skips = jnp.sum(acc).astype(jnp.int64) * (levels - 1)
+
         # --- per-lane cost ledger + offload cost-model audit ----------------
         # (obs/latency.py, DESIGN.md §12).  ``cost`` accumulates the modeled
         # seconds each lane spends — priced by the same constants the
@@ -541,6 +571,9 @@ def make_dex_engine(
                 leaf_lvl = lvl == levels - 1
                 peek_elig = peek_budget = None
                 if leaf_lvl:
+                    if use_rt:
+                        # accepted lanes land directly on the predicted leaf
+                        local = jnp.where(acc, p_loc, local)
                     want = fetchable & (
                         (opc == OP_LOOKUP) | (opc == OP_UPDATE) | is_scan
                     )
@@ -561,7 +594,8 @@ def make_dex_engine(
                             cache_policy, dev
                         )
                 else:
-                    want = fetchable
+                    # route-table-accepted lanes skip the inner fetch rounds
+                    want = fetchable & ~acc if use_rt else fetchable
                     p_ok = jnp.ones(q.shape, bool)
                 gid = meta.node_gid(subtree, local)
                 with jax.named_scope(f"dex/descent/l{lvl}"):
@@ -615,6 +649,10 @@ def make_dex_engine(
                     found_leaf = jnp.any(eq, axis=-1) & want
                     vals_leaf = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
                     rows_k_leaf, rows_v_leaf = rows_k, rows_v
+        if use_rt and not do_leaf:
+            # insert-only engines stop above the leaf; accepted lanes still
+            # land their MSG_INSERT on the predicted leaf
+            local = jnp.where(acc, p_loc, local)
         leaf_gid = meta.node_gid(subtree, local)
 
         # --- 4. scan lanes: successor-chain sibling hops -------------------
@@ -721,6 +759,9 @@ def make_dex_engine(
             first = (dev == 0).astype(jnp.int64)
             f_upd = f_upd.at[0, STAT_OFFLOAD_GROUPS].set(first * n_off_groups)
             f_upd = f_upd.at[0, STAT_FETCH_GROUPS].set(first * n_fetch_groups)
+        if use_rt:
+            f_upd = f_upd.at[0, STAT_RT_SKIPS].set(n_rt_skips)
+            f_upd = f_upd.at[0, STAT_RT_MISPREDICTS].set(n_rt_mis)
 
         carry = {
             "q": q, "val": val, "opc": opc, "pr": pr, "subtree": subtree,
@@ -1214,11 +1255,12 @@ def make_dex_engine(
                 h_upd, lane_out)
 
     def local_fn(pool, occupancy, cache, boundaries, miss_ema, stats, demand,
-                 versions, succ, lat_hist, lat_audit, opcodes, keys, values):
+                 versions, succ, lat_hist, lat_audit, rtk, rth, rts, rtl,
+                 rtv, opcodes, keys, values):
         b = keys.shape[0]
         carry, new_cache, new_ema, new_demand, f_upd, a_upd = _run_front(
             pool, cache, boundaries, miss_ema, stats, demand, versions, succ,
-            opcodes, keys, values, stamp=False,
+            rtk, rth, rts, rtl, rtv, opcodes, keys, values, stamp=False,
         )
         (new_pk, new_pv, new_occ, new_versions, new_cache, b_upd, h_upd,
          lane_out) = _run_back(
@@ -1234,8 +1276,8 @@ def make_dex_engine(
         return tuple(outs)
 
     def local_pipe(pool, occupancy, cache, boundaries, miss_ema, stats,
-                   demand, versions, succ, lat_hist, lat_audit, carry_in,
-                   opcodes, keys, values):
+                   demand, versions, succ, lat_hist, lat_audit, rtk, rth,
+                   rts, rtl, rtv, carry_in, opcodes, keys, values):
         # one pipeline step: the NEW batch's front half next to the CARRIED
         # batch's back half.  The back half probes the cache as returned by
         # this step's front (an elementwise composition — the two halves
@@ -1245,7 +1287,8 @@ def make_dex_engine(
         with jax.named_scope("pipe/front"), routing.trace_phase("pipe/front"):
             carry_out, cache_f, new_ema, new_demand, f_upd, a_upd = _run_front(
                 pool, cache, boundaries, miss_ema, stats, demand, versions,
-                succ, opcodes, keys, values, stamp=True,
+                succ, rtk, rth, rts, rtl, rtv, opcodes, keys, values,
+                stamp=True,
             )
         carried = dict(zip(carry_keys, carry_in))
         with jax.named_scope("pipe/back"), routing.trace_phase("pipe/back"):
@@ -1302,6 +1345,7 @@ def make_dex_engine(
             mesh=mesh,
             in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
                       dev_spec, dev_spec, dev_spec, dev_spec, dev_spec,
+                      P(), P(), P(), P(), P(),
                       lanes, lanes, lanes),
             out_specs=tuple(
                 ([mem, mem, mem, dev_spec] if has_writes else [])
@@ -1335,7 +1379,8 @@ def make_dex_engine(
                 state.pool, state.occupancy, state.cache, state.boundaries,
                 state.miss_ema, state.stats, state.route_demand,
                 state.versions, state.succ, state.lat_hist, state.lat_audit,
-                opcodes, keys, values.astype(jnp.int64),
+                state.rt_keys, state.rt_hi, state.rt_sub, state.rt_local,
+                state.rt_ver, opcodes, keys, values.astype(jnp.int64),
             )
             res = list(res)
             new_state = state
@@ -1377,6 +1422,7 @@ def make_dex_engine(
         mesh=mesh,
         in_specs=(pool_specs, mem, cache_specs, P(), dev_spec, dev_spec,
                   dev_spec, dev_spec, dev_spec, dev_spec, dev_spec,
+                  P(), P(), P(), P(), P(),
                   carry_specs, lanes, lanes, lanes),
         out_specs=tuple(
             ([mem, mem, mem, dev_spec] if has_writes else [])
@@ -1451,8 +1497,9 @@ def make_dex_engine(
         res = sharded_pipe(
             state.pool, state.occupancy, state.cache, state.boundaries,
             state.miss_ema, state.stats, state.route_demand, state.versions,
-            state.succ, state.lat_hist, state.lat_audit, tuple(carry),
-            opcodes, keys, values.astype(jnp.int64),
+            state.succ, state.lat_hist, state.lat_audit, state.rt_keys,
+            state.rt_hi, state.rt_sub, state.rt_local, state.rt_ver,
+            tuple(carry), opcodes, keys, values.astype(jnp.int64),
         )
         res = list(res)
         new_state = state

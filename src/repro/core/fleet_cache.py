@@ -342,6 +342,57 @@ def cached_fetch_level(
     return rows_k, rows_c, rows_v, hit, miss, shed, n_msgs, new_cache, peeked
 
 
+def rt_accept(
+    meta: PoolMeta,
+    rt_keys: jax.Array,
+    rt_hi: jax.Array,
+    rt_sub: jax.Array,
+    rt_local: jax.Array,
+    rt_ver: jax.Array,
+    versions: jax.Array,
+    idx: jax.Array,
+    subtree: jax.Array,
+    keys: jax.Array,
+    eligible: jax.Array,
+):
+    """Fence-verified acceptance of a leaf-direct route-table guess
+    (DESIGN.md §13).  A guess is *produced* for an eligible lane whose
+    segment slot is active (``rt_ver >= 0``); it is *accepted* only when
+
+      1. the key lies inside the entry's trained fence range
+         ``[rt_keys, rt_hi)``,
+      2. the predicted subtree matches the replicated top-tree walk (a
+         belt-and-braces structural check — free, since the walk already
+         ran), and
+      3. the leaf's current version still equals the train-time stamp:
+         any insert, update, split or repartition move bumps the version
+         (``invalidate_nodes`` / the engine's write round), so an unchanged
+         version proves the leaf's fence range — and therefore the guess —
+         is still exactly what a full descent would resolve.
+
+    Returns ``(guess, accept, pred_gid)``; rejected guesses
+    (``guess & ~accept``) are the ``rt_mispredicts`` counter and fall back
+    to the normal cached descent, so prediction quality is a performance
+    knob, never a correctness one."""
+    lo = rt_keys[idx]
+    hi = rt_hi[idx]
+    tver = rt_ver[idx]
+    sub = rt_sub[idx].astype(jnp.int32)
+    loc = rt_local[idx].astype(jnp.int32)
+    pred_gid = meta.node_gid(sub, loc)
+    n_nodes = versions.shape[0]
+    gsafe = jnp.clip(pred_gid, 0, n_nodes - 1)
+    guess = eligible & (tver >= 0)
+    accept = (
+        guess
+        & (keys >= lo)
+        & (keys < hi)
+        & (sub == subtree)
+        & (versions[gsafe] == tver)
+    )
+    return guess, accept, pred_gid
+
+
 def peer_answer(cache: DexCache, cfg, versions: jax.Array, gid: jax.Array,
                 key: jax.Array, want: jax.Array):
     """Owner-side half of a ``MSG_PEEK``: probe *this* chip's cache for the

@@ -278,6 +278,122 @@ def initial_succ(meta: PoolMeta) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Prefix-compressed separators (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Suffixes keep at most 30 low bits so they fit a non-negative int32 lane
+# with room for an unambiguous padding sentinel above every real value.
+SEP_MAX_NBITS = 30
+SEP_SUFFIX_SENTINEL = np.int32(0x7FFFFFFF)
+
+
+class SepPlanes(NamedTuple):
+    """Prefix-compressed separator planes for the pool's node rows.
+
+    Within one node the separators share their high bits (a row spans a
+    narrow key range), so each row stores one 8-byte common ``prefix`` (low
+    ``nbits`` zeroed), the retained low-bit count ``nbits``, and FANOUT
+    4-byte truncated suffixes — 8 + 4 + 4*FANOUT bytes against the
+    canonical 8*FANOUT, i.e. roughly twice the separators per byte of
+    fetched row.  ``nbits = -1`` marks an incompressible row (its span
+    needs more than SEP_MAX_NBITS low bits — e.g. a block root over a
+    sparse keyspace); searches fall back to the full key row there
+    (kernels/node_search.py ``node_search_prefix``).  Padding suffix slots
+    hold SEP_SUFFIX_SENTINEL, which is greater than any real (< 2**30)
+    suffix, so a row's real separator count is recoverable from the plane
+    alone."""
+
+    prefix: jax.Array   # [S, C] int64 shared high bits (low nbits zeroed)
+    nbits: jax.Array    # [S, C] int32 retained low bits; -1 = incompressible
+    suffix: jax.Array   # [S, C, FANOUT] int32 truncated separators
+
+
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Per-element ``int.bit_length`` of int64 bit patterns read as
+    unsigned (a span crossing the sign bit must count all 64 bits)."""
+    bl = np.frompyfunc(lambda v: int(v).bit_length(), 1, 1)
+    return bl(x.astype(np.uint64).astype(object)).astype(np.int32)
+
+
+def compress_rows(keys: np.ndarray):
+    """Compress [N, FANOUT] separator rows (KEY_MAX padding) into
+    ``(prefix [N], nbits [N], suffix [N, FANOUT])`` numpy planes.
+
+    A row's retained-bit count is the bit length of ``min ^ max`` over its
+    real keys: every key in between shares the bits above that, so the
+    query-side comparison reduces to one prefix compare plus an int32
+    suffix compare (``node_search_prefix_ref`` spells out the contract).
+    Empty rows compress trivially (all-sentinel suffixes, count 0)."""
+    keys = np.asarray(keys, np.int64)
+    n, f = keys.shape
+    real = keys != KEY_MAX
+    any_real = real.any(axis=1)
+    lo = np.where(any_real, np.min(np.where(real, keys, KEY_MAX), axis=1), 0)
+    hi = np.where(any_real, np.max(np.where(real, keys, KEY_MIN), axis=1), 0)
+    # xor of the row extremes: the keys differ only below its bit length
+    nbits = _bit_length(lo ^ hi)
+    good = any_real & (nbits <= SEP_MAX_NBITS)
+    nbits = np.where(any_real, np.where(good, nbits, -1), 0).astype(np.int32)
+    mask = np.where(good, (np.int64(1) << np.maximum(nbits, 0)) - 1, 0)
+    prefix = np.where(good, lo & ~mask, 0)
+    suffix = np.where(
+        real & good[:, None],
+        (keys & mask[:, None]).astype(np.int64),
+        np.int64(SEP_SUFFIX_SENTINEL),
+    ).astype(np.int32)
+    return prefix, nbits, suffix
+
+
+def compress_separators(pool: SubtreePool, meta: PoolMeta) -> SepPlanes:
+    """Build the compressed separator planes for every pool row at load
+    (host-side; core/smo.py ``refresh_sep_planes`` keeps them correct
+    across on-mesh splits without a full rebuild)."""
+    pk = np.asarray(pool.pool_keys)
+    s, c, f = pk.shape
+    prefix, nbits, suffix = compress_rows(pk.reshape(s * c, f))
+    return SepPlanes(
+        prefix=jnp.asarray(prefix.reshape(s, c)),
+        nbits=jnp.asarray(nbits.reshape(s, c)),
+        suffix=jnp.asarray(suffix.reshape(s, c, f)),
+    )
+
+
+def sep_compression_stats(sep: SepPlanes, meta: PoolMeta) -> dict:
+    """Byte/fanout accounting for the compressed layout (fig16/fig20).
+
+    ``effective_fanout`` is how many separators a canonical row's byte
+    budget (8*FANOUT) holds under the compressed layout's per-row cost
+    (8 + 4 + 4*FANOUT amortized per separator), i.e. the fanout a fetch of
+    the same size could route over; ``modeled_depth`` is the within-subtree
+    descent depth that fanout would need for the same leaf population."""
+    nbits = np.asarray(sep.nbits).reshape(-1)
+    suffix = np.asarray(sep.suffix)
+    counts = (suffix != SEP_SUFFIX_SENTINEL).sum(axis=-1).reshape(-1)
+    occupied = counts > 0
+    n_rows = int(occupied.sum())
+    compressible = int((occupied & (nbits >= 0)).sum())
+    f = suffix.shape[-1]
+    canon_bytes = 8 * f
+    comp_bytes = 8 + 4 + 4 * f
+    eff_fanout = f * canon_bytes / comp_bytes
+    leaves = max(meta.leaves_per_subtree, 1)
+    modeled_depth = int(np.ceil(np.log(max(leaves, 2)) / np.log(eff_fanout)))
+    return {
+        "rows": n_rows,
+        "compressible_rows": compressible,
+        "compressible_frac": compressible / max(n_rows, 1),
+        "mean_nbits": float(nbits[occupied & (nbits >= 0)].mean())
+        if compressible
+        else 0.0,
+        "canonical_row_bytes": canon_bytes,
+        "compressed_row_bytes": comp_bytes,
+        "effective_fanout": eff_fanout,
+        "modeled_subtree_depth": modeled_depth,
+        "baseline_subtree_depth": meta.level_m,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Pure-jnp traversal pieces (shared by Plane B and by kernel oracles)
 # ---------------------------------------------------------------------------
 

@@ -83,7 +83,9 @@ class RepartitionReport:
 def node_key_ranges(
     pool_keys: np.ndarray, meta: PoolMeta,
     pool_children: "np.ndarray | None" = None,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    *,
+    with_levels: bool = False,
+):
     """Per-node fence ranges ``(gids, lo, hi)`` for every real pool node.
 
     Each node's range runs from its first key to the next node's first key
@@ -95,6 +97,9 @@ def node_key_ranges(
     a node's level is no longer a function of its slot.  Pass
     ``pool_children`` whenever the pool may have seen on-mesh splits; when
     omitted, the dense bulk layout is assumed (bulk-built pools only).
+    With ``with_levels=True`` a fourth array of per-node tree levels (0 =
+    leaf) is returned — the leaf-direct route-table trainer
+    (core/route_table.py) uses it to keep only leaf fence ranges.
     """
     pk0 = np.asarray(pool_keys[:, :, 0])              # [S, C] first keys
     n_sub, cap = pk0.shape
@@ -125,6 +130,7 @@ def node_key_ranges(
     all_gids: List[np.ndarray] = []
     all_lo: List[np.ndarray] = []
     all_hi: List[np.ndarray] = []
+    all_lvl: List[np.ndarray] = []
     for lvl in range(meta.level_m, -1, -1):
         real = (lvl_of == lvl) & (pk0 != KEY_MAX)
         lo_r = pk0[real]
@@ -143,11 +149,15 @@ def node_key_ranges(
         all_gids.append(gid_r)
         all_lo.append(lo_r)
         all_hi.append(hi_r)
-    return (
+        all_lvl.append(np.full(gid_r.shape, lvl, np.int32))
+    out = (
         np.concatenate(all_gids),
         np.concatenate(all_lo),
         np.concatenate(all_hi),
     )
+    if with_levels:
+        return out + (np.concatenate(all_lvl),)
+    return out
 
 
 def moved_intervals(
@@ -348,6 +358,15 @@ class RepartitionController:
             new_state, n_inval, sh_before, sh_after = install_boundaries(
                 state, meta, self.parts, new_parts
             )
+            # a boundary install bumps versions for every moved node, which
+            # already fences off the leaf-direct route table's stale entries
+            # (correctness); retraining here restores the *performance* of
+            # the fast path under the new ownership without a separate
+            # controller (DESIGN.md §13)
+            from repro.core import route_table as _route_table
+
+            if _route_table.route_table_active(new_state):
+                new_state = _route_table.train_route_table(new_state, meta)
             if _ph is not None and hasattr(_ph, "fence"):
                 _ph.fence(new_state.boundaries)
         report = RepartitionReport(

@@ -56,6 +56,25 @@ def leaf_admit_dice(gid: jax.Array, pct, salt=None) -> jax.Array:
     return luck < pct
 
 
+def rt_predict(rt_keys: jax.Array, rt_sub: jax.Array, rt_local: jax.Array,
+               keys: jax.Array):
+    """Leaf-direct route-table segment lookup (DESIGN.md §13).
+
+    ``rt_keys`` is the sorted fence-low plane of the trained table — a
+    piecewise-linear index over the observed key hull whose segment lookup
+    is one ``searchsorted`` against replicated arrays (compute-side; no
+    collective, no remote read).  Returns ``(idx, pred_subtree,
+    pred_local)`` — the *guess*; the engine only acts on it after
+    :func:`repro.core.fleet_cache.rt_accept` verifies the fence-key bounds
+    and the leaf version fence, so a wrong guess costs one rejected
+    prediction, never a wrong answer."""
+    r = rt_keys.shape[0]
+    idx = jnp.clip(
+        jnp.searchsorted(rt_keys, keys, side="right") - 1, 0, r - 1
+    ).astype(jnp.int32)
+    return idx, rt_sub[idx].astype(jnp.int32), rt_local[idx].astype(jnp.int32)
+
+
 def route_capacity(b: int, n_dest: int, factor: float) -> int:
     """Per-destination bucket capacity for a batch of ``b`` requests."""
     return int(np.ceil(b / n_dest * factor))

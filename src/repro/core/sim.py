@@ -400,6 +400,13 @@ class Counters:
     #                               (stale/absent row; resolved by the
     #                               owning server's walk —
     #                               STAT_PEER_MISSES analogue)
+    rt_skips: int = 0             # within-subtree inner reads skipped by
+    #                               accepted leaf-direct route-table probes
+    #                               (STAT_RT_SKIPS analogue)
+    rt_mispredicts: int = 0       # route-table guesses rejected by the
+    #                               fence bounds / leaf-freshness check;
+    #                               the op falls back to full descent
+    #                               (STAT_RT_MISPREDICTS analogue)
 
     def add_read(self, nbytes: int = NODE_BYTES) -> None:
         self.rdma_read += 1
@@ -510,6 +517,22 @@ class SimConfig:
                                             # 0 disables the peek path
     centralized_fifo: bool = False          # single-bucket cooling map baseline
     cooling_slots: int = 6
+    route_table_slots: int = 0              # leaf-direct route table
+                                            # (core/route_table.py mirror):
+                                            # > 0 enables a host-trained
+                                            # (lo, hi, leaf) fence-segment
+                                            # table; an accepted non-scan op
+                                            # probes the predicted leaf
+                                            # directly, skipping the within-
+                                            # subtree inner levels (counted
+                                            # in Counters.rt_skips).  Any
+                                            # write/split since the last
+                                            # train marks the leaf dirty —
+                                            # the mesh's leaf version fence —
+                                            # so the entry rejects and the op
+                                            # pays full descent
+                                            # (Counters.rt_mispredicts).
+                                            # 0 disables the table entirely.
 
     # --- synchronization style ---
     rdma_optimistic_reads: bool = False     # version+node+version for ALL reads
@@ -698,6 +721,14 @@ class Simulator:
         self._gdecision = np.ones((cfg.n_mem_servers,), dtype=bool)
         self._group_active = False
         self._group_obs_off = False
+        # leaf-direct route table (route_table_slots > 0), trained host-side
+        # by ``train_route_table``: fence segments sorted by low key, plus
+        # the set of leaves touched since the last train — the sim's
+        # stand-in for the mesh plane's per-leaf version fence
+        self._rt_lo = np.zeros((0,), dtype=np.int64)
+        self._rt_hi = np.zeros((0,), dtype=np.int64)
+        self._rt_leaf = np.zeros((0,), dtype=np.int64)
+        self._rt_dirty: set = set()
 
     # -- helpers ---------------------------------------------------------------
 
@@ -863,6 +894,95 @@ class Simulator:
         # (they run memory-side); the per-op latency sample still pays them
         self._op_extra += cfg.t_rpc_base + service
         self._op_offl = True
+
+    # -- leaf-direct route table (core/route_table.py mirror) --------------------
+
+    def _live_leaves(self) -> List[int]:
+        """Leaves reachable from the root (delete's lazy merges can orphan
+        array rows, so a plain LV == 0 scan over-collects)."""
+        out: List[int] = []
+        stack = [self.tree.root]
+        while stack:
+            nid = stack.pop()
+            if int(self.tree.LV[nid]) == 0:
+                out.append(nid)
+            else:
+                for i in range(int(self.tree.NK[nid])):
+                    stack.append(int(self.tree.C[nid, i]))
+        return out
+
+    def train_route_table(self, slots: Optional[int] = None) -> int:
+        """(Re)train the leaf-direct table from the host tree's live leaves,
+        exactly as ``core/route_table.py`` trains from the mesh pool: fence
+        segments sorted by low key; when leaves outnumber the slots, the
+        leaves of the demand-hottest partitions are kept first (a
+        partition's demand is the op count its caches have served — the
+        ``DexState.route_demand`` analogue).  Returns the entry count."""
+        r = int(self.cfg.route_table_slots if slots is None else slots)
+        self._rt_lo = np.zeros((0,), dtype=np.int64)
+        self._rt_hi = np.zeros((0,), dtype=np.int64)
+        self._rt_leaf = np.zeros((0,), dtype=np.int64)
+        self._rt_dirty = set()
+        if r <= 0:
+            return 0
+        leaves = self._live_leaves()
+        lo = np.array([int(self.tree.FLO[n]) for n in leaves], dtype=np.int64)
+        order = np.argsort(lo, kind="stable")
+        leaves = [leaves[i] for i in order]
+        lo = lo[order]
+        hi = np.array([int(self.tree.FHI[n]) for n in leaves], dtype=np.int64)
+        if len(leaves) > r:
+            d = max(self.cfg.route_dispersion, 1)
+            part = self.partitions.owner_of(lo)
+            demand = np.array(
+                [
+                    sum(
+                        self.counters[(int(p) * d + j) % self.cfg.n_compute].ops
+                        for j in range(d)
+                    )
+                    for p in part
+                ],
+                dtype=np.int64,
+            )
+            # hot partitions first; the stable sort keeps key order within a
+            # partition so the kept prefix is a union of hot key ranges
+            keep = np.sort(np.argsort(-demand, kind="stable")[:r])
+            leaves = [leaves[i] for i in keep]
+            lo, hi = lo[keep], hi[keep]
+        self._rt_lo = lo
+        self._rt_hi = hi
+        self._rt_leaf = np.array(leaves, dtype=np.int64)
+        return len(leaves)
+
+    def poison_route_table(self) -> None:
+        """Adversarial-table arm (``route_table.poison_route_table`` mirror):
+        mark every entry's leaf dirty so the fence rejects every guess — the
+        contract under test is bit-identical results to descent-only."""
+        self._rt_dirty.update(int(n) for n in self._rt_leaf)
+
+    def _rt_predict(self, key: int) -> int:
+        """Leaf of the covering, fence-fresh entry for ``key``; -1 when the
+        table rejects (the caller books the mispredict)."""
+        n = self._rt_lo.size
+        if n == 0:
+            return -1
+        i = min(
+            max(int(np.searchsorted(self._rt_lo, key, side="right")) - 1, 0),
+            n - 1,
+        )
+        leaf = int(self._rt_leaf[i])
+        if (
+            int(self._rt_lo[i]) <= key < int(self._rt_hi[i])
+            and leaf not in self._rt_dirty
+        ):
+            return leaf
+        return -1
+
+    def _rt_touch(self, *nids: int) -> None:
+        """Mark leaves written/split since the last train — the version bump
+        the mesh's write path applies, which fences out their entries."""
+        if self.cfg.route_table_slots > 0:
+            self._rt_dirty.update(int(n) for n in nids)
 
     # -- operations --------------------------------------------------------------
 
@@ -1043,7 +1163,8 @@ class Simulator:
     # (node, was_cached) and whether the op was completed via offload.
     def _traverse(self, server: int, key: int, *, for_write: bool,
                   is_insert: bool = False,
-                  peek_ok: bool = True) -> Tuple[List[Tuple[int, bool]], bool]:
+                  peek_ok: bool = True,
+                  rt_ok: bool = True) -> Tuple[List[Tuple[int, bool]], bool]:
         cfg = self.cfg
         cache = self.caches[server]
         c = self.counters[server]
@@ -1051,6 +1172,13 @@ class Simulator:
         height = len(path)
         visited: List[Tuple[int, bool]] = []
         group_tried = False
+        # leaf-direct route table: predict once per op (scans are never
+        # eligible, matching the mesh engine's eligibility mask); counters
+        # are booked at the subtree boundary below so group-offloaded ops —
+        # which the mesh excludes from eligibility — book nothing
+        rt_guess = cfg.route_table_slots > 0 and rt_ok and self._rt_lo.size > 0
+        rt_leaf = self._rt_predict(key) if rt_guess else -1
+        rt_counted = False
         for depth, nid in enumerate(path):
             lvl = int(self.tree.LV[nid])
             if (
@@ -1090,6 +1218,18 @@ class Simulator:
                 else:
                     self._offload(server, nid, lvl + 1)
                     return visited, True
+            if rt_guess and lvl <= cfg.level_m and not rt_counted:
+                # subtree boundary: the op survived the offload decision, so
+                # it is rt-eligible — book the accept/reject outcome once
+                rt_counted = True
+                if rt_leaf < 0:
+                    c.rt_mispredicts += 1
+            if rt_leaf >= 0 and 1 <= lvl <= cfg.level_m:
+                # accepted leaf-direct probe: the within-subtree inner
+                # levels are never fetched — the lane lands straight on the
+                # (fence-verified) leaf, which is processed normally below
+                c.rt_skips += 1
+                continue
             if cfg.caching and self._cacheable(nid):
                 r = cache.lookup(nid)
                 if r == "hit":
@@ -1122,7 +1262,7 @@ class Simulator:
                 c.local_accesses += 1
                 self.op_clock[server] += cfg.t_cached_access
                 if cfg.caching and self._cacheable(nid):
-                    cache.admit(nid)
+                    cache.admit(nid, ignore_parent=(rt_leaf >= 0 and lvl == 0))
                 # a window-coalesced read is still a cache-probe miss on the
                 # mesh (duplicate lanes of one batch all miss, then share
                 # one coalesced message) — the EMA counts the probe, and the
@@ -1191,7 +1331,10 @@ class Simulator:
             if cfg.coherence_batch > 1:
                 self._window_fetched[server].add(nid)
             if self._cacheable(nid):
-                cache.admit(nid)
+                # a leaf reached through an accepted route-table probe has no
+                # cached ancestors to swizzle under — the table entry IS the
+                # path, so admission falls back to the dice alone
+                cache.admit(nid, ignore_parent=(rt_leaf >= 0 and lvl == 0))
             self._gobs(nid, False)
             visited.append((nid, False))
         return visited, False
@@ -1213,10 +1356,12 @@ class Simulator:
             # memory-side update; invalidate any cached copies (rare: path-
             # aware caching means the subpath is usually uncached, §6.2)
             leaf = self.tree.search_path(key)[-1]
+            self._rt_touch(leaf)
             if cache.invalidate(leaf):
                 c.coherence_invalidations += 1
             return ok
         leaf, was_cached = visited[-1]
+        self._rt_touch(leaf)
         shared = self._is_shared(leaf)
         if cfg.logical_partitioning and not shared:
             if cfg.write_through:
@@ -1258,6 +1403,7 @@ class Simulator:
             _, split_nodes = self.tree.insert(key, key)
             c.add_rpc()
             leaf = self.tree.search_path(key)[-1]
+            self._rt_touch(leaf, *split_nodes)
             ms = int(self.tree.server[leaf])
             service = (len(split_nodes) + 1) * self.cfg.t_mem_search
             self.mem_busy[ms] += service
@@ -1268,6 +1414,8 @@ class Simulator:
                 self._write_coherence(server, snode, drop_self=True)
             return
         _, split_nodes = self.tree.insert(key, key)
+        if cfg.route_table_slots > 0:
+            self._rt_touch(self.tree.search_path(key)[-1], *split_nodes)
         if offloaded:
             leaf = self.tree.search_path(key)[-1]
             if cache.invalidate(leaf):
@@ -1338,7 +1486,7 @@ class Simulator:
             self.cfg.offloading = False
             self._group_obs_off = True
             self._traverse(server, int(self.tree.K[leaf, 0]) if not first else key,
-                           for_write=False, peek_ok=False)
+                           for_write=False, peek_ok=False, rt_ok=False)
             self._group_obs_off = False
             self.cfg.offloading = save
             first = False
@@ -1365,6 +1513,8 @@ class Simulator:
             out.pipeline_stalls += c.pipeline_stalls
             out.peer_hits += c.peer_hits
             out.peer_misses += c.peer_misses
+            out.rt_skips += c.rt_skips
+            out.rt_mispredicts += c.rt_mispredicts
         return out
 
     def cache_stats(self):
@@ -1382,6 +1532,14 @@ class Simulator:
         # moved ranges must re-warm: invalidate everything for simplicity
         for cache in self.caches:
             cache.drop_all()
+        # the route table follows the caches: a boundary install bumps the
+        # moved leaves' versions on the mesh, so conservatively drop every
+        # entry here (the mesh controller retrains right after an install;
+        # callers mirror that with train_route_table())
+        self._rt_lo = self._rt_lo[:0]
+        self._rt_hi = self._rt_hi[:0]
+        self._rt_leaf = self._rt_leaf[:0]
+        self._rt_dirty = set()
         flush_time = flushed * (NODE_BYTES / 12.5e9 + 2e-6)  # 100Gbps + per-op
         return {
             "dirty_pages_flushed": float(flushed),

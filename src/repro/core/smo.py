@@ -62,7 +62,13 @@ from repro.core.dex import (
     DexState,
 )
 from repro.core.nodes import FANOUT, KEY_MAX, NULL
-from repro.core.pool import PoolMeta, SubtreePool, top_walk
+from repro.core.pool import (
+    PoolMeta,
+    SepPlanes,
+    SubtreePool,
+    compress_rows,
+    top_walk,
+)
 from repro.core.write import (
     STATUS_MISS,
     STATUS_OK,
@@ -675,3 +681,50 @@ def settle_splits(
         "rounds": rounds,
         "drained": drained,
     }
+
+
+# ---------------------------------------------------------------------------
+# compressed-separator maintenance (core/pool.py SepPlanes)
+# ---------------------------------------------------------------------------
+
+
+def refresh_sep_planes(
+    sep: SepPlanes,
+    state: DexState,
+    meta: PoolMeta,
+    old_versions,
+) -> SepPlanes:
+    """Incrementally re-compress the separator planes after on-mesh SMO
+    rounds: every row a split touched (the split node, its new sibling, the
+    ancestors the separator merged into) got a ``DexState.versions`` bump,
+    so the version delta against ``old_versions`` names exactly the rows to
+    recompute from the canonical key plane — no full rebuild.  Rows the
+    rounds never touched come back bit-identical.  After a
+    ``drain_splits`` host rebuild the pool geometry itself changes; rebuild
+    from scratch with :func:`repro.core.pool.compress_separators` instead.
+    """
+    vers = np.asarray(state.versions)
+    old = np.asarray(old_versions)
+    if vers.ndim == 2:
+        vers = vers[0]
+    if old.ndim == 2:
+        old = old[0]
+    changed = np.nonzero(vers != old)[0]
+    if changed.size == 0:
+        return sep
+    cap = meta.subtree_cap
+    s_idx = changed // cap
+    l_idx = changed % cap
+    pk = np.asarray(state.pool.pool_keys)
+    prefix = np.asarray(sep.prefix).copy()
+    nbits = np.asarray(sep.nbits).copy()
+    suffix = np.asarray(sep.suffix).copy()
+    p, nb, sf = compress_rows(pk[s_idx, l_idx])
+    prefix[s_idx, l_idx] = p
+    nbits[s_idx, l_idx] = nb
+    suffix[s_idx, l_idx] = sf
+    return SepPlanes(
+        prefix=jnp.asarray(prefix),
+        nbits=jnp.asarray(nbits),
+        suffix=jnp.asarray(suffix),
+    )

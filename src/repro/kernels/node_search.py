@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.nodes import FANOUT
+from repro.core.pool import SEP_SUFFIX_SENTINEL
 
 BLOCK_B = 256
 
@@ -110,3 +111,104 @@ def node_search(
         vpl[:, 1].astype(jnp.uint32).astype(jnp.int64)
     )
     return slot[:b], found[:b], value[:b]
+
+
+# ---------------------------------------------------------------------------
+# Prefix-compressed separator search (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _prefix_search_kernel(
+    p_hi_ref, p_lo_ref, nbits_ref, suffix_ref,
+    keys_hi_ref, keys_lo_ref, q_hi_ref, q_lo_ref,
+    slot_ref,
+):
+    phi = p_hi_ref[...]               # [B] int32
+    plo = p_lo_ref[...]
+    nb = nbits_ref[...]               # [B] int32
+    suf = suffix_ref[...]             # [B, F] int32
+    qhi = q_hi_ref[...]
+    qlo = q_lo_ref[...]
+    good = nb >= 0
+    nb0 = jnp.maximum(nb, 0)
+    # nbits <= 30 < 32, so the retained-bit mask lives entirely in the lo
+    # plane: the hi plane carries prefix bits only
+    mask = (jnp.int32(1) << nb0) - jnp.int32(1)
+    q_suf = qlo & mask                # [0, 2**30): always non-negative
+    qp_lo = qlo & ~mask
+    flip = jnp.int32(-0x80000000)
+    eq = (phi == qhi) & (plo == qp_lo)
+    lt = (phi < qhi) | ((phi == qhi) & ((plo ^ flip) < (qp_lo ^ flip)))
+    # the pad sentinel exceeds every real (< 2**30) suffix AND every masked
+    # query, so both sums count real separators only
+    nreal = jnp.sum(
+        (suf != SEP_SUFFIX_SENTINEL).astype(jnp.int32), axis=-1
+    )
+    cnt_sfx = jnp.sum((suf <= q_suf[:, None]).astype(jnp.int32), axis=-1)
+    cnt_c = jnp.where(eq, cnt_sfx, jnp.where(lt, nreal, 0))
+    # incompressible rows (nbits = -1) fall back to the canonical key row
+    leq = _leq_planes(
+        keys_hi_ref[...], keys_lo_ref[...], qhi[:, None], qlo[:, None]
+    )
+    cnt_f = jnp.sum(leq.astype(jnp.int32), axis=-1)
+    cnt = jnp.where(good, cnt_c, cnt_f)
+    slot_ref[...] = jnp.maximum(cnt - 1, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def node_search_prefix(
+    prefix: jax.Array,      # [B] int64 per-row shared prefix (low bits 0)
+    nbits: jax.Array,       # [B] int32 retained low bits (-1 incompressible)
+    suffix: jax.Array,      # [B, FANOUT] int32 truncated separators
+    node_keys: jax.Array,   # [B, FANOUT] int64 canonical rows (fallback)
+    queries: jax.Array,     # [B] int64
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+):
+    """Batched lower-bound over prefix-compressed separator rows
+    (core/pool.py ``SepPlanes``; one gathered row triple per query lane).
+
+    Matches ``pool._slot`` bit-for-bit for queries below KEY_MAX (the
+    inactive-lane sentinel): a compressible row reduces the 64-wide int64
+    compare to one 64-bit prefix compare plus a 64-wide *int32* suffix
+    compare — half the separator bytes per row; rows whose span needs more
+    than SEP_MAX_NBITS low bits take the canonical comparison.  Returns
+    ``slot [B] int32``.
+    """
+    b = prefix.shape[0]
+    pad = (-b) % block_b
+    if pad:
+        prefix = jnp.pad(prefix, (0, pad), constant_values=0)
+        nbits = jnp.pad(nbits, (0, pad), constant_values=0)
+        suffix = jnp.pad(
+            suffix, ((0, pad), (0, 0)),
+            constant_values=int(SEP_SUFFIX_SENTINEL),
+        )
+        node_keys = jnp.pad(node_keys, ((0, pad), (0, 0)), constant_values=0)
+        queries = jnp.pad(queries, (0, pad), constant_values=-1)
+    bp = prefix.shape[0]
+
+    phi, plo = _split_i64(prefix)
+    khi, klo = _split_i64(node_keys)
+    qhi, qlo = _split_i64(queries)
+
+    grid = (bp // block_b,)
+    slot = pl.pallas_call(
+        _prefix_search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, FANOUT), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, FANOUT), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, FANOUT), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.int32),
+        interpret=interpret,
+    )(phi, plo, nbits.astype(jnp.int32), suffix, khi, klo, qhi, qlo)
+    return slot[:b]

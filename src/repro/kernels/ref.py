@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.nodes import KEY_MAX
+from repro.core.pool import SEP_SUFFIX_SENTINEL
 from repro.core.pool import subtree_walk_ref  # noqa: F401  (re-export)
 
 
@@ -128,6 +129,31 @@ def node_search_ref(node_keys, queries, node_values):
     found = jnp.any(eq, axis=-1)
     value = jnp.sum(jnp.where(eq, node_values, 0), axis=-1)
     return slot, found, value
+
+
+def node_search_prefix_ref(prefix, nbits, suffix, node_keys, queries):
+    """Oracle for kernels/node_search.py ``node_search_prefix``.
+
+    Pure-int64 restatement of the compressed comparison: a row's keys all
+    share the bits above ``nbits``, so ``key <= q`` collapses to comparing
+    the query's masked prefix against the row prefix, with the int32
+    suffix compare breaking the tie.  Incompressible rows (``nbits = -1``)
+    use the canonical key row.  Agrees with ``pool._slot`` on the full
+    rows for every query below KEY_MAX."""
+    q = queries.astype(jnp.int64)
+    good = nbits >= 0
+    nb = jnp.maximum(nbits, 0).astype(jnp.int64)
+    mask = (jnp.int64(1) << nb) - 1
+    q_suf = (q & mask).astype(jnp.int32)
+    q_pref = q & ~mask
+    nreal = jnp.sum((suffix != SEP_SUFFIX_SENTINEL).astype(jnp.int32), axis=-1)
+    cnt_sfx = jnp.sum((suffix <= q_suf[:, None]).astype(jnp.int32), axis=-1)
+    cnt_c = jnp.where(
+        q_pref == prefix, cnt_sfx, jnp.where(prefix < q_pref, nreal, 0)
+    )
+    cnt_f = jnp.sum((node_keys <= q[:, None]).astype(jnp.int32), axis=-1)
+    cnt = jnp.where(good, cnt_c, cnt_f)
+    return jnp.maximum(cnt - 1, 0).astype(jnp.int32)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):

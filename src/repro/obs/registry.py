@@ -147,6 +147,18 @@ _MESH = (
            provenance="§5.4 cooperative fleet caching (extend-dist, FlexKV)",
            doc="peer peeks the sibling could not serve from cache (stale or "
                "absent row); resolved by the owning column's block walk"),
+    Metric("rt_skips", "events", "counter", slot=14,
+           stat_const="STAT_RT_SKIPS", sim_field="rt_skips",
+           provenance="§1 / Outback compute-side location resolution "
+               "(leaf-direct route table, DESIGN.md §13)",
+           doc="inner-level fetch rounds skipped by lanes whose leaf-direct "
+               "route-table guess the version fence accepted"),
+    Metric("rt_mispredicts", "events", "counter", slot=15,
+           stat_const="STAT_RT_MISPREDICTS", sim_field="rt_mispredicts",
+           provenance="§1 / Outback compute-side location resolution "
+               "(leaf-direct route table, DESIGN.md §13)",
+           doc="route-table guesses rejected by the fence-key bounds or the "
+               "leaf version fence; the lane fell back to full cached descent"),
 )
 
 _SIM_ONLY = (
@@ -183,6 +195,12 @@ _DERIVED = (
     Metric("bytes_per_op", "bytes/op", "derived", provenance="Fig. 9",
            doc="bytes / ops — fabric volume per operation (sim plane)",
            compute=_ratio("bytes", "ops")),
+    Metric("remote_reads_per_op", "reads/op", "derived",
+           provenance="§1 (fewer remote accesses win) / Table 2",
+           doc="fetches / ops — coalesced remote row reads per admitted op; "
+               "paired cross-plane (mesh fetches vs sim rdma_read), gated by "
+               "obs/drift in benchmarks/fig20_leaf_direct.py",
+           compute=_ratio("fetches", "ops")),
 )
 
 

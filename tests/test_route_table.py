@@ -1,0 +1,435 @@
+"""Tests for the leaf-direct route table (core/route_table.py, DESIGN.md
+§13) and the routing primitives it leans on.
+
+Covers four planes:
+
+* ``routing.hash64`` / ``routing.leaf_admit_dice`` — the cache-set hash
+  and admission dice must actually be uniform (the set-conflict model the
+  fig20 benchmark's fetch-pressure argument rests on);
+* ``routing.route_owners`` edge behaviour — boundary-equal keys land in
+  the upper partition on BOTH planes, pinned across ``install_boundaries``
+  rounds (owners only change inside the moved intervals);
+* the trainer itself — full coverage when slots suffice, demand-hottest
+  keep when they don't, and segment predictions that match the leaves'
+  fence ranges;
+* the poisoned-predictor contract — a fully poisoned table is
+  bit-identical to descent-only mode in the synchronous AND pipelined
+  engines (every guess books a mispredict, none is mis-accepted), and the
+  Plane-A simulator mirrors the same contract.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh_compat
+from repro.core import dex as dex_mod
+from repro.core import engine as engine_mod
+from repro.core import pool as pool_mod
+from repro.core import route_table, routing
+from repro.core.nodes import KEY_MAX, KEY_MIN
+from repro.core.partition import LogicalPartitions
+from repro.core.repartition import install_boundaries, moved_intervals
+from repro.core.sim import HostBTree, SimConfig, Simulator
+from repro.data import ycsb
+
+
+# ---------------------------------------------------------------------------
+# hash64 / leaf_admit_dice distribution
+# ---------------------------------------------------------------------------
+
+
+class TestHash64:
+    def test_set_index_distribution_uniform(self):
+        """Sequential gids must spread evenly over cache sets — the
+        conflict-churn model behind the leaf-direct fetch savings assumes
+        no systematic set bias."""
+        n, sets = 1 << 17, 64
+        h = np.asarray(routing.hash64(jnp.arange(n, dtype=jnp.int64)))
+        counts = np.bincount(
+            (h.astype(np.uint64) % sets).astype(np.int64), minlength=sets)
+        mean = n / sets
+        assert counts.min() > 0.85 * mean, counts.min()
+        assert counts.max() < 1.15 * mean, counts.max()
+
+    def test_avalanche(self):
+        """Flipping one input bit flips ~half the output bits (SplitMix64
+        finalizer property) — low/high input bits alike."""
+        x = np.arange(1, 257, dtype=np.int64) * 0x9E3779B9
+        hx = np.asarray(routing.hash64(jnp.asarray(x))).astype(np.uint64)
+        for bit in (0, 7, 21, 40, 62):
+            y = x ^ np.int64(1 << bit)
+            hy = np.asarray(routing.hash64(jnp.asarray(y))).astype(np.uint64)
+            flips = np.unpackbits((hx ^ hy).view(np.uint8)).sum() / x.size
+            assert 24.0 < flips < 40.0, (bit, flips)
+
+    def test_dice_extremes(self):
+        gids = jnp.arange(4096, dtype=jnp.int64)
+        assert not np.asarray(routing.leaf_admit_dice(gids, 0)).any()
+        assert np.asarray(routing.leaf_admit_dice(gids, 100)).all()
+
+    def test_dice_rate_matches_pct(self):
+        gids = jnp.arange(200_000, dtype=jnp.int64)
+        for pct in (10, 37, 80):
+            frac = float(np.asarray(
+                routing.leaf_admit_dice(gids, pct)).mean())
+            assert abs(frac - pct / 100.0) < 0.02, (pct, frac)
+
+    def test_salt_rerolls_fixed_gid(self):
+        """The per-access salt re-rolls the dice for one node: across salts
+        the admit rate matches pct, and both outcomes occur (a hot leaf
+        that loses the flip is not frozen out)."""
+        gid = jnp.full((50_000,), 12345, jnp.int64)
+        salts = jnp.arange(50_000, dtype=jnp.int64)
+        hits = np.asarray(routing.leaf_admit_dice(gid, 37, salt=salts))
+        assert abs(hits.mean() - 0.37) < 0.02, hits.mean()
+        assert hits.any() and not hits.all()
+
+    def test_dice_deterministic(self):
+        gids = jnp.arange(1000, dtype=jnp.int64)
+        a = np.asarray(routing.leaf_admit_dice(gids, 50, salt=7))
+        b = np.asarray(routing.leaf_admit_dice(gids, 50, salt=7))
+        np.testing.assert_array_equal(a, b)
+        c = np.asarray(routing.leaf_admit_dice(gids, 50, salt=8))
+        assert (a != c).any()
+
+
+# ---------------------------------------------------------------------------
+# route_owners edge behaviour across repartition installs
+# ---------------------------------------------------------------------------
+
+
+def _mesh_owners(boundaries, keys, n_route):
+    owner, demand = routing.route_owners(
+        jnp.asarray(boundaries), jnp.asarray(keys), n_route)
+    return np.asarray(owner), np.asarray(demand)
+
+
+class TestRouteOwnersEdges:
+    def test_boundary_equal_keys_take_upper_partition(self):
+        """Both planes use half-open ``[lo, hi)`` partitions: a key equal
+        to an inner boundary belongs to the partition that STARTS there."""
+        b = np.array([KEY_MIN, 100, 200, KEY_MAX], np.int64)
+        parts = LogicalPartitions(b)
+        probe = np.array([KEY_MIN, KEY_MIN + 1, 99, 100, 101,
+                          199, 200, 201, KEY_MAX - 1], np.int64)
+        owner, _ = _mesh_owners(b, probe, 3)
+        np.testing.assert_array_equal(owner, parts.owner_of(probe))
+        assert owner[3] == 1 and owner[6] == 2  # boundary-equal -> upper
+
+    def test_keymax_lanes_get_sentinel_and_no_demand(self):
+        b = np.array([KEY_MIN, 100, KEY_MAX], np.int64)
+        probe = np.array([50, KEY_MAX, 150, KEY_MAX], np.int64)
+        owner, demand = _mesh_owners(b, probe, 2)
+        np.testing.assert_array_equal(owner, [0, 2, 1, 2])
+        np.testing.assert_array_equal(demand[0], [1, 1])
+
+    def test_owner_parity_pinned_across_install_rounds(self):
+        """Regression pin for the repartition path: after every
+        ``install_boundaries`` round, the mesh formula agrees with the
+        host partition table on dataset keys AND on every boundary-equal /
+        boundary-adjacent key, and owners change ONLY inside the moved
+        intervals."""
+        keys = np.arange(1, 2001, dtype=np.int64) * 10
+        pool, meta = pool_mod.build_pool(keys, keys * 3, level_m=1,
+                                         fill=0.7, n_shards=1)
+        cfg = dex_mod.DexMeshConfig(n_route=2, n_memory=1)
+        bounds = np.array([KEY_MIN, int(keys[1000]), KEY_MAX], np.int64)
+        state = dex_mod.init_state(pool, meta, cfg, bounds)
+        parts = LogicalPartitions(bounds)
+        for loads in ([3.0, 1.0], [1.0, 4.0], [2.0, 1.0]):
+            new = parts.rebalance(loads, key_range=(int(keys[0]),
+                                                    int(keys[-1])))
+            state, _, _, _ = install_boundaries(state, meta, parts, new)
+            inner = new.boundaries[1:-1]
+            probe = np.unique(np.concatenate([
+                keys[::37], inner, inner - 1, inner + 1,
+                np.array([KEY_MIN, KEY_MAX - 1], np.int64),
+            ]))
+            got, _ = _mesh_owners(np.asarray(state.boundaries), probe, 2)
+            np.testing.assert_array_equal(got, new.owner_of(probe))
+            # owners move only inside the moved intervals
+            before = parts.owner_of(probe)
+            changed = before != got
+            moved = moved_intervals(parts, new)
+            in_moved = np.zeros(probe.shape, bool)
+            for a, b in moved:
+                in_moved |= (probe >= a) & (probe < b)
+            assert not (changed & ~in_moved).any()
+            parts = new
+
+    def test_noop_install_keeps_every_owner(self):
+        keys = np.arange(1, 501, dtype=np.int64) * 7
+        pool, meta = pool_mod.build_pool(keys, keys, level_m=1, fill=0.7,
+                                         n_shards=1)
+        cfg = dex_mod.DexMeshConfig(n_route=2, n_memory=1)
+        bounds = np.array([KEY_MIN, int(keys[250]), KEY_MAX], np.int64)
+        state = dex_mod.init_state(pool, meta, cfg, bounds)
+        parts = LogicalPartitions(bounds)
+        st2, n_inval, _, _ = install_boundaries(state, meta, parts, parts)
+        assert n_inval == 0
+        a, _ = _mesh_owners(np.asarray(state.boundaries), keys, 2)
+        b, _ = _mesh_owners(np.asarray(st2.boundaries), keys, 2)
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+
+def _setup(n_keys=4000, *, rt_slots=0, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(16 * n_keys, size=n_keys,
+                              replace=False).astype(np.int64) + 1)
+    pool, meta = pool_mod.build_pool(keys, keys * 5, level_m=1, fill=0.7,
+                                     n_shards=1)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    cfg = dex_mod.DexMeshConfig(
+        n_route=1, n_memory=1, cache_sets=128, cache_ways=4,
+        p_admit_leaf_pct=10, route_capacity_factor=2.0, policy="fetch",
+        route_table_slots=rt_slots,
+    )
+    bounds = np.array([KEY_MIN, KEY_MAX], np.int64)
+    state = dex_mod.init_state(pool, meta, cfg, bounds)
+    return keys, state, meta, cfg, mesh
+
+
+class TestTrainRouteTable:
+    def test_full_coverage_when_slots_suffice(self):
+        keys, state, meta, cfg, _ = _setup(rt_slots=1024)
+        assert not route_table.route_table_active(state)
+        state = route_table.train_route_table(state, meta)
+        assert route_table.route_table_active(state)
+        gids, lo, hi = route_table.leaf_ranges(state, meta)
+        live = np.asarray(state.rt_ver) >= 0
+        assert int(live.sum()) == gids.size
+        rt_keys = np.asarray(state.rt_keys)[live]
+        rt_hi = np.asarray(state.rt_hi)[live]
+        # segments are the sorted leaf fences, tiling [KEY_MIN, KEY_MAX)
+        np.testing.assert_array_equal(rt_keys, lo)
+        np.testing.assert_array_equal(rt_hi, hi)
+        assert rt_keys[0] == KEY_MIN and rt_hi[-1] == KEY_MAX
+
+    def test_predictions_match_leaf_fences(self):
+        """For every dataset key the predicted (subtree, local) is the
+        leaf whose fence range contains the key, and the key sits inside
+        the predicted segment's bounds."""
+        keys, state, meta, cfg, _ = _setup(rt_slots=1024)
+        state = route_table.train_route_table(state, meta)
+        gids, lo, hi = route_table.leaf_ranges(state, meta)
+        probe = keys[::13]
+        idx, sub, local = routing.rt_predict(
+            state.rt_keys, state.rt_sub, state.rt_local, jnp.asarray(probe))
+        idx, sub, local = (np.asarray(a) for a in (idx, sub, local))
+        rt_keys = np.asarray(state.rt_keys)
+        rt_hi = np.asarray(state.rt_hi)
+        assert (rt_keys[idx] <= probe).all()
+        assert (probe < rt_hi[idx]).all()
+        true_leaf = gids[np.searchsorted(lo, probe, side="right") - 1]
+        np.testing.assert_array_equal(
+            sub, (true_leaf // meta.subtree_cap).astype(np.int32))
+        np.testing.assert_array_equal(
+            local, (true_leaf % meta.subtree_cap).astype(np.int32))
+
+    def test_scarce_slots_keep_demand_hot_partition(self):
+        keys = np.arange(1, 4001, dtype=np.int64) * 10
+        pool, meta = pool_mod.build_pool(keys, keys * 3, level_m=1,
+                                         fill=0.7, n_shards=1)
+        cfg = dex_mod.DexMeshConfig(n_route=2, n_memory=1,
+                                    route_table_slots=64)
+        mid = int(keys[2000])
+        bounds = np.array([KEY_MIN, mid, KEY_MAX], np.int64)
+        state = dex_mod.init_state(pool, meta, cfg, bounds)
+        n_leaves = route_table.leaf_ranges(state, meta)[0].size
+        slots = max(8, n_leaves // 4)
+        demand = np.zeros_like(np.asarray(state.route_demand))
+        demand[..., 1] = 1000           # partition 1 is hot
+        state = state._replace(route_demand=jnp.asarray(demand))
+        state = route_table.train_route_table(state, meta, slots=slots)
+        live = np.asarray(state.rt_ver) >= 0
+        assert 0 < int(live.sum()) <= slots
+        # every kept segment starts inside the hot partition's range
+        assert (np.asarray(state.rt_keys)[live] >= mid).all()
+
+    def test_poison_bumps_every_live_stamp(self):
+        keys, state, meta, cfg, _ = _setup(rt_slots=1024)
+        state = route_table.train_route_table(state, meta)
+        before = np.asarray(state.rt_ver)
+        state = route_table.poison_route_table(state)
+        after = np.asarray(state.rt_ver)
+        live = before >= 0
+        # the bump is large so mid-trace writes can't re-arm an entry
+        np.testing.assert_array_equal(after[live], before[live] + (1 << 20))
+        np.testing.assert_array_equal(after[~live], before[~live])
+        assert route_table.route_table_active(state)
+
+
+# ---------------------------------------------------------------------------
+# poisoned-predictor bit-identity (sync + pipelined engines)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_batches(keys, rng, n, b):
+    out = []
+    for _ in range(n):
+        opc = rng.integers(0, 3, size=b).astype(np.int32)
+        kk = rng.choice(keys, size=b).astype(np.int64)
+        ins = opc == engine_mod.OP_INSERT
+        fresh = kk + rng.integers(1, 4, size=b)
+        ok_f = ~np.isin(fresh, keys)
+        kk[ins & ok_f] = fresh[ins & ok_f]
+        vals = np.zeros(b, np.int64)
+        upd = opc == engine_mod.OP_UPDATE
+        vals[upd] = kk[upd] ^ 0x5A5A
+        vals[ins] = kk[ins] * 7
+        out.append((jnp.asarray(opc), jnp.asarray(kk), jnp.asarray(vals)))
+    return out
+
+
+OPS = ("lookup", "update", "insert")
+
+
+class TestPoisonedBitIdentity:
+    def _arms(self, rt_slots):
+        keys, s0, meta, cfg0, mesh = _setup(seed=41)
+        _, s1, _, cfg1, _ = _setup(seed=41, rt_slots=rt_slots)
+        return keys, meta, mesh, (s0, cfg0), (s1, cfg1)
+
+    def test_sync_engine_poisoned_matches_descent(self):
+        keys, meta, mesh, (s_de, cfg_de), (s_rt, cfg_rt) = self._arms(512)
+        eng_de = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg_de, mesh, ops=OPS, max_count=1))
+        eng_rt = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg_rt, mesh, ops=OPS, max_count=1))
+        s_rt = route_table.poison_route_table(
+            route_table.train_route_table(s_rt, meta))
+        rng = np.random.default_rng(42)
+        for b, (opc, kk, vv) in enumerate(_mixed_batches(keys, rng, 4, 128)):
+            s_de, r_de = eng_de(s_de, opc, kk, vv)
+            s_rt, r_rt = eng_rt(s_rt, opc, kk, vv)
+            for field in ("found", "values", "status", "shed"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(r_de, field)),
+                    np.asarray(getattr(r_rt, field)),
+                    err_msg=f"batch {b} {field}")
+        np.testing.assert_array_equal(
+            np.asarray(s_de.pool.pool_keys), np.asarray(s_rt.pool.pool_keys))
+        np.testing.assert_array_equal(
+            np.asarray(s_de.pool.pool_values),
+            np.asarray(s_rt.pool.pool_values))
+        np.testing.assert_array_equal(
+            np.asarray(s_de.versions), np.asarray(s_rt.versions))
+        st_de = np.asarray(s_de.stats).sum(axis=0)
+        st_rt = np.asarray(s_rt.stats).sum(axis=0)
+        # descent arm books nothing; poisoned arm books only mispredicts
+        assert int(st_de[dex_mod.STAT_RT_SKIPS]) == 0
+        assert int(st_de[dex_mod.STAT_RT_MISPREDICTS]) == 0
+        assert int(st_rt[dex_mod.STAT_RT_SKIPS]) == 0
+        assert int(st_rt[dex_mod.STAT_RT_MISPREDICTS]) > 0
+        # remote-read decisions are identical, fetch for fetch
+        assert int(st_de[dex_mod.STAT_FETCHES]) == int(
+            st_rt[dex_mod.STAT_FETCHES])
+
+    def test_sync_engine_trained_table_matches_descent(self):
+        """The ACCEPTED path is exact too: a freshly trained (unpoisoned)
+        table changes remote traffic, never results."""
+        keys, meta, mesh, (s_de, cfg_de), (s_rt, cfg_rt) = self._arms(512)
+        eng_de = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg_de, mesh, ops=OPS, max_count=1))
+        eng_rt = jax.jit(engine_mod.make_dex_engine(
+            meta, cfg_rt, mesh, ops=OPS, max_count=1))
+        s_rt = route_table.train_route_table(s_rt, meta)
+        rng = np.random.default_rng(43)
+        for b, (opc, kk, vv) in enumerate(_mixed_batches(keys, rng, 3, 128)):
+            s_de, r_de = eng_de(s_de, opc, kk, vv)
+            s_rt, r_rt = eng_rt(s_rt, opc, kk, vv)
+            for field in ("found", "values", "status", "shed"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(r_de, field)),
+                    np.asarray(getattr(r_rt, field)),
+                    err_msg=f"batch {b} {field}")
+        np.testing.assert_array_equal(
+            np.asarray(s_de.pool.pool_values),
+            np.asarray(s_rt.pool.pool_values))
+        np.testing.assert_array_equal(
+            np.asarray(s_de.versions), np.asarray(s_rt.versions))
+        assert int(np.asarray(s_rt.stats).sum(axis=0)[
+            dex_mod.STAT_RT_SKIPS]) > 0
+
+    def test_pipelined_engine_poisoned_matches_descent(self):
+        keys, meta, mesh, (s_de, cfg_de), (s_rt, cfg_rt) = self._arms(512)
+        pipe_de = engine_mod.make_dex_engine(
+            meta, cfg_de, mesh, ops=OPS, max_count=1, pipeline=True)
+        pipe_rt = engine_mod.make_dex_engine(
+            meta, cfg_rt, mesh, ops=OPS, max_count=1, pipeline=True)
+        s_rt = route_table.poison_route_table(
+            route_table.train_route_table(s_rt, meta))
+        rng = np.random.default_rng(44)
+        batches = _mixed_batches(keys, rng, 4, 128)
+        s_de, res_de = pipe_de.run(s_de, batches)
+        s_rt, res_rt = pipe_rt.run(s_rt, batches)
+        assert len(res_de) == len(res_rt) == len(batches)
+        for b, (rd, rr) in enumerate(zip(res_de, res_rt)):
+            for field in ("found", "values", "status", "shed"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(rd, field)),
+                    np.asarray(getattr(rr, field)),
+                    err_msg=f"batch {b} {field}")
+        np.testing.assert_array_equal(
+            np.asarray(s_de.pool.pool_keys), np.asarray(s_rt.pool.pool_keys))
+        np.testing.assert_array_equal(
+            np.asarray(s_de.pool.pool_values),
+            np.asarray(s_rt.pool.pool_values))
+        np.testing.assert_array_equal(
+            np.asarray(s_de.versions), np.asarray(s_rt.versions))
+        st_rt = np.asarray(s_rt.stats).sum(axis=0)
+        assert int(st_rt[dex_mod.STAT_RT_SKIPS]) == 0
+        assert int(st_rt[dex_mod.STAT_RT_MISPREDICTS]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Plane-A simulator mirror
+# ---------------------------------------------------------------------------
+
+
+class TestSimRouteTableMirror:
+    def _sim(self, slots):
+        keys = ycsb.make_dataset(6000, seed=0)
+        tree = HostBTree(keys, keys * 7, fill=0.7, level_m=1,
+                         n_mem_servers=1)
+        cfg = SimConfig(name="dex", n_compute=1, n_mem_servers=1,
+                        level_m=1, write_through=True, offloading=False,
+                        route_table_slots=slots)
+        sim = Simulator(tree, cfg, seed=5)
+        wl = ycsb.generate("read-intensive", keys, 4000, seed=7)
+        return sim, wl
+
+    def test_trained_table_books_skips(self):
+        sim, wl = self._sim(1 << 14)
+        sim.run(wl.ops[:1000], wl.keys[:1000])
+        sim.reset_counters()
+        sim.train_route_table()
+        sim.run(wl.ops[1000:], wl.keys[1000:])
+        t = sim.totals()
+        assert t.rt_skips > 0
+
+    def test_poisoned_table_all_mispredicts_same_reads(self):
+        sim_de, wl = self._sim(0)
+        sim_po, _ = self._sim(1 << 14)
+        sim_de.run(wl.ops[:1000], wl.keys[:1000])
+        sim_po.run(wl.ops[:1000], wl.keys[:1000])
+        sim_de.reset_counters()
+        sim_po.reset_counters()
+        sim_po.train_route_table()
+        sim_po.poison_route_table()
+        sim_de.run(wl.ops[1000:], wl.keys[1000:])
+        sim_po.run(wl.ops[1000:], wl.keys[1000:])
+        t_de, t_po = sim_de.totals(), sim_po.totals()
+        assert t_po.rt_skips == 0
+        assert t_po.rt_mispredicts > 0
+        assert t_de.rt_skips == 0 and t_de.rt_mispredicts == 0
+        # the poisoned fallback is the same cached descent, read for read
+        assert t_po.rdma_read == t_de.rdma_read
+        assert t_po.local_accesses == t_de.local_accesses
